@@ -1,0 +1,50 @@
+//! Capacity planner — answers the deployment question "how many QPS of my
+//! workload mix can this cluster sustain under a P99 TBT SLO?" for each
+//! architecture, plus the GPU savings DynaServe's elasticity buys.
+//!
+//! Run:  cargo run --release --example capacity_planner -- [workload] [slo_ms]
+
+use dynaserve::costmodel::LlmSpec;
+use dynaserve::experiments::runners::{coloc_chunk_for, run_once, System};
+use dynaserve::metrics::{capacity_search, SloConfig};
+use dynaserve::workload::TraceKind;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let kind = TraceKind::by_name(args.get(1).map(|s| s.as_str()).unwrap_or("hybrid"))
+        .ok_or_else(|| anyhow::anyhow!("unknown workload"))?;
+    let slo_ms: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(100.0);
+    let slo = SloConfig { tbt: slo_ms / 1e3, ttft: None };
+    let llm = LlmSpec::qwen25_14b();
+
+    println!(
+        "== capacity planning: {} under {slo_ms:.0} ms p99-TBT, Qwen-14B, 2x A100 ==\n",
+        kind.name()
+    );
+    let mut caps = Vec::new();
+    for sys in [System::Coloc { chunk: coloc_chunk_for(kind) }, System::Disagg, System::DynaServe] {
+        let (cap, at) = capacity_search(&slo, 60.0, 0.25, 2.0, 0.15, |q| {
+            run_once(sys, &llm, kind, q, 60.0, 42, slo).0
+        });
+        println!(
+            "{:<12} capacity {:>5.2} rps   goodput at capacity {:>7.0} tok/s   p99 {:>5.1} ms",
+            sys.name(),
+            cap,
+            at.goodput_tok_s,
+            at.p99_tbt * 1e3
+        );
+        caps.push((sys.name(), cap));
+    }
+    let dynaserve = caps.iter().find(|c| c.0 == "DynaServe").unwrap().1;
+    println!();
+    for (name, cap) in &caps {
+        if *name != "DynaServe" && *cap > 0.0 {
+            let ratio = dynaserve / cap;
+            println!(
+                "vs {name}: {ratio:.2}x capacity — serving the same load needs ~{:.0}% of the GPUs",
+                100.0 / ratio
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Chunked KV transfer demo (§4.3): shows how shipping immutable KV chunks
+//! as they are produced overlaps communication with computation, across a
+//! sweep of link bandwidths and chunk sizes — both with the analytic
+//! timelines (what the simulator uses) and through the live paced engine.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use dynaserve::kv::{chunked_timeline, monolithic_timeline, LinkSpec, TransferEngine, TransferJob};
+
+fn main() {
+    println!("== chunk-based KV transfer: exposed (non-overlapped) time ==\n");
+    // a 4096-token prefill produced in 512-token chunks every 45 ms
+    // (Qwen-14B on A100; 196 608 B of KV per token)
+    let kv_per_token = 196_608.0;
+    println!(
+        "{:<22} {:>14} {:>14} {:>10}",
+        "link", "at-handoff", "chunked", "reduction"
+    );
+    for (name, bw) in [("25 GB/s (RoCE)", 25e9), ("60 GB/s (4xNIC)", 60e9), ("300 GB/s (NVLink)", 300e9)]
+    {
+        let link = LinkSpec { bandwidth: bw, latency: 8e-6 };
+        let ready: Vec<(f64, f64)> = (1..=8)
+            .map(|i| (0.045 * i as f64, 512.0 * kv_per_token))
+            .collect();
+        let c = chunked_timeline(&ready, &link);
+        let m = monolithic_timeline(&ready, &link);
+        println!(
+            "{:<22} {:>11.1} ms {:>11.1} ms {:>9.1}%",
+            name,
+            m.exposed * 1e3,
+            c.exposed * 1e3,
+            (1.0 - c.exposed / m.exposed) * 100.0
+        );
+    }
+
+    println!("\n== live paced engine (real payloads through the kv-transfer thread) ==\n");
+    let engine = TransferEngine::new(LinkSpec { bandwidth: 1e9, latency: 0.0 });
+    let (tx, rx) = mpsc::channel();
+    let t0 = Instant::now();
+    let chunks = 8;
+    let chunk_floats = 1 << 18; // 1 MB per chunk
+    for i in 0..chunks {
+        engine.push(
+            TransferJob {
+                request: 1,
+                token_range: (i * 64, (i + 1) * 64),
+                payload: vec![1.0; chunk_floats],
+                last: i == chunks - 1,
+            },
+            tx.clone(),
+        );
+    }
+    let mut arrived = 0;
+    while arrived < chunks {
+        let job = rx.recv().unwrap();
+        arrived += 1;
+        println!(
+            "chunk {:?} arrived at {:>6.1} ms{}",
+            job.token_range,
+            t0.elapsed().as_secs_f64() * 1e3,
+            if job.last { "  (last → β activates)" } else { "" }
+        );
+    }
+    let stats = engine.stats();
+    println!(
+        "\nmoved {:.1} MB in {} chunks — β started decoding one link-chunk after α finished.",
+        stats.bytes.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e6,
+        stats.chunks.load(std::sync::atomic::Ordering::Relaxed),
+    );
+}

@@ -1,0 +1,48 @@
+//! Trace serving — compare the three architectures on a real-world-shaped
+//! workload at A100 scale (simulated substrate, same scheduler code as the
+//! live path).
+//!
+//! Run:  cargo run --release --example trace_serving -- [workload] [qps]
+//!       workloads: burstgpt | azure-code | arxiv-summ | mini-reasoning | hybrid
+
+use dynaserve::costmodel::LlmSpec;
+use dynaserve::experiments::runners::{coloc_chunk_for, run_once, System};
+use dynaserve::metrics::SloConfig;
+use dynaserve::workload::TraceKind;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let kind = TraceKind::by_name(args.get(1).map(|s| s.as_str()).unwrap_or("burstgpt"))
+        .ok_or_else(|| anyhow::anyhow!("unknown workload"))?;
+    let qps: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4.0);
+    let llm = LlmSpec::qwen25_14b();
+    let slo = SloConfig::default();
+
+    println!("== {} @ {qps} QPS, Qwen-14B on 2x A100, 100 ms TBT SLO ==\n", kind.name());
+    println!(
+        "{:<12} {:>10} {:>10} {:>8} {:>10} {:>10} {:>9}",
+        "system", "goodput", "tok/s", "rps", "p50 TBT", "p99 TBT", "attain%"
+    );
+    for sys in [System::Coloc { chunk: coloc_chunk_for(kind) }, System::Disagg, System::DynaServe] {
+        let (s, sim) = run_once(sys, &llm, kind, qps, 60.0, 42, slo);
+        println!(
+            "{:<12} {:>10.0} {:>10.0} {:>8.2} {:>8.1}ms {:>8.1}ms {:>9.1}",
+            sys.name(),
+            s.goodput_tok_s,
+            s.throughput_tok_s,
+            s.rps,
+            s.p50_tbt * 1e3,
+            s.p99_tbt * 1e3,
+            s.attainment * 100.0,
+        );
+        for inst in &sim.instances {
+            println!(
+                "             └ instance {}: MFU {:.1}%  HBM {:.1}%",
+                inst.id,
+                inst.mfu() * 100.0,
+                inst.hbm_usage() * 100.0
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,169 @@
+"""AOT pipeline: lower the TinyQwen step function to HLO text artifacts the
+Rust runtime loads via PJRT.
+
+Run once at build time (``make artifacts``); never on the request path.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out, default ../artifacts):
+  step_b{B}_c{C}_s{S}.hlo.txt   one per (batch, chunk, capacity) bucket
+  params.bin                    f32 little-endian tensors, param_specs order
+  manifest.json                 model config, param table, bucket table
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+# Bucket family: (batch, chunk, capacity). C==1 buckets serve decode
+# iterations (batched across sequences); C>1 buckets serve prefill chunks.
+# The Rust runtime rounds each iteration up to the nearest bucket.
+DEFAULT_BUCKETS: list[tuple[int, int, int]] = [
+    # decode steps
+    (1, 1, 128), (4, 1, 128), (8, 1, 128),
+    (1, 1, 256), (4, 1, 256), (8, 1, 256),
+    # prefill chunks
+    (1, 32, 128), (1, 64, 128),
+    (1, 32, 256), (1, 64, 256), (1, 128, 256),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(
+    cfg: M.ModelConfig, b: int, c: int, s: int, attn_impl: str
+) -> str:
+    fn = M.make_step_fn(cfg, attn_impl=attn_impl)
+    dtype = jnp.dtype(cfg.dtype)
+    param_shapes = [
+        jax.ShapeDtypeStruct(shape, dtype) for _, shape in M.param_specs(cfg)
+    ]
+    kv_shape = jax.ShapeDtypeStruct(
+        (cfg.n_layers, b, cfg.n_kv_heads, s, cfg.head_dim), dtype
+    )
+    tokens = jax.ShapeDtypeStruct((b, c), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    last_idx = jax.ShapeDtypeStruct((b,), jnp.int32)
+    lowered = jax.jit(fn).lower(*param_shapes, kv_shape, kv_shape, tokens, pos, last_idx)
+    return to_hlo_text(lowered)
+
+
+def write_params(cfg: M.ModelConfig, out_dir: pathlib.Path, seed: int) -> list[dict]:
+    params = M.init_params(cfg, seed)
+    table = []
+    offset = 0
+    blobs = []
+    for (name, shape), p in zip(M.param_specs(cfg), params):
+        arr = np.asarray(p, dtype=np.float32)
+        blobs.append(arr.tobytes())
+        table.append(
+            {
+                "name": name,
+                "shape": list(shape),
+                "offset": offset,
+                "len": arr.size,
+            }
+        )
+        offset += arr.size * 4
+    (out_dir / "params.bin").write_bytes(b"".join(blobs))
+    return table
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument(
+        "--attn", default="pallas_flash",
+        choices=["pallas_flash", "pallas_simple", "ref"],
+    )
+    ap.add_argument(
+        "--buckets", default=None,
+        help="comma list of BxCxS triples, e.g. 1x1x128,1x64x256",
+    )
+    args = ap.parse_args()
+
+    cfg = M.ModelConfig()
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    buckets = DEFAULT_BUCKETS
+    if args.buckets:
+        buckets = [
+            tuple(int(x) for x in spec.split("x"))
+            for spec in args.buckets.split(",")
+        ]
+
+    param_table = write_params(cfg, out_dir, args.seed)
+
+    bucket_table = []
+    for b, c, s in buckets:
+        t0 = time.time()
+        name = f"step_b{b}_c{c}_s{s}"
+        text = lower_bucket(cfg, b, c, s, args.attn)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        bucket_table.append(
+            {
+                "name": name,
+                "batch": b,
+                "chunk": c,
+                "capacity": s,
+                "file": path.name,
+                "sha256_16": digest,
+            }
+        )
+        print(f"  {name}: {len(text)} chars in {time.time() - t0:.1f}s")
+
+    manifest = {
+        "model": {
+            "family": "tinyqwen",
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_q_heads": cfg.n_q_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.head_dim,
+            "ffn": cfg.ffn,
+            "rope_theta": cfg.rope_theta,
+            "dtype": cfg.dtype,
+            "param_count": int(M.param_count(cfg)),
+            "attn_impl": args.attn,
+            "seed": args.seed,
+        },
+        "params_file": "params.bin",
+        "params": param_table,
+        "buckets": bucket_table,
+        # input order of every step artifact:
+        #   params (param_specs order), kv_k, kv_v, tokens, pos
+        "input_order": ["params...", "kv_k", "kv_v", "tokens", "pos", "last_idx"],
+        "output_order": ["logits", "new_kv_k", "new_kv_v"],
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {len(bucket_table)} buckets + params to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

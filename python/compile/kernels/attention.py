@@ -1,0 +1,183 @@
+"""Pallas attention kernels — the serving hot-spot (Layer 1).
+
+Two variants of causal chunk attention over a padded KV cache:
+
+* ``attention_simple`` — whole-context kernel, grid over (batch, q-head).
+  The entire K/V cache row for the head lives in VMEM. Easiest to verify;
+  used as a stepping stone and as a second implementation for differential
+  testing against the flash variant.
+
+* ``attention_flash`` — flash-attention-style kernel: grid over
+  (batch, q-head, q-block); K/V consumed in ``block_kv``-sized tiles with an
+  online-softmax accumulator (running max / running sum). This restates the
+  paper's CUDA threadblock schedule in TPU terms: the query tile and the
+  accumulator are VMEM-resident, KV streams through VMEM tile by tile, and
+  matmuls accumulate in f32 (MXU-style ``preferred_element_type``).
+
+Both are launched with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+round-trips through the Rust loader. See DESIGN.md §Hardware-Adaptation.
+
+GQA is expressed in the BlockSpec index maps: q-head ``h`` reads kv-head
+``h // (Hq // Hkv)`` — no materialized head expansion.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _simple_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, scale):
+    """One (batch, q-head) cell: full-cache attention for a C-token chunk."""
+    pos = pos_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)  # [C, D]
+    k = k_ref[0, 0].astype(jnp.float32)  # [S, D]
+    v = v_ref[0, 0].astype(jnp.float32)  # [S, D]
+    c, d = q.shape
+    s = k.shape[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    col = jax.lax.broadcasted_iota(jnp.int32, (c, s), 1)
+    row = jax.lax.broadcasted_iota(jnp.int32, (c, s), 0) + pos
+    scores = jnp.where(col <= row, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def _flash_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, scale, block_kv):
+    """One (batch, q-head, q-block) cell: online-softmax over KV tiles.
+
+    VMEM footprint per cell: q tile [BQ, D] + one KV tile pair
+    [2, BKV, D] + accumulator [BQ, D] + stats [BQ, 2] — the flash
+    HBM<->VMEM schedule. (In interpret mode the full K/V row is staged; on
+    a real TPU the fori_loop tiles become the streamed dimension.)
+    """
+    pos = pos_ref[0]
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)  # [BQ, D]
+    bq, d = q.shape
+    s = k_ref.shape[2]
+    n_kv = s // block_kv
+    row = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_kv), 0) + pos
+
+    def body(i, carry):
+        acc, m_prev, l_prev = carry
+        k = pl.load(
+            k_ref, (0, 0, pl.dslice(i * block_kv, block_kv), slice(None))
+        ).astype(jnp.float32)
+        v = pl.load(
+            v_ref, (0, 0, pl.dslice(i * block_kv, block_kv), slice(None))
+        ).astype(jnp.float32)
+        scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        col = i * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, block_kv), 1
+        )
+        scores = jnp.where(col <= row, scores, NEG_INF)
+        m_cur = jnp.max(scores, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq, 1), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_kv, body, (acc0, m0, l0))
+    o_ref[0, 0] = (acc / l).astype(o_ref.dtype)
+
+
+def _pick_block(n: int, preferred: int) -> int:
+    """Largest divisor of n that is <= preferred (power-of-two friendly)."""
+    b = min(n, preferred)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    pos: jax.Array,
+    *,
+    variant: str = "flash",
+    block_q: int | None = None,
+    block_kv: int | None = None,
+    interpret: bool = True,
+):
+    """Causal chunk attention over a padded KV cache (Pallas).
+
+    Args:
+      q:   [B, Hq, C, D] queries for the chunk.
+      k:   [B, Hkv, S, D] key cache (new tokens already written).
+      v:   [B, Hkv, S, D] value cache.
+      pos: [B] int32 cache length before the chunk.
+      variant: "flash" (tiled online-softmax) or "simple" (whole-context).
+
+    Returns: [B, Hq, C, D], same dtype as q. Matches ``ref.ref_attention``.
+    """
+    b, hq, c, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    pos = pos.astype(jnp.int32)
+
+    pos_spec = pl.BlockSpec((1,), lambda bi, hi, *rest: (bi,))
+    kv_spec = lambda: pl.BlockSpec(
+        (1, 1, s, d), lambda bi, hi, *rest: (bi, hi // group, 0, 0)
+    )
+    out_shape = jax.ShapeDtypeStruct((b, hq, c, d), q.dtype)
+
+    if variant == "simple":
+        grid = (b, hq)
+        q_spec = pl.BlockSpec((1, 1, c, d), lambda bi, hi: (bi, hi, 0, 0))
+        o_spec = pl.BlockSpec((1, 1, c, d), lambda bi, hi: (bi, hi, 0, 0))
+        kernel = functools.partial(_simple_kernel, scale=scale)
+    elif variant == "flash":
+        bq = block_q or _pick_block(c, 64)
+        bkv = block_kv or _pick_block(s, 64)
+        assert c % bq == 0 and s % bkv == 0
+        grid = (b, hq, c // bq)
+        q_spec = pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi: (bi, hi, qi, 0))
+        o_spec = pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi: (bi, hi, qi, 0))
+        kernel = functools.partial(_flash_kernel, scale=scale, block_kv=bkv)
+    else:
+        raise ValueError(f"unknown attention variant: {variant!r}")
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pos_spec, q_spec, kv_spec(), kv_spec()],
+        out_specs=o_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(pos, q, k, v)
+
+
+def vmem_footprint_bytes(
+    *, block_q: int, block_kv: int, head_dim: int, dtype_bytes: int = 4
+) -> int:
+    """Estimated per-grid-cell VMEM footprint of the flash kernel.
+
+    q tile + one K tile + one V tile + f32 accumulator + running stats.
+    Used by DESIGN.md §Perf / EXPERIMENTS.md §Perf for the TPU-side
+    analysis (interpret mode gives no hardware signal).
+    """
+    q_tile = block_q * head_dim * dtype_bytes
+    kv_tiles = 2 * block_kv * head_dim * dtype_bytes
+    acc = block_q * head_dim * 4
+    stats = block_q * 2 * 4
+    return q_tile + kv_tiles + acc + stats

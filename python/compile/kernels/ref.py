@@ -1,0 +1,88 @@
+"""Pure-jnp correctness oracles for the Pallas attention kernels.
+
+These are the ground truth the pytest/hypothesis suites compare against.
+Everything here is deliberately straight-line jnp — no pallas, no tricks —
+so a mismatch always implicates the kernel, not the oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Large-negative instead of -inf: keeps bf16/f16 softmax free of NaNs on
+# fully-masked tails while being indistinguishable after exp().
+NEG_INF = -1e30
+
+
+def expand_gqa(k: jax.Array, n_q_heads: int) -> jax.Array:
+    """Expand [B, Hkv, S, D] KV heads to [B, Hq, S, D] by repetition."""
+    b, hkv, s, d = k.shape
+    assert n_q_heads % hkv == 0, "q heads must be a multiple of kv heads"
+    group = n_q_heads // hkv
+    return jnp.repeat(k, group, axis=1)
+
+
+def ref_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    pos: jax.Array,
+) -> jax.Array:
+    """Causal chunk attention over a (padded) KV cache.
+
+    Args:
+      q:   [B, Hq, C, D] queries for the C new tokens of each sequence.
+      k:   [B, Hkv, S, D] key cache, already containing the new tokens.
+      v:   [B, Hkv, S, D] value cache, already containing the new tokens.
+      pos: [B] int32, number of tokens resident in the cache *before* this
+           chunk; query i of sequence b sits at global position pos[b] + i
+           and may attend cache slots j <= pos[b] + i.
+
+    Returns: [B, Hq, C, D] attention output in q's dtype.
+    """
+    b, hq, c, d = q.shape
+    s = k.shape[2]
+    k = expand_gqa(k, hq)
+    v = expand_gqa(v, hq)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    scores = (
+        jnp.einsum("bhcd,bhsd->bhcs", q.astype(jnp.float32), k.astype(jnp.float32))
+        * scale
+    )
+    col = jnp.arange(s)[None, None, None, :]
+    row = pos[:, None, None, None] + jnp.arange(c)[None, None, :, None]
+    scores = jnp.where(col <= row, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhcs,bhsd->bhcd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope_angles(
+    positions: jax.Array, head_dim: int, theta: float
+) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for rotary embedding. positions [..., T] -> [..., T, D/2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def ref_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary position embedding.
+
+    x: [B, T, H, D] (pairs split as [even-half | odd-half]), positions [B, T].
+    """
+    d = x.shape[-1]
+    cos, sin = rope_angles(positions, d, theta)  # [B, T, D/2]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

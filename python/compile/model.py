@@ -1,0 +1,206 @@
+"""Layer 2 — the JAX model: "TinyQwen", a GQA transformer with a unified
+*step* function that is the compute form of DynaServe's micro-request
+abstraction.
+
+``step`` processes C new tokens per sequence against a KV cache of capacity
+S. C>1 is a prefill chunk, C=1 is a decode step — so *any* contiguous token
+span (a micro-request, whether pure prefill, pure decode, or a mix) executes
+as a sequence of step calls. The Rust coordinator picks a bucketed
+``step_b{B}_c{C}_s{S}`` artifact per iteration.
+
+Architecture (Qwen-2.5-style, scaled to ~1M params for the CPU testbed):
+byte-level vocab 256, d_model 128, 4 layers, 4 q-heads / 2 kv-heads
+(GQA), head_dim 32, SwiGLU FFN 512, RMSNorm, RoPE.
+
+Python here is build-time only: ``aot.py`` lowers ``step`` to HLO text and
+the Rust runtime executes it via PJRT. Nothing in this file runs on the
+request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import attention as pallas_attn
+from compile.kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_q_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    ffn: int = 512
+    rope_theta: float = 10000.0
+    dtype: str = "float32"
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_q_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — the param ABI shared with the Rust
+    runtime via manifest.json. Order here == positional input order of the
+    lowered step function == layout order inside params.bin."""
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, cfg.d_model))
+    ]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        specs += [
+            (p + "attn_norm", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.q_dim)),
+            (p + "wk", (cfg.d_model, cfg.kv_dim)),
+            (p + "wv", (cfg.d_model, cfg.kv_dim)),
+            (p + "wo", (cfg.q_dim, cfg.d_model)),
+            (p + "ffn_norm", (cfg.d_model,)),
+            (p + "w_gate", (cfg.d_model, cfg.ffn)),
+            (p + "w_up", (cfg.d_model, cfg.ffn)),
+            (p + "w_down", (cfg.ffn, cfg.d_model)),
+        ]
+    specs += [
+        ("final_norm", (cfg.d_model,)),
+        ("lm_head", (cfg.d_model, cfg.vocab)),
+    ]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 42) -> list[jax.Array]:
+    """Deterministic scaled-normal init (serving needs a real network, not a
+    trained one — latency/throughput are weight-agnostic)."""
+    key = jax.random.PRNGKey(seed)
+    dtype = jnp.dtype(cfg.dtype)
+    out = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            out.append(jnp.ones(shape, dtype))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+            out.append((jax.random.normal(sub, shape, jnp.float32) * std).astype(dtype))
+    return out
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.asarray(s))) for _, s in param_specs(cfg))
+
+
+def _scatter_chunk(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write a [B, Hkv, C, D] chunk into a [B, Hkv, S, D] cache at per-
+    sequence offsets ``pos`` (one-hot formulation: branch-free, static
+    shapes, lowers to plain HLO)."""
+    b, hkv, s, d = cache.shape
+    c = new.shape[2]
+    idx = pos[:, None] + jnp.arange(c)[None, :]  # [B, C]
+    onehot = jax.nn.one_hot(idx, s, dtype=cache.dtype)  # [B, C, S]
+    keep = 1.0 - jnp.sum(onehot, axis=1)  # [B, S]
+    written = jnp.einsum("bcs,bhcd->bhsd", onehot, new)
+    return cache * keep[:, None, :, None] + written
+
+
+def _attention_dispatch(impl: str) -> Callable:
+    if impl == "ref":
+        return ref.ref_attention
+    if impl == "pallas_simple":
+        return lambda q, k, v, pos: pallas_attn.attention(q, k, v, pos, variant="simple")
+    if impl == "pallas_flash":
+        return lambda q, k, v, pos: pallas_attn.attention(q, k, v, pos, variant="flash")
+    raise ValueError(f"unknown attention impl: {impl!r}")
+
+
+def step(
+    cfg: ModelConfig,
+    params: list[jax.Array],
+    kv_k: jax.Array,
+    kv_v: jax.Array,
+    tokens: jax.Array,
+    pos: jax.Array,
+    last_idx: jax.Array | None = None,
+    *,
+    attn_impl: str = "pallas_flash",
+):
+    """Unified prefill-chunk / decode step.
+
+    Args:
+      params: flat list per ``param_specs`` order.
+      kv_k, kv_v: [L, B, Hkv, S, D] caches (RoPE'd keys).
+      tokens: [B, C] int32 new token ids.
+      pos:    [B] int32 cache length before this chunk.
+      last_idx: [B] int32 index of the last *real* token within the chunk
+        (defaults to C-1). Lets the Rust runtime pad a chunk up to a bucket
+        size while reading logits at the true position.
+
+    Returns: (logits [B, vocab] at last_idx, new kv_k, new kv_v).
+    """
+    attn_fn = _attention_dispatch(attn_impl)
+    specs = param_specs(cfg)
+    byname = {name: p for (name, _), p in zip(specs, params)}
+
+    b, c = tokens.shape
+    positions = pos[:, None] + jnp.arange(c)[None, :]  # [B, C] global positions
+
+    h = jnp.take(byname["embed"], tokens, axis=0)  # [B, C, d]
+    new_ks, new_vs = [], []
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        x = ref.ref_rmsnorm(h, byname[p + "attn_norm"])
+        q = (x @ byname[p + "wq"]).reshape(b, c, cfg.n_q_heads, cfg.head_dim)
+        k = (x @ byname[p + "wk"]).reshape(b, c, cfg.n_kv_heads, cfg.head_dim)
+        v = (x @ byname[p + "wv"]).reshape(b, c, cfg.n_kv_heads, cfg.head_dim)
+        q = ref.ref_rope(q, positions, cfg.rope_theta)
+        k = ref.ref_rope(k, positions, cfg.rope_theta)
+        # [B, H, C, D] layouts for the kernel; keys cached post-RoPE.
+        k_cache = _scatter_chunk(kv_k[l], k.transpose(0, 2, 1, 3), pos)
+        v_cache = _scatter_chunk(kv_v[l], v.transpose(0, 2, 1, 3), pos)
+        new_ks.append(k_cache)
+        new_vs.append(v_cache)
+        attn = attn_fn(q.transpose(0, 2, 1, 3), k_cache, v_cache, pos)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, c, cfg.q_dim)
+        h = h + attn @ byname[p + "wo"]
+        x = ref.ref_rmsnorm(h, byname[p + "ffn_norm"])
+        gate = jax.nn.silu(x @ byname[p + "w_gate"])
+        h = h + (gate * (x @ byname[p + "w_up"])) @ byname[p + "w_down"]
+
+    if last_idx is None:
+        last_idx = jnp.full((b,), c - 1, jnp.int32)
+    gathered = jnp.take_along_axis(h, last_idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    last = ref.ref_rmsnorm(gathered, byname["final_norm"])
+    logits = last @ byname["lm_head"]
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def make_step_fn(cfg: ModelConfig, attn_impl: str = "pallas_flash"):
+    """Closure with the (params..., kv_k, kv_v, tokens, pos, last_idx) flat
+    signature that aot.py lowers. Returns a tuple so the HLO root is a
+    tuple (the Rust side unwraps with to_tuple3)."""
+
+    n_params = len(param_specs(cfg))
+
+    def fn(*args):
+        params = list(args[:n_params])
+        kv_k, kv_v, tokens, pos, last_idx = args[n_params:]
+        logits, nk, nv = step(
+            cfg, params, kv_k, kv_v, tokens, pos, last_idx, attn_impl=attn_impl
+        )
+        return logits, nk, nv
+
+    return fn
+
+
+def empty_cache(cfg: ModelConfig, batch: int, capacity: int) -> tuple[jax.Array, jax.Array]:
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, capacity, cfg.head_dim)
+    z = jnp.zeros(shape, jnp.dtype(cfg.dtype))
+    return z, z

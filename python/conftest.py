@@ -1,0 +1,6 @@
+# Make `from compile import ...` resolve when pytest runs from the repo root
+# (the Makefile runs pytest from python/; this keeps both entrypoints green).
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

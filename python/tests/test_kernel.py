@@ -1,0 +1,137 @@
+"""L1 correctness: Pallas attention kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; fixed cases pin down the regressions we
+care most about (decode step C=1, chunk boundaries, fresh cache pos=0,
+full cache pos=S-C).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_inputs(b, hq, hkv, c, s, d, dtype, seed=0):
+    k0, k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(k0, (b, hq, c, d), dtype)
+    k = jax.random.normal(k1, (b, hkv, s, d), dtype)
+    v = jax.random.normal(k2, (b, hkv, s, d), dtype)
+    pos = jax.random.randint(k3, (b,), 0, s - c + 1, jnp.int32)
+    return q, k, v, pos
+
+
+def tol(dtype):
+    if dtype == jnp.bfloat16:
+        return dict(atol=2e-2, rtol=2e-2)
+    return dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("variant", ["simple", "flash"])
+@pytest.mark.parametrize(
+    "b,hq,hkv,c,s,d",
+    [
+        (1, 4, 2, 1, 128, 32),   # decode step
+        (8, 4, 2, 1, 128, 32),   # batched decode
+        (1, 4, 2, 64, 128, 32),  # prefill chunk
+        (2, 4, 4, 32, 256, 32),  # MHA (no GQA)
+        (1, 8, 2, 16, 64, 16),   # wide GQA group
+    ],
+)
+def test_kernel_matches_ref_fixed(variant, b, hq, hkv, c, s, d):
+    q, k, v, pos = make_inputs(b, hq, hkv, c, s, d, jnp.float32)
+    got = A.attention(q, k, v, pos, variant=variant)
+    want = ref.ref_attention(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(jnp.float32))
+
+
+@pytest.mark.parametrize("variant", ["simple", "flash"])
+def test_kernel_pos_zero_and_full(variant):
+    """Boundary positions: empty cache and exactly-full cache."""
+    for posval in (0, 128 - 16):
+        q, k, v, _ = make_inputs(2, 4, 2, 16, 128, 32, jnp.float32, seed=7)
+        pos = jnp.full((2,), posval, jnp.int32)
+        got = A.attention(q, k, v, pos, variant=variant)
+        want = ref.ref_attention(q, k, v, pos)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5
+        )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("variant", ["simple", "flash"])
+def test_kernel_dtypes(dtype, variant):
+    q, k, v, pos = make_inputs(2, 4, 2, 8, 64, 32, dtype, seed=3)
+    got = A.attention(q, k, v, pos, variant=variant)
+    assert got.dtype == dtype
+    want = ref.ref_attention(q, k, v, pos)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    hkv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    logc=st.integers(0, 5),
+    logs_extra=st.integers(0, 3),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_flash_hypothesis(b, hkv, group, logc, logs_extra, d, seed):
+    """Random shape sweep: flash kernel == oracle for any C<=S config."""
+    c = 2**logc
+    s = max(c * (2**logs_extra), 8)
+    q, k, v, pos = make_inputs(b, hkv * group, hkv, c, s, d, jnp.float32, seed)
+    got = A.attention(q, k, v, pos, variant="flash")
+    want = ref.ref_attention(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5, rtol=3e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.sampled_from([1, 4, 16, 64]),
+    s=st.sampled_from([64, 128, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_variants_agree(c, s, seed):
+    """Differential test: the two kernel implementations agree with each
+    other (catches oracle-blind-spot bugs)."""
+    q, k, v, pos = make_inputs(2, 4, 2, c, s, 32, jnp.float32, seed)
+    a = A.attention(q, k, v, pos, variant="simple")
+    b_ = A.attention(q, k, v, pos, variant="flash")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=3e-5, rtol=3e-5)
+
+
+def test_block_picker():
+    assert A._pick_block(64, 64) == 64
+    assert A._pick_block(1, 64) == 1
+    assert A._pick_block(96, 64) == 48
+    assert A._pick_block(128, 64) == 64
+
+
+def test_vmem_footprint_fits_tpu_budget():
+    """The documented flash tiles must fit comfortably in a 16 MiB VMEM."""
+    fp = A.vmem_footprint_bytes(block_q=64, block_kv=64, head_dim=32)
+    assert fp < 1 << 20  # tiny model: well under 1 MiB per grid cell
+    fp_big = A.vmem_footprint_bytes(block_q=128, block_kv=128, head_dim=128)
+    assert fp_big < 16 << 20
+
+
+def test_flash_rejects_bad_blocks():
+    q, k, v, pos = make_inputs(1, 4, 2, 8, 64, 32, jnp.float32)
+    with pytest.raises(AssertionError):
+        A.attention(q, k, v, pos, variant="flash", block_q=3)
+
+
+def test_unknown_variant():
+    q, k, v, pos = make_inputs(1, 4, 2, 8, 64, 32, jnp.float32)
+    with pytest.raises(ValueError):
+        A.attention(q, k, v, pos, variant="nope")

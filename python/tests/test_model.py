@@ -1,0 +1,168 @@
+"""L2 correctness: TinyQwen step function — shapes, KV-cache semantics,
+incremental (prefill-then-decode) equivalence, and Pallas-vs-ref parity at
+the model level.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig()
+PARAMS = M.init_params(CFG)
+
+
+def run_step(kv_k, kv_v, tokens, pos, impl="ref"):
+    return M.step(CFG, PARAMS, kv_k, kv_v, tokens, pos, attn_impl=impl)
+
+
+def test_param_count_matches_specs():
+    total = 0
+    for _, shape in M.param_specs(CFG):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    assert total == M.param_count(CFG)
+    assert 1_000_000 < total < 1_100_000  # ~1M params, per DESIGN.md
+
+
+def test_step_shapes():
+    b, c, s = 2, 8, 64
+    kv_k, kv_v = M.empty_cache(CFG, b, s)
+    tokens = jnp.zeros((b, c), jnp.int32)
+    pos = jnp.zeros((b,), jnp.int32)
+    logits, nk, nv = run_step(kv_k, kv_v, tokens, pos)
+    assert logits.shape == (b, CFG.vocab)
+    assert nk.shape == (CFG.n_layers, b, CFG.n_kv_heads, s, CFG.head_dim)
+    assert nv.shape == nk.shape
+
+
+@pytest.mark.parametrize("impl", ["pallas_flash", "pallas_simple"])
+def test_pallas_model_matches_ref_model(impl):
+    b, c, s = 2, 16, 64
+    kv_k, kv_v = M.empty_cache(CFG, b, s)
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (b, c), 0, CFG.vocab)
+    pos = jnp.zeros((b,), jnp.int32)
+    lr, kr, vr = run_step(kv_k, kv_v, tokens, pos, "ref")
+    lp, kp, vp = run_step(kv_k, kv_v, tokens, pos, impl)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lp), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(kr), np.asarray(kp), atol=1e-5, rtol=1e-5)
+
+
+def test_incremental_equals_full_prefill():
+    """prefill(N) then decode(1) must equal prefill(N+1): the correctness
+    contract the whole serving stack rests on."""
+    b, s = 2, 64
+    kv_k, kv_v = M.empty_cache(CFG, b, s)
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (b, 9), 0, CFG.vocab)
+    full, _, _ = run_step(kv_k, kv_v, toks, jnp.zeros((b,), jnp.int32))
+    l8, k8, v8 = run_step(kv_k, kv_v, toks[:, :8], jnp.zeros((b,), jnp.int32))
+    inc, _, _ = run_step(k8, v8, toks[:, 8:9], jnp.full((b,), 8, jnp.int32))
+    np.testing.assert_allclose(np.asarray(full), np.asarray(inc), atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_prefill_equals_monolithic():
+    """Splitting a prompt into chunks (the micro-request execution model)
+    must be numerically identical to one-shot prefill."""
+    b, s = 1, 128
+    kv_k, kv_v = M.empty_cache(CFG, b, s)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, 48), 0, CFG.vocab)
+    mono, mk, mv = run_step(kv_k, kv_v, toks, jnp.zeros((b,), jnp.int32))
+    # three chunks of 16
+    k, v = kv_k, kv_v
+    for i in range(3):
+        lg, k, v = run_step(k, v, toks[:, 16 * i : 16 * (i + 1)],
+                            jnp.full((b,), 16 * i, jnp.int32))
+    np.testing.assert_allclose(np.asarray(mono), np.asarray(lg), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(mk), np.asarray(k), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(mv), np.asarray(v), atol=2e-5, rtol=2e-5)
+
+
+def test_scatter_chunk_preserves_other_slots():
+    """Cache write touches exactly [pos, pos+C) per sequence."""
+    cache = jnp.arange(2 * 2 * 16 * 4, dtype=jnp.float32).reshape(2, 2, 16, 4)
+    new = -jnp.ones((2, 2, 3, 4), jnp.float32)
+    pos = jnp.array([2, 9], jnp.int32)
+    out = M._scatter_chunk(cache, new, pos)
+    out = np.asarray(out)
+    ref = np.asarray(cache).copy()
+    ref[0, :, 2:5] = -1
+    ref[1, :, 9:12] = -1
+    np.testing.assert_array_equal(out, ref)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    c=st.sampled_from([1, 2, 4, 8]),
+    posbase=st.integers(0, 40),
+    seed=st.integers(0, 1000),
+)
+def test_scatter_roundtrip_hypothesis(c, posbase, seed):
+    b, hkv, s, d = 2, 2, 64, 8
+    key = jax.random.PRNGKey(seed)
+    cache = jax.random.normal(key, (b, hkv, s, d))
+    new = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, hkv, c, d))
+    pos = jnp.array([posbase, min(posbase + 5, s - c)], jnp.int32)
+    out = np.asarray(M._scatter_chunk(cache, new, pos))
+    for bi in range(b):
+        p = int(pos[bi])
+        np.testing.assert_allclose(out[bi, :, p : p + c], np.asarray(new)[bi], atol=1e-6)
+        mask = np.ones(s, bool)
+        mask[p : p + c] = False
+        np.testing.assert_allclose(
+            out[bi][:, mask], np.asarray(cache)[bi][:, mask], atol=1e-6
+        )
+
+
+def test_decode_distinct_positions_per_sequence():
+    """Batched decode with different cache lengths per sequence."""
+    b, s = 4, 64
+    kv_k, kv_v = M.empty_cache(CFG, b, s)
+    # seed each sequence with a different-length prefix, one at a time
+    prefix_lens = [3, 10, 17, 31]
+    k, v = kv_k, kv_v
+    toks = jax.random.randint(jax.random.PRNGKey(3), (b, 31), 0, CFG.vocab)
+    # prefill each sequence's prefix via per-sequence masked writes:
+    for i, n in enumerate(prefix_lens):
+        _, kk, vv = M.step(
+            CFG, PARAMS,
+            k[:, i : i + 1], v[:, i : i + 1],
+            toks[i : i + 1, :n], jnp.zeros((1,), jnp.int32),
+            attn_impl="ref",
+        )
+        k = k.at[:, i : i + 1].set(kk)
+        v = v.at[:, i : i + 1].set(vv)
+    # batched decode with heterogeneous pos
+    dec = jax.random.randint(jax.random.PRNGKey(4), (b, 1), 0, CFG.vocab)
+    pos = jnp.array(prefix_lens, jnp.int32)
+    batched, _, _ = M.step(CFG, PARAMS, k, v, dec, pos, attn_impl="ref")
+    # vs one-at-a-time
+    for i, n in enumerate(prefix_lens):
+        single, _, _ = M.step(
+            CFG, PARAMS,
+            k[:, i : i + 1], v[:, i : i + 1],
+            dec[i : i + 1], jnp.array([n], jnp.int32),
+            attn_impl="ref",
+        )
+        np.testing.assert_allclose(
+            np.asarray(batched[i]), np.asarray(single[0]), atol=2e-5, rtol=2e-5
+        )
+
+
+def test_step_fn_flat_signature():
+    fn = M.make_step_fn(CFG, attn_impl="ref")
+    b, c, s = 1, 4, 32
+    kv_k, kv_v = M.empty_cache(CFG, b, s)
+    tokens = jnp.zeros((b, c), jnp.int32)
+    pos = jnp.zeros((b,), jnp.int32)
+    last = jnp.full((b,), c - 1, jnp.int32)
+    out = fn(*PARAMS, kv_k, kv_v, tokens, pos, last)
+    assert len(out) == 3
+    assert out[0].shape == (b, CFG.vocab)

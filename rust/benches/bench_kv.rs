@@ -1,0 +1,26 @@
+//! KV substrate benches: chunked-transfer timeline computation (driver hot
+//! path) and block allocator churn.
+use dynaserve::kv::{chunked_timeline, monolithic_timeline, BlockAllocator, LinkSpec};
+use dynaserve::util::benchkit::{bench, black_box};
+
+fn main() {
+    let link = LinkSpec::default();
+    let ready: Vec<(f64, f64)> = (0..64).map(|i| (i as f64 * 0.01, 512.0 * 196_608.0)).collect();
+    bench("kv: chunked timeline (64 chunks)", 2.0, || {
+        black_box(chunked_timeline(&ready, &link));
+    });
+    bench("kv: monolithic timeline (64 chunks)", 2.0, || {
+        black_box(monolithic_timeline(&ready, &link));
+    });
+
+    bench("kv: allocator grow/release cycle (64 reqs)", 2.0, || {
+        let mut a = BlockAllocator::new(8192, 16);
+        for id in 0..64u64 {
+            a.grow(id, 2048).unwrap();
+        }
+        for id in 0..64u64 {
+            a.release(id);
+        }
+        black_box(a.free_blocks());
+    });
+}

@@ -1,0 +1,28 @@
+//! Live-path benches: PJRT step latency per bucket (the L1/L2 hot path as
+//! seen from Rust) plus KV pack/transfer-extract host costs. Requires
+//! `make artifacts`; skips gracefully when absent.
+use dynaserve::runtime::Engine;
+use dynaserve::util::benchkit::{bench, black_box};
+
+fn main() {
+    let dir = std::env::args().skip(1).find(|a| !a.starts_with('-')).unwrap_or_else(|| "artifacts".into());
+    let engine = match Engine::load(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping runtime benches (artifacts not built?): {e:#}");
+            return;
+        }
+    };
+    for b in engine.buckets().to_vec() {
+        let mut seqs: Vec<_> = (0..b.batch).map(|_| engine.new_kv(b.capacity)).collect();
+        let chunk: Vec<i32> = (1..=b.chunk as i32).collect();
+        bench(&format!("pjrt step {}", b.name), 2.0, || {
+            for s in seqs.iter_mut() {
+                s.len = b.capacity / 2;
+            }
+            let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
+            let chunks: Vec<&[i32]> = (0..b.batch).map(|_| chunk.as_slice()).collect();
+            black_box(engine.step(&b, &mut refs, &chunks).unwrap());
+        });
+    }
+}

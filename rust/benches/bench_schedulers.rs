@@ -1,0 +1,55 @@
+//! Scheduler hot-path benches (Table 3's property: scheduling must be
+//! negligible vs request latency). Covers Algorithm 1 (global split
+//! search), Algorithm 2 (local batch composition) and the execution
+//! predictor probe.
+use dynaserve::coordinator::local::{DecodeEntry, PrefillEntry};
+use dynaserve::coordinator::predictor::{completion_time, PredictorConfig};
+use dynaserve::coordinator::{
+    GlobalConfig, GlobalScheduler, InstanceSnapshot, LocalConfig, LocalScheduler, ProfileTable,
+    WorkItem,
+};
+use dynaserve::core::Request;
+use dynaserve::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+use dynaserve::util::benchkit::{bench, black_box};
+
+fn main() {
+    let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
+    let profile = ProfileTable::seeded(&spec);
+
+    // loaded snapshots: 64 resident micro-requests per instance
+    let work: Vec<WorkItem> = (0..64)
+        .map(|i| WorkItem {
+            prefill_remaining: (i * 131) % 4096,
+            context: (i * 67) % 2048,
+            decode_remaining: (i * 17) % 800,
+        })
+        .collect();
+    let snaps: Vec<InstanceSnapshot> = (0..2)
+        .map(|id| InstanceSnapshot { id, work: work.clone(), kv_utilization: 0.4 })
+        .collect();
+
+    let mut global = GlobalScheduler::new(GlobalConfig::default());
+    let req = Request::new(1, 0.0, 2048, 512);
+    bench("global: Algorithm 1 split decision (loaded pool)", 2.0, || {
+        black_box(global.schedule(&req, &snaps, &profile));
+    });
+
+    let pcfg = PredictorConfig::default();
+    bench("predictor: completion-time probe (64 items)", 2.0, || {
+        black_box(completion_time(&work, &profile, &pcfg));
+    });
+
+    let mut local = LocalScheduler::new(LocalConfig::default(), profile.clone());
+    let decodes: Vec<DecodeEntry> =
+        (0..48).map(|i| DecodeEntry { key: i, context: 512 + (i as usize * 13) % 1024 }).collect();
+    let prefills: Vec<PrefillEntry> = (0..16)
+        .map(|i| PrefillEntry { key: 100 + i, remaining: 1024, context: 0 })
+        .collect();
+    bench("local: Algorithm 2 batch composition (48d+16p)", 2.0, || {
+        black_box(local.next_batch(&decodes, &prefills));
+    });
+
+    bench("profile: max_prefill_tokens inversion", 2.0, || {
+        black_box(profile.max_prefill_tokens(0.1, 512, 16));
+    });
+}

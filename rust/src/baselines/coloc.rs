@@ -1,0 +1,78 @@
+//! PD colocation with chunked prefill (vLLM/Sarathi-Serve style, §2.2):
+//! every request runs whole on one instance chosen round-robin (DP
+//! replicas); the instance's local scheduler interleaves prefill chunks of
+//! a fixed size with decodes (configure via `LocalConfig::fixed_budget`).
+
+use crate::coordinator::router::RoundRobin;
+use crate::coordinator::{InstanceSnapshot, ProfileTable};
+use crate::core::{MicroRequest, Request, Role};
+use crate::sim::policy::{Placement, Policy};
+
+pub struct ColocPolicy {
+    rr: RoundRobin,
+}
+
+impl ColocPolicy {
+    pub fn new() -> Self {
+        ColocPolicy { rr: RoundRobin::new() }
+    }
+}
+
+impl Default for ColocPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for ColocPolicy {
+    fn name(&self) -> &'static str {
+        "pd-coloc"
+    }
+
+    fn place(
+        &mut self,
+        req: &Request,
+        snapshots: &[InstanceSnapshot],
+        _profile: &ProfileTable,
+    ) -> Placement {
+        let instance = snapshots[self.rr.pick(snapshots.len())].id;
+        Placement {
+            alpha: MicroRequest {
+                request: req.id,
+                role: Role::Alpha,
+                start: 0,
+                end: req.predicted_len(),
+                prompt_len: req.prompt_len,
+                instance,
+                arrival: req.arrival,
+            },
+            beta: None,
+            probes: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+
+    #[test]
+    fn round_robin_no_split() {
+        let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
+        let profile = ProfileTable::seeded(&spec);
+        let snaps: Vec<InstanceSnapshot> = (0..2)
+            .map(|id| InstanceSnapshot { id, work: vec![], kv_utilization: 0.0 })
+            .collect();
+        let mut p = ColocPolicy::new();
+        let mut targets = Vec::new();
+        for i in 0..4 {
+            let req = Request::new(i, 0.0, 100, 50);
+            let pl = p.place(&req, &snaps, &profile);
+            assert!(pl.beta.is_none());
+            assert_eq!(pl.alpha.len(), 150);
+            targets.push(pl.alpha.instance);
+        }
+        assert_eq!(targets, vec![0, 1, 0, 1]);
+    }
+}

@@ -1,0 +1,112 @@
+//! PD disaggregation (DistServe/Splitwise/vLLM-PD style, §2.2): dedicated
+//! prefill and decode pools; every request splits exactly at the
+//! prefill/decode boundary (s = P) and the KV cache is handed off after
+//! prefill completes. Placement inside each pool is least-loaded.
+
+use crate::coordinator::{InstanceSnapshot, ProfileTable};
+use crate::core::{MicroRequest, Request, Role};
+use crate::sim::policy::{Placement, Policy};
+
+pub struct DisaggPolicy {
+    /// Instances [0, n_prefill) are the prefill pool; the rest decode.
+    pub n_prefill: usize,
+}
+
+impl DisaggPolicy {
+    pub fn new(n_prefill: usize) -> Self {
+        assert!(n_prefill >= 1);
+        DisaggPolicy { n_prefill }
+    }
+}
+
+impl Policy for DisaggPolicy {
+    fn name(&self) -> &'static str {
+        "pd-disagg"
+    }
+
+    fn place(
+        &mut self,
+        req: &Request,
+        snapshots: &[InstanceSnapshot],
+        _profile: &ProfileTable,
+    ) -> Placement {
+        assert!(snapshots.len() > self.n_prefill, "need at least one decode instance");
+        // least queued prefill tokens in the prefill pool
+        let p_inst = snapshots[..self.n_prefill]
+            .iter()
+            .min_by_key(|s| s.queued_prefill_tokens())
+            .unwrap()
+            .id;
+        // fewest active decodes in the decode pool
+        let d_inst = snapshots[self.n_prefill..]
+            .iter()
+            .min_by_key(|s| (s.active_decodes(), (s.kv_utilization * 1e6) as u64))
+            .unwrap()
+            .id;
+        let p = req.prompt_len;
+        let l = req.predicted_len();
+        Placement {
+            alpha: MicroRequest {
+                request: req.id,
+                role: Role::Alpha,
+                start: 0,
+                end: p.min(l),
+                prompt_len: p,
+                instance: p_inst,
+                arrival: req.arrival,
+            },
+            beta: (l > p).then(|| MicroRequest {
+                request: req.id,
+                role: Role::Beta,
+                start: p,
+                end: l,
+                prompt_len: p,
+                instance: d_inst,
+                arrival: req.arrival,
+            }),
+            probes: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::WorkItem;
+    use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+
+    fn profile() -> ProfileTable {
+        ProfileTable::seeded(&InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1))
+    }
+
+    #[test]
+    fn splits_exactly_at_pd_boundary() {
+        let snaps: Vec<InstanceSnapshot> = (0..2)
+            .map(|id| InstanceSnapshot { id, work: vec![], kv_utilization: 0.0 })
+            .collect();
+        let mut p = DisaggPolicy::new(1);
+        let req = Request::new(1, 0.0, 1000, 400);
+        let pl = p.place(&req, &snaps, &profile());
+        assert_eq!(pl.alpha.end, 1000);
+        assert_eq!(pl.alpha.instance, 0);
+        let b = pl.beta.unwrap();
+        assert_eq!(b.start, 1000);
+        assert_eq!(b.end, 1400);
+        assert_eq!(b.instance, 1);
+        assert_eq!(b.prefill_tokens(), 0);
+    }
+
+    #[test]
+    fn least_loaded_within_pools() {
+        let mut snaps: Vec<InstanceSnapshot> = (0..4)
+            .map(|id| InstanceSnapshot { id, work: vec![], kv_utilization: 0.0 })
+            .collect();
+        // prefill pool {0,1}: load 0 heavier; decode pool {2,3}: 2 heavier
+        snaps[0].work = vec![WorkItem { prefill_remaining: 9000, context: 0, decode_remaining: 0 }];
+        snaps[2].work = (0..8).map(|_| WorkItem::pure_decode(512, 100)).collect();
+        let mut p = DisaggPolicy::new(2);
+        let pl = p.place(&Request::new(1, 0.0, 500, 300), &snaps, &profile());
+        assert_eq!(pl.alpha.instance, 1);
+        assert_eq!(pl.beta.unwrap().instance, 3);
+    }
+}

@@ -1,0 +1,9 @@
+//! Baseline serving architectures (§2.2, §6.1), implemented from scratch in
+//! the same framework so comparisons are apples-to-apples: the substrate
+//! (instances, cost model, metrics) is identical — only the policy differs.
+
+pub mod coloc;
+pub mod disagg;
+
+pub use coloc::ColocPolicy;
+pub use disagg::DisaggPolicy;

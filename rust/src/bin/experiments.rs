@@ -1,0 +1,41 @@
+//! Experiment runner: regenerates every table and figure of the paper's
+//! evaluation. `experiments all` runs the lot; see DESIGN.md §4.
+//!
+//! Usage:
+//!   cargo run --release --bin experiments -- <id> [--duration S] [--seed N] …
+//!   cargo run --release --bin experiments -- all
+//!   cargo run --release --bin experiments -- list
+
+use dynaserve::experiments::registry;
+use dynaserve::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let reg = registry();
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("list");
+    match which {
+        "list" => {
+            println!("available experiments:");
+            for (id, desc, _) in &reg {
+                println!("  {id:<8} {desc}");
+            }
+            println!("  all      run every experiment in sequence");
+        }
+        "all" => {
+            for (id, desc, f) in &reg {
+                println!("\n================ {id}: {desc} ================\n");
+                let t0 = std::time::Instant::now();
+                f(&args)?;
+                println!("[{id} done in {:.1}s]", t0.elapsed().as_secs_f64());
+            }
+        }
+        id => {
+            let (_, _, f) = reg
+                .iter()
+                .find(|(k, _, _)| *k == id)
+                .ok_or_else(|| anyhow::anyhow!("unknown experiment '{id}' (try 'list')"))?;
+            f(&args)?;
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,339 @@
+//! Global scheduler (§4.1, Algorithm 1): chooses each request's partition
+//! ratio φ by bounded binary search so that the predicted completion times
+//! of the α and β instances balance, then commits the micro-requests.
+//!
+//! The search starts at φ₀ = P/(P+D̂) (pure PD disaggregation), probes the
+//! execution predictor — a few microseconds per probe — at most K times
+//! (K = 6 in the paper), and stops when |T₁ − T₂| ≤ ε. β's probe includes
+//! the non-overlapped share of the KV transfer its context requires.
+
+use super::predictor::{completion_time, InstanceSnapshot, PredictorConfig};
+use super::profile::ProfileTable;
+use super::router;
+use super::WorkItem;
+use crate::core::{Request, SplitDecision};
+use crate::kv::LinkSpec;
+
+#[derive(Debug, Clone, Copy)]
+pub struct GlobalConfig {
+    /// Max binary-search iterations K (paper: 6).
+    pub max_iters: usize,
+    /// Balance tolerance ε (seconds).
+    pub epsilon: f64,
+    /// Snap to no-split when a micro-request would be shorter than this.
+    pub min_span: usize,
+    /// Predictor tuning (shares the SLO with the local scheduler).
+    pub predictor: PredictorConfig,
+    /// KV bytes per token of the served model (for the transfer penalty).
+    pub kv_bytes_per_token: f64,
+    /// Cross-instance link.
+    pub link: LinkSpec,
+    /// Fraction of the transfer hidden behind compute by chunked KV
+    /// transfer (§4.3); the residual is charged to β's probe.
+    pub transfer_overlap: f64,
+}
+
+impl Default for GlobalConfig {
+    fn default() -> Self {
+        GlobalConfig {
+            max_iters: 6,
+            epsilon: 0.010,
+            min_span: 32,
+            predictor: PredictorConfig::default(),
+            kv_bytes_per_token: 196_608.0, // qwen-14b
+            link: LinkSpec::default(),
+            transfer_overlap: 0.90,
+        }
+    }
+}
+
+/// Outcome of one scheduling decision, with probe telemetry.
+#[derive(Debug, Clone)]
+pub struct ScheduleOutcome {
+    pub decision: SplitDecision,
+    /// Predicted drain times at the chosen split.
+    pub t_alpha: f64,
+    pub t_beta: f64,
+    pub probes: usize,
+}
+
+#[derive(Debug)]
+pub struct GlobalScheduler {
+    pub cfg: GlobalConfig,
+    rr: usize,
+}
+
+impl GlobalScheduler {
+    pub fn new(cfg: GlobalConfig) -> Self {
+        GlobalScheduler { cfg, rr: 0 }
+    }
+
+    fn transfer_penalty(&self, context_tokens: usize) -> f64 {
+        let bytes = context_tokens as f64 * self.cfg.kv_bytes_per_token;
+        self.cfg.link.transfer_time(bytes) * (1.0 - self.cfg.transfer_overlap)
+    }
+
+    /// Algorithm 1. `snapshots` is the current load of every instance in
+    /// the unified pool; `profile` the shared latency profile table.
+    pub fn schedule(
+        &mut self,
+        req: &Request,
+        snapshots: &[InstanceSnapshot],
+        profile: &ProfileTable,
+    ) -> ScheduleOutcome {
+        assert!(!snapshots.is_empty());
+        let l = req.predicted_len().max(1);
+        let pcfg = &self.cfg.predictor;
+
+        // Single instance: degenerate to colocation.
+        if snapshots.len() == 1 {
+            let items = with_item(&snapshots[0].work, span_item(req, 0, l));
+            let t = completion_time(&items, profile, pcfg);
+            return ScheduleOutcome {
+                decision: SplitDecision {
+                    ratio: 1.0,
+                    split: l,
+                    alpha_instance: snapshots[0].id,
+                    beta_instance: snapshots[0].id,
+                },
+                t_alpha: t,
+                t_beta: t,
+                probes: 1,
+            };
+        }
+
+        // Base drain time per instance; α on the emptier one.
+        let base: Vec<f64> = snapshots
+            .iter()
+            .map(|s| completion_time(&s.work, profile, pcfg))
+            .collect();
+        let (ai, bi) = router::pick_pair(&base, &mut self.rr);
+        let (alpha, beta) = (&snapshots[ai], &snapshots[bi]);
+        let mut probes = snapshots.len();
+
+        // COLDSTART: pool fully idle — seed with the PD-disaggregation
+        // split; the ratio only matters once contention exists.
+        let cold = base.iter().all(|t| *t < 1e-9);
+
+        let mut phi = req.prompt_len as f64 / l as f64;
+        let (mut lo, mut hi) = (0.0f64, 1.0f64);
+        let (mut t1, mut t2) = (0.0, 0.0);
+        let mut s = split_point(phi, l);
+        let iters = if cold { 1 } else { self.cfg.max_iters };
+        for _ in 0..iters {
+            s = split_point(phi, l);
+            let a_items = with_item(&alpha.work, span_item(req, 0, s));
+            let b_items = with_item(&beta.work, span_item(req, s, l));
+            t1 = completion_time(&a_items, profile, pcfg);
+            t2 = completion_time(&b_items, profile, pcfg)
+                + if s > 0 && s < l { self.transfer_penalty(s) } else { 0.0 };
+            probes += 2;
+            if (t1 - t2).abs() <= self.cfg.epsilon {
+                break;
+            }
+            // α slower → shift tokens to β (smaller φ); else grow α.
+            if t1 > t2 {
+                hi = phi;
+            } else {
+                lo = phi;
+            }
+            phi = 0.5 * (lo + hi);
+        }
+
+        // Snap degenerate splits to whole-request execution.
+        if s < self.cfg.min_span {
+            s = 0;
+        } else if l - s < self.cfg.min_span {
+            s = l;
+        }
+        ScheduleOutcome {
+            decision: SplitDecision {
+                ratio: s as f64 / l as f64,
+                split: s,
+                alpha_instance: alpha.id,
+                beta_instance: if s == l { alpha.id } else { beta.id },
+            },
+            t_alpha: t1,
+            t_beta: t2,
+            probes,
+        }
+    }
+}
+
+fn split_point(phi: f64, l: usize) -> usize {
+    ((phi * l as f64).ceil() as usize).min(l)
+}
+
+fn span_item(req: &Request, start: usize, end: usize) -> Option<WorkItem> {
+    if start >= end {
+        return None;
+    }
+    let p = req.prompt_len;
+    Some(WorkItem {
+        prefill_remaining: end.min(p).saturating_sub(start),
+        context: start,
+        decode_remaining: end.saturating_sub(start.max(p)),
+    })
+}
+
+fn with_item(work: &[WorkItem], extra: Option<WorkItem>) -> Vec<WorkItem> {
+    let mut v = work.to_vec();
+    if let Some(w) = extra {
+        v.push(w);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+
+    fn profile() -> ProfileTable {
+        ProfileTable::seeded(&InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1))
+    }
+
+    fn idle(n: usize) -> Vec<InstanceSnapshot> {
+        (0..n)
+            .map(|id| InstanceSnapshot { id, work: vec![], kv_utilization: 0.0 })
+            .collect()
+    }
+
+    fn req(p: usize, d: usize) -> Request {
+        Request::new(1, 0.0, p, d)
+    }
+
+    #[test]
+    fn cold_start_is_disaggregation_split() {
+        let mut g = GlobalScheduler::new(GlobalConfig::default());
+        let out = g.schedule(&req(1024, 1024), &idle(2), &profile());
+        // φ₀ = 0.5 → s = 1024 = P: pure PD split
+        assert_eq!(out.decision.split, 1024);
+        assert_ne!(out.decision.alpha_instance, out.decision.beta_instance);
+    }
+
+    #[test]
+    fn single_instance_no_split() {
+        let mut g = GlobalScheduler::new(GlobalConfig::default());
+        let out = g.schedule(&req(512, 256), &idle(1), &profile());
+        assert_eq!(out.decision.split, 768);
+        assert_eq!(out.decision.alpha_instance, out.decision.beta_instance);
+    }
+
+    #[test]
+    fn loaded_beta_shifts_split_forward() {
+        // β-side congestion (decode-heavy resident work) should push the
+        // split past P: α absorbs part of the decode.
+        let mut g = GlobalScheduler::new(GlobalConfig::default());
+        let p = profile();
+        let mut snaps = idle(2);
+        // both loaded, instance 1 much more decode-loaded
+        snaps[0].work = vec![WorkItem { prefill_remaining: 2048, context: 0, decode_remaining: 32 }];
+        snaps[1].work = (0..16).map(|_| WorkItem::pure_decode(1024, 800)).collect();
+        let r = req(1024, 1024);
+        let out = g.schedule(&r, &snaps, &p);
+        // α must be the emptier instance 0
+        assert_eq!(out.decision.alpha_instance, 0);
+        assert!(
+            out.decision.split > 1024,
+            "split={} should exceed P when β side is congested",
+            out.decision.split
+        );
+        // probes bounded by K
+        assert!(out.probes <= 2 + 2 * g.cfg.max_iters);
+    }
+
+    #[test]
+    fn loaded_alpha_shifts_split_back() {
+        let mut g = GlobalScheduler::new(GlobalConfig::default());
+        let p = profile();
+        let mut snaps = idle(2);
+        snaps[0].work = (0..8).map(|_| WorkItem { prefill_remaining: 8192, context: 0, decode_remaining: 8 }).collect();
+        snaps[1].work = vec![WorkItem::pure_decode(128, 16)];
+        let out = g.schedule(&req(4096, 512), &snaps, &p);
+        // α is the emptier instance (1). With the other instance crushed,
+        // balancing pushes the split all the way to L: the request runs
+        // entirely on the idle instance (adaptive colocation).
+        assert_eq!(out.decision.alpha_instance, 1);
+        assert_eq!(out.decision.split, 4096 + 512, "split={}", out.decision.split);
+        assert_eq!(out.decision.beta_instance, out.decision.alpha_instance);
+    }
+
+    #[test]
+    fn balance_improves_vs_static_disagg() {
+        // imbalanced request (decode-heavy): dynamic split must balance
+        // T1/T2 better than the static P/L split.
+        let mut g = GlobalScheduler::new(GlobalConfig::default());
+        let p = profile();
+        let snaps = {
+            let mut s = idle(2);
+            // mild symmetric load so we're past cold start
+            s[0].work = vec![WorkItem::pure_decode(256, 64)];
+            s[1].work = vec![WorkItem::pure_decode(256, 64)];
+            s
+        };
+        let r = req(256, 1467); // mini-reasoning shape
+        let out = g.schedule(&r, &snaps, &p);
+        let imbalance = (out.t_alpha - out.t_beta).abs();
+
+        // static disagg probe
+        let pcfg = PredictorConfig::default();
+        let s_static = 256;
+        let t1 = completion_time(
+            &with_item(&snaps[0].work, span_item(&r, 0, s_static)),
+            &p,
+            &pcfg,
+        );
+        let t2 = completion_time(
+            &with_item(&snaps[1].work, span_item(&r, s_static, r.predicted_len())),
+            &p,
+            &pcfg,
+        );
+        let static_imbalance = (t1 - t2).abs();
+        assert!(
+            imbalance < static_imbalance * 0.5,
+            "dynamic={imbalance} static={static_imbalance}"
+        );
+        assert!(out.decision.split > s_static, "split={}", out.decision.split);
+    }
+
+    #[test]
+    fn min_span_snaps_to_whole_request() {
+        let mut g = GlobalScheduler::new(GlobalConfig { min_span: 64, ..Default::default() });
+        let p = profile();
+        // tiny request: any split would create sub-min_span halves
+        let mut snaps = idle(2);
+        snaps[0].work = vec![WorkItem::pure_decode(64, 10)];
+        snaps[1].work = vec![WorkItem::pure_decode(64, 10)];
+        let out = g.schedule(&req(40, 20), &snaps, &p);
+        assert!(out.decision.split == 0 || out.decision.split == 60);
+    }
+
+    #[test]
+    fn split_always_within_bounds() {
+        use crate::util::proptest_lite::check;
+        let p = profile();
+        check("split in [0, L]", 100, |rng| {
+            let mut g = GlobalScheduler::new(GlobalConfig::default());
+            let pl = rng.range(1, 8192) as usize;
+            let dl = rng.range(1, 4096) as usize;
+            let r = Request::new(rng.next_u64(), 0.0, pl, dl);
+            let mut snaps = idle(2);
+            for s in snaps.iter_mut() {
+                for _ in 0..rng.range(0, 5) {
+                    s.work.push(WorkItem {
+                        prefill_remaining: rng.range(0, 4096) as usize,
+                        context: rng.range(0, 2048) as usize,
+                        decode_remaining: rng.range(0, 1024) as usize,
+                    });
+                }
+            }
+            let out = g.schedule(&r, &snaps, &p);
+            assert!(out.decision.split <= r.predicted_len());
+            let (a, b) = out.decision.to_micro_requests(&r);
+            let total: usize =
+                a.map(|m| m.len()).unwrap_or(0) + b.map(|m| m.len()).unwrap_or(0);
+            assert_eq!(total, r.predicted_len(), "spans must cover the request");
+        });
+    }
+}

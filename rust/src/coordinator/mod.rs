@@ -1,0 +1,101 @@
+//! The DynaServe two-level scheduling framework (§4) — the paper's system
+//! contribution.
+//!
+//! * [`global`] — Algorithm 1: per-request split-ratio selection by bounded
+//!   binary search over predicted per-instance completion times.
+//! * [`predictor`] — the lightweight execution predictor backing the probes.
+//! * [`local`] — Algorithm 2: SLO-aware batch composition on each instance.
+//! * [`profile`] — the (plen, ctx, dnum) → latency profile table, seeded
+//!   offline from the cost model and refined online with measurements.
+//! * [`length_pred`] — decode-length prediction with configurable error.
+//! * [`router`] — placement of α/β micro-requests over the unified pool.
+//!
+//! All schedulers are pure over snapshots: the discrete-event simulator and
+//! the live PJRT server drive the *same* code (DESIGN.md §3).
+
+pub mod global;
+pub mod length_pred;
+pub mod local;
+pub mod predictor;
+pub mod profile;
+pub mod router;
+
+pub use global::{GlobalConfig, GlobalScheduler};
+pub use length_pred::LengthPredictor;
+pub use local::{BatchPlan, LocalConfig, LocalScheduler};
+pub use predictor::{completion_time, InstanceSnapshot};
+pub use profile::ProfileTable;
+
+/// Remaining work of one micro-request resident on an instance — the unit
+/// the predictor and the local scheduler operate on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkItem {
+    /// Prompt tokens still to prefill.
+    pub prefill_remaining: usize,
+    /// Context length at which pending work resumes (tokens already
+    /// processed for, or transferred to, this sequence).
+    pub context: usize,
+    /// Decode tokens still to generate after prefill completes.
+    pub decode_remaining: usize,
+}
+
+impl WorkItem {
+    pub fn pure_decode(context: usize, decode_remaining: usize) -> Self {
+        WorkItem { prefill_remaining: 0, context, decode_remaining }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.prefill_remaining == 0 && self.decode_remaining == 0
+    }
+
+    pub fn in_decode_phase(&self) -> bool {
+        self.prefill_remaining == 0 && self.decode_remaining > 0
+    }
+
+    /// Build the work item for a micro-request span.
+    pub fn from_micro_request(mr: &crate::core::MicroRequest) -> Self {
+        WorkItem {
+            prefill_remaining: mr.prefill_tokens(),
+            context: mr.start,
+            decode_remaining: mr.decode_tokens(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{MicroRequest, Role};
+
+    #[test]
+    fn work_item_from_alpha_and_beta() {
+        let alpha = MicroRequest {
+            request: 1,
+            role: Role::Alpha,
+            start: 0,
+            end: 120,
+            prompt_len: 100,
+            instance: 0,
+            arrival: 0.0,
+        };
+        let w = WorkItem::from_micro_request(&alpha);
+        assert_eq!(w.prefill_remaining, 100);
+        assert_eq!(w.decode_remaining, 20);
+        assert_eq!(w.context, 0);
+
+        let beta = MicroRequest {
+            request: 1,
+            role: Role::Beta,
+            start: 120,
+            end: 150,
+            prompt_len: 100,
+            instance: 1,
+            arrival: 0.0,
+        };
+        let w = WorkItem::from_micro_request(&beta);
+        assert_eq!(w.prefill_remaining, 0);
+        assert_eq!(w.decode_remaining, 30);
+        assert_eq!(w.context, 120);
+        assert!(w.in_decode_phase());
+    }
+}

@@ -1,0 +1,242 @@
+//! Execution predictor (§4.1): analytically estimates how long an instance
+//! needs to drain its assigned work, including a hypothetical new
+//! micro-request — the T₁/T₂ probes of Algorithm 1.
+//!
+//! The predictor runs a *virtual batch* simulation under the same policy as
+//! the runtime: per pass it admits all decode-phase sequences plus as many
+//! prefill tokens as the SLO budget allows (mirroring Algorithm 2), prices
+//! the pass with the profile table, and advances. Pure-decode tails are
+//! fast-forwarded in closed form (grouped by remaining tokens) instead of
+//! stepping token-by-token, so a probe over hundreds of queued requests
+//! costs microseconds — the paper's "no more than six simulator calls per
+//! request, O(1) data per probe" budget.
+
+use super::profile::ProfileTable;
+use super::WorkItem;
+
+/// What the global scheduler knows about one instance when probing.
+#[derive(Debug, Clone, Default)]
+pub struct InstanceSnapshot {
+    pub id: usize,
+    /// Remaining work of every resident/queued micro-request.
+    pub work: Vec<WorkItem>,
+    /// KV utilization in [0,1] — used by the router for placement ties.
+    pub kv_utilization: f64,
+}
+
+impl InstanceSnapshot {
+    pub fn queued_prefill_tokens(&self) -> usize {
+        self.work.iter().map(|w| w.prefill_remaining).sum()
+    }
+
+    pub fn active_decodes(&self) -> usize {
+        self.work.iter().filter(|w| w.in_decode_phase()).count()
+    }
+}
+
+/// Tuning for the virtual simulation.
+#[derive(Debug, Clone, Copy)]
+pub struct PredictorConfig {
+    /// TBT SLO used to bound per-pass prefill budget (seconds).
+    pub slo: f64,
+    /// Hard cap on simulated mixed passes (backstop; typical probes take
+    /// far fewer before reaching the pure-decode fast path).
+    pub max_passes: usize,
+    /// Cap on concurrently admitted sequences per pass (N_max).
+    pub max_seqs: usize,
+}
+
+impl Default for PredictorConfig {
+    fn default() -> Self {
+        PredictorConfig { slo: 0.100, max_passes: 4096, max_seqs: 256 }
+    }
+}
+
+/// Predicted time for the instance to complete all work in `items`.
+///
+/// This is the paper's `Predict(r1, r2, L)` — callers add the hypothetical
+/// micro-request(s) to the snapshot before calling.
+pub fn completion_time(items: &[WorkItem], profile: &ProfileTable, cfg: &PredictorConfig) -> f64 {
+    let mut items: Vec<WorkItem> = items.iter().copied().filter(|w| !w.is_done()).collect();
+    let mut t = 0.0f64;
+    let mut passes = 0usize;
+
+    // Phase 1: mixed passes while any prefill work remains.
+    while items.iter().any(|w| w.prefill_remaining > 0) && passes < cfg.max_passes {
+        passes += 1;
+        let decodes: Vec<usize> = items
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.in_decode_phase())
+            .map(|(i, _)| i)
+            .take(cfg.max_seqs)
+            .collect();
+        let dnum = decodes.len();
+        let ctx = if dnum == 0 {
+            0
+        } else {
+            decodes.iter().map(|&i| items[i].context).sum::<usize>() / dnum
+        };
+        let budget = profile.max_prefill_tokens(cfg.slo, ctx, dnum).max(64);
+        // admit prefill FCFS
+        let mut used = 0usize;
+        let mut plan: Vec<(usize, usize)> = Vec::new();
+        for (i, w) in items.iter().enumerate() {
+            if w.prefill_remaining == 0 {
+                continue;
+            }
+            let take = w.prefill_remaining.min(budget - used);
+            if take == 0 {
+                break;
+            }
+            plan.push((i, take));
+            used += take;
+            if used >= budget {
+                break;
+            }
+        }
+        let latency = profile.estimate(used, ctx, dnum);
+        // Fast-forward: while the batch composition is stable (no prefill
+        // item or decode finishes) the next passes are identical — jump
+        // straight to the first completion instead of stepping one pass at
+        // a time. This is what keeps a probe in the microsecond budget.
+        let mut j = usize::MAX;
+        for &(i, take) in &plan {
+            j = j.min(items[i].prefill_remaining.div_ceil(take.max(1)));
+        }
+        for &i in &decodes {
+            j = j.min(items[i].decode_remaining);
+        }
+        let j = j.clamp(1, cfg.max_passes - passes + 1);
+        passes += j - 1;
+        t += j as f64 * latency;
+        // advance state by j passes
+        for &(i, take) in &plan {
+            let adv = (take * j).min(items[i].prefill_remaining);
+            items[i].prefill_remaining -= adv;
+            items[i].context += adv;
+        }
+        for &i in &decodes {
+            items[i].decode_remaining -= j;
+            items[i].context += j;
+        }
+        items.retain(|w| !w.is_done());
+    }
+
+    // Phase 2: pure decode tail, fast-forwarded in groups. Process the
+    // active set until the sequence with the fewest remaining tokens
+    // finishes, accounting that whole stretch at the group's average
+    // composition; repeat with the shrunken set.
+    let mut decodes: Vec<WorkItem> = items.into_iter().filter(|w| w.decode_remaining > 0).collect();
+    decodes.sort_by_key(|w| w.decode_remaining);
+    let mut idx = 0;
+    while idx < decodes.len() {
+        let active = &decodes[idx..];
+        let n = active.len().min(cfg.max_seqs);
+        let steps = active[0].decode_remaining;
+        let avg_ctx =
+            active.iter().take(n).map(|w| w.context).sum::<usize>() / n + steps / 2;
+        let step_latency = profile.estimate(0, avg_ctx, n);
+        t += steps as f64 * step_latency;
+        // consume `steps` from every active sequence
+        for w in decodes[idx..].iter_mut() {
+            w.decode_remaining -= steps;
+            w.context += steps;
+        }
+        while idx < decodes.len() && decodes[idx].decode_remaining == 0 {
+            idx += 1;
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+
+    fn profile() -> ProfileTable {
+        ProfileTable::seeded(&InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1))
+    }
+
+    #[test]
+    fn empty_instance_is_instant() {
+        let p = profile();
+        assert_eq!(completion_time(&[], &p, &PredictorConfig::default()), 0.0);
+    }
+
+    #[test]
+    fn more_work_takes_longer() {
+        let p = profile();
+        let cfg = PredictorConfig::default();
+        let small = completion_time(
+            &[WorkItem { prefill_remaining: 512, context: 0, decode_remaining: 32 }],
+            &p,
+            &cfg,
+        );
+        let big = completion_time(
+            &[WorkItem { prefill_remaining: 4096, context: 0, decode_remaining: 256 }],
+            &p,
+            &cfg,
+        );
+        assert!(big > small * 2.0, "small={small} big={big}");
+    }
+
+    #[test]
+    fn decode_tail_scales_with_tokens() {
+        let p = profile();
+        let cfg = PredictorConfig::default();
+        let t100 = completion_time(&[WorkItem::pure_decode(1024, 100)], &p, &cfg);
+        let t1000 = completion_time(&[WorkItem::pure_decode(1024, 1000)], &p, &cfg);
+        assert!(t1000 > 8.0 * t100, "t100={t100} t1000={t1000}");
+    }
+
+    #[test]
+    fn batched_decodes_share_passes() {
+        // 8 sequences decoding together must be much cheaper than 8x serial
+        let p = profile();
+        let cfg = PredictorConfig::default();
+        let one = completion_time(&[WorkItem::pure_decode(512, 200)], &p, &cfg);
+        let eight: Vec<WorkItem> = (0..8).map(|_| WorkItem::pure_decode(512, 200)).collect();
+        let t8 = completion_time(&eight, &p, &cfg);
+        assert!(t8 < 3.0 * one, "one={one} eight={t8}");
+    }
+
+    #[test]
+    fn heterogeneous_decode_tail_is_ordered() {
+        let p = profile();
+        let cfg = PredictorConfig::default();
+        let items = vec![
+            WorkItem::pure_decode(256, 10),
+            WorkItem::pure_decode(256, 500),
+            WorkItem::pure_decode(256, 1000),
+        ];
+        let t = completion_time(&items, &p, &cfg);
+        let longest = completion_time(&[WorkItem::pure_decode(256, 1000)], &p, &cfg);
+        assert!(t >= longest, "t={t} longest={longest}");
+        assert!(t < longest * 1.6, "t={t} longest={longest}");
+    }
+
+    #[test]
+    fn probe_is_fast() {
+        // Algorithm 1 budget: a probe must be microseconds, not millis.
+        let p = profile();
+        let cfg = PredictorConfig::default();
+        let items: Vec<WorkItem> = (0..128)
+            .map(|i| WorkItem {
+                prefill_remaining: 1024 + i * 7,
+                context: 0,
+                decode_remaining: 200 + i,
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let n = 100;
+        for _ in 0..n {
+            completion_time(&items, &p, &cfg);
+        }
+        let per = t0.elapsed().as_secs_f64() / n as f64;
+        // hot-path budget is enforced in release; debug builds get slack
+        let bound = if cfg!(debug_assertions) { 20e-3 } else { 2e-3 };
+        assert!(per < bound, "probe too slow: {per}s");
+    }
+}

@@ -1,0 +1,256 @@
+//! Latency profile table (§4.2): estimated batch latency keyed by
+//! (prefill length, decode context, decode count).
+//!
+//! The table is seeded offline from the analytical cost model (on the live
+//! path, from measured PJRT step latencies during calibration) and refined
+//! continuously at runtime: after every executed batch the local scheduler
+//! RECORDs the observed `(plen, ctx, dnum, time)` tuple (Algorithm 2,
+//! line 1). Lookups blend the online estimate with the offline seed, so the
+//! table tracks drift without forgetting its prior. Probes cost a few table
+//! reads — microseconds, as Algorithm 1 requires.
+
+use crate::costmodel::{BatchShape, InstanceSpec};
+use crate::util::stats::Welford;
+
+/// Geometric-ish bucket edges.
+fn bucket_of(edges: &[usize], v: usize) -> usize {
+    match edges.binary_search(&v) {
+        Ok(i) => i,
+        Err(i) => i.min(edges.len() - 1),
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ProfileTable {
+    plen_edges: Vec<usize>,
+    ctx_edges: Vec<usize>,
+    dnum_edges: Vec<usize>,
+    /// Offline seed latency per cell (seconds).
+    seed: Vec<f64>,
+    /// Online measurements per cell.
+    online: Vec<Welford>,
+    /// Safety multiplier adapted from observed SLO breaches (≥ 1.0 means
+    /// conservative). See LocalScheduler.
+    safety: f64,
+}
+
+impl ProfileTable {
+    pub fn edges_default() -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+        let plen = vec![0, 32, 64, 128, 256, 384, 512, 768, 1024, 1536, 2048, 3072, 4096, 6144, 8192, 12288, 16384];
+        let ctx = vec![0, 128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768];
+        let dnum = vec![0, 1, 2, 4, 8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256];
+        (plen, ctx, dnum)
+    }
+
+    /// Seed every cell from the instance cost model (offline profiling).
+    pub fn seeded(spec: &InstanceSpec) -> ProfileTable {
+        let (plen_edges, ctx_edges, dnum_edges) = Self::edges_default();
+        let n = plen_edges.len() * ctx_edges.len() * dnum_edges.len();
+        let mut seed = vec![0.0; n];
+        for (pi, &p) in plen_edges.iter().enumerate() {
+            for (ci, &c) in ctx_edges.iter().enumerate() {
+                for (di, &d) in dnum_edges.iter().enumerate() {
+                    // the ctx axis prices BOTH the decode context and the
+                    // context the prefill chunk resumes at — a chunk deep
+                    // into a long prompt pays full attention over the
+                    // prefix, which dominates its cost for 8k+ prompts
+                    let shape = BatchShape {
+                        prefill_tokens: p,
+                        prefill_ctx: c,
+                        decode_reqs: d,
+                        decode_ctx: c,
+                    };
+                    let idx = Self::index_of(&plen_edges, &ctx_edges, &dnum_edges, pi, ci, di);
+                    seed[idx] = spec.iteration_cost(&shape).latency;
+                }
+            }
+        }
+        ProfileTable {
+            online: vec![Welford::default(); n],
+            plen_edges,
+            ctx_edges,
+            dnum_edges,
+            seed,
+            safety: 1.0,
+        }
+    }
+
+    fn index_of(
+        _plen_edges: &[usize],
+        ctx_edges: &[usize],
+        dnum_edges: &[usize],
+        pi: usize,
+        ci: usize,
+        di: usize,
+    ) -> usize {
+        (pi * ctx_edges.len() + ci) * dnum_edges.len() + di
+    }
+
+    fn cell(&self, plen: usize, ctx: usize, dnum: usize) -> usize {
+        let pi = bucket_of(&self.plen_edges, plen);
+        let ci = bucket_of(&self.ctx_edges, ctx);
+        let di = bucket_of(&self.dnum_edges, dnum);
+        Self::index_of(&self.plen_edges, &self.ctx_edges, &self.dnum_edges, pi, ci, di)
+    }
+
+    /// RECORD(T, plen, ctx, dnum, time) — Algorithm 2 line 1.
+    pub fn record(&mut self, plen: usize, ctx: usize, dnum: usize, latency: f64) {
+        let idx = self.cell(plen, ctx, dnum);
+        self.online[idx].push(latency);
+    }
+
+    /// Blended seed/online latency at a cell.
+    fn cell_value(&self, pi: usize, ci: usize, di: usize) -> f64 {
+        let idx = Self::index_of(&self.plen_edges, &self.ctx_edges, &self.dnum_edges, pi, ci, di);
+        let seed = self.seed[idx];
+        let w = &self.online[idx];
+        if w.n == 0 {
+            seed
+        } else {
+            // confidence ramp: full trust in online mean after ~8 samples
+            let alpha = (w.n as f64 / 8.0).min(1.0);
+            alpha * w.mean() + (1.0 - alpha) * seed
+        }
+    }
+
+    /// Estimated latency of a batch (seconds). Linear interpolation along
+    /// the prefill-length axis (the budget-inversion axis); ctx/dnum round
+    /// up to the next bucket (conservative).
+    pub fn estimate(&self, plen: usize, ctx: usize, dnum: usize) -> f64 {
+        let ci = bucket_of(&self.ctx_edges, ctx);
+        let di = bucket_of(&self.dnum_edges, dnum);
+        let pi_hi = bucket_of(&self.plen_edges, plen);
+        let est = if self.plen_edges[pi_hi] == plen || pi_hi == 0 {
+            self.cell_value(pi_hi, ci, di)
+        } else {
+            let pi_lo = pi_hi - 1;
+            let (p0, p1) = (self.plen_edges[pi_lo] as f64, self.plen_edges[pi_hi] as f64);
+            let (t0, t1) = (self.cell_value(pi_lo, ci, di), self.cell_value(pi_hi, ci, di));
+            let frac = (plen as f64 - p0) / (p1 - p0);
+            t0 + frac * (t1 - t0)
+        };
+        est * self.safety
+    }
+
+    /// Largest prefill token budget M whose batch
+    /// (M, ctx, dnum) stays within `slo` — MAXPREFILLALLOWED of
+    /// Algorithm 2. Returns 0 when even a decode-only batch breaches.
+    pub fn max_prefill_tokens(&self, slo: f64, ctx: usize, dnum: usize) -> usize {
+        if self.estimate(0, ctx, dnum) > slo {
+            return 0;
+        }
+        // binary search over the plen edge grid, then refine linearly
+        let mut lo = 0usize; // last fitting edge index
+        let mut hi = self.plen_edges.len() - 1;
+        if self.estimate(self.plen_edges[hi], ctx, dnum) <= slo {
+            return self.plen_edges[hi];
+        }
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if self.estimate(self.plen_edges[mid], ctx, dnum) <= slo {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        // linear interpolation between the bracketing edges
+        let (p0, p1) = (self.plen_edges[lo], self.plen_edges[hi]);
+        let (t0, t1) = (
+            self.estimate(p0, ctx, dnum),
+            self.estimate(p1, ctx, dnum),
+        );
+        if t1 <= t0 + 1e-12 {
+            return p0;
+        }
+        let frac = ((slo - t0) / (t1 - t0)).clamp(0.0, 1.0);
+        p0 + ((p1 - p0) as f64 * frac) as usize
+    }
+
+    /// Adapt the safety multiplier after an observed latency vs the SLO.
+    /// Breaches tighten quickly; headroom relaxes slowly (multiplicative
+    /// increase, additive-ish decrease).
+    pub fn adapt_safety(&mut self, observed: f64, slo: f64) {
+        if observed > slo {
+            self.safety = (self.safety * 1.10).min(2.5);
+        } else if observed < 0.8 * slo {
+            self.safety = (self.safety * 0.995).max(0.8);
+        }
+    }
+
+    pub fn safety(&self) -> f64 {
+        self.safety
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::{GpuSpec, LlmSpec};
+
+    fn table() -> ProfileTable {
+        ProfileTable::seeded(&InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1))
+    }
+
+    #[test]
+    fn estimate_monotone_in_plen() {
+        let t = table();
+        let mut last = 0.0;
+        for p in [0, 64, 256, 1024, 4096] {
+            let e = t.estimate(p, 512, 8);
+            assert!(e >= last, "plen={p}: {e} < {last}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn max_prefill_within_slo() {
+        let t = table();
+        let slo = 0.100;
+        let m = t.max_prefill_tokens(slo, 512, 8);
+        assert!(m > 0, "budget should be positive under light load");
+        // the budget must actually fit (tolerate bucket rounding)
+        assert!(t.estimate(m, 512, 8) <= slo * 1.08, "est={}", t.estimate(m, 512, 8));
+        // and the next bucket up must not fit by a margin
+        assert!(t.estimate(m + 1024, 512, 8) > slo * 0.95);
+    }
+
+    #[test]
+    fn max_prefill_zero_when_decode_alone_breaches() {
+        let t = table();
+        // enormous decode batch at huge context: even plen=0 breaches 1 ms
+        assert_eq!(t.max_prefill_tokens(0.001, 32768, 256), 0);
+    }
+
+    #[test]
+    fn online_records_shift_estimate() {
+        let mut t = table();
+        let before = t.estimate(512, 512, 8);
+        for _ in 0..16 {
+            t.record(512, 512, 8, before * 2.0);
+        }
+        let after = t.estimate(512, 512, 8);
+        assert!(after > before * 1.7, "before={before} after={after}");
+    }
+
+    #[test]
+    fn safety_tightens_on_breach_and_recovers() {
+        let mut t = table();
+        let base = t.estimate(512, 512, 8);
+        t.adapt_safety(0.2, 0.1); // breach
+        assert!(t.safety() > 1.05);
+        assert!(t.estimate(512, 512, 8) > base);
+        for _ in 0..200 {
+            t.adapt_safety(0.01, 0.1); // lots of headroom
+        }
+        assert!(t.safety() < 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn bucket_of_edges() {
+        let edges = vec![0, 10, 20, 40];
+        assert_eq!(bucket_of(&edges, 0), 0);
+        assert_eq!(bucket_of(&edges, 10), 1);
+        assert_eq!(bucket_of(&edges, 15), 2); // round up = conservative
+        assert_eq!(bucket_of(&edges, 999), 3);
+    }
+}

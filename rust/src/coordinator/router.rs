@@ -1,0 +1,82 @@
+//! Placement over the unified pool: the global scheduler pairs each
+//! request's α/β micro-requests with the two least-loaded instances,
+//! breaking ties round-robin so idle pools are filled evenly (§3.1's
+//! "routes micro-requests in round-robin fashion to the unified GPU pool").
+
+/// Pick (alpha_idx, beta_idx): the two smallest drain times, ties rotated
+/// by `rr`. With a single instance both indices coincide.
+pub fn pick_pair(drain_times: &[f64], rr: &mut usize) -> (usize, usize) {
+    assert!(!drain_times.is_empty());
+    if drain_times.len() == 1 {
+        return (0, 0);
+    }
+    let n = drain_times.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    let start = *rr % n;
+    *rr = rr.wrapping_add(1);
+    // rotate index order for deterministic round-robin tie-breaking
+    order.rotate_left(start);
+    order.sort_by(|&a, &b| {
+        drain_times[a]
+            .partial_cmp(&drain_times[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    (order[0], order[1])
+}
+
+/// Plain round-robin over `n` targets (colocation baseline routing).
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn pick(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        let i = self.next % n;
+        self.next = self.next.wrapping_add(1);
+        i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_two_least_loaded() {
+        let mut rr = 0;
+        let (a, b) = pick_pair(&[5.0, 1.0, 3.0, 0.5], &mut rr);
+        assert_eq!((a, b), (3, 1));
+    }
+
+    #[test]
+    fn ties_rotate() {
+        let mut rr = 0;
+        let times = [0.0, 0.0, 0.0];
+        let mut firsts = Vec::new();
+        for _ in 0..3 {
+            firsts.push(pick_pair(&times, &mut rr).0);
+        }
+        firsts.sort();
+        firsts.dedup();
+        assert!(firsts.len() >= 2, "round-robin should vary the pick: {firsts:?}");
+    }
+
+    #[test]
+    fn single_instance_degenerates() {
+        let mut rr = 0;
+        assert_eq!(pick_pair(&[1.0], &mut rr), (0, 0));
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = RoundRobin::new();
+        let picks: Vec<usize> = (0..6).map(|_| r.pick(3)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+}

@@ -1,0 +1,234 @@
+//! Core domain types: requests, the micro-request abstraction (§3.1), and
+//! split decisions.
+//!
+//! A request with prompt length `P` and decode length `D` has logical length
+//! `L = P + D` (token positions `0..L`). A split point `s ∈ [0, L]` divides
+//! it into micro-request α (positions `0..s`) and β (`s..L`); either may be
+//! empty (s = 0 or s = L ⇒ no partitioning). A micro-request is a contiguous
+//! token span covering prefill work (positions `< P`), decode work
+//! (positions `>= P`), or a mix — strictly more general than both chunked
+//! prefill (splits only inside `0..P`) and PD disaggregation (always s = P).
+
+pub type RequestId = u64;
+pub type InstanceId = usize;
+
+/// An inference request as seen by the global scheduler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: RequestId,
+    /// Arrival time in seconds since serving start.
+    pub arrival: f64,
+    /// Prompt (prefill) length P in tokens.
+    pub prompt_len: usize,
+    /// True decode length D in tokens (unknown to the scheduler; the
+    /// simulator uses it to terminate generation).
+    pub decode_len: usize,
+    /// Decode length estimate D̂ from the length predictor (what the
+    /// scheduler is allowed to look at).
+    pub predicted_decode: usize,
+}
+
+impl Request {
+    pub fn new(id: RequestId, arrival: f64, prompt_len: usize, decode_len: usize) -> Self {
+        Request {
+            id,
+            arrival,
+            prompt_len,
+            decode_len,
+            predicted_decode: decode_len,
+        }
+    }
+
+    /// True logical length L = P + D.
+    pub fn total_len(&self) -> usize {
+        self.prompt_len + self.decode_len
+    }
+
+    /// Predicted logical length L̂ = P + D̂ (the space split points live in).
+    pub fn predicted_len(&self) -> usize {
+        self.prompt_len + self.predicted_decode
+    }
+}
+
+/// Which half of the split a micro-request is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Role {
+    Alpha,
+    Beta,
+}
+
+impl std::fmt::Display for Role {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Role::Alpha => write!(f, "α"),
+            Role::Beta => write!(f, "β"),
+        }
+    }
+}
+
+/// A contiguous token span of a request, assigned to one instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MicroRequest {
+    pub request: RequestId,
+    pub role: Role,
+    /// Token positions [start, end) over the request's logical length.
+    /// For β the end is the *predicted* end; execution stops at the true
+    /// end-of-sequence, which may come earlier or later.
+    pub start: usize,
+    pub end: usize,
+    /// Parent request's prompt length (classifies span positions into
+    /// prefill `< P` / decode `>= P`).
+    pub prompt_len: usize,
+    pub instance: InstanceId,
+    pub arrival: f64,
+}
+
+impl MicroRequest {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+
+    /// Prompt tokens this micro-request must prefill: span ∩ [0, P).
+    pub fn prefill_tokens(&self) -> usize {
+        self.end.min(self.prompt_len).saturating_sub(self.start)
+    }
+
+    /// Decode tokens this micro-request must generate: span ∩ [P, L).
+    pub fn decode_tokens(&self) -> usize {
+        self.end.saturating_sub(self.start.max(self.prompt_len))
+    }
+
+    /// Context (KV) that must already exist before this span runs — for β
+    /// this is exactly what α ships over the interconnect.
+    pub fn required_context(&self) -> usize {
+        self.start
+    }
+
+    /// Total KV tokens resident on this instance once the span completes.
+    pub fn resident_kv(&self) -> usize {
+        self.end
+    }
+}
+
+/// Output of the global scheduler for one request (§4.1, Algorithm 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SplitDecision {
+    /// Partition ratio φ ∈ [0, 1]; s = ⌈φ·L̂⌉.
+    pub ratio: f64,
+    /// Split point in token positions.
+    pub split: usize,
+    pub alpha_instance: InstanceId,
+    pub beta_instance: InstanceId,
+}
+
+impl SplitDecision {
+    /// Materialize the α/β micro-requests for `req` (β dropped when empty).
+    pub fn to_micro_requests(&self, req: &Request) -> (Option<MicroRequest>, Option<MicroRequest>) {
+        let l = req.predicted_len();
+        let s = self.split.min(l);
+        let alpha = (s > 0).then(|| MicroRequest {
+            request: req.id,
+            role: Role::Alpha,
+            start: 0,
+            end: s,
+            prompt_len: req.prompt_len,
+            instance: self.alpha_instance,
+            arrival: req.arrival,
+        });
+        let beta = (s < l).then(|| MicroRequest {
+            request: req.id,
+            role: Role::Beta,
+            start: s,
+            end: l,
+            prompt_len: req.prompt_len,
+            instance: self.beta_instance,
+            arrival: req.arrival,
+        });
+        (alpha, beta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(p: usize, d: usize) -> Request {
+        Request::new(1, 0.0, p, d)
+    }
+
+    #[test]
+    fn micro_request_classification() {
+        // split inside prefill: α pure prefill, β mixed
+        let r = req(100, 50);
+        let d = SplitDecision { ratio: 0.4, split: 60, alpha_instance: 0, beta_instance: 1 };
+        let (a, b) = d.to_micro_requests(&r);
+        let a = a.unwrap();
+        let b = b.unwrap();
+        assert_eq!(a.prefill_tokens(), 60);
+        assert_eq!(a.decode_tokens(), 0);
+        assert_eq!(b.prefill_tokens(), 40);
+        assert_eq!(b.decode_tokens(), 50);
+        assert_eq!(b.required_context(), 60);
+        assert_eq!(a.len() + b.len(), r.predicted_len());
+    }
+
+    #[test]
+    fn split_at_pd_boundary_is_disaggregation() {
+        let r = req(100, 50);
+        let d = SplitDecision { ratio: 100.0 / 150.0, split: 100, alpha_instance: 0, beta_instance: 1 };
+        let (a, b) = d.to_micro_requests(&r);
+        let (a, b) = (a.unwrap(), b.unwrap());
+        assert_eq!(a.prefill_tokens(), 100);
+        assert_eq!(a.decode_tokens(), 0);
+        assert_eq!(b.prefill_tokens(), 0);
+        assert_eq!(b.decode_tokens(), 50);
+    }
+
+    #[test]
+    fn split_past_prefill_moves_decode_to_alpha() {
+        let r = req(100, 50);
+        let d = SplitDecision { ratio: 0.8, split: 120, alpha_instance: 0, beta_instance: 1 };
+        let (a, b) = d.to_micro_requests(&r);
+        let (a, b) = (a.unwrap(), b.unwrap());
+        assert_eq!(a.prefill_tokens(), 100);
+        assert_eq!(a.decode_tokens(), 20);
+        assert_eq!(b.decode_tokens(), 30);
+        assert_eq!(b.prefill_tokens(), 0);
+    }
+
+    #[test]
+    fn degenerate_splits_drop_empty_half() {
+        let r = req(100, 50);
+        let full = SplitDecision { ratio: 1.0, split: 150, alpha_instance: 0, beta_instance: 1 };
+        let (a, b) = full.to_micro_requests(&r);
+        assert!(b.is_none());
+        assert_eq!(a.unwrap().len(), 150);
+
+        let none = SplitDecision { ratio: 0.0, split: 0, alpha_instance: 0, beta_instance: 1 };
+        let (a, b) = none.to_micro_requests(&r);
+        assert!(a.is_none());
+        assert_eq!(b.unwrap().len(), 150);
+    }
+
+    #[test]
+    fn split_clamped_to_length() {
+        let r = req(10, 5);
+        let d = SplitDecision { ratio: 1.0, split: 999, alpha_instance: 0, beta_instance: 0 };
+        let (a, b) = d.to_micro_requests(&r);
+        assert_eq!(a.unwrap().end, 15);
+        assert!(b.is_none());
+    }
+
+    #[test]
+    fn resident_kv_accounting() {
+        let r = req(100, 50);
+        let d = SplitDecision { ratio: 0.5, split: 75, alpha_instance: 0, beta_instance: 1 };
+        let (a, b) = d.to_micro_requests(&r);
+        assert_eq!(a.unwrap().resident_kv(), 75);
+        assert_eq!(b.unwrap().resident_kv(), 150);
+    }
+}

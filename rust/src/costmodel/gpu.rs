@@ -1,0 +1,79 @@
+//! GPU hardware specifications for the analytical cost model.
+
+/// Hardware parameters of one accelerator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Peak dense bf16 FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// HBM capacity, bytes.
+    pub hbm_capacity: f64,
+    /// Fixed per-iteration launch/runtime overhead, seconds.
+    pub kernel_overhead: f64,
+    /// Per-allreduce latency inside a TP group (NVLink), seconds.
+    pub allreduce_latency: f64,
+    /// Cross-instance interconnect bandwidth for KV transfer, bytes/s
+    /// (paper testbed: 4×200 Gb/s ConnectX-6 RoCE per server).
+    pub interconnect_bw: f64,
+    /// Interconnect per-message latency, seconds.
+    pub interconnect_latency: f64,
+    /// HBM reserved for activations/workspace, bytes.
+    pub activation_reserve: f64,
+    /// Peak fraction reachable by large GEMMs (MFU ceiling).
+    pub eff_max: f64,
+    /// Token count at which the compute-efficiency ramp reaches half of
+    /// eff_max (small batches underfill the SMs).
+    pub eff_half_sat: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA A100-SXM 80GB — the paper's testbed GPU.
+    pub fn a100() -> GpuSpec {
+        GpuSpec {
+            name: "A100-80GB".to_string(),
+            peak_flops: 312e12,
+            hbm_bw: 2.0e12,
+            hbm_capacity: 80e9,
+            kernel_overhead: 4e-3, // vLLM python/runtime per-step overhead
+            allreduce_latency: 18e-6,
+            interconnect_bw: 25e9, // 200 Gb/s RoCE per NIC
+            interconnect_latency: 8e-6,
+            activation_reserve: 4e9,
+            eff_max: 0.62,
+            eff_half_sat: 32.0,
+        }
+    }
+
+    /// The CPU PJRT "device" the live path runs on; calibrated at startup
+    /// from measured step latencies, these defaults are only a seed.
+    pub fn cpu_pjrt() -> GpuSpec {
+        GpuSpec {
+            name: "cpu-pjrt".to_string(),
+            peak_flops: 5e10,
+            hbm_bw: 2.0e10,
+            hbm_capacity: 8e9,
+            kernel_overhead: 1e-4,
+            allreduce_latency: 0.0,
+            interconnect_bw: 4e9,
+            interconnect_latency: 2e-6,
+            activation_reserve: 1e8,
+            eff_max: 0.5,
+            eff_half_sat: 32.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_matches_datasheet() {
+        let g = GpuSpec::a100();
+        assert_eq!(g.peak_flops, 312e12);
+        assert_eq!(g.hbm_capacity, 80e9);
+        assert!(g.interconnect_bw > 1e9);
+    }
+}

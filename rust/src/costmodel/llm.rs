@@ -1,0 +1,140 @@
+//! LLM architecture specifications (Qwen-2.5 series — the paper's models —
+//! plus the TinyQwen model the live PJRT path actually executes).
+
+/// Transformer architecture parameters the cost model needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LlmSpec {
+    pub name: String,
+    pub n_params: f64,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    /// Bytes per weight/KV element (2 = bf16, 4 = f32).
+    pub dtype_bytes: usize,
+}
+
+impl LlmSpec {
+    pub fn weight_bytes(&self) -> f64 {
+        self.n_params * self.dtype_bytes as f64
+    }
+
+    /// KV bytes appended per token: 2 (K and V) · layers · kv_heads · head_dim.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        (2 * self.n_layers * self.n_kv_heads * self.head_dim * self.dtype_bytes) as f64
+    }
+
+    /// Qwen-2.5-14B-Instruct (48 layers, GQA 40/8, d=5120).
+    pub fn qwen25_14b() -> LlmSpec {
+        LlmSpec {
+            name: "qwen2.5-14b".to_string(),
+            n_params: 14.7e9,
+            n_layers: 48,
+            d_model: 5120,
+            n_q_heads: 40,
+            n_kv_heads: 8,
+            head_dim: 128,
+            vocab: 152_064,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Qwen-2.5-32B (64 layers, GQA 40/8, d=5120).
+    pub fn qwen25_32b() -> LlmSpec {
+        LlmSpec {
+            name: "qwen2.5-32b".to_string(),
+            n_params: 32.5e9,
+            n_layers: 64,
+            d_model: 5120,
+            n_q_heads: 40,
+            n_kv_heads: 8,
+            head_dim: 128,
+            vocab: 152_064,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Qwen-2.5-72B (80 layers, GQA 64/8, d=8192).
+    pub fn qwen25_72b() -> LlmSpec {
+        LlmSpec {
+            name: "qwen2.5-72b".to_string(),
+            n_params: 72.7e9,
+            n_layers: 80,
+            d_model: 8192,
+            n_q_heads: 64,
+            n_kv_heads: 8,
+            head_dim: 128,
+            vocab: 152_064,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Llama-3.1-8B — used by the paper's Figure 6 microbenchmark.
+    pub fn llama31_8b() -> LlmSpec {
+        LlmSpec {
+            name: "llama3.1-8b".to_string(),
+            n_params: 8.0e9,
+            n_layers: 32,
+            d_model: 4096,
+            n_q_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            vocab: 128_256,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// The ~1M-param model the live PJRT path serves (must mirror
+    /// python/compile/model.py's ModelConfig).
+    pub fn tinyqwen() -> LlmSpec {
+        LlmSpec {
+            name: "tinyqwen".to_string(),
+            n_params: 1_049_728.0,
+            n_layers: 4,
+            d_model: 128,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 32,
+            vocab: 256,
+            dtype_bytes: 4,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<LlmSpec> {
+        match name {
+            "qwen2.5-14b" | "14b" => Some(Self::qwen25_14b()),
+            "qwen2.5-32b" | "32b" => Some(Self::qwen25_32b()),
+            "qwen2.5-72b" | "72b" => Some(Self::qwen25_72b()),
+            "llama3.1-8b" | "8b" => Some(Self::llama31_8b()),
+            "tinyqwen" => Some(Self::tinyqwen()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_bytes_qwen14b() {
+        // 2 · 48 layers · 8 kv heads · 128 dim · 2 bytes = 196 608 B/token
+        assert_eq!(LlmSpec::qwen25_14b().kv_bytes_per_token(), 196_608.0);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(LlmSpec::by_name("14b").unwrap().n_layers, 48);
+        assert_eq!(LlmSpec::by_name("72b").unwrap().d_model, 8192);
+        assert!(LlmSpec::by_name("gpt-x").is_none());
+    }
+
+    #[test]
+    fn weights_fit_assumptions() {
+        // 14B bf16 weights ≈ 29.4 GB — fits one A100 with room for KV.
+        let w = LlmSpec::qwen25_14b().weight_bytes();
+        assert!(w > 25e9 && w < 35e9);
+    }
+}

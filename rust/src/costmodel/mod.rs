@@ -1,0 +1,334 @@
+//! Analytical GPU cost model — the simulation substrate standing in for the
+//! paper's A100 testbed (DESIGN.md §1).
+//!
+//! The model is a roofline: an iteration's latency is
+//! `max(compute_time, memory_time) + fixed_overhead`, where compute counts
+//! transformer FLOPs (2·N per token plus attention's 4·L·d_attn·ctx) and
+//! memory counts weight reads (once per iteration) plus KV-cache traffic.
+//! This reproduces the regimes the paper's analysis rests on: prefill is
+//! compute-bound (latency ∝ chunk tokens), decode is memory-bound (latency ≈
+//! weights/HBM-bandwidth + KV reads), and mixing them trades TBT for MFU
+//! exactly as in Figure 6.
+
+pub mod gpu;
+pub mod llm;
+
+pub use gpu::GpuSpec;
+pub use llm::LlmSpec;
+
+/// Composition of one engine iteration (one "hybrid batch" in the paper).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BatchShape {
+    /// New prompt tokens processed this iteration (sum over prefill chunks).
+    pub prefill_tokens: usize,
+    /// Average context already resident for those prefill tokens (affects
+    /// attention FLOPs and KV reads of the chunk).
+    pub prefill_ctx: usize,
+    /// Number of sequences advancing one decode token.
+    pub decode_reqs: usize,
+    /// Average context length of the decoding sequences.
+    pub decode_ctx: usize,
+}
+
+impl BatchShape {
+    pub fn total_tokens(&self) -> usize {
+        self.prefill_tokens + self.decode_reqs
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_tokens() == 0
+    }
+}
+
+/// Cost breakdown for one iteration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterationCost {
+    pub latency: f64,
+    pub compute_time: f64,
+    pub memory_time: f64,
+    pub flops: f64,
+    pub bytes: f64,
+    /// Model FLOPs utilization over the iteration.
+    pub mfu: f64,
+}
+
+/// An instance = one model replica on `tp` GPUs (tensor parallel).
+#[derive(Debug, Clone)]
+pub struct InstanceSpec {
+    pub gpu: GpuSpec,
+    pub llm: LlmSpec,
+    pub tp: usize,
+}
+
+impl InstanceSpec {
+    pub fn new(gpu: GpuSpec, llm: LlmSpec, tp: usize) -> Self {
+        assert!(tp >= 1);
+        InstanceSpec { gpu, llm, tp }
+    }
+
+    /// Effective peak FLOP/s across the TP group (with a mild scaling
+    /// penalty per doubling, matching measured TP efficiency on NVLink).
+    pub fn peak_flops(&self) -> f64 {
+        let penalty = 0.95_f64.powf((self.tp as f64).log2());
+        self.gpu.peak_flops * self.tp as f64 * penalty
+    }
+
+    pub fn hbm_bw(&self) -> f64 {
+        self.gpu.hbm_bw * self.tp as f64
+    }
+
+    /// HBM capacity available for KV cache after weights + activations.
+    pub fn kv_capacity_bytes(&self) -> f64 {
+        let total = self.gpu.hbm_capacity * self.tp as f64;
+        let weights = self.llm.weight_bytes();
+        (total * 0.94 - weights - self.gpu.activation_reserve).max(0.0)
+    }
+
+    /// Max KV tokens resident.
+    pub fn kv_capacity_tokens(&self) -> usize {
+        (self.kv_capacity_bytes() / self.llm.kv_bytes_per_token()) as usize
+    }
+
+    /// Per-iteration TP synchronization cost (allreduce per layer pair).
+    fn tp_overhead(&self) -> f64 {
+        if self.tp == 1 {
+            0.0
+        } else {
+            2.0 * self.llm.n_layers as f64 * self.gpu.allreduce_latency
+        }
+    }
+
+    /// Compute efficiency ramp: small token counts underutilize the SMs.
+    /// eff(t) = eff_max · t / (t + t_half). Calibrated so a 2048-token
+    /// prefill of Qwen-14B on one A100 takes ≈ 230 ms (paper Table 1
+    /// regime) and an 8-way decode batch stays memory-bound.
+    fn compute_eff(&self, tokens: usize) -> f64 {
+        let t = tokens as f64;
+        self.gpu.eff_max * t / (t + self.gpu.eff_half_sat)
+    }
+
+    /// Roofline cost of one iteration.
+    pub fn iteration_cost(&self, shape: &BatchShape) -> IterationCost {
+        if shape.is_empty() {
+            return IterationCost {
+                latency: self.gpu.kernel_overhead,
+                compute_time: 0.0,
+                memory_time: 0.0,
+                flops: 0.0,
+                bytes: 0.0,
+                mfu: 0.0,
+            };
+        }
+        let llm = &self.llm;
+        let tokens = shape.total_tokens() as f64;
+
+        // Linear (MLP + projections) FLOPs: 2·N_params per token.
+        let mut flops = 2.0 * llm.n_params * tokens;
+        // Attention FLOPs: 4·d_attn·ctx per token per layer (QKᵀ + PV).
+        let d_attn = (llm.n_q_heads * llm.head_dim) as f64;
+        let prefill_avg_ctx = shape.prefill_ctx as f64 + shape.prefill_tokens as f64 / 2.0;
+        flops += 4.0
+            * llm.n_layers as f64
+            * d_attn
+            * (shape.prefill_tokens as f64 * prefill_avg_ctx
+                + shape.decode_reqs as f64 * shape.decode_ctx as f64);
+
+        // Memory traffic: weights once per iteration + KV reads + KV writes.
+        let kv_tok = llm.kv_bytes_per_token();
+        let kv_read = kv_tok
+            * (shape.decode_reqs as f64 * shape.decode_ctx as f64
+                + shape.prefill_tokens as f64 * prefill_avg_ctx / 64.0);
+        // (prefill KV reads amortize across the chunk's parallel FLOPs —
+        //  the /64 reflects flash-attention block reuse.)
+        let kv_write = kv_tok * tokens;
+        let bytes = llm.weight_bytes() + kv_read + kv_write;
+
+        let compute_time = flops / (self.peak_flops() * self.compute_eff(shape.total_tokens()));
+        let memory_time = bytes / self.hbm_bw();
+        let latency =
+            compute_time.max(memory_time) + self.gpu.kernel_overhead + self.tp_overhead();
+        IterationCost {
+            latency,
+            compute_time,
+            memory_time,
+            flops,
+            bytes,
+            mfu: flops / (latency * self.peak_flops()),
+        }
+    }
+
+    /// Time to prefill `n` prompt tokens in SLO-agnostic full-size chunks —
+    /// used for the "balanced decode curve" of Figure 3 and the predictor's
+    /// cold-start seeding.
+    pub fn prefill_time(&self, n: usize) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let chunk = 2048.min(n.max(1));
+        let iters = n.div_ceil(chunk);
+        let mut t = 0.0;
+        for i in 0..iters {
+            let this = chunk.min(n - i * chunk);
+            t += self
+                .iteration_cost(&BatchShape {
+                    prefill_tokens: this,
+                    prefill_ctx: i * chunk,
+                    decode_reqs: 0,
+                    decode_ctx: 0,
+                })
+                .latency;
+        }
+        t
+    }
+
+    /// Time for one decode token at context `ctx` in a batch of `n` decodes.
+    pub fn decode_step_time(&self, n: usize, ctx: usize) -> f64 {
+        self.iteration_cost(&BatchShape {
+            prefill_tokens: 0,
+            prefill_ctx: 0,
+            decode_reqs: n,
+            decode_ctx: ctx,
+        })
+        .latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a100_14b() -> InstanceSpec {
+        InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1)
+    }
+
+    #[test]
+    fn prefill_is_compute_bound() {
+        let inst = a100_14b();
+        let c = inst.iteration_cost(&BatchShape {
+            prefill_tokens: 2048,
+            prefill_ctx: 0,
+            decode_reqs: 0,
+            decode_ctx: 0,
+        });
+        assert!(c.compute_time > c.memory_time, "{c:?}");
+        // Qwen-14B 2048-token chunk on one A100: paper regime is ~200-350ms
+        assert!(c.latency > 0.15 && c.latency < 0.45, "latency={}", c.latency);
+    }
+
+    #[test]
+    fn decode_is_memory_bound() {
+        let inst = a100_14b();
+        let c = inst.iteration_cost(&BatchShape {
+            prefill_tokens: 0,
+            prefill_ctx: 0,
+            decode_reqs: 8,
+            decode_ctx: 1024,
+        });
+        assert!(c.memory_time > c.compute_time, "{c:?}");
+        // ≈ weights(28GB)/2TB/s ≈ 14ms + KV + overhead, well under 100ms SLO
+        assert!(c.latency > 0.010 && c.latency < 0.060, "latency={}", c.latency);
+    }
+
+    #[test]
+    fn mixed_batch_latency_between_pure_ones() {
+        let inst = a100_14b();
+        let decode_only = inst.decode_step_time(16, 512);
+        let mixed = inst
+            .iteration_cost(&BatchShape {
+                prefill_tokens: 512,
+                prefill_ctx: 0,
+                decode_reqs: 16,
+                decode_ctx: 512,
+            })
+            .latency;
+        assert!(mixed > decode_only);
+        // adding prefill tokens increases MFU
+        let mfu_d = inst
+            .iteration_cost(&BatchShape {
+                prefill_tokens: 0,
+                prefill_ctx: 0,
+                decode_reqs: 16,
+                decode_ctx: 512,
+            })
+            .mfu;
+        let mfu_m = inst
+            .iteration_cost(&BatchShape {
+                prefill_tokens: 512,
+                prefill_ctx: 0,
+                decode_reqs: 16,
+                decode_ctx: 512,
+            })
+            .mfu;
+        assert!(mfu_m > mfu_d * 2.0, "mfu decode-only={mfu_d} mixed={mfu_m}");
+    }
+
+    #[test]
+    fn latency_monotone_in_prefill_tokens() {
+        let inst = a100_14b();
+        let mut last = 0.0;
+        for p in [0, 128, 256, 512, 1024, 2048] {
+            let l = inst
+                .iteration_cost(&BatchShape {
+                    prefill_tokens: p,
+                    prefill_ctx: 0,
+                    decode_reqs: 8,
+                    decode_ctx: 512,
+                })
+                .latency;
+            assert!(l >= last, "p={p}: {l} < {last}");
+            last = l;
+        }
+    }
+
+    #[test]
+    fn tp_scales_throughput() {
+        let one = a100_14b();
+        let two = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 2);
+        let shape = BatchShape {
+            prefill_tokens: 2048,
+            prefill_ctx: 0,
+            decode_reqs: 0,
+            decode_ctx: 0,
+        };
+        let l1 = one.iteration_cost(&shape).latency;
+        let l2 = two.iteration_cost(&shape).latency;
+        assert!(l2 < l1 && l2 > l1 / 2.0, "l1={l1} l2={l2}");
+    }
+
+    #[test]
+    fn kv_capacity_positive_and_sane() {
+        let inst = a100_14b();
+        let cap = inst.kv_capacity_tokens();
+        // 80GB - 28GB weights ≈ 47GB usable; ÷196KB/token ≈ 240k tokens
+        assert!(cap > 100_000 && cap < 400_000, "cap={cap}");
+    }
+
+    #[test]
+    fn larger_models_slower() {
+        let m14 = a100_14b();
+        let m72 = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_72b(), 4);
+        let shape = BatchShape {
+            prefill_tokens: 1024,
+            prefill_ctx: 0,
+            decode_reqs: 0,
+            decode_ctx: 0,
+        };
+        assert!(m72.iteration_cost(&shape).latency > m14.iteration_cost(&shape).latency);
+    }
+
+    #[test]
+    fn mfu_bounded() {
+        let inst = a100_14b();
+        for p in [64, 512, 4096] {
+            for d in [0, 8, 64] {
+                let c = inst.iteration_cost(&BatchShape {
+                    prefill_tokens: p,
+                    prefill_ctx: 0,
+                    decode_reqs: d,
+                    decode_ctx: 256,
+                });
+                assert!(c.mfu > 0.0 && c.mfu < 0.7, "mfu={}", c.mfu);
+            }
+        }
+    }
+}

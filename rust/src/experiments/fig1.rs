@@ -1,0 +1,59 @@
+//! Figure 1: throughput vs SLO-attainment frontier. For each system a QPS
+//! sweep traces its frontier; the paper's claim is that colocation reaches
+//! high throughput at poor attainment, disaggregation high attainment at
+//! poor throughput, and DynaServe pushes the frontier top-right.
+
+use crate::costmodel::LlmSpec;
+use crate::experiments::runners::{qps_sweep, System};
+use crate::experiments::write_results;
+use crate::metrics::SloConfig;
+use crate::util::cli::{Args, Table};
+use crate::util::json::{obj, Json};
+use crate::workload::TraceKind;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let duration = args.f64_or("duration", 90.0);
+    let seed = args.u64_or("seed", 42);
+    let llm = LlmSpec::qwen25_14b();
+    let slo = SloConfig::default();
+    let qps: Vec<f64> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0, 12.0];
+
+    println!("Figure 1: throughput vs SLO attainment (Qwen-14B, BurstGPT, 100ms TBT SLO)\n");
+    let mut t = Table::new(["system", "qps", "throughput tok/s", "attainment %", "p99 TBT ms"]);
+    let mut series = Vec::new();
+    for sys in System::all_default() {
+        let pts = qps_sweep(sys, &llm, TraceKind::BurstGpt, &qps, duration, seed, slo);
+        for (q, s) in &pts {
+            t.row([
+                sys.name().to_string(),
+                format!("{q:.1}"),
+                format!("{:.0}", s.throughput_tok_s),
+                format!("{:.1}", s.attainment * 100.0),
+                format!("{:.1}", s.p99_tbt * 1e3),
+            ]);
+            series.push(obj([
+                ("system", Json::from(sys.name())),
+                ("qps", Json::from(*q)),
+                ("throughput_tok_s", Json::from(s.throughput_tok_s)),
+                ("attainment", Json::from(s.attainment)),
+            ]));
+        }
+    }
+    t.print();
+
+    // frontier check: best attainment at high load
+    println!("\nShape check (expected: DynaServe dominates the top-right):");
+    let mut t2 = Table::new(["system", "max tok/s @ attainment >= 99%"]);
+    for sys in System::all_default() {
+        let pts = qps_sweep(sys, &llm, TraceKind::BurstGpt, &qps, duration, seed, slo);
+        let best = pts
+            .iter()
+            .filter(|(_, s)| s.attainment >= 0.99)
+            .map(|(_, s)| s.throughput_tok_s)
+            .fold(0.0, f64::max);
+        t2.row([sys.name().to_string(), format!("{best:.0}")]);
+    }
+    t2.print();
+    write_results("fig1", &Json::Arr(series));
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Figure 10 (§6.5): goodput over time replaying a continuous BurstGPT
+//! stream (42 minutes, original bursty arrival pattern), measured in
+//! 6-minute windows. Colocation should lead briefly in decode-heavy
+//! windows, disaggregation in prefill-heavy ones; DynaServe tops both
+//! throughout.
+
+use crate::costmodel::LlmSpec;
+use crate::experiments::runners::{build_sim, System};
+use crate::experiments::write_results;
+use crate::metrics::SloConfig;
+use crate::util::cli::{Args, Table};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::workload::{ArrivalProcess, ReplayArrivals, TraceKind, TraceSampler};
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let minutes = args.usize_or("minutes", 42);
+    let window = 360.0; // 6-minute windows
+    let scale = args.f64_or("scale", 3.0);
+    let seed = args.u64_or("seed", 42);
+    let llm = LlmSpec::qwen25_14b();
+    let slo = SloConfig::default();
+    let duration = minutes as f64 * 60.0;
+
+    // one shared replay trace for all systems
+    let mut arrivals = ReplayArrivals::burstgpt_profile(duration, scale, seed);
+    let mut sampler = TraceSampler::new(TraceKind::BurstGpt, seed);
+    let mut rng = Rng::with_stream(seed, 0xf16);
+    let mut reqs = Vec::new();
+    let mut t_arr = 0.0;
+    let mut id = 0;
+    while let Some(next) = arrivals.next_after(t_arr, &mut rng) {
+        if next >= duration {
+            break;
+        }
+        t_arr = next;
+        let (p, d) = sampler.sample(t_arr, &mut rng);
+        reqs.push(crate::core::Request::new(id, t_arr, p, d));
+        id += 1;
+    }
+    println!(
+        "Figure 10: BurstGPT replay, {} requests over {} minutes (windows of 6 min)\n",
+        reqs.len(),
+        minutes
+    );
+
+    let windows = (duration / window).ceil() as usize;
+    let mut per_system: Vec<(String, Vec<f64>)> = Vec::new();
+    for sys in System::all_default() {
+        let mut sim = build_sim(sys, &llm, slo);
+        sim.run(reqs.clone());
+        // window goodput from completed-request records
+        let mut good = vec![0.0f64; windows];
+        for rec in &sim.collector.completed {
+            let w = ((rec.finish / window) as usize).min(windows - 1);
+            // tokens within SLO credited to the completion window
+            good[w] += (rec.tokens - rec.tbt_violations) as f64;
+        }
+        for g in good.iter_mut() {
+            *g /= window;
+        }
+        per_system.push((sys.name().to_string(), good));
+    }
+
+    let mut t = Table::new({
+        let mut h = vec!["window".to_string()];
+        h.extend(per_system.iter().map(|(n, _)| n.clone()));
+        h
+    });
+    let mut results = Vec::new();
+    for w in 0..windows {
+        let mut row = vec![format!("{}-{} min", w * 6, (w + 1) * 6)];
+        for (name, series) in &per_system {
+            row.push(format!("{:.0}", series[w]));
+            results.push(obj([
+                ("window", Json::from(w)),
+                ("system", Json::from(name.clone())),
+                ("goodput", Json::from(series[w])),
+            ]));
+        }
+        t.row(row);
+    }
+    t.print();
+    let wins = (0..windows)
+        .filter(|&w| {
+            let d = per_system.iter().find(|(n, _)| n == "DynaServe").unwrap().1[w];
+            per_system.iter().all(|(n, s)| n == "DynaServe" || s[w] <= d * 1.02)
+        })
+        .count();
+    println!("\nDynaServe top-tier in {wins}/{windows} windows (paper: consistently highest)");
+    write_results("fig10", &Json::Arr(results));
+    Ok(())
+}

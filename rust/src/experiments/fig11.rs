@@ -1,0 +1,69 @@
+//! Figure 11 (§6.6): CDF of time-between-tokens with and without SLO-aware
+//! batching (DynaServe on AzureCode at its serving-capacity QPS). Without
+//! it, mixed prefill/decode batches inflate the tail well past the SLO;
+//! with it, attainment should reach ~99%.
+
+use crate::coordinator::LocalConfig;
+use crate::costmodel::LlmSpec;
+use crate::experiments::runners::{build_sim, System};
+use crate::experiments::write_results;
+use crate::metrics::SloConfig;
+use crate::util::cli::{Args, Table};
+use crate::util::json::{obj, Json};
+use crate::workload::{poisson_workload, TraceKind};
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let duration = args.f64_or("duration", 60.0);
+    let seed = args.u64_or("seed", 42);
+    let llm = LlmSpec::qwen25_14b();
+    let slo = SloConfig::default();
+    let kind = TraceKind::AzureCode;
+
+    // capacity of the SLO-aware config sets the load point
+    let (cap, _) = super::fig9::capacity_of(System::DynaServe, &llm, kind, duration, seed, slo);
+    let qps = cap.max(0.5);
+    println!("Figure 11: TBT CDF at qps={qps:.2} (DynaServe capacity), AzureCode, Qwen-14B\n");
+
+    let mut results = Vec::new();
+    let mut tables = Vec::new();
+    for (label, slo_aware) in [("with SLO-aware batching", true), ("without (fixed 2048 chunks)", false)] {
+        let reqs = poisson_workload(kind, qps, duration, seed);
+        let mut sim = build_sim(System::DynaServe, &llm, slo);
+        if !slo_aware {
+            let mut cfg = sim.cfg.clone();
+            cfg.local = LocalConfig { fixed_budget: Some(2048), ..LocalConfig::default() };
+            let gcfg = crate::coordinator::GlobalConfig {
+                kv_bytes_per_token: llm.kv_bytes_per_token(),
+                ..Default::default()
+            };
+            sim = crate::sim::Simulator::new(
+                cfg,
+                Box::new(crate::sim::DynaServePolicy::new(gcfg)),
+            );
+        }
+        let s = sim.run(reqs);
+        let cdf = sim.collector.tbt_samples().cdf(12);
+        println!("--- {label}: attainment {:.1}%, p99 {:.1} ms ---", s.attainment * 100.0, s.p99_tbt * 1e3);
+        let mut t = Table::new(["TBT ms", "CDF"]);
+        for (v, f) in &cdf {
+            t.row([format!("{:.1}", v * 1e3), format!("{:.3}", f)]);
+            results.push(obj([
+                ("variant", Json::from(label)),
+                ("tbt_ms", Json::from(v * 1e3)),
+                ("cdf", Json::from(*f)),
+            ]));
+        }
+        t.print();
+        tables.push((label, s.attainment));
+        println!();
+    }
+    let with = tables.iter().find(|t| t.0.starts_with("with ")).unwrap().1;
+    let without = tables.iter().find(|t| t.0.starts_with("without")).unwrap().1;
+    println!(
+        "attainment: {:.1}% with vs {:.1}% without (paper: 99% vs 52%)",
+        with * 100.0,
+        without * 100.0
+    );
+    write_results("fig11", &Json::Arr(results));
+    Ok(())
+}

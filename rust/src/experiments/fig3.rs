@@ -1,0 +1,83 @@
+//! Figure 3: per-minute prompt and output token volumes of Azure Code and
+//! BurstGPT, against the "balanced decode" curve — the output volume whose
+//! decode time would exactly match the minute's prefill time on the same
+//! A100. Regions where output exceeds the curve are decode-heavy; below,
+//! prefill-heavy. Azure Code should sit persistently prefill-heavy;
+//! BurstGPT should cross the curve repeatedly (§2.3).
+
+use crate::costmodel::{BatchShape, GpuSpec, InstanceSpec, LlmSpec};
+use crate::experiments::write_results;
+use crate::util::cli::{Args, Table};
+use crate::util::json::{obj, Json};
+use crate::workload::{poisson_workload, TraceKind};
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let minutes = args.usize_or("minutes", 30);
+    let qps = args.f64_or("qps", 4.0);
+    let seed = args.u64_or("seed", 42);
+    let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
+
+    // rates for the balance conversion
+    let prefill_chunk = 2048;
+    let prefill_rate = prefill_chunk as f64
+        / spec
+            .iteration_cost(&BatchShape { prefill_tokens: prefill_chunk, prefill_ctx: 0, decode_reqs: 0, decode_ctx: 0 })
+            .latency;
+    let dstep = spec.decode_step_time(16, 1024);
+    let decode_rate = 16.0 / dstep;
+
+    println!(
+        "Figure 3: per-minute token volumes (qps={qps}); balanced curve uses measured\n\
+         prefill throughput {prefill_rate:.0} tok/s and decode throughput {decode_rate:.0} tok/s\n"
+    );
+
+    let mut out = Vec::new();
+    for kind in [TraceKind::AzureCode, TraceKind::BurstGpt] {
+        let reqs = poisson_workload(kind, qps, minutes as f64 * 60.0, seed);
+        let mut prompt = vec![0usize; minutes];
+        let mut output = vec![0usize; minutes];
+        for r in &reqs {
+            let m = ((r.arrival / 60.0) as usize).min(minutes - 1);
+            prompt[m] += r.prompt_len;
+            output[m] += r.decode_len;
+        }
+        println!("--- {} ---", kind.name());
+        let mut t = Table::new(["minute", "prompt tok", "output tok", "balanced tok", "regime"]);
+        let mut decode_heavy = 0;
+        let mut rows = Vec::new();
+        for m in 0..minutes {
+            let balanced = (prompt[m] as f64 / prefill_rate) * decode_rate;
+            let regime = if (output[m] as f64) > balanced { "decode-heavy" } else { "prefill-heavy" };
+            if regime == "decode-heavy" {
+                decode_heavy += 1;
+            }
+            t.row([
+                m.to_string(),
+                prompt[m].to_string(),
+                output[m].to_string(),
+                format!("{balanced:.0}"),
+                regime.to_string(),
+            ]);
+            rows.push(obj([
+                ("minute", Json::from(m)),
+                ("prompt", Json::from(prompt[m])),
+                ("output", Json::from(output[m])),
+                ("balanced", Json::from(balanced)),
+            ]));
+        }
+        t.print();
+        println!(
+            "{}: {}/{} minutes decode-heavy\n",
+            kind.name(),
+            decode_heavy,
+            minutes
+        );
+        out.push(obj([
+            ("trace", Json::from(kind.name())),
+            ("minutes", Json::Arr(rows)),
+            ("decode_heavy_minutes", Json::from(decode_heavy)),
+        ]));
+    }
+    write_results("fig3", &Json::Arr(out));
+    Ok(())
+}

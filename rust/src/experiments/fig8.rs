@@ -1,0 +1,76 @@
+//! Figure 8: goodput under the 100 ms TBT SLO as QPS rises, for DynaServe,
+//! PD colocation (chunked prefill) and PD disaggregation, across the four
+//! workloads and model scales (14B default; --models all for 32B/72B too).
+
+use crate::costmodel::LlmSpec;
+use crate::experiments::runners::{coloc_chunk_for, qps_sweep, System};
+use crate::experiments::write_results;
+use crate::metrics::SloConfig;
+use crate::util::cli::{Args, Table};
+use crate::util::json::{obj, Json};
+use crate::workload::TraceKind;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let duration = args.f64_or("duration", 60.0);
+    let seed = args.u64_or("seed", 42);
+    let slo = SloConfig::default();
+    let models: Vec<LlmSpec> = match args.get_or("models", "14b").as_str() {
+        "all" => vec![LlmSpec::qwen25_14b(), LlmSpec::qwen25_32b(), LlmSpec::qwen25_72b()],
+        name => vec![LlmSpec::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model"))?],
+    };
+
+    let mut results = Vec::new();
+    for llm in &models {
+        for kind in TraceKind::all_datasets() {
+            // per-workload QPS grid scaled by request weight
+            let scale = match kind {
+                TraceKind::AzureCode | TraceKind::ArxivSumm => 0.5,
+                _ => 1.0,
+            } * match llm.name.as_str() {
+                "qwen2.5-72b" => 0.5,
+                _ => 1.0,
+            };
+            let qps: Vec<f64> =
+                [0.5, 1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0].iter().map(|q| q * scale).collect();
+            println!("--- {} / {} (goodput tok/s vs QPS) ---", llm.name, kind.name());
+            let mut t = Table::new(["system", "qps", "goodput", "attain %", "p99 TBT ms"]);
+            let mut best = vec![];
+            for sys in [
+                System::Coloc { chunk: coloc_chunk_for(kind) },
+                System::Disagg,
+                System::DynaServe,
+            ] {
+                let pts = qps_sweep(sys, llm, kind, &qps, duration, seed, slo);
+                let peak = pts.iter().map(|(_, s)| s.goodput_tok_s).fold(0.0, f64::max);
+                best.push((sys.name(), peak));
+                for (q, s) in &pts {
+                    t.row([
+                        sys.name().to_string(),
+                        format!("{q:.2}"),
+                        format!("{:.0}", s.goodput_tok_s),
+                        format!("{:.1}", s.attainment * 100.0),
+                        format!("{:.1}", s.p99_tbt * 1e3),
+                    ]);
+                    results.push(obj([
+                        ("model", Json::from(llm.name.clone())),
+                        ("workload", Json::from(kind.name())),
+                        ("system", Json::from(sys.name())),
+                        ("qps", Json::from(*q)),
+                        ("goodput", Json::from(s.goodput_tok_s)),
+                        ("attainment", Json::from(s.attainment)),
+                    ]));
+                }
+            }
+            t.print();
+            let dyn_peak = best.iter().find(|b| b.0 == "DynaServe").unwrap().1;
+            for (name, peak) in &best {
+                if *name != "DynaServe" && *peak > 0.0 {
+                    println!("  peak goodput: DynaServe/{} = {:.2}x", name, dyn_peak / peak);
+                }
+            }
+            println!();
+        }
+    }
+    write_results("fig8", &Json::Arr(results));
+    Ok(())
+}

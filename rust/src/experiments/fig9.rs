@@ -1,0 +1,67 @@
+//! Figure 9 (§6.3): serving capacity — the maximum sustainable QPS keeping
+//! p99 TBT under the 100 ms SLO — for the four workloads on Qwen-14B.
+//! The paper reports DynaServe at 2.37× PD-coloc and 1.37× PD-disagg on
+//! average.
+
+use crate::costmodel::LlmSpec;
+use crate::experiments::runners::{coloc_chunk_for, run_once, System};
+use crate::experiments::write_results;
+use crate::metrics::{capacity_search, SloConfig};
+use crate::util::cli::{Args, Table};
+use crate::util::json::{obj, Json};
+use crate::workload::TraceKind;
+
+pub fn capacity_of(
+    sys: System,
+    llm: &LlmSpec,
+    kind: TraceKind,
+    duration: f64,
+    seed: u64,
+    slo: SloConfig,
+) -> (f64, crate::metrics::Summary) {
+    capacity_search(&slo, duration, 0.25, 2.0, 0.15, |q| {
+        run_once(sys, llm, kind, q, duration, seed, slo).0
+    })
+}
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let duration = args.f64_or("duration", 60.0);
+    let seed = args.u64_or("seed", 42);
+    let llm = LlmSpec::qwen25_14b();
+    let slo = SloConfig::default();
+
+    println!("Figure 9: serving capacity (max QPS @ p99 TBT <= 100 ms), Qwen-14B\n");
+    let mut t = Table::new(["workload", "PD Coloc.", "PD Disagg.", "DynaServe", "Dyn/Coloc", "Dyn/Disagg"]);
+    let mut results = Vec::new();
+    let (mut rc, mut rd) = (Vec::new(), Vec::new());
+    for kind in TraceKind::all_datasets() {
+        let (c, _) = capacity_of(System::Coloc { chunk: coloc_chunk_for(kind) }, &llm, kind, duration, seed, slo);
+        let (d, _) = capacity_of(System::Disagg, &llm, kind, duration, seed, slo);
+        let (y, _) = capacity_of(System::DynaServe, &llm, kind, duration, seed, slo);
+        let (xc, xd) = (y / c.max(1e-9), y / d.max(1e-9));
+        rc.push(xc);
+        rd.push(xd);
+        t.row([
+            kind.name(),
+            format!("{c:.2}"),
+            format!("{d:.2}"),
+            format!("{y:.2}"),
+            format!("{xc:.2}x"),
+            format!("{xd:.2}x"),
+        ]);
+        results.push(obj([
+            ("workload", Json::from(kind.name())),
+            ("coloc", Json::from(c)),
+            ("disagg", Json::from(d)),
+            ("dynaserve", Json::from(y)),
+        ]));
+    }
+    t.print();
+    println!(
+        "\naverage: DynaServe = {:.2}x PD-Coloc (paper: 2.37x), {:.2}x PD-Disagg (paper: 1.37x)",
+        rc.iter().sum::<f64>() / rc.len() as f64,
+        rd.iter().sum::<f64>() / rd.len() as f64
+    );
+    write_results("fig9", &Json::Arr(results));
+    Ok(())
+}

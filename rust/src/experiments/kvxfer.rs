@@ -1,0 +1,51 @@
+//! §6.6 "Chunk-based KV transfer": on the Mini-Reasoning workload, compare
+//! the non-overlapped (exposed) transfer time of chunked transfer vs
+//! transfer-at-handoff. The paper reports a 94% reduction.
+
+use crate::costmodel::LlmSpec;
+use crate::experiments::runners::{run_once, System};
+use crate::experiments::write_results;
+use crate::metrics::SloConfig;
+use crate::util::cli::{Args, Table};
+use crate::util::json::{obj, Json};
+use crate::workload::TraceKind;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let duration = args.f64_or("duration", 60.0);
+    let qps = args.f64_or("qps", 2.0);
+    let seed = args.u64_or("seed", 42);
+    let llm = LlmSpec::qwen25_14b();
+    let slo = SloConfig::default();
+
+    let (_, sim) = run_once(System::DynaServe, &llm, TraceKind::MiniReasoning, qps, duration, seed, slo);
+    let tr = sim.transfer;
+    println!("Chunk-based KV transfer (Mini-Reasoning, qps={qps}, {} transfers)\n", tr.transfers);
+    let mut t = Table::new(["scheme", "exposed transfer time (s)", "per transfer (ms)"]);
+    let per = |x: f64| {
+        if tr.transfers == 0 { 0.0 } else { x / tr.transfers as f64 * 1e3 }
+    };
+    t.row(["at-handoff (baseline)".to_string(), format!("{:.3}", tr.mono_exposed), format!("{:.2}", per(tr.mono_exposed))]);
+    t.row(["chunked (DynaServe)".to_string(), format!("{:.3}", tr.chunked_exposed), format!("{:.2}", per(tr.chunked_exposed))]);
+    t.print();
+    let reduction = if tr.mono_exposed > 0.0 {
+        1.0 - tr.chunked_exposed / tr.mono_exposed
+    } else {
+        0.0
+    };
+    println!(
+        "\nnon-overlapped transfer reduced by {:.1}% (paper: 94%); {:.1} MB moved",
+        reduction * 100.0,
+        tr.bytes / 1e6
+    );
+    write_results(
+        "kvxfer",
+        &obj([
+            ("transfers", Json::from(tr.transfers as usize)),
+            ("mono_exposed_s", Json::from(tr.mono_exposed)),
+            ("chunked_exposed_s", Json::from(tr.chunked_exposed)),
+            ("reduction", Json::from(reduction)),
+            ("bytes", Json::from(tr.bytes)),
+        ]),
+    );
+    Ok(())
+}

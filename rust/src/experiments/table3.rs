@@ -1,0 +1,48 @@
+//! Table 3 (§6.6): per-request global-scheduling overhead at varying QPS
+//! (Qwen-14B, BurstGPT, 2 instances). The paper's python/C++ scheduler
+//! costs ~15 ms per request; this in-process Rust implementation should be
+//! orders of magnitude cheaper — the shape to check is that overhead is
+//! flat in QPS and negligible vs request latency.
+
+use crate::costmodel::LlmSpec;
+use crate::experiments::runners::{run_once, System};
+use crate::experiments::write_results;
+use crate::metrics::SloConfig;
+use crate::util::cli::{Args, Table};
+use crate::util::json::{obj, Json};
+use crate::workload::TraceKind;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let duration = args.f64_or("duration", 30.0);
+    let seed = args.u64_or("seed", 42);
+    let llm = LlmSpec::qwen25_14b();
+    let slo = SloConfig::default();
+
+    println!("Table 3: per-request scheduling overhead vs QPS (BurstGPT, Qwen-14B)\n");
+    let mut t = Table::new(["QPS", "mean overhead us", "p99 overhead us", "probes/req"]);
+    let mut results = Vec::new();
+    for qps in [6.0, 8.0, 10.0, 12.0, 14.0, 16.0] {
+        let (_, mut sim) = run_once(System::DynaServe, &llm, TraceKind::BurstGpt, qps, duration, seed, slo);
+        let mean = sim.sched_overhead.mean() * 1e6;
+        let p99 = sim.sched_overhead.p99() * 1e6;
+        t.row([
+            format!("{qps:.0}"),
+            format!("{mean:.1}"),
+            format!("{p99:.1}"),
+            "<= 14".to_string(), // 2 + 2K probes, K = 6
+        ]);
+        results.push(obj([
+            ("qps", Json::from(qps)),
+            ("mean_us", Json::from(mean)),
+            ("p99_us", Json::from(p99)),
+        ]));
+    }
+    t.print();
+    println!(
+        "\npaper reference: 13.7–17.5 ms/request (python proxy + C++ scheduler);\n\
+         this implementation is in-process Rust — flat-in-QPS and negligible vs the\n\
+         ~5000 ms end-to-end request latency is the property being reproduced."
+    );
+    write_results("table3", &Json::Arr(results));
+    Ok(())
+}

@@ -1,0 +1,219 @@
+//! Paged KV-cache block management (the PagedAttention discipline [17]):
+//! fixed-size token blocks, per-request block lists, and capacity
+//! accounting used for admission control by both the simulator and the
+//! live engine.
+
+use std::collections::HashMap;
+
+use crate::core::RequestId;
+
+pub type BlockId = usize;
+
+/// Fixed-pool block allocator.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    block_tokens: usize,
+    free: Vec<BlockId>,
+    total: usize,
+    allocated: HashMap<RequestId, Vec<BlockId>>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum KvError {
+    #[error("out of KV blocks: need {need}, free {free}")]
+    OutOfBlocks { need: usize, free: usize },
+}
+
+impl BlockAllocator {
+    pub fn new(total_blocks: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0);
+        BlockAllocator {
+            block_tokens,
+            free: (0..total_blocks).rev().collect(),
+            total: total_blocks,
+            allocated: HashMap::new(),
+        }
+    }
+
+    /// Pool sized for a token capacity.
+    pub fn for_token_capacity(tokens: usize, block_tokens: usize) -> Self {
+        Self::new(tokens / block_tokens, block_tokens)
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total - self.free.len()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.used_blocks() as f64 / self.total as f64
+        }
+    }
+
+    fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Can `extra_tokens` more tokens be appended for `id` without
+    /// exhausting the pool?
+    pub fn can_grow(&self, id: RequestId, current_tokens: usize, extra_tokens: usize) -> bool {
+        let have = self.allocated.get(&id).map(|v| v.len()).unwrap_or(0);
+        let need = self.blocks_for_tokens(current_tokens + extra_tokens);
+        need.saturating_sub(have) <= self.free.len()
+    }
+
+    /// Grow `id`'s allocation to cover `total_tokens`.
+    pub fn grow(&mut self, id: RequestId, total_tokens: usize) -> Result<(), KvError> {
+        let entry = self.allocated.entry(id).or_default();
+        let need = total_tokens.div_ceil(self.block_tokens);
+        if need > entry.len() {
+            let extra = need - entry.len();
+            if extra > self.free.len() {
+                return Err(KvError::OutOfBlocks { need: extra, free: self.free.len() });
+            }
+            for _ in 0..extra {
+                entry.push(self.free.pop().unwrap());
+            }
+        }
+        Ok(())
+    }
+
+    /// Release all blocks held by `id`.
+    pub fn release(&mut self, id: RequestId) {
+        if let Some(blocks) = self.allocated.remove(&id) {
+            self.free.extend(blocks);
+        }
+    }
+
+    pub fn blocks_of(&self, id: RequestId) -> Option<&[BlockId]> {
+        self.allocated.get(&id).map(|v| v.as_slice())
+    }
+
+    pub fn holders(&self) -> usize {
+        self.allocated.len()
+    }
+}
+
+/// Lightweight KV accounting for the simulator: tracks resident tokens per
+/// request without materializing block ids (the allocator above is used by
+/// the live engine; the simulator only needs capacity arithmetic).
+#[derive(Debug, Default)]
+pub struct KvAccounting {
+    capacity_tokens: usize,
+    resident: HashMap<RequestId, usize>,
+    total: usize,
+}
+
+impl KvAccounting {
+    pub fn new(capacity_tokens: usize) -> Self {
+        KvAccounting { capacity_tokens, ..Default::default() }
+    }
+
+    pub fn can_fit(&self, extra: usize) -> bool {
+        self.total + extra <= self.capacity_tokens
+    }
+
+    pub fn set_resident(&mut self, id: RequestId, tokens: usize) {
+        let old = self.resident.insert(id, tokens).unwrap_or(0);
+        self.total = self.total + tokens - old;
+    }
+
+    pub fn release(&mut self, id: RequestId) {
+        if let Some(tokens) = self.resident.remove(&id) {
+            self.total -= tokens;
+        }
+    }
+
+    pub fn resident_tokens(&self) -> usize {
+        self.total
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.capacity_tokens == 0 {
+            0.0
+        } else {
+            self.total as f64 / self.capacity_tokens as f64
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_and_release_roundtrip() {
+        let mut a = BlockAllocator::new(10, 16);
+        a.grow(1, 40).unwrap(); // 3 blocks
+        assert_eq!(a.used_blocks(), 3);
+        a.grow(1, 48).unwrap(); // still 3
+        assert_eq!(a.used_blocks(), 3);
+        a.grow(1, 49).unwrap(); // 4
+        assert_eq!(a.used_blocks(), 4);
+        a.release(1);
+        assert_eq!(a.used_blocks(), 0);
+        assert_eq!(a.free_blocks(), 10);
+    }
+
+    #[test]
+    fn exhaustion_is_an_error_not_a_panic() {
+        let mut a = BlockAllocator::new(2, 16);
+        a.grow(1, 32).unwrap();
+        let err = a.grow(2, 1).unwrap_err();
+        assert_eq!(err, KvError::OutOfBlocks { need: 1, free: 0 });
+        // failed grow must not leak partial state
+        assert_eq!(a.used_blocks(), 2);
+    }
+
+    #[test]
+    fn can_grow_predicts_grow() {
+        let mut a = BlockAllocator::new(4, 16);
+        assert!(a.can_grow(1, 0, 64));
+        a.grow(1, 64).unwrap();
+        assert!(!a.can_grow(2, 0, 17));
+        assert!(a.can_grow(1, 64, 0));
+    }
+
+    #[test]
+    fn distinct_requests_get_distinct_blocks() {
+        let mut a = BlockAllocator::new(8, 16);
+        a.grow(1, 32).unwrap();
+        a.grow(2, 32).unwrap();
+        let b1 = a.blocks_of(1).unwrap().to_vec();
+        let b2 = a.blocks_of(2).unwrap().to_vec();
+        assert!(b1.iter().all(|b| !b2.contains(b)));
+    }
+
+    #[test]
+    fn accounting_tracks_totals() {
+        let mut k = KvAccounting::new(1000);
+        k.set_resident(1, 300);
+        k.set_resident(2, 400);
+        assert_eq!(k.resident_tokens(), 700);
+        assert!(k.can_fit(300));
+        assert!(!k.can_fit(301));
+        k.set_resident(1, 350);
+        assert_eq!(k.resident_tokens(), 750);
+        k.release(2);
+        assert_eq!(k.resident_tokens(), 350);
+        assert!((k.utilization() - 0.35).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,8 @@
+//! KV-cache substrate: paged block allocation (vLLM-style) and the paper's
+//! chunk-based cross-instance KV transfer (§4.3).
+
+pub mod block;
+pub mod transfer;
+
+pub use block::{BlockAllocator, KvAccounting};
+pub use transfer::{chunked_timeline, monolithic_timeline, LinkSpec, TransferEngine, TransferJob};

@@ -1,0 +1,287 @@
+//! Chunk-based KV transfer (§4.3).
+//!
+//! The KV cache is append-only: once instance A finishes computing chunk k
+//! of a micro-request, that chunk is immutable and can be DMA-pushed to
+//! instance B immediately while A computes chunk k+1. This overlaps
+//! communication with computation; the paper reports a 94% reduction in
+//! *non-overlapped* (exposed) transfer time vs transferring at handoff.
+//!
+//! Two facets live here:
+//! * **Analytic timelines** (`chunked_timeline` / `monolithic_timeline`) —
+//!   used by the simulator and the §6.6 kvxfer experiment.
+//! * **A live engine** (`TransferEngine`) — a background thread that paces
+//!   real chunk payloads over a modeled link and delivers them to the
+//!   destination instance's channel; used by the live PJRT server.
+
+use std::sync::mpsc;
+use std::sync::{
+    atomic::{AtomicU64, Ordering},
+    Arc,
+};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::core::RequestId;
+
+/// Cross-instance link model (defaults: one 200 Gb/s RoCE NIC).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// Bytes per second.
+    pub bandwidth: f64,
+    /// Per-message latency, seconds.
+    pub latency: f64,
+}
+
+impl Default for LinkSpec {
+    fn default() -> Self {
+        LinkSpec { bandwidth: 25e9, latency: 8e-6 }
+    }
+}
+
+impl LinkSpec {
+    pub fn transfer_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.bandwidth
+    }
+}
+
+/// Result of scheduling a multi-chunk transfer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferTimeline {
+    /// Per-chunk (send_start, arrive) instants.
+    pub chunks: Vec<(f64, f64)>,
+    /// When the last chunk lands on the receiver.
+    pub done: f64,
+    /// When the sender finished *computing* the last chunk.
+    pub compute_done: f64,
+    /// Receiver wait beyond compute completion: done - compute_done.
+    pub exposed: f64,
+    pub total_bytes: f64,
+}
+
+/// Chunked schedule: each chunk ships as soon as it is produced and the
+/// link is free (chunks are serialized on the link, pipelined with compute).
+/// `ready`: per-chunk (production_time, bytes), production times
+/// non-decreasing.
+pub fn chunked_timeline(ready: &[(f64, f64)], link: &LinkSpec) -> TransferTimeline {
+    let mut chunks = Vec::with_capacity(ready.len());
+    let mut link_free = 0.0f64;
+    let mut total_bytes = 0.0;
+    for &(t_ready, bytes) in ready {
+        let start = t_ready.max(link_free);
+        let arrive = start + link.transfer_time(bytes);
+        link_free = arrive;
+        total_bytes += bytes;
+        chunks.push((start, arrive));
+    }
+    let compute_done = ready.last().map(|c| c.0).unwrap_or(0.0);
+    let done = chunks.last().map(|c| c.1).unwrap_or(compute_done);
+    TransferTimeline {
+        chunks,
+        done,
+        compute_done,
+        exposed: (done - compute_done).max(0.0),
+        total_bytes,
+    }
+}
+
+/// Baseline: whole KV ships in one message after compute completes
+/// (standard PD-disaggregation handoff).
+pub fn monolithic_timeline(ready: &[(f64, f64)], link: &LinkSpec) -> TransferTimeline {
+    let compute_done = ready.last().map(|c| c.0).unwrap_or(0.0);
+    let total_bytes: f64 = ready.iter().map(|c| c.1).sum();
+    let done = compute_done + link.transfer_time(total_bytes);
+    TransferTimeline {
+        chunks: vec![(compute_done, done)],
+        done,
+        compute_done,
+        exposed: done - compute_done,
+        total_bytes,
+    }
+}
+
+/// A chunk of real KV data in flight between live instances.
+#[derive(Debug)]
+pub struct TransferJob {
+    pub request: RequestId,
+    /// Token range [start, end) this chunk covers.
+    pub token_range: (usize, usize),
+    /// Raw KV payload (k and v, all layers, for the token range).
+    pub payload: Vec<f32>,
+    /// True when this is the final chunk of the micro-request's context.
+    pub last: bool,
+}
+
+/// Counters exported by the live engine.
+#[derive(Debug, Default)]
+pub struct TransferStats {
+    pub bytes: AtomicU64,
+    pub chunks: AtomicU64,
+    pub busy_ns: AtomicU64,
+}
+
+/// Background pacing thread moving chunks between instance channels.
+/// Sending is non-blocking for the compute thread (the DMA-push model);
+/// the engine serializes chunks on the link and sleeps `bytes/bandwidth`
+/// to model occupancy before forwarding.
+pub struct TransferEngine {
+    tx: mpsc::Sender<(TransferJob, mpsc::Sender<TransferJob>)>,
+    stats: Arc<TransferStats>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl TransferEngine {
+    pub fn new(link: LinkSpec) -> Self {
+        let (tx, rx) = mpsc::channel::<(TransferJob, mpsc::Sender<TransferJob>)>();
+        let stats = Arc::new(TransferStats::default());
+        let st = stats.clone();
+        let handle = thread::Builder::new()
+            .name("kv-transfer".into())
+            .spawn(move || {
+                while let Ok((job, dest)) = rx.recv() {
+                    let bytes = (job.payload.len() * 4) as f64;
+                    let t0 = Instant::now();
+                    let occupancy = link.transfer_time(bytes);
+                    // Pace the link. Sub-millisecond sleeps are imprecise but
+                    // the model only needs aggregate pacing fidelity.
+                    if occupancy > 0.0 {
+                        thread::sleep(Duration::from_secs_f64(occupancy));
+                    }
+                    st.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+                    st.chunks.fetch_add(1, Ordering::Relaxed);
+                    st.busy_ns
+                        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    // Receiver gone (request cancelled) is not an error.
+                    let _ = dest.send(job);
+                }
+            })
+            .expect("spawn kv-transfer thread");
+        TransferEngine { tx, stats, handle: Some(handle) }
+    }
+
+    /// Queue a chunk for delivery to `dest`. Returns immediately.
+    pub fn push(&self, job: TransferJob, dest: mpsc::Sender<TransferJob>) {
+        self.tx.send((job, dest)).expect("transfer engine alive");
+    }
+
+    pub fn stats(&self) -> &TransferStats {
+        &self.stats
+    }
+}
+
+impl Drop for TransferEngine {
+    fn drop(&mut self) {
+        // Close the queue and let the worker drain.
+        let (dummy_tx, _) = mpsc::channel();
+        drop(std::mem::replace(&mut self.tx, dummy_tx));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> LinkSpec {
+        LinkSpec { bandwidth: 1e9, latency: 1e-6 }
+    }
+
+    #[test]
+    fn chunked_overlaps_compute() {
+        // 4 chunks of 10MB produced every 20ms; link moves 10MB in 10ms —
+        // every chunk ships while the next one computes: exposure ≈ one chunk.
+        let ready: Vec<(f64, f64)> = (0..4).map(|i| (0.02 * (i + 1) as f64, 10e6)).collect();
+        let c = chunked_timeline(&ready, &link());
+        let m = monolithic_timeline(&ready, &link());
+        assert!(c.exposed < m.exposed);
+        assert!((c.exposed - 0.01).abs() < 1e-3, "exposed={}", c.exposed);
+        assert!((m.exposed - 0.04).abs() < 1e-3, "exposed={}", m.exposed);
+        // ≥ 70% reduction in this regime; the paper reports 94% in its setup
+        assert!(c.exposed / m.exposed < 0.3);
+    }
+
+    #[test]
+    fn slow_link_serializes_chunks() {
+        // link slower than production: chunks queue, exposure grows
+        let ready: Vec<(f64, f64)> = (0..4).map(|i| (0.001 * (i + 1) as f64, 10e6)).collect();
+        let c = chunked_timeline(&ready, &link());
+        assert!(c.chunks.windows(2).all(|w| w[0].1 <= w[1].0 + 1e-12));
+        assert!(c.exposed > 0.025);
+    }
+
+    #[test]
+    fn timelines_conserve_bytes() {
+        let ready = vec![(0.01, 1e6), (0.02, 2e6), (0.03, 3e6)];
+        let c = chunked_timeline(&ready, &link());
+        let m = monolithic_timeline(&ready, &link());
+        assert_eq!(c.total_bytes, 6e6);
+        assert_eq!(m.total_bytes, 6e6);
+        // monolithic can never finish earlier than chunked
+        assert!(m.done >= c.done - 1e-12);
+    }
+
+    #[test]
+    fn empty_transfer_is_free() {
+        let c = chunked_timeline(&[], &link());
+        assert_eq!(c.exposed, 0.0);
+        assert_eq!(c.total_bytes, 0.0);
+    }
+
+    #[test]
+    fn live_engine_delivers_in_order() {
+        let engine = TransferEngine::new(LinkSpec { bandwidth: 1e12, latency: 0.0 });
+        let (tx, rx) = mpsc::channel();
+        for i in 0..8 {
+            engine.push(
+                TransferJob {
+                    request: 1,
+                    token_range: (i * 16, (i + 1) * 16),
+                    payload: vec![i as f32; 64],
+                    last: i == 7,
+                },
+                tx.clone(),
+            );
+        }
+        let mut got = Vec::new();
+        for _ in 0..8 {
+            got.push(rx.recv_timeout(Duration::from_secs(5)).unwrap());
+        }
+        assert!(got.windows(2).all(|w| w[0].token_range.1 == w[1].token_range.0));
+        assert!(got.last().unwrap().last);
+        assert_eq!(engine.stats().chunks.load(Ordering::Relaxed), 8);
+        assert_eq!(engine.stats().bytes.load(Ordering::Relaxed), 8 * 64 * 4);
+    }
+
+    #[test]
+    fn live_engine_paces_bandwidth() {
+        // 4 MB over a 100 MB/s link ≈ 40 ms minimum
+        let engine = TransferEngine::new(LinkSpec { bandwidth: 100e6, latency: 0.0 });
+        let (tx, rx) = mpsc::channel();
+        let t0 = Instant::now();
+        engine.push(
+            TransferJob { request: 1, token_range: (0, 1), payload: vec![0.0; 1 << 20], last: true },
+            tx,
+        );
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(35), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn dropped_receiver_does_not_kill_engine() {
+        let engine = TransferEngine::new(LinkSpec { bandwidth: 1e12, latency: 0.0 });
+        let (tx, rx) = mpsc::channel();
+        drop(rx); // cancelled request
+        engine.push(
+            TransferJob { request: 1, token_range: (0, 1), payload: vec![0.0; 4], last: true },
+            tx,
+        );
+        // engine still functional for the next job
+        let (tx2, rx2) = mpsc::channel();
+        engine.push(
+            TransferJob { request: 2, token_range: (0, 1), payload: vec![0.0; 4], last: true },
+            tx2,
+        );
+        assert!(rx2.recv_timeout(Duration::from_secs(5)).is_ok());
+    }
+}

@@ -1,0 +1,31 @@
+//! # DynaServe — unified and elastic execution for dynamic disaggregated
+//! # LLM serving (reproduction)
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of the DynaServe paper
+//! (Ruan et al., 2025). This crate is Layer 3: the serving coordinator —
+//! the micro-request abstraction, the two-level (global + local) scheduling
+//! framework, chunk-based KV transfer, the PD-colocation and
+//! PD-disaggregation baselines, the analytical A100 cost model and
+//! discrete-event simulator used to reproduce the paper's evaluation, and
+//! a live serving path that executes a real (tiny) transformer through
+//! AOT-compiled XLA artifacts via PJRT.
+//!
+//! Layers 1 and 2 (the Pallas attention kernels and the JAX model) live in
+//! `python/compile/` and run only at build time (`make artifacts`); Python
+//! is never on the request path.
+//!
+//! See DESIGN.md for the architecture and the per-experiment index, and
+//! EXPERIMENTS.md for measured reproductions of every paper table/figure.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod core;
+pub mod costmodel;
+pub mod experiments;
+pub mod kv;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,108 @@
+//! `dynaserve` — the serving CLI (Layer-3 leader entrypoint).
+//!
+//! Subcommands:
+//!   serve     live serving of the AOT-compiled TinyQwen model via PJRT:
+//!             a workload is generated, scheduled by the two-level APS
+//!             framework, and executed on real unified instances.
+//!   simulate  run one A100-scale simulated workload and print the summary.
+//!   calibrate measure PJRT step latencies and print the profile seed.
+//!
+//! Examples:
+//!   dynaserve serve --requests 32 --qps 4 --artifacts artifacts
+//!   dynaserve simulate --system dynaserve --workload burstgpt --qps 4
+//!   dynaserve calibrate --artifacts artifacts
+
+use dynaserve::costmodel::LlmSpec;
+use dynaserve::experiments::runners::{run_once, System};
+use dynaserve::metrics::SloConfig;
+use dynaserve::util::cli::Args;
+use dynaserve::workload::TraceKind;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("serve") => serve(&args),
+        Some("simulate") => simulate(&args),
+        Some("calibrate") => calibrate(&args),
+        _ => {
+            eprintln!("usage: dynaserve <serve|simulate|calibrate> [flags]");
+            eprintln!("  serve     --requests N --qps Q --artifacts DIR [--instances 2] [--workload NAME]");
+            eprintln!("  simulate  --system <dynaserve|coloc|disagg> --workload NAME --qps Q [--duration S] [--model 14b]");
+            eprintln!("  calibrate --artifacts DIR");
+            Ok(())
+        }
+    }
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = dynaserve::server::ServeConfig {
+        artifacts: args.get_or("artifacts", "artifacts"),
+        n_instances: args.usize_or("instances", 2),
+        requests: args.usize_or("requests", 32),
+        qps: args.f64_or("qps", 4.0),
+        workload: TraceKind::by_name(&args.get_or("workload", "tiny"))
+            .unwrap_or(TraceKind::Fixed { prompt: 48, decode: 24 }),
+        seed: args.u64_or("seed", 42),
+        slo: SloConfig { tbt: args.f64_or("slo-ms", 250.0) / 1e3, ttft: None },
+    };
+    let report = dynaserve::server::serve(cfg)?;
+    report.print();
+    Ok(())
+}
+
+fn simulate(args: &Args) -> anyhow::Result<()> {
+    let system = match args.get_or("system", "dynaserve").as_str() {
+        "coloc" => System::Coloc { chunk: args.usize_or("chunk", 2048) },
+        "disagg" => System::Disagg,
+        _ => System::DynaServe,
+    };
+    let llm = LlmSpec::by_name(&args.get_or("model", "14b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let kind = TraceKind::by_name(&args.get_or("workload", "burstgpt"))
+        .ok_or_else(|| anyhow::anyhow!("unknown workload"))?;
+    let (s, sim) = run_once(
+        system,
+        &llm,
+        kind,
+        args.f64_or("qps", 4.0),
+        args.f64_or("duration", 60.0),
+        args.u64_or("seed", 42),
+        SloConfig { tbt: args.f64_or("slo-ms", 100.0) / 1e3, ttft: None },
+    );
+    println!("system={} model={} workload={}", system.name(), llm.name, kind.name());
+    println!(
+        "completed={} tokens={} goodput={:.1} tok/s throughput={:.1} tok/s rps={:.2}",
+        s.completed, s.total_tokens, s.goodput_tok_s, s.throughput_tok_s, s.rps
+    );
+    println!(
+        "p50/p99 TBT = {:.1}/{:.1} ms   attainment={:.2}%   p50/p99 TTFT = {:.0}/{:.0} ms",
+        s.p50_tbt * 1e3,
+        s.p99_tbt * 1e3,
+        s.attainment * 100.0,
+        s.p50_ttft * 1e3,
+        s.p99_ttft * 1e3
+    );
+    println!("req_max_tbt_p99 = {:.1} ms   duration = {:.1}s", s.req_max_tbt_p99 * 1e3, s.duration);
+    for inst in &sim.instances {
+        println!(
+            "  instance {}: iters={} MFU={:.1}% HBM={:.1}% busy={:.1}s",
+            inst.id,
+            inst.stats.iterations,
+            inst.mfu() * 100.0,
+            inst.hbm_usage() * 100.0,
+            inst.stats.busy_time
+        );
+    }
+    Ok(())
+}
+
+fn calibrate(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let engine = dynaserve::runtime::Engine::load(&dir)?;
+    let table = engine.calibrate(args.usize_or("reps", 3))?;
+    println!("PJRT step-latency calibration ({} buckets):", table.len());
+    for (name, lat) in table {
+        println!("  {name:<22} {:.3} ms", lat * 1e3);
+    }
+    Ok(())
+}

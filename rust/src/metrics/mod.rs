@@ -1,0 +1,370 @@
+//! Serving metrics (§6.1): TTFT / TBT recording, SLO attainment, goodput
+//! (useful output tokens per second under the latency SLO), serving
+//! capacity search, and per-instance utilization aggregation.
+
+use std::collections::HashMap;
+
+use crate::core::RequestId;
+use crate::util::stats::Samples;
+
+/// Latency objectives. The paper enforces a uniform 100 ms P99 TBT SLO.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloConfig {
+    /// Time-between-tokens bound, seconds.
+    pub tbt: f64,
+    /// Optional time-to-first-token bound, seconds (not enforced by the
+    /// paper's headline metric; recorded for completeness).
+    pub ttft: Option<f64>,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig { tbt: 0.100, ttft: None }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct ReqState {
+    arrival: f64,
+    first_token: Option<f64>,
+    last_token: f64,
+    tokens: usize,
+    tbt_violations: usize,
+    max_tbt: f64,
+}
+
+/// Completed-request record.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: RequestId,
+    pub arrival: f64,
+    pub finish: f64,
+    pub ttft: f64,
+    pub tokens: usize,
+    pub tbt_violations: usize,
+    pub max_tbt: f64,
+}
+
+impl RequestRecord {
+    /// Strict per-request SLO: every inter-token gap within bound.
+    pub fn meets_slo_strict(&self) -> bool {
+        self.tbt_violations == 0
+    }
+
+    /// Paper-style request SLO: at most 1% of the request's tokens late.
+    pub fn meets_slo_p99(&self) -> bool {
+        self.tbt_violations * 100 <= self.tokens
+    }
+}
+
+/// Streams token events in, produces a [`Summary`] out.
+#[derive(Debug, Default)]
+pub struct Collector {
+    slo: SloConfig,
+    active: HashMap<RequestId, ReqState>,
+    pub completed: Vec<RequestRecord>,
+    tbt: Samples,
+    ttft: Samples,
+    good_tokens: usize,
+    total_tokens: usize,
+}
+
+impl Collector {
+    pub fn new(slo: SloConfig) -> Self {
+        Collector { slo, ..Default::default() }
+    }
+
+    pub fn slo(&self) -> SloConfig {
+        self.slo
+    }
+
+    /// Record one emitted output token for `id` at time `t`.
+    pub fn on_token(&mut self, id: RequestId, arrival: f64, t: f64) {
+        let st = self.active.entry(id).or_insert(ReqState {
+            arrival,
+            first_token: None,
+            last_token: 0.0,
+            tokens: 0,
+            tbt_violations: 0,
+            max_tbt: 0.0,
+        });
+        self.total_tokens += 1;
+        match st.first_token {
+            None => {
+                st.first_token = Some(t);
+                self.ttft.push(t - arrival);
+                // first token counts as good unless a TTFT SLO is set
+                let ok = self.slo.ttft.map(|b| t - arrival <= b).unwrap_or(true);
+                if ok {
+                    self.good_tokens += 1;
+                }
+            }
+            Some(_) => {
+                let gap = t - st.last_token;
+                self.tbt.push(gap);
+                st.max_tbt = st.max_tbt.max(gap);
+                if gap <= self.slo.tbt {
+                    self.good_tokens += 1;
+                } else {
+                    st.tbt_violations += 1;
+                }
+            }
+        }
+        st.last_token = t;
+        st.tokens += 1;
+    }
+
+    /// Mark `id` finished (all decode tokens emitted).
+    pub fn on_complete(&mut self, id: RequestId) {
+        if let Some(st) = self.active.remove(&id) {
+            self.completed.push(RequestRecord {
+                id,
+                arrival: st.arrival,
+                finish: st.last_token,
+                ttft: st.first_token.map(|f| f - st.arrival).unwrap_or(f64::NAN),
+                tokens: st.tokens,
+                tbt_violations: st.tbt_violations,
+                max_tbt: st.max_tbt,
+            });
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn summarize(&mut self, duration: f64) -> Summary {
+        let slo = self.slo.tbt;
+        Summary {
+            duration,
+            completed: self.completed.len(),
+            total_tokens: self.total_tokens,
+            good_tokens: self.good_tokens,
+            goodput_tok_s: self.good_tokens as f64 / duration,
+            throughput_tok_s: self.total_tokens as f64 / duration,
+            rps: self.completed.len() as f64 / duration,
+            attainment: if self.tbt.is_empty() {
+                1.0
+            } else {
+                self.tbt.fraction_leq(slo)
+            },
+            p50_tbt: self.tbt.p50(),
+            p99_tbt: self.tbt.p99(),
+            p50_ttft: self.ttft.p50(),
+            p99_ttft: self.ttft.p99(),
+            req_max_tbt_p99: {
+                let mut m = Samples::new();
+                for r in &self.completed {
+                    if r.tokens > 1 {
+                        m.push(r.max_tbt);
+                    }
+                }
+                if m.is_empty() { f64::NAN } else { m.p99() }
+            },
+            req_slo_frac: if self.completed.is_empty() {
+                1.0
+            } else {
+                self.completed.iter().filter(|r| r.meets_slo_p99()).count() as f64
+                    / self.completed.len() as f64
+            },
+        }
+    }
+
+    pub fn tbt_samples(&mut self) -> &mut Samples {
+        &mut self.tbt
+    }
+}
+
+/// Aggregated serving statistics for one run.
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub duration: f64,
+    pub completed: usize,
+    pub total_tokens: usize,
+    pub good_tokens: usize,
+    /// Output tokens/s whose TBT met the SLO — the paper's goodput metric.
+    pub goodput_tok_s: f64,
+    pub throughput_tok_s: f64,
+    pub rps: f64,
+    /// Fraction of inter-token gaps within the SLO.
+    pub attainment: f64,
+    pub p50_tbt: f64,
+    pub p99_tbt: f64,
+    pub p50_ttft: f64,
+    pub p99_ttft: f64,
+    /// p99 over completed requests of each request's worst inter-token gap
+    /// — catches per-request stalls (e.g. a β segment queueing behind a
+    /// saturated decode pool) that token-level p99 TBT dilutes away.
+    pub req_max_tbt_p99: f64,
+    /// Fraction of completed requests meeting the per-request p99 SLO.
+    pub req_slo_frac: f64,
+}
+
+impl Summary {
+    /// The serving-capacity criterion (§6.3): p99 TBT within the bound,
+    /// i.e. at most 1% of tokens violate the SLO.
+    pub fn meets_capacity_slo(&self, slo: &SloConfig) -> bool {
+        self.p99_tbt.is_nan() || self.p99_tbt <= slo.tbt
+    }
+
+    /// *Sustainable* over an arrival window of `window` seconds: latency
+    /// SLO met AND the system keeps up with arrivals. The run-to-completion
+    /// simulator always finishes every request, so completion counts can't
+    /// detect overload; the signatures are (a) TTFT ballooning (queueing at
+    /// the prefill side) and (b) drain time — `makespan − window` —
+    /// exceeding the window (queueing at the decode side, invisible to
+    /// TTFT under disaggregation).
+    pub fn sustainable_at(&self, slo: &SloConfig, window: f64) -> bool {
+        let ttft_bound = (0.2 * window).max(5.0);
+        self.meets_capacity_slo(slo)
+            && (self.p99_ttft.is_nan() || self.p99_ttft <= ttft_bound)
+            && (self.req_max_tbt_p99.is_nan() || self.req_max_tbt_p99 <= 10.0 * slo.tbt)
+    }
+}
+
+/// Binary-search the maximum QPS whose run is still *sustainable*
+/// (`Summary::sustainable_at`). `run` maps QPS -> Summary.
+/// Returns (capacity_qps, summary_at_capacity).
+pub fn capacity_search(
+    slo: &SloConfig,
+    window: f64,
+    mut lo: f64,
+    mut hi: f64,
+    tol: f64,
+    mut run: impl FnMut(f64) -> Summary,
+) -> (f64, Summary) {
+    let slo = *slo;
+    let ok = move |_q: f64, s: &Summary| s.sustainable_at(&slo, window);
+    // grow hi until it fails (or give up)
+    let mut best: Option<(f64, Summary)>;
+    let s_lo = run(lo);
+    if !ok(lo, &s_lo) {
+        return (0.0, s_lo);
+    }
+    best = Some((lo, s_lo));
+    let mut s_hi = run(hi);
+    let mut grow = 0;
+    while ok(hi, &s_hi) && grow < 6 {
+        best = Some((hi, s_hi));
+        lo = hi;
+        hi *= 2.0;
+        s_hi = run(hi);
+        grow += 1;
+    }
+    if grow == 6 {
+        let (q, s) = best.unwrap();
+        return (q, s);
+    }
+    while hi - lo > tol {
+        let mid = 0.5 * (lo + hi);
+        let s = run(mid);
+        if ok(mid, &s) {
+            best = Some((mid, s));
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    best.map(|(q, s)| (q, s)).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttft_and_tbt_recorded() {
+        let mut c = Collector::new(SloConfig::default());
+        // req 1 arrives at t=0; tokens at 0.5, 0.55, 0.70
+        c.on_token(1, 0.0, 0.5);
+        c.on_token(1, 0.0, 0.55);
+        c.on_token(1, 0.0, 0.70);
+        c.on_complete(1);
+        let s = c.summarize(1.0);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.total_tokens, 3);
+        // gaps: 0.05 (good), 0.15 (violation); first token good
+        assert_eq!(s.good_tokens, 2);
+        assert!((s.p99_ttft - 0.5).abs() < 1e-9);
+        assert!(s.attainment > 0.49 && s.attainment < 0.51);
+    }
+
+    #[test]
+    fn per_request_slo_classification() {
+        let r = RequestRecord {
+            id: 1,
+            arrival: 0.0,
+            finish: 1.0,
+            ttft: 0.1,
+            tokens: 200,
+            tbt_violations: 2,
+            max_tbt: 0.5,
+        };
+        assert!(!r.meets_slo_strict());
+        assert!(r.meets_slo_p99()); // 2/200 = 1%
+        let worse = RequestRecord { tbt_violations: 3, ..r };
+        assert!(!worse.meets_slo_p99());
+    }
+
+    #[test]
+    fn goodput_counts_only_in_slo_tokens() {
+        let mut c = Collector::new(SloConfig { tbt: 0.1, ttft: None });
+        let mut t = 0.0;
+        for i in 0..100 {
+            t += if i % 10 == 0 { 0.3 } else { 0.05 };
+            c.on_token(7, 0.0, t);
+        }
+        c.on_complete(7);
+        let s = c.summarize(t);
+        assert_eq!(s.total_tokens, 100);
+        // 9 late gaps among 99 gaps, first token free
+        assert_eq!(s.good_tokens, 100 - 9);
+    }
+
+    #[test]
+    fn capacity_search_finds_threshold() {
+        // synthetic: p99 tbt = 0.02 * qps  =>  capacity at 5.0 for slo 0.1
+        let slo = SloConfig::default();
+        let run = |qps: f64| Summary {
+            duration: 1.0,
+            completed: 1,
+            total_tokens: 100,
+            good_tokens: 100,
+            goodput_tok_s: 100.0,
+            throughput_tok_s: 100.0,
+            rps: qps,
+            attainment: 1.0,
+            p50_tbt: 0.01,
+            p99_tbt: 0.02 * qps,
+            p50_ttft: 0.1,
+            p99_ttft: 0.2,
+            req_max_tbt_p99: 0.05,
+            req_slo_frac: 1.0,
+        };
+        let (cap, _) = capacity_search(&slo, 1.0, 0.5, 2.0, 0.05, run);
+        assert!((cap - 5.0).abs() < 0.1, "cap={cap}");
+    }
+
+    #[test]
+    fn capacity_zero_when_lo_fails() {
+        let slo = SloConfig::default();
+        let run = |_qps: f64| Summary {
+            duration: 1.0,
+            completed: 0,
+            total_tokens: 0,
+            good_tokens: 0,
+            goodput_tok_s: 0.0,
+            throughput_tok_s: 0.0,
+            rps: 0.0,
+            attainment: 0.0,
+            p50_tbt: 1.0,
+            p99_tbt: 1.0,
+            p50_ttft: 1.0,
+            p99_ttft: 1.0,
+            req_max_tbt_p99: 1.0,
+            req_slo_frac: 0.0,
+        };
+        let (cap, _) = capacity_search(&slo, 1.0, 0.5, 2.0, 0.05, run);
+        assert_eq!(cap, 0.0);
+    }
+}

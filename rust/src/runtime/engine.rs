@@ -1,0 +1,305 @@
+//! The PJRT execution engine: compiled step executables, host-side KV
+//! state, and batched step calls.
+//!
+//! Static-shape discipline: each artifact bucket fixes (batch, chunk,
+//! capacity). The engine packs per-sequence KV slots into the bucket's
+//! batch layout, pads token chunks, executes, and scatters the updated KV
+//! back. Padding is safe: padded cache writes land at positions the
+//! causal/length mask never exposes, and `last_idx` reads logits at the
+//! true last token (see python/compile/model.py).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{Bucket, Manifest};
+
+/// Host-resident KV cache of one sequence: layout [L, Hkv, S, D].
+#[derive(Debug, Clone)]
+pub struct KvState {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Cache capacity S this state is laid out for.
+    pub capacity: usize,
+    /// Tokens resident.
+    pub len: usize,
+}
+
+/// Result of one step call.
+#[derive(Debug)]
+pub struct StepOutput {
+    /// [B_real, vocab] logits at each sequence's last real token.
+    pub logits: Vec<Vec<f32>>,
+    /// Wall-clock execution latency (seconds).
+    pub latency: f64,
+}
+
+pub struct Engine {
+    #[allow(dead_code)]
+    client: PjRtClient,
+    pub manifest: Manifest,
+    params: Vec<Literal>,
+    executables: HashMap<String, PjRtLoadedExecutable>,
+    /// Model geometry cached for KV packing.
+    layers: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    vocab: usize,
+}
+
+impl Engine {
+    /// Load artifacts, compile every bucket on the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+
+        // params.bin -> one literal per tensor, manifest order
+        let blob = std::fs::read(manifest.dir.join(&manifest.params_file))
+            .context("reading params.bin")?;
+        let mut params = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let bytes = &blob[p.offset..p.offset + p.len * 4];
+            let lit = Literal::create_from_shape_and_untyped_data(
+                ElementType::F32,
+                &p.shape,
+                bytes,
+            )
+            .with_context(|| format!("param {}", p.name))?;
+            params.push(lit);
+        }
+
+        let mut executables = HashMap::new();
+        for b in &manifest.buckets {
+            let path = manifest.dir.join(&b.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", b.name))?;
+            executables.insert(b.name.clone(), exe);
+        }
+
+        let m = &manifest.model;
+        Ok(Engine {
+            layers: m.n_layers,
+            kv_heads: m.n_kv_heads,
+            head_dim: m.head_dim,
+            vocab: m.vocab,
+            client,
+            params,
+            executables,
+            manifest,
+        })
+    }
+
+    /// Fresh empty KV state at `capacity`.
+    pub fn new_kv(&self, capacity: usize) -> KvState {
+        let n = self.layers * self.kv_heads * capacity * self.head_dim;
+        KvState { k: vec![0.0; n], v: vec![0.0; n], capacity, len: 0 }
+    }
+
+    /// Re-pad a KV state to a larger capacity.
+    pub fn grow_kv(&self, kv: &KvState, capacity: usize) -> KvState {
+        assert!(capacity >= kv.capacity);
+        let mut out = self.new_kv(capacity);
+        out.len = kv.len;
+        let (l, h, d) = (self.layers, self.kv_heads, self.head_dim);
+        for li in 0..l {
+            for hi in 0..h {
+                let src = ((li * h) + hi) * kv.capacity * d;
+                let dst = ((li * h) + hi) * capacity * d;
+                let n = kv.capacity * d;
+                out.k[dst..dst + n].copy_from_slice(&kv.k[src..src + n]);
+                out.v[dst..dst + n].copy_from_slice(&kv.v[src..src + n]);
+            }
+        }
+        out
+    }
+
+    /// Pack per-sequence KV slots into the bucket batch layout
+    /// [L, B, H, S, D]; missing rows (padding) stay zero.
+    fn pack(&self, seqs: &[&KvState], bucket: &Bucket) -> (Vec<f32>, Vec<f32>) {
+        let (l, h, d, s, bsz) = (
+            self.layers,
+            self.kv_heads,
+            self.head_dim,
+            bucket.capacity,
+            bucket.batch,
+        );
+        let row = h * s * d; // one (layer, seq) block in batch layout
+        let mut k = vec![0.0f32; l * bsz * row];
+        let mut v = vec![0.0f32; l * bsz * row];
+        for (bi, seq) in seqs.iter().enumerate() {
+            assert!(seq.capacity <= s, "sequence KV exceeds bucket capacity");
+            for li in 0..l {
+                let dst_base = (li * bsz + bi) * row;
+                if seq.capacity == s {
+                    let src = li * row;
+                    k[dst_base..dst_base + row].copy_from_slice(&seq.k[src..src + row]);
+                    v[dst_base..dst_base + row].copy_from_slice(&seq.v[src..src + row]);
+                } else {
+                    for hi in 0..h {
+                        let src = (li * h + hi) * seq.capacity * d;
+                        let dst = dst_base + hi * s * d;
+                        let n = seq.capacity * d;
+                        k[dst..dst + n].copy_from_slice(&seq.k[src..src + n]);
+                        v[dst..dst + n].copy_from_slice(&seq.v[src..src + n]);
+                    }
+                }
+            }
+        }
+        (k, v)
+    }
+
+    /// Scatter updated batch KV back into the sequences' own layouts.
+    fn unpack(&self, kb: &[f32], vb: &[f32], bucket: &Bucket, seqs: &mut [&mut KvState]) {
+        let (l, h, d, s, bsz) = (
+            self.layers,
+            self.kv_heads,
+            self.head_dim,
+            bucket.capacity,
+            bucket.batch,
+        );
+        let row = h * s * d;
+        for (bi, seq) in seqs.iter_mut().enumerate() {
+            // sequences adopt the bucket capacity on write-back
+            if seq.capacity != s {
+                **seq = self.grow_kv(seq, s);
+            }
+            for li in 0..l {
+                let src = (li * bsz + bi) * row;
+                let dst = li * row;
+                seq.k[dst..dst + row].copy_from_slice(&kb[src..src + row]);
+                seq.v[dst..dst + row].copy_from_slice(&vb[src..src + row]);
+            }
+        }
+    }
+
+    /// Execute one step: each sequence advances by `chunks[i].len()` tokens
+    /// starting at its current `len`. All sequences must fit the bucket.
+    pub fn step(
+        &self,
+        bucket: &Bucket,
+        seqs: &mut [&mut KvState],
+        chunks: &[&[i32]],
+    ) -> Result<StepOutput> {
+        anyhow::ensure!(seqs.len() == chunks.len() && !seqs.is_empty());
+        anyhow::ensure!(seqs.len() <= bucket.batch, "batch overflow");
+        let c = bucket.chunk;
+        for (seq, ch) in seqs.iter().zip(chunks) {
+            anyhow::ensure!(ch.len() <= c && !ch.is_empty(), "chunk size exceeds bucket");
+            anyhow::ensure!(seq.len + ch.len() <= bucket.capacity, "capacity overflow");
+        }
+        let exe = self
+            .executables
+            .get(&bucket.name)
+            .ok_or_else(|| anyhow::anyhow!("bucket {} not compiled", bucket.name))?;
+
+        // pack inputs
+        let kv_refs: Vec<&KvState> = seqs.iter().map(|s| &**s).collect();
+        let (kb, vb) = self.pack(&kv_refs, bucket);
+        let kv_dims = [
+            self.layers,
+            bucket.batch,
+            self.kv_heads,
+            bucket.capacity,
+            self.head_dim,
+        ];
+        let k_lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &kv_dims,
+            bytemuck_cast(&kb),
+        )?;
+        let v_lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &kv_dims,
+            bytemuck_cast(&vb),
+        )?;
+        let mut tokens = vec![0i32; bucket.batch * c];
+        let mut pos = vec![0i32; bucket.batch];
+        let mut last = vec![0i32; bucket.batch];
+        for (bi, (seq, ch)) in seqs.iter().zip(chunks).enumerate() {
+            tokens[bi * c..bi * c + ch.len()].copy_from_slice(ch);
+            pos[bi] = seq.len as i32;
+            last[bi] = (ch.len() - 1) as i32;
+        }
+        let tok_lit = Literal::vec1(&tokens).reshape(&[bucket.batch as i64, c as i64])?;
+        let pos_lit = Literal::vec1(&pos);
+        let last_lit = Literal::vec1(&last);
+
+        let mut inputs: Vec<&Literal> = self.params.iter().collect();
+        inputs.push(&k_lit);
+        inputs.push(&v_lit);
+        inputs.push(&tok_lit);
+        inputs.push(&pos_lit);
+        inputs.push(&last_lit);
+
+        let t0 = Instant::now();
+        let result = exe.execute::<&Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let latency = t0.elapsed().as_secs_f64();
+
+        let (logits_lit, new_k, new_v) = result.to_tuple3()?;
+        let logits_all = logits_lit.to_vec::<f32>()?;
+        let kb_new = new_k.to_vec::<f32>()?;
+        let vb_new = new_v.to_vec::<f32>()?;
+        self.unpack(&kb_new, &vb_new, bucket, seqs);
+        let mut logits = Vec::with_capacity(seqs.len());
+        for (bi, (seq, ch)) in seqs.iter_mut().zip(chunks).enumerate() {
+            seq.len += ch.len();
+            logits.push(logits_all[bi * self.vocab..(bi + 1) * self.vocab].to_vec());
+        }
+        Ok(StepOutput { logits, latency })
+    }
+
+    /// Greedy next token from logits.
+    pub fn argmax(logits: &[f32]) -> i32 {
+        let mut best = 0;
+        for (i, v) in logits.iter().enumerate() {
+            if *v > logits[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+
+    /// Measure per-bucket step latency (mean of `reps`), for profile
+    /// seeding and the §Perf log.
+    pub fn calibrate(&self, reps: usize) -> Result<Vec<(String, f64)>> {
+        let mut out = Vec::new();
+        for b in self.manifest.buckets.clone() {
+            let mut seqs: Vec<KvState> =
+                (0..b.batch).map(|_| self.new_kv(b.capacity)).collect();
+            // mid-occupancy caches for a representative cost
+            for s in seqs.iter_mut() {
+                s.len = b.capacity / 2;
+            }
+            let chunk: Vec<i32> = (0..b.chunk as i32).collect();
+            let mut total = 0.0;
+            for _ in 0..reps.max(1) {
+                let mut refs: Vec<&mut KvState> = seqs.iter_mut().collect();
+                let chunks: Vec<&[i32]> = (0..b.batch).map(|_| chunk.as_slice()).collect();
+                // reset lengths so capacity never overflows across reps
+                for r in refs.iter_mut() {
+                    r.len = b.capacity / 2;
+                }
+                let o = self.step(&b, &mut refs, &chunks)?;
+                total += o.latency;
+            }
+            out.push((b.name.clone(), total / reps.max(1) as f64));
+        }
+        Ok(out)
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.manifest.buckets
+    }
+}
+
+/// f32 slice → byte slice (little-endian host layout).
+fn bytemuck_cast(xs: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}

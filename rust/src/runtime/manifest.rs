@@ -1,0 +1,210 @@
+//! Artifact manifest: the ABI contract between `python/compile/aot.py` and
+//! the Rust runtime (param order, tensor shapes, bucket table).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub family: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub param_count: usize,
+    pub attn_impl: String,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Byte offset in params.bin.
+    pub offset: usize,
+    /// Element (f32) count.
+    pub len: usize,
+}
+
+/// One AOT-lowered step executable: processes `chunk` new tokens for
+/// `batch` sequences against KV caches of `capacity` tokens.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bucket {
+    pub name: String,
+    pub batch: usize,
+    pub chunk: usize,
+    pub capacity: usize,
+    pub file: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub params_file: String,
+    pub params: Vec<ParamEntry>,
+    pub buckets: Vec<Bucket>,
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a number"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.req(key)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a string"))?
+        .to_string())
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let m = j.req("model")?;
+        let model = ModelMeta {
+            family: req_str(m, "family")?,
+            vocab: req_usize(m, "vocab")?,
+            d_model: req_usize(m, "d_model")?,
+            n_layers: req_usize(m, "n_layers")?,
+            n_q_heads: req_usize(m, "n_q_heads")?,
+            n_kv_heads: req_usize(m, "n_kv_heads")?,
+            head_dim: req_usize(m, "head_dim")?,
+            param_count: req_usize(m, "param_count")?,
+            attn_impl: req_str(m, "attn_impl")?,
+            seed: req_usize(m, "seed")? as u64,
+        };
+
+        let params = j
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("params not an array"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: req_str(p, "name")?,
+                    shape: p
+                        .req("shape")?
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: req_usize(p, "offset")?,
+                    len: req_usize(p, "len")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let buckets = j
+            .req("buckets")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("buckets not an array"))?
+            .iter()
+            .map(|b| {
+                Ok(Bucket {
+                    name: req_str(b, "name")?,
+                    batch: req_usize(b, "batch")?,
+                    chunk: req_usize(b, "chunk")?,
+                    capacity: req_usize(b, "capacity")?,
+                    file: req_str(b, "file")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        anyhow::ensure!(!buckets.is_empty(), "manifest has no buckets");
+        let total: usize = params.iter().map(|p| p.len).sum();
+        anyhow::ensure!(
+            total == model.param_count,
+            "param table ({total}) != param_count ({})",
+            model.param_count
+        );
+
+        Ok(Manifest {
+            dir,
+            model,
+            params_file: req_str(&j, "params_file")?,
+            params,
+            buckets,
+        })
+    }
+
+    /// Smallest bucket that fits (batch, chunk, context+chunk tokens).
+    pub fn select_bucket(&self, batch: usize, chunk: usize, needed_capacity: usize) -> Option<&Bucket> {
+        self.buckets
+            .iter()
+            .filter(|b| b.batch >= batch && b.chunk >= chunk && b.capacity >= needed_capacity)
+            .min_by_key(|b| (b.capacity, b.batch * b.chunk.max(1)))
+    }
+
+    /// Largest decode batch supported at a capacity.
+    pub fn max_decode_batch(&self, needed_capacity: usize) -> usize {
+        self.buckets
+            .iter()
+            .filter(|b| b.chunk == 1 && b.capacity >= needed_capacity)
+            .map(|b| b.batch)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        let manifest = r#"{
+            "model": {"family":"tinyqwen","vocab":256,"d_model":128,"n_layers":4,
+                      "n_q_heads":4,"n_kv_heads":2,"head_dim":32,"ffn":512,
+                      "rope_theta":10000.0,"dtype":"float32","param_count":6,
+                      "attn_impl":"pallas_flash","seed":42},
+            "params_file": "params.bin",
+            "params": [{"name":"embed","shape":[2,3],"offset":0,"len":6}],
+            "buckets": [
+              {"name":"step_b1_c1_s128","batch":1,"chunk":1,"capacity":128,"file":"a.hlo.txt","sha256_16":"x"},
+              {"name":"step_b8_c1_s128","batch":8,"chunk":1,"capacity":128,"file":"b.hlo.txt","sha256_16":"x"},
+              {"name":"step_b1_c64_s256","batch":1,"chunk":64,"capacity":256,"file":"c.hlo.txt","sha256_16":"x"}
+            ],
+            "input_order": ["params...","kv_k","kv_v","tokens","pos"],
+            "output_order": ["logits","new_kv_k","new_kv_v"]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn load_and_select() {
+        let dir = std::env::temp_dir().join(format!("dyn-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.family, "tinyqwen");
+        assert_eq!(m.buckets.len(), 3);
+        // decode step for 4 seqs at ctx 100 → b8 bucket
+        let b = m.select_bucket(4, 1, 101).unwrap();
+        assert_eq!(b.name, "step_b8_c1_s128");
+        // prefill chunk of 48 at ctx 150 → c64/s256 bucket
+        let b = m.select_bucket(1, 48, 198).unwrap();
+        assert_eq!(b.name, "step_b1_c64_s256");
+        // nothing fits
+        assert!(m.select_bucket(1, 1, 999).is_none());
+        assert_eq!(m.max_decode_batch(100), 8);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_helpful() {
+        let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

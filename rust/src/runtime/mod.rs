@@ -1,0 +1,11 @@
+//! PJRT runtime (the live execution path): loads the HLO-text artifacts the
+//! Python AOT pipeline produced (`make artifacts`), compiles them on the
+//! PJRT CPU client, and executes step calls from the Rust hot path. Python
+//! is never involved at runtime — the Rust binary is self-contained once
+//! `artifacts/` exists.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, KvState, StepOutput};
+pub use manifest::{Bucket, Manifest, ModelMeta, ParamEntry};

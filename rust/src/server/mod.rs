@@ -1,0 +1,691 @@
+//! Live serving path: real token generation through the AOT-compiled
+//! TinyQwen artifacts on PJRT CPU instances.
+//!
+//! Topology: a leader thread runs the global scheduler (Algorithm 1) over
+//! live instance snapshots and dispatches α/β micro-request segments to
+//! instance threads over channels. Each instance thread owns a PJRT
+//! [`Engine`], runs the *same* [`LocalScheduler`] (Algorithm 2) as the
+//! simulator — its profile table calibrated online from measured step
+//! latencies — and streams KV chunks to β instances through the paced
+//! [`TransferEngine`] (§4.3). Python is nowhere on this path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::local::{DecodeEntry, PrefillEntry};
+use crate::coordinator::predictor::PredictorConfig;
+use crate::coordinator::{
+    GlobalConfig, GlobalScheduler, InstanceSnapshot, LocalConfig, LocalScheduler, ProfileTable,
+    WorkItem,
+};
+use crate::core::{Request, RequestId};
+use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+use crate::kv::{LinkSpec, TransferEngine, TransferJob};
+use crate::metrics::{Collector, SloConfig, Summary};
+use crate::runtime::{Engine, KvState};
+use crate::util::rng::Rng;
+use crate::workload::{PoissonArrivals, TraceKind, WorkloadGen, TraceSampler};
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub artifacts: String,
+    pub n_instances: usize,
+    pub requests: usize,
+    pub qps: f64,
+    pub workload: TraceKind,
+    pub seed: u64,
+    pub slo: SloConfig,
+}
+
+/// One placed segment, as sent to an instance thread.
+struct SegmentSpec {
+    key: u64,
+    request: RequestId,
+    arrival: f64,
+    /// Prompt token ids this segment must prefill (span ∩ [0, P)).
+    prompt: Vec<i32>,
+    /// Context length at which this segment starts.
+    start: usize,
+    /// Decode tokens to generate.
+    decode_budget: usize,
+    emits_first: bool,
+    last_segment: bool,
+    /// Forward KV + generation state here when done (β instance index, β key).
+    beta_dest: Option<(usize, u64)>,
+    /// β only: waits for KV; activated by the final chunk.
+    gated: bool,
+}
+
+enum InstMsg {
+    Segment(SegmentSpec),
+    /// KV chunk for a gated β segment (payload = k||v for the token range).
+    Kv { key: u64, job: TransferJob, next_token: Option<i32> },
+    Shutdown,
+}
+
+enum UpMsg {
+    Token { request: RequestId, arrival: f64, at: f64 },
+    Done { request: RequestId },
+    IterStats { instance: usize, latency: f64 },
+}
+
+struct LiveSeq {
+    spec: SegmentSpec,
+    kv: KvState,
+    prefill_done: usize,
+    emitted: usize,
+    /// Next token to feed when decoding.
+    next_token: Option<i32>,
+    ready: bool,
+    /// KV chunks received so far (β gating).
+    received_tokens: usize,
+}
+
+/// Serving report printed by `dynaserve serve`.
+pub struct ServeReport {
+    pub summary: Summary,
+    pub iterations: Vec<u64>,
+    pub mean_iter_latency: f64,
+    pub transfer_chunks: u64,
+    pub transfer_bytes: u64,
+    pub wall_time: f64,
+}
+
+impl ServeReport {
+    pub fn print(&self) {
+        let s = &self.summary;
+        println!("── live serve report ──");
+        println!(
+            "requests completed: {}   output tokens: {}   wall time: {:.2}s",
+            s.completed, s.total_tokens, self.wall_time
+        );
+        println!(
+            "throughput: {:.1} tok/s   goodput: {:.1} tok/s   rps: {:.2}",
+            s.throughput_tok_s, s.goodput_tok_s, s.rps
+        );
+        println!(
+            "TBT p50/p99: {:.1}/{:.1} ms   TTFT p50/p99: {:.0}/{:.0} ms   attainment: {:.1}%",
+            s.p50_tbt * 1e3,
+            s.p99_tbt * 1e3,
+            s.p50_ttft * 1e3,
+            s.p99_ttft * 1e3,
+            s.attainment * 100.0
+        );
+        for (i, n) in self.iterations.iter().enumerate() {
+            println!("instance {i}: {n} iterations");
+        }
+        println!(
+            "kv transfer: {} chunks, {:.2} MB   mean iter latency: {:.2} ms",
+            self.transfer_chunks,
+            self.transfer_bytes as f64 / 1e6,
+            self.mean_iter_latency * 1e3
+        );
+    }
+}
+
+/// Scale a sampled (P, D) shape to the tiny model's context budget.
+/// Fixed shapes are taken as-is (just clamped); trace shapes divide by 64
+/// so their prefill/decode *ratio* distribution survives the scaling.
+fn scale_shape(kind: TraceKind, p: usize, d: usize, max_ctx: usize) -> (usize, usize) {
+    let (p, d) = match kind {
+        TraceKind::Fixed { .. } => (p.max(2), d.max(1)),
+        _ => ((p / 64).clamp(4, 160), (d / 64).clamp(2, 64)),
+    };
+    let total = p + d;
+    if total + 2 > max_ctx {
+        let f = (max_ctx - 2) as f64 / total as f64;
+        (((p as f64 * f) as usize).max(2), ((d as f64 * f) as usize).max(1))
+    } else {
+        (p, d)
+    }
+}
+
+pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
+    let epoch = Instant::now();
+    let t = |i: Instant| i.duration_since(epoch).as_secs_f64();
+
+    // ── workload ────────────────────────────────────────────────────────
+    let mut gen = WorkloadGen::new(
+        TraceSampler::new(cfg.workload, cfg.seed),
+        Box::new(PoissonArrivals::new(cfg.qps)),
+        cfg.seed,
+    );
+    let horizon = cfg.requests as f64 / cfg.qps * 3.0 + 10.0;
+    let mut requests: Vec<Request> = gen.generate(horizon);
+    requests.truncate(cfg.requests);
+    anyhow::ensure!(!requests.is_empty(), "no requests generated");
+    let max_ctx = 256; // largest artifact capacity
+    for r in requests.iter_mut() {
+        let (p, d) = scale_shape(cfg.workload, r.prompt_len, r.decode_len, max_ctx);
+        r.prompt_len = p;
+        r.decode_len = d;
+        r.predicted_decode = d;
+    }
+
+    // ── instances ───────────────────────────────────────────────────────
+    let snapshots: Arc<Mutex<Vec<InstanceSnapshot>>> = Arc::new(Mutex::new(
+        (0..cfg.n_instances)
+            .map(|id| InstanceSnapshot { id, work: vec![], kv_utilization: 0.0 })
+            .collect(),
+    ));
+    let transfer = Arc::new(TransferEngine::new(LinkSpec { bandwidth: 2e9, latency: 20e-6 }));
+    let (up_tx, up_rx) = mpsc::channel::<UpMsg>();
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let mut inst_txs = Vec::new();
+    let mut joins = Vec::new();
+    // calibration profile shared by leader + instances (built by instance 0)
+    let calib: Arc<Mutex<Option<ProfileTable>>> = Arc::new(Mutex::new(None));
+
+    for id in 0..cfg.n_instances {
+        let (tx, rx) = mpsc::channel::<InstMsg>();
+        inst_txs.push(tx);
+        let up = up_tx.clone();
+        let snaps = snapshots.clone();
+        let dir = cfg.artifacts.clone();
+        let slo = cfg.slo;
+        let stop = stop.clone();
+        let calib = calib.clone();
+        let transfer = transfer.clone();
+        let inst_txs_for_fw: Arc<Mutex<Vec<mpsc::Sender<InstMsg>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        joins.push((
+            inst_txs_for_fw.clone(),
+            thread::Builder::new()
+                .name(format!("instance-{id}"))
+                .spawn(move || {
+                    if let Err(e) = instance_loop(
+                        id, &dir, rx, up, snaps, slo, epoch, stop, calib, transfer,
+                        inst_txs_for_fw,
+                    ) {
+                        eprintln!("instance {id} failed: {e:#}");
+                    }
+                })
+                .context("spawn instance")?,
+        ));
+    }
+    // give every instance a way to forward KV to its peers
+    for (fw, _) in &joins {
+        *fw.lock().unwrap() = inst_txs.clone();
+    }
+
+    // ── leader: wait for calibration, then schedule arrivals ───────────
+    let profile = loop {
+        if let Some(p) = calib.lock().unwrap().clone() {
+            break p;
+        }
+        thread::sleep(std::time::Duration::from_millis(20));
+    };
+    let llm = LlmSpec::tinyqwen();
+    let mut global = GlobalScheduler::new(GlobalConfig {
+        kv_bytes_per_token: llm.kv_bytes_per_token(),
+        predictor: PredictorConfig { slo: cfg.slo.tbt, ..Default::default() },
+        min_span: 8,
+        ..Default::default()
+    });
+
+    let mut key_alloc = 0u64;
+    let mut rng = Rng::with_stream(cfg.seed, 0x70cc);
+    let n_requests = requests.len();
+    // serving clock starts after engine compilation/calibration
+    let serve_start = t(Instant::now());
+    for req in &requests {
+        // pace arrivals in real time
+        let target = serve_start + req.arrival;
+        let now = t(Instant::now());
+        if target > now {
+            thread::sleep(std::time::Duration::from_secs_f64(target - now));
+        }
+        let snaps = snapshots.lock().unwrap().clone();
+        let out = global.schedule(req, &snaps, &profile);
+        let (a, b) = out.decision.to_micro_requests(req);
+        let prompt: Vec<i32> = (0..req.prompt_len)
+            .map(|_| rng.range(1, llm.vocab as u64) as i32)
+            .collect();
+        let l_proc = req.prompt_len + req.decode_len - 1;
+        let (a, b) = match (a, b) {
+            (Some(a), b) => (a, b),
+            (None, Some(b)) => (crate::core::MicroRequest { role: crate::core::Role::Alpha, ..b }, None),
+            _ => unreachable!(),
+        };
+        let s = a.end.min(l_proc);
+        let beta = b.filter(|b| b.start < l_proc);
+        key_alloc += 1;
+        let alpha_key = key_alloc;
+        let beta_info = beta.as_ref().map(|b| {
+            key_alloc += 1;
+            (b.instance, key_alloc)
+        });
+        let arrival = t(Instant::now());
+        let alpha_spec = SegmentSpec {
+            key: alpha_key,
+            request: req.id,
+            arrival,
+            prompt: prompt[..s.min(req.prompt_len)].to_vec(),
+            start: 0,
+            decode_budget: s.saturating_sub(req.prompt_len),
+            emits_first: s >= req.prompt_len,
+            last_segment: beta_info.is_none(),
+            beta_dest: beta_info,
+            gated: false,
+        };
+        inst_txs[a.instance]
+            .send(InstMsg::Segment(alpha_spec))
+            .ok();
+        if let (Some(bmr), Some((b_inst, b_key))) = (&beta, beta_info) {
+            let beta_spec = SegmentSpec {
+                key: b_key,
+                request: req.id,
+                arrival,
+                prompt: prompt[bmr.start.min(req.prompt_len)..req.prompt_len].to_vec(),
+                start: bmr.start,
+                decode_budget: l_proc.saturating_sub(bmr.start.max(req.prompt_len)),
+                emits_first: bmr.start < req.prompt_len,
+                last_segment: true,
+                beta_dest: None,
+                gated: true,
+            };
+            inst_txs[b_inst].send(InstMsg::Segment(beta_spec)).ok();
+        }
+    }
+
+    // ── collect until all requests complete ─────────────────────────────
+    let mut collector = Collector::new(cfg.slo);
+    let mut done = 0usize;
+    let mut iter_counts = vec![0u64; cfg.n_instances];
+    let mut iter_lat_sum = 0.0;
+    let mut iter_lat_n = 0u64;
+    while done < n_requests {
+        match up_rx.recv_timeout(std::time::Duration::from_secs(120)) {
+            Ok(UpMsg::Token { request, arrival, at }) => collector.on_token(request, arrival, at),
+            Ok(UpMsg::Done { request }) => {
+                collector.on_complete(request);
+                done += 1;
+            }
+            Ok(UpMsg::IterStats { instance, latency }) => {
+                iter_counts[instance] += 1;
+                iter_lat_sum += latency;
+                iter_lat_n += 1;
+            }
+            Err(_) => anyhow::bail!("serve timed out waiting for tokens ({done}/{n_requests})"),
+        }
+    }
+    stop.store(true, Ordering::SeqCst);
+    for tx in &inst_txs {
+        tx.send(InstMsg::Shutdown).ok();
+    }
+    for (_, j) in joins {
+        j.join().ok();
+    }
+    let wall = t(Instant::now()) - serve_start;
+    let stats = transfer.stats();
+    Ok(ServeReport {
+        summary: collector.summarize(wall),
+        iterations: iter_counts,
+        mean_iter_latency: if iter_lat_n == 0 { 0.0 } else { iter_lat_sum / iter_lat_n as f64 },
+        transfer_chunks: stats.chunks.load(Ordering::Relaxed),
+        transfer_bytes: stats.bytes.load(Ordering::Relaxed),
+        wall_time: wall,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn instance_loop(
+    id: usize,
+    artifacts: &str,
+    rx: mpsc::Receiver<InstMsg>,
+    up: mpsc::Sender<UpMsg>,
+    snapshots: Arc<Mutex<Vec<InstanceSnapshot>>>,
+    slo: SloConfig,
+    epoch: Instant,
+    stop: Arc<AtomicBool>,
+    calib: Arc<Mutex<Option<ProfileTable>>>,
+    transfer: Arc<TransferEngine>,
+    peer_txs: Arc<Mutex<Vec<mpsc::Sender<InstMsg>>>>,
+) -> Result<()> {
+    let engine = Engine::load(artifacts)?;
+    let now = |x: Instant| x.duration_since(epoch).as_secs_f64();
+
+    // ── calibration: instance 0 seeds the shared profile table ──────────
+    let mut profile = ProfileTable::seeded(&InstanceSpec::new(
+        GpuSpec::cpu_pjrt(),
+        LlmSpec::tinyqwen(),
+        1,
+    ));
+    {
+        let mut guard = calib.lock().unwrap();
+        if guard.is_none() {
+            for (name, lat) in engine.calibrate(2)? {
+                let b = engine.buckets().iter().find(|b| b.name == name).unwrap();
+                let (plen, dnum) = if b.chunk == 1 { (0, b.batch) } else { (b.chunk, 0) };
+                for _ in 0..12 {
+                    profile.record(plen, b.capacity / 2, dnum, lat);
+                }
+            }
+            *guard = Some(profile.clone());
+        } else {
+            profile = guard.clone().unwrap();
+        }
+    }
+
+    let mut local = LocalScheduler::new(
+        LocalConfig {
+            slo: slo.tbt,
+            max_decodes: engine.manifest.max_decode_batch(1).max(1),
+            min_chunk: 8,
+            max_prefill_tokens: 128,
+            fixed_budget: None,
+            slo_target: 0.85,
+        },
+        profile,
+    );
+
+    let mut seqs: HashMap<u64, LiveSeq> = HashMap::new();
+    let mut order: Vec<u64> = Vec::new();
+
+    loop {
+        // drain control + transfer channels
+        loop {
+            match rx.try_recv() {
+                Ok(InstMsg::Segment(spec)) => {
+                    let key = spec.key;
+                    let cap = if spec.start + spec.prompt.len() + spec.decode_budget + 1 <= 128 {
+                        128
+                    } else {
+                        256
+                    };
+                    let gated = spec.gated;
+                    seqs.insert(
+                        key,
+                        LiveSeq {
+                            kv: engine.new_kv(cap),
+                            prefill_done: 0,
+                            emitted: 0,
+                            next_token: None,
+                            ready: !gated,
+                            received_tokens: 0,
+                            spec,
+                        },
+                    );
+                    order.push(key);
+                }
+                Ok(InstMsg::Kv { key, job, next_token }) => {
+                    inject_chunk(&engine, &mut seqs, key, job, next_token);
+                }
+                Ok(InstMsg::Shutdown) => return Ok(()),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => return Ok(()),
+            }
+        }
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+
+        // ── compose the next batch (Algorithm 2, the *same* code path the
+        //    simulator uses) ────────────────────────────────────────────
+        let mut decodes = Vec::new();
+        let mut prefills = Vec::new();
+        for key in &order {
+            let s = &seqs[key];
+            if !s.ready {
+                continue;
+            }
+            let pf_left = s.spec.prompt.len() - s.prefill_done;
+            if pf_left > 0 {
+                prefills.push(PrefillEntry {
+                    key: *key,
+                    remaining: pf_left,
+                    context: s.kv.len,
+                });
+            } else if s.emitted < s.spec.decode_budget && s.next_token.is_some() {
+                decodes.push(DecodeEntry { key: *key, context: s.kv.len });
+            }
+        }
+        let plan = local.next_batch(&decodes, &prefills);
+        if plan.is_empty() {
+            thread::sleep(std::time::Duration::from_micros(300));
+            continue;
+        }
+
+        let iter_start = Instant::now();
+        let mut finished: Vec<u64> = Vec::new();
+
+        // decode sub-batches through the widest fitting bucket
+        let mut pending: Vec<u64> = plan.decodes.clone();
+        while !pending.is_empty() {
+            let max_ctx = pending
+                .iter()
+                .map(|k| seqs[k].kv.len + 1)
+                .max()
+                .unwrap();
+            let bucket = engine
+                .manifest
+                .select_bucket(pending.len().min(8), 1, max_ctx)
+                .or_else(|| engine.manifest.select_bucket(1, 1, max_ctx))
+                .context("no decode bucket")?
+                .clone();
+            let take: Vec<u64> = pending.drain(..pending.len().min(bucket.batch)).collect();
+            // temporarily remove the sequences so we can hold disjoint &mut
+            let mut taken: Vec<(u64, LiveSeq)> = take
+                .iter()
+                .map(|k| (*k, seqs.remove(k).expect("decode seq")))
+                .collect();
+            let tokens: Vec<[i32; 1]> =
+                taken.iter().map(|(_, s)| [s.next_token.unwrap()]).collect();
+            for (_, s) in taken.iter_mut() {
+                if s.kv.capacity < bucket.capacity {
+                    s.kv = engine.grow_kv(&s.kv, bucket.capacity);
+                }
+            }
+            let mut refs: Vec<&mut KvState> =
+                taken.iter_mut().map(|(_, s)| &mut s.kv).collect();
+            let chunks: Vec<&[i32]> = tokens.iter().map(|t| t.as_slice()).collect();
+            let out = engine.step(&bucket, &mut refs, &chunks)?;
+            for (i, (k, mut s)) in taken.into_iter().enumerate() {
+                let tok = Engine::argmax(&out.logits[i]);
+                s.emitted += 1;
+                s.next_token = Some(tok);
+                up.send(UpMsg::Token {
+                    request: s.spec.request,
+                    arrival: s.spec.arrival,
+                    at: now(Instant::now()),
+                })
+                .ok();
+                if s.emitted >= s.spec.decode_budget {
+                    finished.push(k);
+                }
+                seqs.insert(k, s);
+            }
+        }
+
+        // prefill chunks (one b=1 call per plan entry)
+        for (key, chunk_tokens) in &plan.prefill {
+            let s = seqs.get_mut(key).unwrap();
+            let from = s.prefill_done;
+            let n = (*chunk_tokens).min(128).min(s.spec.prompt.len() - from);
+            if n == 0 {
+                continue;
+            }
+            let needed = s.kv.len + n;
+            let bucket = engine
+                .manifest
+                .select_bucket(1, n, needed)
+                .context("no prefill bucket")?
+                .clone();
+            if s.kv.capacity < bucket.capacity {
+                s.kv = engine.grow_kv(&s.kv, bucket.capacity);
+            }
+            let toks = s.spec.prompt[from..from + n].to_vec();
+            let mut refs = [&mut s.kv];
+            let out = engine.step(&bucket, &mut refs, &[&toks])?;
+            s.prefill_done += n;
+            if s.prefill_done == s.spec.prompt.len() {
+                let tok = Engine::argmax(&out.logits[0]);
+                s.next_token = Some(tok);
+                if s.spec.emits_first {
+                    s.emitted_first(&up, now(Instant::now()));
+                }
+                if s.spec.decode_budget == 0 {
+                    finished.push(*key);
+                }
+            }
+        }
+
+        let iter_latency = iter_start.elapsed().as_secs_f64();
+        local.record_execution(iter_latency);
+        up.send(UpMsg::IterStats { instance: id, latency: iter_latency }).ok();
+
+        // completions: forward KV to β (detached, overlapped with compute)
+        // or finish the request
+        for key in finished {
+            let s = seqs.remove(&key).expect("finished seq");
+            order.retain(|k| *k != key);
+            if s.spec.last_segment {
+                up.send(UpMsg::Done { request: s.spec.request }).ok();
+            }
+            if let Some((b_inst, b_key)) = s.spec.beta_dest {
+                let meta = (
+                    engine.manifest.model.n_layers,
+                    engine.manifest.model.n_kv_heads,
+                    engine.manifest.model.head_dim,
+                );
+                let transfer = transfer.clone();
+                let peers = peer_txs.clone();
+                thread::spawn(move || {
+                    forward_kv(meta, &transfer, &peers, &s, b_inst, b_key);
+                });
+            }
+        }
+
+        // publish a load snapshot for the global scheduler
+        {
+            let mut snaps = snapshots.lock().unwrap();
+            snaps[id].work = order
+                .iter()
+                .filter_map(|k| seqs.get(k))
+                .map(|s| WorkItem {
+                    prefill_remaining: s.spec.prompt.len() - s.prefill_done,
+                    context: s.kv.len,
+                    decode_remaining: s.spec.decode_budget - s.emitted,
+                })
+                .collect();
+        }
+    }
+}
+
+impl LiveSeq {
+    fn emitted_first(&mut self, up: &mpsc::Sender<UpMsg>, at: f64) {
+        self.emitted += 0; // first token is "free" w.r.t. the decode budget
+        up.send(UpMsg::Token { request: self.spec.request, arrival: self.spec.arrival, at })
+            .ok();
+    }
+}
+
+/// Ship a completed α segment's KV ([0, kv.len)) to the β instance in
+/// chunks through the paced transfer engine, then the activation metadata
+/// on the final chunk. Runs on a detached thread so pacing never blocks
+/// the α instance's engine loop (the §4.3 overlap).
+fn forward_kv(
+    (l, h, d): (usize, usize, usize),
+    transfer: &TransferEngine,
+    peers: &Arc<Mutex<Vec<mpsc::Sender<InstMsg>>>>,
+    seq: &LiveSeq,
+    b_inst: usize,
+    b_key: u64,
+) {
+    let chunk_tokens = 64;
+    let total = seq.kv.len;
+    let dest = {
+        let peers = peers.lock().unwrap();
+        match peers.get(b_inst) {
+            Some(d) => d.clone(),
+            None => return,
+        }
+    };
+    let mut start = 0;
+    while start < total {
+        let end = (start + chunk_tokens).min(total);
+        let payload = extract_kv_range(&seq.kv, (l, h, d), start, end);
+        let (tx, rx) = mpsc::channel();
+        transfer.push(
+            TransferJob {
+                request: seq.spec.request,
+                token_range: (start, end),
+                payload,
+                last: end == total,
+            },
+            tx,
+        );
+        // rendezvous: the paced engine delivers when the link would have
+        if let Ok(job) = rx.recv() {
+            let next = (end == total).then(|| seq.next_token.unwrap_or(0));
+            dest.send(InstMsg::Kv { key: b_key, job, next_token: next }).ok();
+        }
+        start = end;
+    }
+}
+
+/// Extract k||v for token range [a, b) from a KvState (layer-major rows).
+fn extract_kv_range(kv: &KvState, (l, h, d): (usize, usize, usize), a: usize, b: usize) -> Vec<f32> {
+    let s = kv.capacity;
+    let n = b - a;
+    let mut out = Vec::with_capacity(2 * l * h * n * d);
+    for src in [&kv.k, &kv.v] {
+        for li in 0..l {
+            for hi in 0..h {
+                let base = ((li * h) + hi) * s * d;
+                out.extend_from_slice(&src[base + a * d..base + b * d]);
+            }
+        }
+    }
+    out
+}
+
+/// Inject a received chunk into a β sequence's KV; activate on the final
+/// chunk (setting the continuation token for pure-decode β segments).
+fn inject_chunk(
+    engine: &Engine,
+    seqs: &mut HashMap<u64, LiveSeq>,
+    key: u64,
+    job: TransferJob,
+    next_token: Option<i32>,
+) {
+    let Some(seq) = seqs.get_mut(&key) else { return };
+    let (a, b) = job.token_range;
+    let m = &engine.manifest.model;
+    let (l, h, d) = (m.n_layers, m.n_kv_heads, m.head_dim);
+    let needed = seq.spec.start + seq.spec.prompt.len() + seq.spec.decode_budget + 1;
+    if seq.kv.capacity < needed.max(b) {
+        seq.kv = engine.grow_kv(&seq.kv, 256);
+    }
+    let s = seq.kv.capacity;
+    let n = b - a;
+    let half = job.payload.len() / 2;
+    for (dst, payload) in
+        [(&mut seq.kv.k, &job.payload[..half]), (&mut seq.kv.v, &job.payload[half..])]
+    {
+        let mut p = 0;
+        for li in 0..l {
+            for hi in 0..h {
+                let base = ((li * h) + hi) * s * d;
+                dst[base + a * d..base + b * d].copy_from_slice(&payload[p..p + n * d]);
+                p += n * d;
+            }
+        }
+    }
+    seq.received_tokens += n;
+    if job.last {
+        seq.kv.len = b;
+        // pure-decode β continues from α's last generated token; β with a
+        // prefill remainder derives its own continuation from that prefill
+        if seq.spec.prompt.is_empty() {
+            seq.next_token = next_token;
+        }
+        seq.ready = true;
+    }
+}

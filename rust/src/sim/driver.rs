@@ -1,0 +1,533 @@
+//! The discrete-event simulation driver: arrivals → policy placement →
+//! per-instance iteration loops → chunked KV transfers → token metrics.
+
+use std::collections::{BinaryHeap, HashMap};
+use std::time::Instant;
+
+use crate::coordinator::local::BatchPlan;
+use crate::coordinator::{LocalConfig, LocalScheduler, ProfileTable};
+use crate::core::{Request, RequestId};
+use crate::costmodel::InstanceSpec;
+use crate::kv::{chunked_timeline, monolithic_timeline, LinkSpec};
+use crate::metrics::{Collector, SloConfig, Summary};
+use crate::sim::instance::{SeqKey, SimInstance, SimSeq};
+use crate::sim::policy::Policy;
+use crate::util::stats::Samples;
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub spec: InstanceSpec,
+    pub n_instances: usize,
+    /// Local scheduler config for all instances…
+    pub local: LocalConfig,
+    /// …with per-instance overrides (e.g. disagg prefill pool uses a fixed
+    /// chunk budget, decode pool decodes only).
+    pub local_overrides: Vec<(usize, LocalConfig)>,
+    pub slo: SloConfig,
+    pub link: LinkSpec,
+    /// KV transfer granularity (tokens per chunk).
+    pub transfer_chunk_tokens: usize,
+    /// false = ship the whole KV at handoff (§6.6 ablation baseline).
+    pub chunked_transfer: bool,
+    /// Safety cap on simulated seconds.
+    pub horizon: f64,
+}
+
+impl SimConfig {
+    pub fn new(spec: InstanceSpec, n_instances: usize) -> Self {
+        SimConfig {
+            spec,
+            n_instances,
+            local: LocalConfig::default(),
+            local_overrides: vec![],
+            slo: SloConfig::default(),
+            link: LinkSpec::default(),
+            transfer_chunk_tokens: 512,
+            chunked_transfer: true,
+            horizon: 100_000.0,
+        }
+    }
+}
+
+#[derive(Debug)]
+enum EventKind {
+    Arrival(Request),
+    IterDone { instance: usize, plan: BatchPlan, latency: f64 },
+    SeqReady { instance: usize, key: SeqKey },
+    AlphaEvict { instance: usize, key: SeqKey },
+}
+
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    // reversed: BinaryHeap becomes a min-heap on (time, seq)
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct ReqState {
+    beta: Option<(usize, SeqKey)>,
+}
+
+/// KV-transfer accounting for the §6.6 experiment.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TransferReport {
+    /// Exposed (non-overlapped) seconds with chunked transfer.
+    pub chunked_exposed: f64,
+    /// Exposed seconds the same transfers would cost monolithically.
+    pub mono_exposed: f64,
+    pub bytes: f64,
+    pub transfers: u64,
+}
+
+pub struct Simulator {
+    pub cfg: SimConfig,
+    pub instances: Vec<SimInstance>,
+    policy: Box<dyn Policy>,
+    profile: ProfileTable,
+    pub collector: Collector,
+    events: BinaryHeap<Event>,
+    event_seq: u64,
+    reqs: HashMap<RequestId, ReqState>,
+    next_key: SeqKey,
+    pub transfer: TransferReport,
+    /// Wall-clock seconds spent inside policy.place (Table 3).
+    pub sched_overhead: Samples,
+    pub time: f64,
+}
+
+impl Simulator {
+    pub fn new(cfg: SimConfig, policy: Box<dyn Policy>) -> Self {
+        let profile = ProfileTable::seeded(&cfg.spec);
+        let instances = (0..cfg.n_instances)
+            .map(|id| {
+                let mut lc = cfg.local;
+                for (i, o) in &cfg.local_overrides {
+                    if *i == id {
+                        lc = *o;
+                    }
+                }
+                lc.slo = cfg.slo.tbt;
+                SimInstance::new(id, cfg.spec.clone(), LocalScheduler::new(lc, profile.clone()))
+            })
+            .collect();
+        Simulator {
+            collector: Collector::new(cfg.slo),
+            cfg,
+            instances,
+            policy,
+            profile,
+            events: BinaryHeap::new(),
+            event_seq: 0,
+            reqs: HashMap::new(),
+            next_key: 0,
+            transfer: TransferReport::default(),
+            sched_overhead: Samples::new(),
+            time: 0.0,
+        }
+    }
+
+    fn push(&mut self, time: f64, kind: EventKind) {
+        self.event_seq += 1;
+        self.events.push(Event { time, seq: self.event_seq, kind });
+    }
+
+    /// Run to completion over `requests`; returns the serving summary.
+    pub fn run(&mut self, requests: Vec<Request>) -> Summary {
+        for r in requests {
+            self.push(r.arrival, EventKind::Arrival(r));
+        }
+        while let Some(ev) = self.events.pop() {
+            if ev.time > self.cfg.horizon {
+                break;
+            }
+            self.time = ev.time;
+            match ev.kind {
+                EventKind::Arrival(req) => self.on_arrival(req),
+                EventKind::IterDone { instance, plan, latency } => {
+                    self.on_iter_done(instance, plan, latency)
+                }
+                EventKind::SeqReady { instance, key } => {
+                    // the segment may still be in the KV-backpressure
+                    // waiting queue — mark it ready wherever it lives
+                    if let Some(s) = self.instances[instance].seqs.get_mut(&key) {
+                        s.ready = true;
+                    } else if let Some(s) = self.instances[instance]
+                        .waiting
+                        .iter_mut()
+                        .find(|s| s.key == key)
+                    {
+                        s.ready = true;
+                    }
+                    self.kick(instance);
+                }
+                EventKind::AlphaEvict { instance, key } => {
+                    self.instances[instance].evict(key);
+                    self.kick(instance);
+                }
+            }
+        }
+        debug_assert!(
+            self.reqs.values().all(|r| r.beta.is_none())
+                || self.instances.iter().all(|i| i.seqs.is_empty() && i.waiting.is_empty()),
+            "simulation drained its events with segments still resident"
+        );
+        self.collector.summarize(self.time.max(1e-9))
+    }
+
+    /// Requests that never completed (should be 0 — any residue indicates
+    /// a scheduling deadlock and invalidates the run).
+    pub fn stuck_requests(&self) -> usize {
+        self.instances
+            .iter()
+            .map(|i| i.seqs.len() + i.waiting.len())
+            .sum()
+    }
+
+    fn on_arrival(&mut self, req: Request) {
+        let snapshots: Vec<_> = self.instances.iter().map(|i| i.snapshot()).collect();
+        let t0 = Instant::now();
+        let placement = self.policy.place(&req, &snapshots, &self.profile);
+        self.sched_overhead.push(t0.elapsed().as_secs_f64());
+
+        // Clamp spans by the true processing length (positions 0..P+D-1).
+        let l_proc = req.prompt_len + req.decode_len - 1;
+        let s = placement.alpha.end.min(l_proc);
+        let beta_span = placement
+            .beta
+            .as_ref()
+            .filter(|b| b.start < l_proc)
+            .map(|b| (b.instance, b.start, l_proc));
+
+        let alpha_key = self.alloc_key();
+        let alpha_end = if beta_span.is_some() { s } else { l_proc };
+        let alpha_seq = self.make_seq(
+            alpha_key,
+            &req,
+            placement.alpha.instance,
+            0,
+            alpha_end,
+            beta_span.is_none(),
+            beta_span.is_some(),
+        );
+        let beta = beta_span.map(|(inst, start, end)| {
+            let key = self.alloc_key();
+            let mut seq = self.make_seq(key, &req, inst, start, end, true, false);
+            seq.ready = false; // gated on KV transfer
+            (inst, key, seq)
+        });
+
+        self.reqs.insert(
+            req.id,
+            ReqState { beta: beta.as_ref().map(|(i, k, _)| (*i, *k)) },
+        );
+        let a_inst = placement.alpha.instance;
+        self.instances[a_inst].accept(alpha_seq);
+        self.kick(a_inst);
+        if let Some((inst, _, seq)) = beta {
+            self.instances[inst].accept(seq);
+            // no kick: not ready until transfer completes
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn make_seq(
+        &mut self,
+        key: SeqKey,
+        req: &Request,
+        _instance: usize,
+        start: usize,
+        end_exec: usize,
+        last_segment: bool,
+        track_kv: bool,
+    ) -> SimSeq {
+        let p = req.prompt_len;
+        SimSeq {
+            key,
+            request: req.id,
+            start,
+            end_exec,
+            prompt_len: p,
+            work: crate::coordinator::WorkItem {
+                prefill_remaining: end_exec.min(p).saturating_sub(start),
+                context: start,
+                decode_remaining: end_exec.saturating_sub(start.max(p)),
+            },
+            ready: true,
+            emits_first_token: start < p && end_exec >= p,
+            last_segment,
+            kv_history: Vec::new(),
+            track_kv_history: track_kv,
+            arrival: req.arrival,
+        }
+    }
+
+    fn alloc_key(&mut self) -> SeqKey {
+        self.next_key += 1;
+        self.next_key
+    }
+
+    /// Start an iteration if the instance is idle and has ready work.
+    fn kick(&mut self, i: usize) {
+        if self.instances[i].busy {
+            return;
+        }
+        let plan = self.instances[i].plan_batch();
+        if plan.is_empty() {
+            self.instances[i].busy = false;
+            return;
+        }
+        let latency = self.instances[i].plan_latency(&plan);
+        self.instances[i].busy = true;
+        self.push(self.time + latency, EventKind::IterDone { instance: i, plan, latency });
+    }
+
+    fn on_iter_done(&mut self, i: usize, plan: BatchPlan, latency: f64) {
+        let now = self.time;
+        self.instances[i].local.record_execution(latency);
+        self.profile
+            .record(plan.shape.prefill_tokens, plan.shape.decode_ctx, plan.shape.decode_reqs, latency);
+        self.instances[i].record_stats(&plan, latency);
+
+        let mut completed: Vec<SeqKey> = Vec::new();
+        // apply prefill chunks
+        for &(key, chunk) in &plan.prefill {
+            let inst = &mut self.instances[i];
+            let Some(seq) = inst.seqs.get_mut(&key) else { continue };
+            seq.work.prefill_remaining -= chunk;
+            seq.work.context += chunk;
+            if seq.track_kv_history {
+                seq.kv_history.push((now, chunk));
+            }
+            if seq.work.prefill_remaining == 0 {
+                if seq.emits_first_token {
+                    let (req, arr) = (seq.request, seq.arrival);
+                    self.collector.on_token(req, arr, now);
+                }
+                if seq.work.decode_remaining == 0 {
+                    completed.push(key);
+                }
+            }
+        }
+        // apply decode steps
+        for &key in &plan.decodes {
+            let inst = &mut self.instances[i];
+            let Some(seq) = inst.seqs.get_mut(&key) else { continue };
+            seq.work.decode_remaining -= 1;
+            seq.work.context += 1;
+            if seq.track_kv_history {
+                seq.kv_history.push((now, 1));
+            }
+            let (req, arr) = (seq.request, seq.arrival);
+            self.collector.on_token(req, arr, now);
+            if seq.work.is_done() {
+                completed.push(key);
+            }
+        }
+        for key in completed {
+            self.on_segment_done(i, key);
+        }
+        self.instances[i].busy = false;
+        self.kick(i);
+    }
+
+    fn on_segment_done(&mut self, i: usize, key: SeqKey) {
+        let seq = self.instances[i].seqs.get(&key).expect("segment exists").clone();
+        let req_state = self.reqs.get(&seq.request);
+        let has_beta_wait = req_state
+            .and_then(|r| r.beta)
+            .map(|(_, bk)| bk != key)
+            .unwrap_or(false);
+
+        if seq.last_segment {
+            self.collector.on_complete(seq.request);
+            self.instances[i].evict(key);
+            self.kick(i);
+            self.reqs.remove(&seq.request);
+            return;
+        }
+
+        // α completed and a β segment waits: schedule the KV transfer.
+        if has_beta_wait {
+            let (b_inst, b_key) = req_state.unwrap().beta.unwrap();
+            let kv_bytes = self.cfg.spec.llm.kv_bytes_per_token();
+            let ready = group_chunks(&seq.kv_history, self.cfg.transfer_chunk_tokens, kv_bytes);
+            let chunked = chunked_timeline(&ready, &self.cfg.link);
+            let mono = monolithic_timeline(&ready, &self.cfg.link);
+            self.transfer.chunked_exposed += chunked.exposed;
+            self.transfer.mono_exposed += mono.exposed;
+            self.transfer.bytes += chunked.total_bytes;
+            self.transfer.transfers += 1;
+            let done = if self.cfg.chunked_transfer { chunked.done } else { mono.done };
+            let done = done.max(self.time);
+            self.push(done, EventKind::SeqReady { instance: b_inst, key: b_key });
+            // α's KV pages stay pinned until the transfer drains.
+            self.push(done, EventKind::AlphaEvict { instance: i, key });
+        } else {
+            // α with no β (β was cancelled by early termination clamping)
+            self.instances[i].evict(key);
+            self.kick(i);
+        }
+    }
+
+    pub fn profile(&self) -> &ProfileTable {
+        &self.profile
+    }
+
+    /// Mean per-request scheduling overhead in seconds (Table 3).
+    pub fn mean_sched_overhead(&mut self) -> f64 {
+        self.sched_overhead.mean()
+    }
+}
+
+/// Group an α-side KV production history into transfer chunks of
+/// ~`chunk_tokens`: (ready_time, bytes) per chunk.
+fn group_chunks(history: &[(f64, usize)], chunk_tokens: usize, kv_bytes: f64) -> Vec<(f64, f64)> {
+    let mut out = Vec::new();
+    let mut acc = 0usize;
+    for &(t, n) in history {
+        acc += n;
+        while acc >= chunk_tokens {
+            out.push((t, chunk_tokens as f64 * kv_bytes));
+            acc -= chunk_tokens;
+        }
+    }
+    if acc > 0 {
+        let t = history.last().map(|h| h.0).unwrap_or(0.0);
+        out.push((t, acc as f64 * kv_bytes));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{ColocPolicy, DisaggPolicy};
+    use crate::coordinator::GlobalConfig;
+    use crate::costmodel::{GpuSpec, LlmSpec};
+    use crate::sim::policy::DynaServePolicy;
+    use crate::workload::{poisson_workload, TraceKind};
+
+    fn spec() -> InstanceSpec {
+        InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1)
+    }
+
+    fn run_policy(policy: Box<dyn Policy>, reqs: Vec<Request>) -> (Summary, Simulator) {
+        let cfg = SimConfig::new(spec(), 2);
+        let mut sim = Simulator::new(cfg, policy);
+        let s = sim.run(reqs);
+        (s, sim)
+    }
+
+    #[test]
+    fn single_request_emits_all_tokens() {
+        let reqs = vec![Request::new(0, 0.0, 100, 50)];
+        let (s, _) = run_policy(Box::new(ColocPolicy::new()), reqs);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.total_tokens, 50);
+    }
+
+    #[test]
+    fn disagg_emits_all_tokens_with_transfer() {
+        let reqs = vec![Request::new(0, 0.0, 1000, 40)];
+        let (s, sim) = run_policy(Box::new(DisaggPolicy::new(1)), reqs);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.total_tokens, 40);
+        assert_eq!(sim.transfer.transfers, 1);
+        assert!(sim.transfer.bytes > 0.0);
+    }
+
+    #[test]
+    fn dynaserve_emits_all_tokens() {
+        let mut reqs = poisson_workload(TraceKind::BurstGpt, 2.0, 20.0, 5);
+        let expect: usize = reqs.iter().map(|r| r.decode_len).sum();
+        for r in &mut reqs {
+            r.predicted_decode = r.decode_len;
+        }
+        let n = reqs.len();
+        let (s, _) = run_policy(
+            Box::new(DynaServePolicy::new(GlobalConfig::default())),
+            reqs,
+        );
+        assert_eq!(s.completed, n);
+        assert_eq!(s.total_tokens, expect);
+    }
+
+    #[test]
+    fn prediction_error_still_completes_requests() {
+        // predicted length shorter AND longer than actual
+        let mut reqs = vec![
+            Request::new(0, 0.0, 500, 200),
+            Request::new(1, 0.1, 500, 200),
+        ];
+        reqs[0].predicted_decode = 50; // underestimate
+        reqs[1].predicted_decode = 800; // overestimate
+        let (s, _) = run_policy(
+            Box::new(DynaServePolicy::new(GlobalConfig::default())),
+            reqs,
+        );
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.total_tokens, 400);
+    }
+
+    #[test]
+    fn utilization_stats_populated() {
+        let reqs = poisson_workload(TraceKind::AzureCode, 1.0, 30.0, 9);
+        let (_, sim) = run_policy(Box::new(ColocPolicy::new()), reqs);
+        for inst in &sim.instances {
+            assert!(inst.stats.iterations > 0);
+            assert!(inst.mfu() > 0.0 && inst.mfu() < 1.0);
+            assert!(inst.hbm_usage() > 0.0 && inst.hbm_usage() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn chunked_transfer_reduces_exposure() {
+        let reqs = poisson_workload(TraceKind::MiniReasoning, 1.5, 60.0, 11);
+        let (_, sim) = run_policy(
+            Box::new(DynaServePolicy::new(GlobalConfig::default())),
+            reqs,
+        );
+        if sim.transfer.transfers > 0 {
+            assert!(sim.transfer.chunked_exposed <= sim.transfer.mono_exposed);
+        }
+    }
+
+    #[test]
+    fn group_chunks_conserves_tokens() {
+        let hist = vec![(0.1, 300), (0.2, 300), (0.3, 300)];
+        let chunks = group_chunks(&hist, 256, 2.0);
+        let total: f64 = chunks.iter().map(|c| c.1).sum();
+        assert_eq!(total, 900.0 * 2.0);
+        assert!(chunks.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn coloc_under_overload_violates_slo_more_than_light_load() {
+        let light = poisson_workload(TraceKind::AzureCode, 0.3, 60.0, 13);
+        let heavy = poisson_workload(TraceKind::AzureCode, 6.0, 60.0, 13);
+        let (sl, _) = run_policy(Box::new(ColocPolicy::new()), light);
+        let (sh, _) = run_policy(Box::new(ColocPolicy::new()), heavy);
+        assert!(sh.p99_tbt >= sl.p99_tbt);
+    }
+}

@@ -1,0 +1,299 @@
+//! A simulated unified GPU instance: resident micro-request segments, the
+//! local SLO-aware scheduler, KV accounting, and utilization statistics.
+
+use std::collections::HashMap;
+
+use crate::coordinator::local::{DecodeEntry, PrefillEntry};
+use crate::coordinator::{InstanceSnapshot, LocalScheduler, WorkItem};
+use crate::coordinator::local::BatchPlan;
+use crate::core::RequestId;
+use crate::costmodel::InstanceSpec;
+use crate::kv::KvAccounting;
+
+pub type SeqKey = u64;
+
+/// One resident segment (micro-request) of a request.
+#[derive(Debug, Clone)]
+pub struct SimSeq {
+    pub key: SeqKey,
+    pub request: RequestId,
+    /// Executable span [start, end_exec) in *input token* positions (the
+    /// driver already clamped the span by the true length; see sim/mod.rs).
+    pub start: usize,
+    pub end_exec: usize,
+    pub prompt_len: usize,
+    /// Remaining work.
+    pub work: WorkItem,
+    /// True once the required context KV ([0, start)) is resident.
+    pub ready: bool,
+    /// Emits the position-P first token when its prefill completes.
+    pub emits_first_token: bool,
+    /// Whether this is the request's final segment (frees the request).
+    pub last_segment: bool,
+    /// α-side KV production history [(time, new_tokens)] for the transfer
+    /// timeline; tracked only when a β segment waits on this one.
+    pub kv_history: Vec<(f64, usize)>,
+    pub track_kv_history: bool,
+    pub arrival: f64,
+}
+
+impl SimSeq {
+    pub fn finished(&self) -> bool {
+        self.work.is_done()
+    }
+}
+
+/// Aggregated per-instance utilization counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InstanceStats {
+    pub busy_time: f64,
+    pub iterations: u64,
+    pub flops: f64,
+    pub mfu_weighted: f64,
+    /// Time-weighted KV utilization integral (∫ util dt over busy time).
+    pub kv_util_weighted: f64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+}
+
+/// A unified execution instance in the simulator.
+pub struct SimInstance {
+    pub id: usize,
+    pub spec: InstanceSpec,
+    pub local: LocalScheduler,
+    pub seqs: HashMap<SeqKey, SimSeq>,
+    /// FCFS arrival order of segments (prefill admission order).
+    order: Vec<SeqKey>,
+    pub kv: KvAccounting,
+    /// Segments accepted but not yet KV-admitted (capacity backpressure).
+    pub waiting: Vec<SimSeq>,
+    pub busy: bool,
+    pub stats: InstanceStats,
+}
+
+impl SimInstance {
+    pub fn new(id: usize, spec: InstanceSpec, local: LocalScheduler) -> Self {
+        let kv = KvAccounting::new(spec.kv_capacity_tokens());
+        SimInstance {
+            id,
+            spec,
+            local,
+            seqs: HashMap::new(),
+            order: Vec::new(),
+            kv,
+            waiting: Vec::new(),
+            busy: false,
+            stats: InstanceStats::default(),
+        }
+    }
+
+    /// Try to admit a segment (KV capacity permitting); otherwise queue it.
+    pub fn accept(&mut self, seq: SimSeq) {
+        if self.kv.can_fit(seq.end_exec.saturating_sub(0)) {
+            self.admit(seq);
+        } else {
+            self.waiting.push(seq);
+        }
+    }
+
+    fn admit(&mut self, seq: SimSeq) {
+        // β holds the full [0, end) context after transfer; α holds [0, end).
+        self.kv.set_resident(seq.key, seq.end_exec);
+        self.order.push(seq.key);
+        self.seqs.insert(seq.key, seq);
+    }
+
+    /// Admit from the waiting queue while capacity allows (FCFS).
+    pub fn drain_waiting(&mut self) {
+        while let Some(seq) = self.waiting.first() {
+            if self.kv.can_fit(seq.end_exec) {
+                let seq = self.waiting.remove(0);
+                self.admit(seq);
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Remove a finished/cancelled segment and free its KV.
+    pub fn evict(&mut self, key: SeqKey) -> Option<SimSeq> {
+        self.kv.release(key);
+        self.order.retain(|k| *k != key);
+        let s = self.seqs.remove(&key);
+        self.drain_waiting();
+        s
+    }
+
+    /// Compose the next batch via the local scheduler (Algorithm 2).
+    pub fn plan_batch(&mut self) -> BatchPlan {
+        let mut decodes: Vec<DecodeEntry> = Vec::new();
+        let mut prefills: Vec<PrefillEntry> = Vec::new();
+        for key in &self.order {
+            let s = &self.seqs[key];
+            if !s.ready || s.finished() {
+                continue;
+            }
+            if s.work.in_decode_phase() {
+                decodes.push(DecodeEntry { key: *key, context: s.work.context });
+            } else if s.work.prefill_remaining > 0 {
+                prefills.push(PrefillEntry {
+                    key: *key,
+                    remaining: s.work.prefill_remaining,
+                    context: s.work.context,
+                });
+            }
+        }
+        self.local.next_batch(&decodes, &prefills)
+    }
+
+    /// Ground-truth latency of a plan from the cost model.
+    pub fn plan_latency(&self, plan: &BatchPlan) -> f64 {
+        self.spec.iteration_cost(&plan.shape).latency
+    }
+
+    /// Snapshot for the global scheduler's probes.
+    pub fn snapshot(&self) -> InstanceSnapshot {
+        let mut work: Vec<WorkItem> = self
+            .seqs
+            .values()
+            .filter(|s| !s.finished())
+            .map(|s| s.work)
+            .collect();
+        work.extend(self.waiting.iter().map(|s| s.work));
+        InstanceSnapshot { id: self.id, work, kv_utilization: self.kv.utilization() }
+    }
+
+    /// Record utilization for a completed iteration.
+    pub fn record_stats(&mut self, plan: &BatchPlan, latency: f64) {
+        let cost = self.spec.iteration_cost(&plan.shape);
+        self.stats.busy_time += latency;
+        self.stats.iterations += 1;
+        self.stats.flops += cost.flops;
+        self.stats.mfu_weighted += cost.mfu * latency;
+        self.stats.kv_util_weighted += self.kv.utilization() * latency;
+        self.stats.prefill_tokens += plan.shape.prefill_tokens as u64;
+        self.stats.decode_tokens += plan.shape.decode_reqs as u64;
+    }
+
+    /// Mean MFU over busy time.
+    pub fn mfu(&self) -> f64 {
+        if self.stats.busy_time == 0.0 {
+            0.0
+        } else {
+            self.stats.mfu_weighted / self.stats.busy_time
+        }
+    }
+
+    /// Mean KV (HBM) utilization over busy time, plus the weight share.
+    pub fn kv_util(&self) -> f64 {
+        if self.stats.busy_time == 0.0 {
+            0.0
+        } else {
+            self.stats.kv_util_weighted / self.stats.busy_time
+        }
+    }
+
+    /// HBM usage fraction including weights (Table 1's metric).
+    pub fn hbm_usage(&self) -> f64 {
+        let total = self.spec.gpu.hbm_capacity * self.spec.tp as f64;
+        let weights = self.spec.llm.weight_bytes();
+        let kv_bytes = self.kv_util() * self.spec.kv_capacity_bytes();
+        ((weights + kv_bytes) / total).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{LocalConfig, ProfileTable};
+    use crate::core::MicroRequest;
+    use crate::costmodel::{GpuSpec, LlmSpec};
+
+    fn inst() -> SimInstance {
+        let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
+        let local = LocalScheduler::new(LocalConfig::default(), ProfileTable::seeded(&spec));
+        SimInstance::new(0, spec, local)
+    }
+
+    fn seq(key: SeqKey, start: usize, end: usize, p: usize) -> SimSeq {
+        let mr = MicroRequest {
+            request: key,
+            role: crate::core::Role::Alpha,
+            start,
+            end,
+            prompt_len: p,
+            instance: 0,
+            arrival: 0.0,
+        };
+        SimSeq {
+            key,
+            request: key,
+            start,
+            end_exec: end,
+            prompt_len: p,
+            work: WorkItem::from_micro_request(&mr),
+            ready: true,
+            emits_first_token: end.min(p) == p && start < p,
+            last_segment: true,
+            kv_history: vec![],
+            track_kv_history: false,
+            arrival: 0.0,
+        }
+    }
+
+    #[test]
+    fn accept_admit_evict_cycle() {
+        let mut i = inst();
+        i.accept(seq(1, 0, 1000, 800));
+        assert_eq!(i.seqs.len(), 1);
+        assert_eq!(i.kv.resident_tokens(), 1000);
+        i.evict(1);
+        assert!(i.seqs.is_empty());
+        assert_eq!(i.kv.resident_tokens(), 0);
+    }
+
+    #[test]
+    fn capacity_backpressure_queues_then_admits() {
+        let mut i = inst();
+        let cap = i.kv.capacity();
+        i.accept(seq(1, 0, cap, cap - 10)); // fills the pool
+        i.accept(seq(2, 0, 100, 80));
+        assert_eq!(i.waiting.len(), 1);
+        i.evict(1);
+        assert!(i.waiting.is_empty());
+        assert!(i.seqs.contains_key(&2));
+    }
+
+    #[test]
+    fn plan_batch_mixes_ready_work() {
+        let mut i = inst();
+        let mut d = seq(1, 0, 600, 100);
+        d.work = WorkItem::pure_decode(300, 50); // mid-decode
+        i.accept(d);
+        i.accept(seq(2, 0, 900, 800)); // fresh prefill
+        let plan = i.plan_batch();
+        assert_eq!(plan.decodes, vec![1]);
+        assert_eq!(plan.prefill.first().map(|p| p.0), Some(2));
+        assert!(i.plan_latency(&plan) > 0.0);
+    }
+
+    #[test]
+    fn not_ready_sequences_excluded() {
+        let mut i = inst();
+        let mut s = seq(3, 500, 900, 400); // β awaiting transfer
+        s.ready = false;
+        i.accept(s);
+        let plan = i.plan_batch();
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn snapshot_includes_waiting() {
+        let mut i = inst();
+        let cap = i.kv.capacity();
+        i.accept(seq(1, 0, cap, cap - 10));
+        i.accept(seq(2, 0, 100, 80));
+        let snap = i.snapshot();
+        assert_eq!(snap.work.len(), 2);
+    }
+}

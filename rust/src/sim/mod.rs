@@ -1,0 +1,22 @@
+//! Discrete-event cluster simulator — the substrate that reproduces the
+//! paper's A100-scale evaluation (DESIGN.md §1).
+//!
+//! The simulator drives the *same* scheduler code as the live PJRT server:
+//! [`crate::coordinator::GlobalScheduler`] for split decisions and
+//! [`crate::coordinator::LocalScheduler`] for per-iteration batch
+//! composition. Only the executor differs — iteration latencies come from
+//! the calibrated analytical cost model instead of a GPU.
+//!
+//! Token-position bookkeeping (see `instance.rs`): a request with prompt P
+//! and true decode length D processes input tokens `0..P+D-1`; processing
+//! token `P-1` (the prefill tail) emits output position `P`, and each
+//! decode step processing token `p ≥ P` emits position `p+1` — D output
+//! tokens in total, however the request is split into segments.
+
+pub mod driver;
+pub mod instance;
+pub mod policy;
+
+pub use driver::{SimConfig, Simulator};
+pub use instance::SimInstance;
+pub use policy::{DynaServePolicy, Placement, Policy};

@@ -1,0 +1,93 @@
+//! Scheduling policies: how arriving requests become placed micro-request
+//! segments. DynaServe's APS policy lives here; the PD-colocation and
+//! PD-disaggregation baselines implement the same trait in
+//! [`crate::baselines`].
+
+use crate::coordinator::{GlobalConfig, GlobalScheduler, InstanceSnapshot, ProfileTable};
+use crate::core::{MicroRequest, Request, Role};
+
+/// The segments a policy created for one request (one segment = no split).
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub alpha: MicroRequest,
+    pub beta: Option<MicroRequest>,
+    /// Probe count (telemetry; Table 3).
+    pub probes: usize,
+}
+
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Decide split and placement for `req` given instance snapshots.
+    /// `profile` is the pool-wide latency profile table.
+    fn place(
+        &mut self,
+        req: &Request,
+        snapshots: &[InstanceSnapshot],
+        profile: &ProfileTable,
+    ) -> Placement;
+}
+
+/// DynaServe's Adaptive Request Partitioning and Scheduling (§3–§4):
+/// Algorithm 1 picks the split ratio; the α/β segments go to the two
+/// least-loaded unified instances.
+pub struct DynaServePolicy {
+    pub sched: GlobalScheduler,
+}
+
+impl DynaServePolicy {
+    pub fn new(cfg: GlobalConfig) -> Self {
+        DynaServePolicy { sched: GlobalScheduler::new(cfg) }
+    }
+}
+
+impl Policy for DynaServePolicy {
+    fn name(&self) -> &'static str {
+        "dynaserve"
+    }
+
+    fn place(
+        &mut self,
+        req: &Request,
+        snapshots: &[InstanceSnapshot],
+        profile: &ProfileTable,
+    ) -> Placement {
+        let out = self.sched.schedule(req, snapshots, profile);
+        let (alpha, beta) = out.decision.to_micro_requests(req);
+        match (alpha, beta) {
+            (Some(a), b) => Placement { alpha: a, beta: b, probes: out.probes },
+            // split == 0: the whole request is "β" — normalize so callers
+            // always have an alpha segment.
+            (None, Some(b)) => Placement {
+                alpha: MicroRequest { role: Role::Alpha, ..b },
+                beta: None,
+                probes: out.probes,
+            },
+            (None, None) => unreachable!("empty request"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+
+    #[test]
+    fn dynaserve_placement_covers_request() {
+        let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
+        let profile = ProfileTable::seeded(&spec);
+        let mut p = DynaServePolicy::new(GlobalConfig::default());
+        let snaps: Vec<InstanceSnapshot> = (0..2)
+            .map(|id| InstanceSnapshot { id, work: vec![], kv_utilization: 0.0 })
+            .collect();
+        let req = Request::new(1, 0.0, 1024, 512);
+        let pl = p.place(&req, &snaps, &profile);
+        let total = pl.alpha.len() + pl.beta.as_ref().map(|b| b.len()).unwrap_or(0);
+        assert_eq!(total, req.predicted_len());
+        assert_eq!(pl.alpha.start, 0);
+        if let Some(b) = &pl.beta {
+            assert_eq!(b.start, pl.alpha.end);
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Minimal benchmarking harness (criterion is not in the offline vendor
+//! set). Used by the `harness = false` bench targets: warms up, runs timed
+//! iterations until a time budget, reports mean / p50 / p99 per iteration.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} iters   mean {:>12}   p50 {:>12}   p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean),
+            fmt_time(self.p50),
+            fmt_time(self.p99)
+        );
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+/// Benchmark `f` for ~`budget_secs` (after a short warmup). Returns stats.
+pub fn bench<F: FnMut()>(name: &str, budget_secs: f64, mut f: F) -> BenchResult {
+    // warmup
+    let warm_until = Instant::now() + std::time::Duration::from_secs_f64(budget_secs * 0.2);
+    while Instant::now() < warm_until {
+        f();
+    }
+    let mut samples = Vec::new();
+    let until = Instant::now() + std::time::Duration::from_secs_f64(budget_secs);
+    while Instant::now() < until {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= 200_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len().max(1);
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: n as u64,
+        mean,
+        p50: samples.get(n / 2).copied().unwrap_or(0.0),
+        p99: samples.get(n * 99 / 100).copied().unwrap_or(0.0),
+    };
+    result.print();
+    result
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let r = bench("noop-ish", 0.05, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters > 10);
+        assert!(r.mean > 0.0 && r.p50 <= r.p99);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("us"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with(" s"));
+    }
+}

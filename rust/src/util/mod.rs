@@ -1,0 +1,10 @@
+//! In-repo substrates replacing crates absent from the offline vendor set
+//! (`rand`, `serde_json`, `clap`, `proptest`). See Cargo.toml's dependency
+//! note and DESIGN.md §1.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,85 @@
+//! Property-testing helper (the vendor set has no `proptest`).
+//!
+//! `check` runs a property over `n` seeded random cases; on failure it
+//! reports the failing seed so the case can be replayed deterministically:
+//!
+//! ```rust,no_run
+//! // (no_run: doctest binaries miss the xla rpath in this offline image)
+//! use dynaserve::util::proptest_lite::check;
+//! check("split covers request", 200, |rng| {
+//!     let len = rng.range(1, 1000);
+//!     let s = rng.range(0, len + 1);
+//!     assert_eq!(s + (len - s), len);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `prop` across `cases` deterministic seeds. Panics (with the seed)
+/// on the first failing case.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u64,
+    prop: F,
+) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case;
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} (replay with seed \
+                 {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Like `check` but the property returns `Result`, for non-panicking style.
+pub fn check_result<E: std::fmt::Debug>(
+    name: &str,
+    cases: u64,
+    prop: impl Fn(&mut Rng) -> Result<(), E>,
+) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case;
+        let mut rng = Rng::new(seed);
+        if let Err(e) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (replay with seed \
+                 {seed:#x}): {e:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u64 halves", 50, |rng| {
+            let x = rng.range(0, 1000);
+            assert!(x / 2 <= x);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with seed")]
+    fn reports_seed_on_failure() {
+        check("always fails", 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn check_result_ok() {
+        check_result::<String>("ok", 10, |_| Ok(()));
+    }
+}

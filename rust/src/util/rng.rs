@@ -1,0 +1,234 @@
+//! Deterministic pseudo-random substrate.
+//!
+//! The offline vendor set has no `rand`, so this module provides the PCG-XSH-RR
+//! generator plus the distributions the workload generators need (uniform,
+//! exponential, normal, lognormal, Poisson). Everything is seeded and
+//! reproducible: every experiment in EXPERIMENTS.md records its seed.
+
+/// PCG-XSH-RR 64/32 with 64-bit output assembled from two draws.
+/// Small state, excellent statistical quality for simulation purposes.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Independent stream for the same seed (used to decorrelate e.g.
+    /// arrival times from length sampling).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Rng { state: 0, inc: (stream << 1) | 1 };
+        rng.state = rng.inc.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive a child RNG (splitmix-style) — cheap fork for per-request seeds.
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::with_stream(self.next_u64() ^ tag, tag.wrapping_mul(0x9e3779b97f4a7c15) | 1)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [lo, hi) via Lemire's method (hi > lo).
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi > lo);
+        let span = hi - lo;
+        lo + (((self.next_u64() as u128 * span as u128) >> 64) as u64)
+    }
+
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range(lo as u64, hi as u64) as usize
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda). Inter-arrival times
+    /// of a Poisson process.
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        let u = 1.0 - self.f64(); // (0, 1]
+        -u.ln() / lambda
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast here).
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        mean + std * z
+    }
+
+    /// Lognormal parameterized by the *underlying* normal's mu/sigma.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Poisson-distributed count. Knuth for small lambda, normal
+    /// approximation above 64 (adequate for per-tick arrival counts).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 64.0 {
+            let v = self.normal(lambda, lambda.sqrt()).round();
+            return if v < 0.0 { 0 } else { v as u64 };
+        }
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.range_usize(0, i + 1);
+            items.swap(i, j);
+        }
+    }
+}
+
+/// Helper: lognormal (mu, sigma) from a desired mean and p50.
+/// mean = exp(mu + sigma^2/2), median = exp(mu).
+pub fn lognormal_params(median: f64, mean: f64) -> (f64, f64) {
+    let mu = median.ln();
+    let sigma2 = 2.0 * (mean.ln() - mu).max(0.0);
+    (mu, sigma2.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            let v = r.range(10, 20);
+            assert!((10..20).contains(&v));
+        }
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.exp(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(13);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal(3.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.15, "var={var}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large() {
+        let mut r = Rng::new(17);
+        for lam in [0.5, 4.0, 100.0] {
+            let n = 20_000;
+            let mean: f64 =
+                (0..n).map(|_| r.poisson(lam) as f64).sum::<f64>() / n as f64;
+            assert!(
+                (mean - lam).abs() < lam.max(1.0) * 0.05,
+                "lambda={lam} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(19);
+        let mut counts = [0u32; 3];
+        for _ in 0..30_000 {
+            counts[r.categorical(&[1.0, 2.0, 1.0])] += 1;
+        }
+        assert!(counts[1] > counts[0] && counts[1] > counts[2]);
+    }
+
+    #[test]
+    fn lognormal_params_roundtrip() {
+        let (mu, sigma) = lognormal_params(100.0, 150.0);
+        let median = mu.exp();
+        let mean = (mu + sigma * sigma / 2.0).exp();
+        assert!((median - 100.0).abs() < 1e-9);
+        assert!((mean - 150.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,252 @@
+//! Statistics primitives: streaming percentile reservoirs, fixed-bucket
+//! latency histograms, and small helpers the metrics layer builds on.
+
+/// Exact-percentile sample buffer. For the experiment scales in this repo
+/// (<= a few million samples) exact sorting is cheap and avoids the error
+/// analysis a sketch would need.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    values: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+        self.sorted = false;
+    }
+
+    pub fn extend_from(&mut self, other: &Samples) {
+        self.values.extend_from_slice(&other.values);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.values
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile with linear interpolation; p in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.values.len();
+        if n == 1 {
+            return self.values[0];
+        }
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.values[lo] * (1.0 - frac) + self.values[hi] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        *self.values.last().unwrap_or(&f64::NAN)
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.ensure_sorted();
+        *self.values.first().unwrap_or(&f64::NAN)
+    }
+
+    /// Fraction of samples <= threshold (e.g. SLO attainment).
+    pub fn fraction_leq(&self, threshold: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.values.iter().filter(|v| **v <= threshold).count();
+        n as f64 / self.values.len() as f64
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// (value, cumulative fraction) points of the empirical CDF, at most
+    /// `points` entries — the Fig. 11 output format.
+    pub fn cdf(&mut self, points: usize) -> Vec<(f64, f64)> {
+        if self.values.is_empty() {
+            return vec![];
+        }
+        self.ensure_sorted();
+        let n = self.values.len();
+        let step = (n.max(points) / points).max(1);
+        let mut out = Vec::new();
+        let mut i = step - 1;
+        while i < n {
+            out.push((self.values[i], (i + 1) as f64 / n as f64));
+            i += step;
+        }
+        if out.last().map(|(_, f)| *f) != Some(1.0) {
+            out.push((self.values[n - 1], 1.0));
+        }
+        out
+    }
+}
+
+/// Welford online mean/variance — used by the profile table's per-cell
+/// latency estimates.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Welford {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Exponentially-weighted moving average — instance load smoothing.
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        });
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn get_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_basic() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.p99() - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn percentile_single_and_empty() {
+        let mut s = Samples::new();
+        assert!(s.p50().is_nan());
+        s.push(7.0);
+        assert_eq!(s.p50(), 7.0);
+        assert_eq!(s.p99(), 7.0);
+    }
+
+    #[test]
+    fn fraction_leq() {
+        let mut s = Samples::new();
+        for i in 0..10 {
+            s.push(i as f64);
+        }
+        assert!((s.fraction_leq(4.0) - 0.5).abs() < 1e-9);
+        assert_eq!(s.fraction_leq(100.0), 1.0);
+    }
+
+    #[test]
+    fn cdf_monotone_and_terminated() {
+        let mut s = Samples::new();
+        for i in 0..1000 {
+            s.push((i % 97) as f64);
+        }
+        let cdf = s.cdf(20);
+        assert!(cdf.windows(2).all(|w| w[0].1 <= w[1].1 && w[0].0 <= w[1].0));
+        assert_eq!(cdf.last().unwrap().1, 1.0);
+    }
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::default();
+        for x in xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        assert!((w.var() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..64 {
+            e.push(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-6);
+    }
+}

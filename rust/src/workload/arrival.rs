@@ -1,0 +1,172 @@
+//! Arrival processes: homogeneous Poisson (the paper's default, §6.1) and a
+//! time-varying replay process for the Figure 10 real-time experiment.
+
+use crate::util::rng::Rng;
+
+/// Generates successive arrival instants.
+pub trait ArrivalProcess: Send {
+    /// Next arrival strictly after time `t`, or None when the process ends.
+    fn next_after(&mut self, t: f64, rng: &mut Rng) -> Option<f64>;
+}
+
+/// Homogeneous Poisson process at `rate` requests/second.
+pub struct PoissonArrivals {
+    rate: f64,
+}
+
+impl PoissonArrivals {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0, "qps must be positive");
+        PoissonArrivals { rate }
+    }
+}
+
+impl ArrivalProcess for PoissonArrivals {
+    fn next_after(&mut self, t: f64, rng: &mut Rng) -> Option<f64> {
+        Some(t + rng.exp(self.rate))
+    }
+}
+
+/// Non-homogeneous Poisson via thinning against a piecewise-linear rate
+/// envelope — reproduces BurstGPT's bursty per-minute volume for the
+/// Figure 10 replay (42-minute window starting at trace hour 311).
+pub struct ReplayArrivals {
+    /// (time s, rate rps) knots, non-decreasing in time.
+    knots: Vec<(f64, f64)>,
+    rate_max: f64,
+}
+
+impl ReplayArrivals {
+    pub fn new(knots: Vec<(f64, f64)>) -> Self {
+        assert!(knots.len() >= 2);
+        assert!(knots.windows(2).all(|w| w[0].0 <= w[1].0));
+        let rate_max = knots.iter().map(|k| k.1).fold(0.0, f64::max);
+        assert!(rate_max > 0.0);
+        ReplayArrivals { knots, rate_max }
+    }
+
+    /// The BurstGPT-replay rate profile: a base rate modulated by bursts.
+    /// `scale` positions the average around a target QPS.
+    pub fn burstgpt_profile(duration: f64, scale: f64, seed: u64) -> Self {
+        let mut rng = Rng::with_stream(seed, 0xb1257);
+        let mut knots = Vec::new();
+        let step = 30.0; // 30 s knots
+        let mut t = 0.0;
+        while t <= duration + step {
+            // slow sinusoid + lognormal burst noise
+            let base = 1.0 + 0.35 * (t / 480.0 * std::f64::consts::TAU).sin();
+            let burst = rng.lognormal(0.0, 0.35);
+            knots.push((t, (scale * base * burst).max(0.05)));
+            t += step;
+        }
+        Self::new(knots)
+    }
+
+    pub fn rate_at(&self, t: f64) -> f64 {
+        if t <= self.knots[0].0 {
+            return self.knots[0].1;
+        }
+        for w in self.knots.windows(2) {
+            let (t0, r0) = w[0];
+            let (t1, r1) = w[1];
+            if t <= t1 {
+                let f = if t1 > t0 { (t - t0) / (t1 - t0) } else { 0.0 };
+                return r0 + f * (r1 - r0);
+            }
+        }
+        self.knots.last().unwrap().1
+    }
+
+    pub fn end(&self) -> f64 {
+        self.knots.last().unwrap().0
+    }
+}
+
+impl ArrivalProcess for ReplayArrivals {
+    fn next_after(&mut self, t: f64, rng: &mut Rng) -> Option<f64> {
+        // Lewis–Shedler thinning
+        let mut cur = t;
+        loop {
+            cur += rng.exp(self.rate_max);
+            if cur > self.end() {
+                return None;
+            }
+            if rng.f64() < self.rate_at(cur) / self.rate_max {
+                return Some(cur);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_interarrivals_exponential() {
+        let mut p = PoissonArrivals::new(4.0);
+        let mut rng = Rng::new(1);
+        let mut t = 0.0;
+        let mut gaps = Vec::new();
+        for _ in 0..20_000 {
+            let n = p.next_after(t, &mut rng).unwrap();
+            gaps.push(n - t);
+            t = n;
+        }
+        let mean: f64 = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn replay_rate_interpolates() {
+        let r = ReplayArrivals::new(vec![(0.0, 2.0), (10.0, 4.0), (20.0, 4.0)]);
+        assert_eq!(r.rate_at(0.0), 2.0);
+        assert!((r.rate_at(5.0) - 3.0).abs() < 1e-9);
+        assert_eq!(r.rate_at(15.0), 4.0);
+        assert_eq!(r.rate_at(99.0), 4.0);
+    }
+
+    #[test]
+    fn replay_terminates_at_end() {
+        let mut r = ReplayArrivals::new(vec![(0.0, 5.0), (10.0, 5.0)]);
+        let mut rng = Rng::new(2);
+        let mut t = 0.0;
+        let mut count = 0;
+        while let Some(n) = r.next_after(t, &mut rng) {
+            assert!(n <= 10.0);
+            t = n;
+            count += 1;
+        }
+        // ~50 expected
+        assert!(count > 25 && count < 90, "count={count}");
+    }
+
+    #[test]
+    fn thinning_matches_envelope_rate() {
+        let mut r = ReplayArrivals::new(vec![(0.0, 1.0), (100.0, 9.0)]);
+        let mut rng = Rng::new(3);
+        let mut t = 0.0;
+        let (mut early, mut late) = (0, 0);
+        while let Some(n) = r.next_after(t, &mut rng) {
+            if n < 50.0 {
+                early += 1;
+            } else {
+                late += 1;
+            }
+            t = n;
+        }
+        // late half has ~2.3x the average rate of the early half
+        assert!(late as f64 > 1.5 * early as f64, "early={early} late={late}");
+    }
+
+    #[test]
+    fn burstgpt_profile_has_variance() {
+        let r = ReplayArrivals::burstgpt_profile(2520.0, 5.0, 7);
+        let rates: Vec<f64> = (0..84).map(|i| r.rate_at(i as f64 * 30.0)).collect();
+        let mean = rates.iter().sum::<f64>() / rates.len() as f64;
+        let min = rates.iter().cloned().fold(f64::MAX, f64::min);
+        let max = rates.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(mean > 2.0 && mean < 10.0, "mean={mean}");
+        assert!(max / min > 1.8, "profile too flat");
+    }
+}

@@ -1,0 +1,87 @@
+//! Workload substrate: request-shape generators fitted to the four datasets
+//! the paper evaluates (§6.1) plus arrival processes (Poisson, time-varying
+//! replay) and the hybrid mixer of §6.4.
+
+pub mod arrival;
+pub mod traces;
+
+pub use arrival::{ArrivalProcess, PoissonArrivals, ReplayArrivals};
+pub use traces::{TraceKind, TraceSampler};
+
+use crate::core::Request;
+use crate::util::rng::Rng;
+
+/// A stream of requests: shape sampler × arrival process.
+pub struct WorkloadGen {
+    sampler: TraceSampler,
+    arrivals: Box<dyn ArrivalProcess>,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl WorkloadGen {
+    pub fn new(sampler: TraceSampler, arrivals: Box<dyn ArrivalProcess>, seed: u64) -> Self {
+        WorkloadGen {
+            sampler,
+            arrivals,
+            rng: Rng::with_stream(seed, 0x51a7),
+            next_id: 0,
+        }
+    }
+
+    /// Generate all requests arriving within [0, duration) seconds.
+    pub fn generate(&mut self, duration: f64) -> Vec<Request> {
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t = match self.arrivals.next_after(t, &mut self.rng) {
+                Some(next) if next < duration => next,
+                _ => break,
+            };
+            let (p, d) = self.sampler.sample(t, &mut self.rng);
+            let id = self.next_id;
+            self.next_id += 1;
+            out.push(Request::new(id, t, p, d));
+        }
+        out
+    }
+}
+
+/// Convenience: `n`-requests-per-second Poisson stream of a named trace.
+pub fn poisson_workload(kind: TraceKind, qps: f64, duration: f64, seed: u64) -> Vec<Request> {
+    let mut gen = WorkloadGen::new(
+        TraceSampler::new(kind, seed),
+        Box::new(PoissonArrivals::new(qps)),
+        seed,
+    );
+    gen.generate(duration)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_sorted_arrivals_with_unique_ids() {
+        let reqs = poisson_workload(TraceKind::BurstGpt, 5.0, 60.0, 7);
+        assert!(!reqs.is_empty());
+        assert!(reqs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        let mut ids: Vec<_> = reqs.iter().map(|r| r.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), reqs.len());
+    }
+
+    #[test]
+    fn poisson_rate_approximately_honored() {
+        let reqs = poisson_workload(TraceKind::AzureCode, 10.0, 200.0, 11);
+        let rate = reqs.len() as f64 / 200.0;
+        assert!((rate - 10.0).abs() < 1.0, "rate={rate}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = poisson_workload(TraceKind::MiniReasoning, 3.0, 30.0, 42);
+        let b = poisson_workload(TraceKind::MiniReasoning, 3.0, 30.0, 42);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,199 @@
+//! Cross-module integration tests over the simulated substrate: the full
+//! arrival → global split → local batching → KV transfer → metrics path,
+//! plus the paper's headline qualitative claims as assertions.
+
+use dynaserve::baselines::{ColocPolicy, DisaggPolicy};
+use dynaserve::coordinator::{GlobalConfig, LocalConfig};
+use dynaserve::core::Request;
+use dynaserve::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+use dynaserve::experiments::runners::{build_sim, run_once, System};
+use dynaserve::metrics::SloConfig;
+use dynaserve::sim::{DynaServePolicy, Policy, SimConfig, Simulator};
+use dynaserve::util::proptest_lite::check;
+use dynaserve::workload::{poisson_workload, TraceKind};
+
+fn spec14() -> InstanceSpec {
+    InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1)
+}
+
+fn policies() -> Vec<Box<dyn Policy>> {
+    vec![
+        Box::new(ColocPolicy::new()),
+        Box::new(DisaggPolicy::new(1)),
+        Box::new(DynaServePolicy::new(GlobalConfig::default())),
+    ]
+}
+
+/// Token conservation: every decode token of every request is emitted
+/// exactly once, no matter the policy or the trace shape.
+#[test]
+fn token_conservation_across_policies() {
+    for kind in [TraceKind::BurstGpt, TraceKind::AzureCode, TraceKind::MiniReasoning] {
+        let reqs = poisson_workload(kind, 1.5, 30.0, 17);
+        let expect: usize = reqs.iter().map(|r| r.decode_len).sum();
+        for policy in policies() {
+            let name = policy.name();
+            let mut sim = Simulator::new(SimConfig::new(spec14(), 2), policy);
+            let s = sim.run(reqs.clone());
+            assert_eq!(s.completed, reqs.len(), "{name}/{kind:?} completions");
+            assert_eq!(s.total_tokens, expect, "{name}/{kind:?} tokens");
+        }
+    }
+}
+
+/// Property: under random traffic, the simulator terminates with all
+/// requests completed and non-negative TBT samples.
+#[test]
+fn sim_terminates_and_metrics_sane() {
+    check("sim termination", 12, |rng| {
+        let qps = 0.5 + rng.f64() * 3.0;
+        let seed = rng.next_u64();
+        let reqs = poisson_workload(TraceKind::BurstGpt, qps, 15.0, seed);
+        let n = reqs.len();
+        let mut sim = Simulator::new(
+            SimConfig::new(spec14(), 2),
+            Box::new(DynaServePolicy::new(GlobalConfig::default())),
+        );
+        let s = sim.run(reqs);
+        assert_eq!(s.completed, n);
+        assert!(s.p99_tbt.is_nan() || s.p99_tbt >= 0.0);
+        assert!(s.goodput_tok_s <= s.throughput_tok_s + 1e-9);
+    });
+}
+
+/// §2.4 headline: at saturating load on the prefill-heavy shape,
+/// colocation with chunked prefill blows the tail latency while
+/// disaggregation holds it.
+#[test]
+fn coloc_tail_blows_on_prefill_heavy_disagg_holds() {
+    let slo = SloConfig::default();
+    let llm = LlmSpec::qwen25_14b();
+    let kind = TraceKind::Fixed { prompt: 8192, decode: 32 };
+    let (coloc, _) = run_once(System::Coloc { chunk: 2048 }, &llm, kind, 1.2, 40.0, 3, slo);
+    let (disagg, _) = run_once(System::Disagg, &llm, kind, 1.2, 40.0, 3, slo);
+    assert!(
+        coloc.p99_tbt > slo.tbt,
+        "coloc p99 {:.1}ms should breach the SLO",
+        coloc.p99_tbt * 1e3
+    );
+    assert!(
+        disagg.p99_tbt < coloc.p99_tbt,
+        "disagg p99 {:.1}ms vs coloc {:.1}ms",
+        disagg.p99_tbt * 1e3,
+        coloc.p99_tbt * 1e3
+    );
+}
+
+/// §6.3 headline: DynaServe's goodput at high load beats both baselines on
+/// an imbalanced workload.
+#[test]
+fn dynaserve_goodput_wins_under_pressure() {
+    let slo = SloConfig::default();
+    let llm = LlmSpec::qwen25_14b();
+    let kind = TraceKind::MiniReasoning;
+    let qps = 3.0;
+    let (dy, _) = run_once(System::DynaServe, &llm, kind, qps, 60.0, 11, slo);
+    let (co, _) = run_once(System::Coloc { chunk: 512 }, &llm, kind, qps, 60.0, 11, slo);
+    let (di, _) = run_once(System::Disagg, &llm, kind, qps, 60.0, 11, slo);
+    assert!(
+        dy.goodput_tok_s >= co.goodput_tok_s * 0.95,
+        "dynaserve {:.0} vs coloc {:.0}",
+        dy.goodput_tok_s,
+        co.goodput_tok_s
+    );
+    assert!(
+        dy.goodput_tok_s >= di.goodput_tok_s * 0.95,
+        "dynaserve {:.0} vs disagg {:.0}",
+        dy.goodput_tok_s,
+        di.goodput_tok_s
+    );
+}
+
+/// Chunked KV transfer exposes far less latency than at-handoff transfer
+/// on a decode-heavy split workload (§6.6).
+#[test]
+fn chunked_transfer_reduces_exposed_time() {
+    let reqs = poisson_workload(TraceKind::MiniReasoning, 2.0, 60.0, 23);
+    let mut sim = Simulator::new(
+        SimConfig::new(spec14(), 2),
+        Box::new(DynaServePolicy::new(GlobalConfig::default())),
+    );
+    sim.run(reqs);
+    assert!(sim.transfer.transfers > 0, "splits should induce transfers");
+    assert!(
+        sim.transfer.chunked_exposed < sim.transfer.mono_exposed * 0.5,
+        "chunked {:.4}s vs mono {:.4}s",
+        sim.transfer.chunked_exposed,
+        sim.transfer.mono_exposed
+    );
+}
+
+/// SLO-aware batching (Algorithm 2) vs a fixed chunk budget: attainment
+/// must improve materially (Figure 11's ablation).
+#[test]
+fn slo_aware_batching_beats_fixed_budget() {
+    let llm = LlmSpec::qwen25_14b();
+    let slo = SloConfig::default();
+    let reqs = poisson_workload(TraceKind::AzureCode, 1.5, 60.0, 31);
+
+    let mut aware = build_sim(System::DynaServe, &llm, slo);
+    let s_aware = aware.run(reqs.clone());
+
+    let mut cfg = SimConfig::new(spec14(), 2);
+    cfg.local = LocalConfig { fixed_budget: Some(2048), ..LocalConfig::default() };
+    let mut fixed = Simulator::new(cfg, Box::new(DynaServePolicy::new(GlobalConfig::default())));
+    let s_fixed = fixed.run(reqs);
+
+    assert!(
+        s_aware.attainment > s_fixed.attainment,
+        "aware {:.3} vs fixed {:.3}",
+        s_aware.attainment,
+        s_fixed.attainment
+    );
+    assert!(s_aware.p99_tbt < s_fixed.p99_tbt);
+}
+
+/// Early-termination robustness: wildly wrong length predictions never
+/// lose or duplicate tokens.
+#[test]
+fn prediction_error_token_conservation() {
+    check("prediction error conservation", 10, |rng| {
+        let mut reqs = Vec::new();
+        for i in 0..30 {
+            let p = rng.range(64, 4096) as usize;
+            let d = rng.range(1, 1200) as usize;
+            let mut r = Request::new(i, i as f64 * 0.4, p, d);
+            // prediction anywhere from 25% to 400% of truth
+            let f = 0.25 + rng.f64() * 3.75;
+            r.predicted_decode = ((d as f64 * f) as usize).max(1);
+            reqs.push(r);
+        }
+        let expect: usize = reqs.iter().map(|r| r.decode_len).sum();
+        let mut sim = Simulator::new(
+            SimConfig::new(spec14(), 2),
+            Box::new(DynaServePolicy::new(GlobalConfig::default())),
+        );
+        let s = sim.run(reqs);
+        assert_eq!(s.total_tokens, expect);
+        assert_eq!(s.completed, 30);
+    });
+}
+
+/// Four instances: the unified pool balances and still conserves tokens.
+#[test]
+fn four_instance_pool() {
+    let reqs = poisson_workload(TraceKind::Hybrid, 4.0, 30.0, 41);
+    let expect: usize = reqs.iter().map(|r| r.decode_len).sum();
+    let n = reqs.len();
+    let mut sim = Simulator::new(
+        SimConfig::new(spec14(), 4),
+        Box::new(DynaServePolicy::new(GlobalConfig::default())),
+    );
+    let s = sim.run(reqs);
+    assert_eq!(s.completed, n);
+    assert_eq!(s.total_tokens, expect);
+    // all four instances did work
+    for inst in &sim.instances {
+        assert!(inst.stats.iterations > 0, "instance {} idle", inst.id);
+    }
+}
