@@ -1,0 +1,30 @@
+# Build-time entry points. The request path is pure Rust; Python runs only
+# here, to produce the AOT artifacts the PJRT engine loads (DESIGN.md §2).
+
+ARTIFACTS ?= artifacts
+PYTHON    ?= python3
+
+.PHONY: artifacts build test bench experiments clean
+
+# Lower the TinyQwen step function to HLO text + params + manifest.
+# ARTIFACTS resolves against the repo root for both this and `clean`.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out $(abspath $(ARTIFACTS))
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --bench bench_schedulers
+	cargo bench --bench bench_sim
+	cargo bench --bench bench_kv
+
+experiments:
+	cargo run --release --bin experiments -- all
+
+clean:
+	cargo clean
+	rm -rf $(ARTIFACTS) results

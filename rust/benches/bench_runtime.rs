@@ -5,8 +5,14 @@ use dynaserve::runtime::Engine;
 use dynaserve::util::benchkit::{bench, black_box};
 
 fn main() {
-    let dir = std::env::args().skip(1).find(|a| !a.starts_with('-')).unwrap_or_else(|| "artifacts".into());
-    let engine = match Engine::load(&dir) {
+    // Bench binaries run with CWD = rust/, but `make artifacts` writes to
+    // the repository root — with no explicit dir argument, accept both.
+    let loaded = match std::env::args().skip(1).find(|a| !a.starts_with('-')) {
+        Some(dir) => Engine::load(&dir),
+        None => Engine::load("artifacts")
+            .or_else(|_| Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts"))),
+    };
+    let engine = match loaded {
         Ok(e) => e,
         Err(e) => {
             eprintln!("skipping runtime benches (artifacts not built?): {e:#}");

@@ -43,7 +43,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         }
         println!("--- {} ---", kind.name());
         let mut t = Table::new(["minute", "prompt tok", "output tok", "balanced tok", "regime"]);
-        let mut decode_heavy = 0;
+        let mut decode_heavy = 0usize;
         let mut rows = Vec::new();
         for m in 0..minutes {
             let balanced = (prompt[m] as f64 / prefill_rate) * decode_rate;

@@ -18,11 +18,22 @@ pub struct BlockAllocator {
     allocated: HashMap<RequestId, Vec<BlockId>>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum KvError {
-    #[error("out of KV blocks: need {need}, free {free}")]
     OutOfBlocks { need: usize, free: usize },
 }
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfBlocks { need, free } => {
+                write!(f, "out of KV blocks: need {need}, free {free}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
 
 impl BlockAllocator {
     pub fn new(total_blocks: usize, block_tokens: usize) -> Self {

@@ -1,5 +1,6 @@
-//! # DynaServe — unified and elastic execution for dynamic disaggregated
-//! # LLM serving (reproduction)
+//! # DynaServe (reproduction)
+//!
+//! Unified and elastic execution for dynamic disaggregated LLM serving.
 //!
 //! A three-layer Rust + JAX + Pallas reproduction of the DynaServe paper
 //! (Ruan et al., 2025). This crate is Layer 3: the serving coordinator —
@@ -8,7 +9,8 @@
 //! PD-disaggregation baselines, the analytical A100 cost model and
 //! discrete-event simulator used to reproduce the paper's evaluation, and
 //! a live serving path that executes a real (tiny) transformer through
-//! AOT-compiled XLA artifacts via PJRT.
+//! AOT-compiled XLA artifacts via PJRT (behind the `pjrt` cargo feature;
+//! the default build substitutes a compile-clean stub backend).
 //!
 //! Layers 1 and 2 (the Pallas attention kernels and the JAX model) live in
 //! `python/compile/` and run only at build time (`make artifacts`); Python

@@ -7,6 +7,10 @@
 //!   simulate  run one A100-scale simulated workload and print the summary.
 //!   calibrate measure PJRT step latencies and print the profile seed.
 //!
+//! `serve` and `calibrate` need the live engine (`--features pjrt` plus
+//! `make artifacts`); `simulate` always works — the default build ships a
+//! stub execution backend so the simulator runs with no XLA toolchain.
+//!
 //! Examples:
 //!   dynaserve serve --requests 32 --qps 4 --artifacts artifacts
 //!   dynaserve simulate --system dynaserve --workload burstgpt --qps 4
@@ -26,9 +30,9 @@ fn main() -> anyhow::Result<()> {
         Some("calibrate") => calibrate(&args),
         _ => {
             eprintln!("usage: dynaserve <serve|simulate|calibrate> [flags]");
-            eprintln!("  serve     --requests N --qps Q --artifacts DIR [--instances 2] [--workload NAME]");
+            eprintln!("  serve     --requests N --qps Q --artifacts DIR [--instances 2] [--workload NAME]   (needs --features pjrt)");
             eprintln!("  simulate  --system <dynaserve|coloc|disagg> --workload NAME --qps Q [--duration S] [--model 14b]");
-            eprintln!("  calibrate --artifacts DIR");
+            eprintln!("  calibrate --artifacts DIR   (needs --features pjrt)");
             Ok(())
         }
     }

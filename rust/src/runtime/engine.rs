@@ -16,26 +16,7 @@ use anyhow::{Context, Result};
 use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use super::manifest::{Bucket, Manifest};
-
-/// Host-resident KV cache of one sequence: layout [L, Hkv, S, D].
-#[derive(Debug, Clone)]
-pub struct KvState {
-    pub k: Vec<f32>,
-    pub v: Vec<f32>,
-    /// Cache capacity S this state is laid out for.
-    pub capacity: usize,
-    /// Tokens resident.
-    pub len: usize,
-}
-
-/// Result of one step call.
-#[derive(Debug)]
-pub struct StepOutput {
-    /// [B_real, vocab] logits at each sequence's last real token.
-    pub logits: Vec<Vec<f32>>,
-    /// Wall-clock execution latency (seconds).
-    pub latency: f64,
-}
+use super::state::{KvState, StepOutput};
 
 pub struct Engine {
     #[allow(dead_code)]
@@ -98,26 +79,12 @@ impl Engine {
 
     /// Fresh empty KV state at `capacity`.
     pub fn new_kv(&self, capacity: usize) -> KvState {
-        let n = self.layers * self.kv_heads * capacity * self.head_dim;
-        KvState { k: vec![0.0; n], v: vec![0.0; n], capacity, len: 0 }
+        KvState::zeroed(self.layers, self.kv_heads, self.head_dim, capacity)
     }
 
     /// Re-pad a KV state to a larger capacity.
     pub fn grow_kv(&self, kv: &KvState, capacity: usize) -> KvState {
-        assert!(capacity >= kv.capacity);
-        let mut out = self.new_kv(capacity);
-        out.len = kv.len;
-        let (l, h, d) = (self.layers, self.kv_heads, self.head_dim);
-        for li in 0..l {
-            for hi in 0..h {
-                let src = ((li * h) + hi) * kv.capacity * d;
-                let dst = ((li * h) + hi) * capacity * d;
-                let n = kv.capacity * d;
-                out.k[dst..dst + n].copy_from_slice(&kv.k[src..src + n]);
-                out.v[dst..dst + n].copy_from_slice(&kv.v[src..src + n]);
-            }
-        }
-        out
+        kv.grown(self.layers, self.kv_heads, self.head_dim, capacity)
     }
 
     /// Pack per-sequence KV slots into the bucket batch layout
@@ -257,13 +224,7 @@ impl Engine {
 
     /// Greedy next token from logits.
     pub fn argmax(logits: &[f32]) -> i32 {
-        let mut best = 0;
-        for (i, v) in logits.iter().enumerate() {
-            if *v > logits[best] {
-                best = i;
-            }
-        }
-        best as i32
+        super::state::argmax(logits)
     }
 
     /// Measure per-bucket step latency (mean of `reps`), for profile

@@ -3,9 +3,25 @@
 //! PJRT CPU client, and executes step calls from the Rust hot path. Python
 //! is never involved at runtime — the Rust binary is self-contained once
 //! `artifacts/` exists.
+//!
+//! The XLA dependency is gated behind the `pjrt` cargo feature. The default
+//! build substitutes a compile-clean stub [`Engine`] with the same API that
+//! refuses to execute (see `stub.rs`), so the simulator, schedulers and
+//! experiments build and test with no XLA toolchain installed. DESIGN.md §2
+//! documents the artifact ABI.
 
-pub mod engine;
 pub mod manifest;
+mod state;
 
-pub use engine::{Engine, KvState, StepOutput};
+#[cfg(feature = "pjrt")]
+mod engine;
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Engine;
+
 pub use manifest::{Bucket, Manifest, ModelMeta, ParamEntry};
+pub use state::{KvState, StepOutput};

@@ -1,0 +1,114 @@
+//! Host-resident execution state shared by the PJRT engine and the default
+//! stub backend: per-sequence KV caches and step outputs. Keeping these
+//! types outside the feature gate means every consumer (the live server,
+//! the KV-transfer path, tests) compiles identically with or without
+//! `--features pjrt`.
+
+/// Host-resident KV cache of one sequence: layout `[L, Hkv, S, D]`.
+#[derive(Debug, Clone)]
+pub struct KvState {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Cache capacity S this state is laid out for.
+    pub capacity: usize,
+    /// Tokens resident.
+    pub len: usize,
+}
+
+impl KvState {
+    /// Fresh zeroed state for a (layers, kv_heads, head_dim) geometry.
+    pub(crate) fn zeroed(
+        layers: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        capacity: usize,
+    ) -> KvState {
+        let n = layers * kv_heads * capacity * head_dim;
+        KvState { k: vec![0.0; n], v: vec![0.0; n], capacity, len: 0 }
+    }
+
+    /// Re-layout into a larger capacity (capacity promotion): token rows
+    /// keep their positions, the tail stays zero.
+    pub(crate) fn grown(
+        &self,
+        layers: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        capacity: usize,
+    ) -> KvState {
+        assert!(capacity >= self.capacity);
+        let mut out = Self::zeroed(layers, kv_heads, head_dim, capacity);
+        out.len = self.len;
+        let (l, h, d) = (layers, kv_heads, head_dim);
+        for li in 0..l {
+            for hi in 0..h {
+                let src = ((li * h) + hi) * self.capacity * d;
+                let dst = ((li * h) + hi) * capacity * d;
+                let n = self.capacity * d;
+                out.k[dst..dst + n].copy_from_slice(&self.k[src..src + n]);
+                out.v[dst..dst + n].copy_from_slice(&self.v[src..src + n]);
+            }
+        }
+        out
+    }
+}
+
+/// Result of one step call.
+#[derive(Debug)]
+pub struct StepOutput {
+    /// `[B_real, vocab]` logits at each sequence's last real token.
+    pub logits: Vec<Vec<f32>>,
+    /// Wall-clock execution latency (seconds).
+    pub latency: f64,
+}
+
+/// Greedy next token from logits.
+pub(crate) fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0;
+    for (i, v) in logits.iter().enumerate() {
+        if *v > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grown_preserves_rows_and_len() {
+        let (l, h, d) = (2usize, 2usize, 4usize);
+        let mut kv = KvState::zeroed(l, h, d, 8);
+        kv.len = 3;
+        for (i, x) in kv.k.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        for (i, x) in kv.v.iter_mut().enumerate() {
+            *x = -(i as f32);
+        }
+        let big = kv.grown(l, h, d, 16);
+        assert_eq!(big.capacity, 16);
+        assert_eq!(big.len, 3);
+        for li in 0..l {
+            for hi in 0..h {
+                for s in 0..8 {
+                    for di in 0..d {
+                        let small_idx = (((li * h) + hi) * 8 + s) * d + di;
+                        let big_idx = (((li * h) + hi) * 16 + s) * d + di;
+                        assert_eq!(big.k[big_idx], kv.k[small_idx]);
+                        assert_eq!(big.v[big_idx], kv.v[small_idx]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[2.0, 2.0]), 0);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+}

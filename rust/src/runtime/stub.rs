@@ -1,0 +1,112 @@
+//! Stub execution backend — compiled when the `pjrt` feature is off (the
+//! default). It mirrors the live engine's public API exactly so every
+//! consumer (server, CLI, benches, integration tests) type-checks without
+//! the `xla` bindings, but it refuses to execute: loading reports that the
+//! feature is disabled, and the callers that only need artifacts
+//! validation still get the real `Manifest` errors first.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::manifest::{Bucket, Manifest};
+use super::state::{KvState, StepOutput};
+
+const DISABLED: &str = "dynaserve was built without the `pjrt` cargo feature; \
+    the live execution path needs `cargo build --features pjrt` \
+    (plus `make artifacts` for the AOT-compiled HLO)";
+
+/// API twin of the PJRT engine (see `engine.rs` behind `--features pjrt`).
+pub struct Engine {
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Validate the artifact directory (same errors as the live engine for
+    /// a missing/broken manifest), then refuse: executing the HLO needs
+    /// the PJRT client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let _ = Manifest::load(&dir)?;
+        anyhow::bail!(DISABLED)
+    }
+
+    /// Fresh empty KV state at `capacity`.
+    pub fn new_kv(&self, capacity: usize) -> KvState {
+        let m = &self.manifest.model;
+        KvState::zeroed(m.n_layers, m.n_kv_heads, m.head_dim, capacity)
+    }
+
+    /// Re-pad a KV state to a larger capacity.
+    pub fn grow_kv(&self, kv: &KvState, capacity: usize) -> KvState {
+        let m = &self.manifest.model;
+        kv.grown(m.n_layers, m.n_kv_heads, m.head_dim, capacity)
+    }
+
+    /// Always errors: there is no executor in the stub backend.
+    pub fn step(
+        &self,
+        _bucket: &Bucket,
+        _seqs: &mut [&mut KvState],
+        _chunks: &[&[i32]],
+    ) -> Result<StepOutput> {
+        anyhow::bail!(DISABLED)
+    }
+
+    /// Greedy next token from logits.
+    pub fn argmax(logits: &[f32]) -> i32 {
+        super::state::argmax(logits)
+    }
+
+    /// Always errors: calibration measures real step latencies.
+    pub fn calibrate(&self, _reps: usize) -> Result<Vec<(String, f64)>> {
+        anyhow::bail!(DISABLED)
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.manifest.buckets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_feature_disabled_or_missing_artifacts() {
+        // missing dir: the manifest error (with its `make artifacts` hint)
+        // surfaces first, exactly like the live engine
+        let err = Engine::load("/nonexistent-dir-xyz").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn stub_refuses_execution_with_a_clear_error() {
+        // a manifest fixture is enough to build the stub engine directly
+        let dir = std::env::temp_dir().join(format!("dyn-stub-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+            "model": {"family":"tinyqwen","vocab":256,"d_model":128,"n_layers":4,
+                      "n_q_heads":4,"n_kv_heads":2,"head_dim":32,"param_count":6,
+                      "attn_impl":"pallas_flash","seed":42},
+            "params_file": "params.bin",
+            "params": [{"name":"embed","shape":[2,3],"offset":0,"len":6}],
+            "buckets": [
+              {"name":"step_b1_c1_s128","batch":1,"chunk":1,"capacity":128,"file":"a.hlo.txt"}
+            ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let engine = Engine { manifest: Manifest::load(&dir).unwrap() };
+        let mut kv = engine.new_kv(16);
+        assert_eq!(kv.capacity, 16);
+        assert_eq!(kv.k.len(), 4 * 2 * 16 * 32);
+        let grown = engine.grow_kv(&kv, 32);
+        assert_eq!(grown.capacity, 32);
+        let bucket = engine.buckets()[0].clone();
+        let err = engine
+            .step(&bucket, &mut [&mut kv], &[&[1, 2, 3]])
+            .unwrap_err();
+        assert!(err.to_string().contains("pjrt"));
+        assert!(engine.calibrate(1).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

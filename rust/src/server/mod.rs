@@ -146,6 +146,12 @@ fn scale_shape(kind: TraceKind, p: usize, d: usize, max_ctx: usize) -> (usize, u
 }
 
 pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
+    anyhow::ensure!(cfg.n_instances > 0, "need at least one instance");
+    anyhow::ensure!(
+        cfg!(feature = "pjrt"),
+        "`serve` drives the live PJRT engine; rebuild with `cargo build --features pjrt` \
+         (the default build ships the stub backend — see README.md)"
+    );
     let epoch = Instant::now();
     let t = |i: Instant| i.duration_since(epoch).as_secs_f64();
 
@@ -215,10 +221,24 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     }
 
     // ── leader: wait for calibration, then schedule arrivals ───────────
+    // Bounded wait: if every instance thread died (missing artifacts, engine
+    // failure) the calibration slot never fills and we must error, not hang.
+    let calib_deadline = Instant::now() + std::time::Duration::from_secs(300);
     let profile = loop {
         if let Some(p) = calib.lock().unwrap().clone() {
             break p;
         }
+        // A healthy instance thread never exits before calibration, so any
+        // finished handle here means its engine failed to come up.
+        anyhow::ensure!(
+            !joins.iter().any(|(_, j)| j.is_finished()),
+            "an instance failed before calibration (artifacts missing or engine \
+             failed; see per-instance errors above)"
+        );
+        anyhow::ensure!(
+            Instant::now() < calib_deadline,
+            "instances never finished calibration within 300s"
+        );
         thread::sleep(std::time::Duration::from_millis(20));
     };
     let llm = LlmSpec::tinyqwen();

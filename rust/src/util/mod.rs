@@ -1,6 +1,6 @@
 //! In-repo substrates replacing crates absent from the offline vendor set
-//! (`rand`, `serde_json`, `clap`, `proptest`). See Cargo.toml's dependency
-//! note and DESIGN.md §1.
+//! (`rand`, `serde_json`, `clap`, `proptest`, `criterion`). See the
+//! dependency note at the top of rust/Cargo.toml and DESIGN.md §1.
 
 pub mod benchkit;
 pub mod cli;

@@ -3,8 +3,7 @@
 //! `check` runs a property over `n` seeded random cases; on failure it
 //! reports the failing seed so the case can be replayed deterministically:
 //!
-//! ```rust,no_run
-//! // (no_run: doctest binaries miss the xla rpath in this offline image)
+//! ```rust
 //! use dynaserve::util::proptest_lite::check;
 //! check("split covers request", 200, |rng| {
 //!     let len = rng.range(1, 1000);

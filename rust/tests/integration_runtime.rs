@@ -5,13 +5,20 @@
 use dynaserve::runtime::Engine;
 
 fn engine() -> Option<Engine> {
-    match Engine::load("artifacts") {
-        Ok(e) => Some(e),
-        Err(e) => {
-            eprintln!("skipping runtime test (run `make artifacts`): {e:#}");
-            None
+    // Test binaries run with CWD = rust/, but `make artifacts` writes to
+    // the repository root — accept both locations.
+    let mut last_err = None;
+    for dir in ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts")] {
+        match Engine::load(dir) {
+            Ok(e) => return Some(e),
+            Err(e) => last_err = Some(e),
         }
     }
+    eprintln!(
+        "skipping runtime test (run `make artifacts`): {:#}",
+        last_err.expect("at least one candidate tried")
+    );
+    None
 }
 
 /// Deterministic generation: same prompt → same continuation, twice.

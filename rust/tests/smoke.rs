@@ -1,0 +1,87 @@
+//! Smoke tests guarding the entry points CI never executes: every
+//! `TraceKind::by_name` alias must round-trip, and `run_once` must
+//! complete for each `System` variant on a short simulated horizon (the
+//! bench and experiment harnesses all funnel through `run_once`, so a
+//! regression here would otherwise only surface when someone runs them by
+//! hand).
+
+use dynaserve::costmodel::LlmSpec;
+use dynaserve::experiments::runners::{coloc_chunk_for, run_once, System};
+use dynaserve::metrics::SloConfig;
+use dynaserve::workload::TraceKind;
+
+/// Every documented alias resolves, and the kind's canonical name resolves
+/// back to the same kind.
+#[test]
+fn trace_kind_aliases_round_trip() {
+    let aliases: [(&str, TraceKind); 7] = [
+        ("azure-code", TraceKind::AzureCode),
+        ("azurecode", TraceKind::AzureCode),
+        ("burstgpt", TraceKind::BurstGpt),
+        ("arxiv", TraceKind::ArxivSumm),
+        ("arxiv-summ", TraceKind::ArxivSumm),
+        ("mini-reasoning", TraceKind::MiniReasoning),
+        ("reasoning", TraceKind::MiniReasoning),
+    ];
+    for (alias, kind) in aliases {
+        let resolved = TraceKind::by_name(alias)
+            .unwrap_or_else(|| panic!("alias '{alias}' must resolve"));
+        assert_eq!(resolved, kind, "alias '{alias}'");
+        // canonical name round-trips to the same kind
+        assert_eq!(
+            TraceKind::by_name(&resolved.name()),
+            Some(kind),
+            "canonical name '{}' must round-trip",
+            resolved.name()
+        );
+    }
+    // hybrid round-trips too
+    assert_eq!(TraceKind::by_name("hybrid"), Some(TraceKind::Hybrid));
+    assert_eq!(TraceKind::by_name(&TraceKind::Hybrid.name()), Some(TraceKind::Hybrid));
+    // all_datasets covered by by_name
+    for k in TraceKind::all_datasets() {
+        assert_eq!(TraceKind::by_name(&k.name()), Some(k));
+    }
+    // Fixed shapes are synthetic: they print a name but have no alias
+    let fixed = TraceKind::Fixed { prompt: 64, decode: 8 };
+    assert_eq!(fixed.name(), "fixed-p64-d8");
+    assert_eq!(TraceKind::by_name(&fixed.name()), None);
+    // unknown names stay unknown
+    assert_eq!(TraceKind::by_name("no-such-trace"), None);
+}
+
+/// `run_once` completes for every `System` variant on a 2-simulated-second
+/// horizon and leaves no stuck segments behind.
+#[test]
+fn run_once_completes_for_every_system() {
+    let llm = LlmSpec::qwen25_14b();
+    let slo = SloConfig::default();
+    let kind = TraceKind::BurstGpt;
+    let systems = [
+        System::Coloc { chunk: coloc_chunk_for(kind) },
+        System::Disagg,
+        System::DynaServe,
+    ];
+    for sys in systems {
+        // 10 qps over a 2 s arrival window: ~20 requests, deterministic
+        // under seed 7, and the simulator always runs them to completion.
+        let (summary, sim) = run_once(sys, &llm, kind, 10.0, 2.0, 7, slo);
+        assert!(
+            summary.completed > 0,
+            "{}: no requests completed on the smoke horizon",
+            sys.name()
+        );
+        assert!(summary.total_tokens > 0, "{}: no tokens emitted", sys.name());
+        assert_eq!(
+            sim.stuck_requests(),
+            0,
+            "{}: segments left resident after drain",
+            sys.name()
+        );
+        assert!(
+            summary.goodput_tok_s <= summary.throughput_tok_s + 1e-9,
+            "{}: goodput exceeds throughput",
+            sys.name()
+        );
+    }
+}
