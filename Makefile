@@ -6,10 +6,15 @@ PYTHON    ?= python3
 
 .PHONY: artifacts build test bench experiments clean
 
-# Lower the TinyQwen step function to HLO text + params + manifest.
+# Lower the TinyQwen step function to HLO text + params + manifest, and
+# snapshot the simulator bench rows to BENCH_sim.json so every artifact
+# drop carries the perf trajectory (EXPERIMENTS.md §Perf).
 # ARTIFACTS resolves against the repo root for both this and `clean`.
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out $(abspath $(ARTIFACTS))
+	DYNASERVE_BENCH_BUDGET=1 \
+	DYNASERVE_BENCH_JSON=$(abspath $(ARTIFACTS))/BENCH_sim.json \
+		cargo bench --bench bench_sim
 
 build:
 	cargo build --release

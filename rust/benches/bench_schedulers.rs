@@ -3,10 +3,10 @@
 //! search), Algorithm 2 (local batch composition) and the execution
 //! predictor probe.
 use dynaserve::coordinator::local::{DecodeEntry, PrefillEntry};
-use dynaserve::coordinator::predictor::{completion_time, PredictorConfig};
+use dynaserve::coordinator::predictor::{completion_time, completion_time_digest, PredictorConfig};
 use dynaserve::coordinator::{
-    GlobalConfig, GlobalScheduler, InstanceSnapshot, LocalConfig, LocalScheduler, ProfileTable,
-    WorkItem,
+    GlobalConfig, GlobalScheduler, InstanceSnapshot, LoadDigest, LocalConfig, LocalScheduler,
+    ProfileTable, WorkItem,
 };
 use dynaserve::core::Request;
 use dynaserve::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
@@ -25,18 +25,25 @@ fn main() {
         })
         .collect();
     let snaps: Vec<InstanceSnapshot> = (0..2)
-        .map(|id| InstanceSnapshot { id, work: work.clone(), kv_utilization: 0.4 })
+        .map(|id| InstanceSnapshot { id, work: work.clone(), kv_utilization: 0.4, waiting: 0 })
         .collect();
+    let loads: Vec<LoadDigest> = snaps.iter().map(LoadDigest::from_snapshot).collect();
 
     let mut global = GlobalScheduler::new(GlobalConfig::default());
     let req = Request::new(1, 0.0, 2048, 512);
-    bench("global: Algorithm 1 split decision (loaded pool)", 2.0, || {
-        black_box(global.schedule(&req, &snaps, &profile));
+    bench("global: Algorithm 1 split (digest path, loaded)", 2.0, || {
+        black_box(global.schedule(&req, &loads, &profile));
+    });
+    bench("global: Algorithm 1 split (exact snapshots)", 2.0, || {
+        black_box(global.schedule_exact(&req, &snaps, &profile));
     });
 
     let pcfg = PredictorConfig::default();
     bench("predictor: completion-time probe (64 items)", 2.0, || {
         black_box(completion_time(&work, &profile, &pcfg));
+    });
+    bench("predictor: digest probe (64-item digest)", 2.0, || {
+        black_box(completion_time_digest(&loads[0], None, &profile, &pcfg));
     });
 
     let mut local = LocalScheduler::new(LocalConfig::default(), profile.clone());

@@ -1,21 +1,27 @@
 //! End-to-end simulation benches — one per comparison row: how much wall
 //! time one simulated serving second costs for each policy (these power
 //! every table/figure harness, so their speed bounds experiment turnaround).
+//!
+//! `DYNASERVE_BENCH_JSON=path` additionally writes the rows as JSON —
+//! `make artifacts` uses this to emit `BENCH_sim.json` so the perf
+//! trajectory is tracked per PR (EXPERIMENTS.md §Perf).
 use dynaserve::costmodel::LlmSpec;
 use dynaserve::experiments::runners::{run_once, System};
 use dynaserve::metrics::SloConfig;
-use dynaserve::util::benchkit::{bench, black_box};
+use dynaserve::util::benchkit::{bench, black_box, write_json_report};
 use dynaserve::workload::TraceKind;
 
 fn main() {
     let llm = LlmSpec::qwen25_14b();
     let slo = SloConfig::default();
+    let mut results = Vec::new();
     for sys in [System::Coloc { chunk: 1024 }, System::Disagg, System::DynaServe] {
-        bench(&format!("sim: 30s BurstGPT @4qps [{}]", sys.name()), 4.0, || {
+        results.push(bench(&format!("sim: 30s BurstGPT @4qps [{}]", sys.name()), 4.0, || {
             black_box(run_once(sys, &llm, TraceKind::BurstGpt, 4.0, 30.0, 7, slo).0);
-        });
+        }));
     }
-    bench("sim: 30s MiniReasoning @2qps [DynaServe]", 4.0, || {
+    results.push(bench("sim: 30s MiniReasoning @2qps [DynaServe]", 4.0, || {
         black_box(run_once(System::DynaServe, &llm, TraceKind::MiniReasoning, 2.0, 30.0, 7, slo).0);
-    });
+    }));
+    write_json_report(&results);
 }

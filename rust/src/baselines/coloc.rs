@@ -4,7 +4,7 @@
 //! a fixed size with decodes (configure via `LocalConfig::fixed_budget`).
 
 use crate::coordinator::router::RoundRobin;
-use crate::coordinator::{InstanceSnapshot, ProfileTable};
+use crate::coordinator::{LoadDigest, ProfileTable};
 use crate::core::{MicroRequest, Request, Role};
 use crate::sim::policy::{Placement, Policy};
 
@@ -32,10 +32,10 @@ impl Policy for ColocPolicy {
     fn place(
         &mut self,
         req: &Request,
-        snapshots: &[InstanceSnapshot],
+        loads: &[LoadDigest],
         _profile: &ProfileTable,
     ) -> Placement {
-        let instance = snapshots[self.rr.pick(snapshots.len())].id;
+        let instance = loads[self.rr.pick(loads.len())].id;
         Placement {
             alpha: MicroRequest {
                 request: req.id,
@@ -61,14 +61,12 @@ mod tests {
     fn round_robin_no_split() {
         let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
         let profile = ProfileTable::seeded(&spec);
-        let snaps: Vec<InstanceSnapshot> = (0..2)
-            .map(|id| InstanceSnapshot { id, work: vec![], kv_utilization: 0.0 })
-            .collect();
+        let loads: Vec<LoadDigest> = (0..2).map(LoadDigest::idle).collect();
         let mut p = ColocPolicy::new();
         let mut targets = Vec::new();
         for i in 0..4 {
             let req = Request::new(i, 0.0, 100, 50);
-            let pl = p.place(&req, &snaps, &profile);
+            let pl = p.place(&req, &loads, &profile);
             assert!(pl.beta.is_none());
             assert_eq!(pl.alpha.len(), 150);
             targets.push(pl.alpha.instance);

@@ -1,9 +1,10 @@
 //! PD disaggregation (DistServe/Splitwise/vLLM-PD style, §2.2): dedicated
 //! prefill and decode pools; every request splits exactly at the
 //! prefill/decode boundary (s = P) and the KV cache is handed off after
-//! prefill completes. Placement inside each pool is least-loaded.
+//! prefill completes. Placement inside each pool is least-loaded — all of
+//! it computable from the O(1) load digests.
 
-use crate::coordinator::{InstanceSnapshot, ProfileTable};
+use crate::coordinator::{LoadDigest, ProfileTable};
 use crate::core::{MicroRequest, Request, Role};
 use crate::sim::policy::{Placement, Policy};
 
@@ -27,20 +28,20 @@ impl Policy for DisaggPolicy {
     fn place(
         &mut self,
         req: &Request,
-        snapshots: &[InstanceSnapshot],
+        loads: &[LoadDigest],
         _profile: &ProfileTable,
     ) -> Placement {
-        assert!(snapshots.len() > self.n_prefill, "need at least one decode instance");
+        assert!(loads.len() > self.n_prefill, "need at least one decode instance");
         // least queued prefill tokens in the prefill pool
-        let p_inst = snapshots[..self.n_prefill]
+        let p_inst = loads[..self.n_prefill]
             .iter()
-            .min_by_key(|s| s.queued_prefill_tokens())
+            .min_by_key(|d| d.queued_prefill_tokens())
             .unwrap()
             .id;
         // fewest active decodes in the decode pool
-        let d_inst = snapshots[self.n_prefill..]
+        let d_inst = loads[self.n_prefill..]
             .iter()
-            .min_by_key(|s| (s.active_decodes(), (s.kv_utilization * 1e6) as u64))
+            .min_by_key(|d| (d.active_decodes(), (d.kv_utilization * 1e6) as u64))
             .unwrap()
             .id;
         let p = req.prompt_len;
@@ -72,7 +73,7 @@ impl Policy for DisaggPolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::WorkItem;
+    use crate::coordinator::{InstanceSnapshot, WorkItem};
     use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
 
     fn profile() -> ProfileTable {
@@ -81,12 +82,10 @@ mod tests {
 
     #[test]
     fn splits_exactly_at_pd_boundary() {
-        let snaps: Vec<InstanceSnapshot> = (0..2)
-            .map(|id| InstanceSnapshot { id, work: vec![], kv_utilization: 0.0 })
-            .collect();
+        let loads: Vec<LoadDigest> = (0..2).map(LoadDigest::idle).collect();
         let mut p = DisaggPolicy::new(1);
         let req = Request::new(1, 0.0, 1000, 400);
-        let pl = p.place(&req, &snaps, &profile());
+        let pl = p.place(&req, &loads, &profile());
         assert_eq!(pl.alpha.end, 1000);
         assert_eq!(pl.alpha.instance, 0);
         let b = pl.beta.unwrap();
@@ -98,14 +97,14 @@ mod tests {
 
     #[test]
     fn least_loaded_within_pools() {
-        let mut snaps: Vec<InstanceSnapshot> = (0..4)
-            .map(|id| InstanceSnapshot { id, work: vec![], kv_utilization: 0.0 })
-            .collect();
+        let mut snaps: Vec<InstanceSnapshot> =
+            (0..4).map(|id| InstanceSnapshot { id, ..Default::default() }).collect();
         // prefill pool {0,1}: load 0 heavier; decode pool {2,3}: 2 heavier
         snaps[0].work = vec![WorkItem { prefill_remaining: 9000, context: 0, decode_remaining: 0 }];
         snaps[2].work = (0..8).map(|_| WorkItem::pure_decode(512, 100)).collect();
+        let loads: Vec<LoadDigest> = snaps.iter().map(LoadDigest::from_snapshot).collect();
         let mut p = DisaggPolicy::new(2);
-        let pl = p.place(&Request::new(1, 0.0, 500, 300), &snaps, &profile());
+        let pl = p.place(&Request::new(1, 0.0, 500, 300), &loads, &profile());
         assert_eq!(pl.alpha.instance, 1);
         assert_eq!(pl.beta.unwrap().instance, 3);
     }

@@ -2,15 +2,23 @@
 //! evaluation. `experiments all` runs the lot; see DESIGN.md §4.
 //!
 //! Usage:
-//!   cargo run --release --bin experiments -- <id> [--duration S] [--seed N] …
+//!   cargo run --release --bin experiments -- <id> [--duration S] [--seed N] [--threads N] …
 //!   cargo run --release --bin experiments -- all
 //!   cargo run --release --bin experiments -- list
+//!
+//! Sweep cells fan out across a worker pool sized by `--threads` /
+//! `DYNASERVE_THREADS` (default: available parallelism; results are
+//! byte-identical for any worker count — EXPERIMENTS.md §Perf).
 
 use dynaserve::experiments::registry;
 use dynaserve::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
+    if let Some(t) = args.get("threads") {
+        // forwarded to experiments::runners::sweep_threads
+        std::env::set_var("DYNASERVE_THREADS", t);
+    }
     let reg = registry();
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("list");
     match which {

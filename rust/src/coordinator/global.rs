@@ -7,7 +7,9 @@
 //! (K = 6 in the paper), and stops when |T₁ − T₂| ≤ ε. β's probe includes
 //! the non-overlapped share of the KV transfer its context requires.
 
-use super::predictor::{completion_time, InstanceSnapshot, PredictorConfig};
+use super::predictor::{
+    completion_time, completion_time_digest, InstanceSnapshot, LoadDigest, PredictorConfig,
+};
 use super::profile::ProfileTable;
 use super::router;
 use super::WorkItem;
@@ -61,11 +63,13 @@ pub struct ScheduleOutcome {
 pub struct GlobalScheduler {
     pub cfg: GlobalConfig,
     rr: usize,
+    /// Reusable base-drain-time buffer (keeps `schedule` allocation-free).
+    probe_buf: Vec<f64>,
 }
 
 impl GlobalScheduler {
     pub fn new(cfg: GlobalConfig) -> Self {
-        GlobalScheduler { cfg, rr: 0 }
+        GlobalScheduler { cfg, rr: 0, probe_buf: Vec::new() }
     }
 
     fn transfer_penalty(&self, context_tokens: usize) -> f64 {
@@ -73,9 +77,95 @@ impl GlobalScheduler {
         self.cfg.link.transfer_time(bytes) * (1.0 - self.cfg.transfer_overlap)
     }
 
-    /// Algorithm 1. `snapshots` is the current load of every instance in
-    /// the unified pool; `profile` the shared latency profile table.
+    /// Algorithm 1 over incremental [`LoadDigest`]s — the default hot
+    /// path: no per-segment clones, no per-probe allocations. `loads` is
+    /// the current digest of every instance in the unified pool;
+    /// `profile` the shared latency profile table.
     pub fn schedule(
+        &mut self,
+        req: &Request,
+        loads: &[LoadDigest],
+        profile: &ProfileTable,
+    ) -> ScheduleOutcome {
+        assert!(!loads.is_empty());
+        let l = req.predicted_len().max(1);
+        let pcfg = &self.cfg.predictor;
+
+        // Single instance: degenerate to colocation.
+        if loads.len() == 1 {
+            let t = completion_time_digest(&loads[0], span_item(req, 0, l), profile, pcfg);
+            return ScheduleOutcome {
+                decision: SplitDecision {
+                    ratio: 1.0,
+                    split: l,
+                    alpha_instance: loads[0].id,
+                    beta_instance: loads[0].id,
+                },
+                t_alpha: t,
+                t_beta: t,
+                probes: 1,
+            };
+        }
+
+        // Base drain time per instance; α on the emptier one.
+        self.probe_buf.clear();
+        self.probe_buf
+            .extend(loads.iter().map(|d| completion_time_digest(d, None, profile, pcfg)));
+        let (ai, bi) = router::pick_pair(&self.probe_buf, &mut self.rr);
+        let (alpha, beta) = (&loads[ai], &loads[bi]);
+        let mut probes = loads.len();
+
+        // COLDSTART: pool fully idle — seed with the PD-disaggregation
+        // split; the ratio only matters once contention exists.
+        let cold = self.probe_buf.iter().all(|t| *t < 1e-9);
+
+        let mut phi = req.prompt_len as f64 / l as f64;
+        let (mut lo, mut hi) = (0.0f64, 1.0f64);
+        let (mut t1, mut t2) = (0.0, 0.0);
+        let mut s = split_point(phi, l);
+        let iters = if cold { 1 } else { self.cfg.max_iters };
+        for _ in 0..iters {
+            s = split_point(phi, l);
+            t1 = completion_time_digest(alpha, span_item(req, 0, s), profile, pcfg);
+            t2 = completion_time_digest(beta, span_item(req, s, l), profile, pcfg)
+                + if s > 0 && s < l { self.transfer_penalty(s) } else { 0.0 };
+            probes += 2;
+            if (t1 - t2).abs() <= self.cfg.epsilon {
+                break;
+            }
+            // α slower → shift tokens to β (smaller φ); else grow α.
+            if t1 > t2 {
+                hi = phi;
+            } else {
+                lo = phi;
+            }
+            phi = 0.5 * (lo + hi);
+        }
+
+        // Snap degenerate splits to whole-request execution.
+        if s < self.cfg.min_span {
+            s = 0;
+        } else if l - s < self.cfg.min_span {
+            s = l;
+        }
+        ScheduleOutcome {
+            decision: SplitDecision {
+                ratio: s as f64 / l as f64,
+                split: s,
+                alpha_instance: alpha.id,
+                beta_instance: if s == l { alpha.id } else { beta.id },
+            },
+            t_alpha: t1,
+            t_beta: t2,
+            probes,
+        }
+    }
+
+    /// Algorithm 1 over full [`InstanceSnapshot`]s with the exact
+    /// per-item predictor — the reference path, kept for equivalence
+    /// testing, debugging and offline analysis (the simulator selects it
+    /// with `SimConfig::exact_snapshots`).
+    pub fn schedule_exact(
         &mut self,
         req: &Request,
         snapshots: &[InstanceSnapshot],
@@ -194,9 +284,11 @@ mod tests {
     }
 
     fn idle(n: usize) -> Vec<InstanceSnapshot> {
-        (0..n)
-            .map(|id| InstanceSnapshot { id, work: vec![], kv_utilization: 0.0 })
-            .collect()
+        (0..n).map(|id| InstanceSnapshot { id, ..Default::default() }).collect()
+    }
+
+    fn digests(snaps: &[InstanceSnapshot]) -> Vec<LoadDigest> {
+        snaps.iter().map(LoadDigest::from_snapshot).collect()
     }
 
     fn req(p: usize, d: usize) -> Request {
@@ -206,16 +298,27 @@ mod tests {
     #[test]
     fn cold_start_is_disaggregation_split() {
         let mut g = GlobalScheduler::new(GlobalConfig::default());
-        let out = g.schedule(&req(1024, 1024), &idle(2), &profile());
+        let out = g.schedule(&req(1024, 1024), &digests(&idle(2)), &profile());
         // φ₀ = 0.5 → s = 1024 = P: pure PD split
         assert_eq!(out.decision.split, 1024);
         assert_ne!(out.decision.alpha_instance, out.decision.beta_instance);
     }
 
     #[test]
+    fn cold_start_exact_path_agrees() {
+        // digest and exact paths make the same decision on an idle pool
+        let p = profile();
+        let mut g1 = GlobalScheduler::new(GlobalConfig::default());
+        let mut g2 = GlobalScheduler::new(GlobalConfig::default());
+        let o1 = g1.schedule(&req(1024, 1024), &digests(&idle(2)), &p);
+        let o2 = g2.schedule_exact(&req(1024, 1024), &idle(2), &p);
+        assert_eq!(o1.decision, o2.decision);
+    }
+
+    #[test]
     fn single_instance_no_split() {
         let mut g = GlobalScheduler::new(GlobalConfig::default());
-        let out = g.schedule(&req(512, 256), &idle(1), &profile());
+        let out = g.schedule(&req(512, 256), &digests(&idle(1)), &profile());
         assert_eq!(out.decision.split, 768);
         assert_eq!(out.decision.alpha_instance, out.decision.beta_instance);
     }
@@ -231,7 +334,7 @@ mod tests {
         snaps[0].work = vec![WorkItem { prefill_remaining: 2048, context: 0, decode_remaining: 32 }];
         snaps[1].work = (0..16).map(|_| WorkItem::pure_decode(1024, 800)).collect();
         let r = req(1024, 1024);
-        let out = g.schedule(&r, &snaps, &p);
+        let out = g.schedule(&r, &digests(&snaps), &p);
         // α must be the emptier instance 0
         assert_eq!(out.decision.alpha_instance, 0);
         assert!(
@@ -250,7 +353,7 @@ mod tests {
         let mut snaps = idle(2);
         snaps[0].work = (0..8).map(|_| WorkItem { prefill_remaining: 8192, context: 0, decode_remaining: 8 }).collect();
         snaps[1].work = vec![WorkItem::pure_decode(128, 16)];
-        let out = g.schedule(&req(4096, 512), &snaps, &p);
+        let out = g.schedule(&req(4096, 512), &digests(&snaps), &p);
         // α is the emptier instance (1). With the other instance crushed,
         // balancing pushes the split all the way to L: the request runs
         // entirely on the idle instance (adaptive colocation).
@@ -262,7 +365,7 @@ mod tests {
     #[test]
     fn balance_improves_vs_static_disagg() {
         // imbalanced request (decode-heavy): dynamic split must balance
-        // T1/T2 better than the static P/L split.
+        // T1/T2 better than the static P/L split, under the same probe.
         let mut g = GlobalScheduler::new(GlobalConfig::default());
         let p = profile();
         let snaps = {
@@ -272,20 +375,18 @@ mod tests {
             s[1].work = vec![WorkItem::pure_decode(256, 64)];
             s
         };
+        let loads = digests(&snaps);
         let r = req(256, 1467); // mini-reasoning shape
-        let out = g.schedule(&r, &snaps, &p);
+        let out = g.schedule(&r, &loads, &p);
         let imbalance = (out.t_alpha - out.t_beta).abs();
 
-        // static disagg probe
+        // static disagg probe (digest predictor, same estimator as above)
         let pcfg = PredictorConfig::default();
         let s_static = 256;
-        let t1 = completion_time(
-            &with_item(&snaps[0].work, span_item(&r, 0, s_static)),
-            &p,
-            &pcfg,
-        );
-        let t2 = completion_time(
-            &with_item(&snaps[1].work, span_item(&r, s_static, r.predicted_len())),
+        let t1 = completion_time_digest(&loads[0], span_item(&r, 0, s_static), &p, &pcfg);
+        let t2 = completion_time_digest(
+            &loads[1],
+            span_item(&r, s_static, r.predicted_len()),
             &p,
             &pcfg,
         );
@@ -305,7 +406,7 @@ mod tests {
         let mut snaps = idle(2);
         snaps[0].work = vec![WorkItem::pure_decode(64, 10)];
         snaps[1].work = vec![WorkItem::pure_decode(64, 10)];
-        let out = g.schedule(&req(40, 20), &snaps, &p);
+        let out = g.schedule(&req(40, 20), &digests(&snaps), &p);
         assert!(out.decision.split == 0 || out.decision.split == 60);
     }
 
@@ -328,12 +429,19 @@ mod tests {
                     });
                 }
             }
-            let out = g.schedule(&r, &snaps, &p);
-            assert!(out.decision.split <= r.predicted_len());
-            let (a, b) = out.decision.to_micro_requests(&r);
-            let total: usize =
-                a.map(|m| m.len()).unwrap_or(0) + b.map(|m| m.len()).unwrap_or(0);
-            assert_eq!(total, r.predicted_len(), "spans must cover the request");
+            // both paths must respect the span invariant
+            for exact in [false, true] {
+                let out = if exact {
+                    g.schedule_exact(&r, &snaps, &p)
+                } else {
+                    g.schedule(&r, &digests(&snaps), &p)
+                };
+                assert!(out.decision.split <= r.predicted_len());
+                let (a, b) = out.decision.to_micro_requests(&r);
+                let total: usize =
+                    a.map(|m| m.len()).unwrap_or(0) + b.map(|m| m.len()).unwrap_or(0);
+                assert_eq!(total, r.predicted_len(), "spans must cover the request");
+            }
         });
     }
 }

@@ -20,10 +20,10 @@ pub mod predictor;
 pub mod profile;
 pub mod router;
 
-pub use global::{GlobalConfig, GlobalScheduler};
+pub use global::{GlobalConfig, GlobalScheduler, ScheduleOutcome};
 pub use length_pred::LengthPredictor;
 pub use local::{BatchPlan, LocalConfig, LocalScheduler};
-pub use predictor::{completion_time, InstanceSnapshot};
+pub use predictor::{completion_time, completion_time_digest, InstanceSnapshot, LoadDigest};
 pub use profile::ProfileTable;
 
 /// Remaining work of one micro-request resident on an instance — the unit

@@ -14,7 +14,9 @@
 use super::profile::ProfileTable;
 use super::WorkItem;
 
-/// What the global scheduler knows about one instance when probing.
+/// What the global scheduler knows about one instance when probing the
+/// exact path: the full per-segment work list. Cloning this is
+/// O(resident segments); the default hot path uses [`LoadDigest`] instead.
 #[derive(Debug, Clone, Default)]
 pub struct InstanceSnapshot {
     pub id: usize,
@@ -22,6 +24,8 @@ pub struct InstanceSnapshot {
     pub work: Vec<WorkItem>,
     /// KV utilization in [0,1] — used by the router for placement ties.
     pub kv_utilization: f64,
+    /// Segments queued for KV admission (capacity backpressure depth).
+    pub waiting: usize,
 }
 
 impl InstanceSnapshot {
@@ -31,6 +35,102 @@ impl InstanceSnapshot {
 
     pub fn active_decodes(&self) -> usize {
         self.work.iter().filter(|w| w.in_decode_phase()).count()
+    }
+}
+
+/// O(1) per-instance load summary — the unit the default scheduling path
+/// operates on (DESIGN.md §Perf, "Simulator hot path").
+///
+/// `SimInstance` maintains one of these incrementally on every
+/// accept / iteration-step / evict, so the global scheduler reads load
+/// without cloning per-segment state. [`LoadDigest::from_snapshot`] is the
+/// reference reduction the incremental counters must match *exactly*; the
+/// simulator debug-asserts that equivalence on every arrival and it is
+/// property-tested under randomized op sequences.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LoadDigest {
+    pub id: usize,
+    /// Σ prompt tokens still to prefill (resident + KV-waiting segments).
+    pub pending_prefill: usize,
+    /// Σ decode tokens still to generate across all unfinished segments.
+    pub pending_decode: usize,
+    /// Unfinished segments (resident + waiting).
+    pub segments: usize,
+    /// Segments in decode phase (prefill done, decode remaining).
+    pub decode_count: usize,
+    /// Σ context over decode-phase segments.
+    pub decode_context: usize,
+    /// Σ decode_remaining over decode-phase segments.
+    pub active_decode_tokens: usize,
+    /// Σ context over all unfinished segments.
+    pub total_context: usize,
+    /// KV-admission queue depth (capacity backpressure).
+    pub waiting: usize,
+    /// KV pool utilization in [0,1].
+    pub kv_utilization: f64,
+}
+
+impl LoadDigest {
+    /// Digest of an idle instance (test/bootstrap helper).
+    pub fn idle(id: usize) -> Self {
+        LoadDigest { id, ..Default::default() }
+    }
+
+    /// Reference reduction: fold a full snapshot into digest counters.
+    pub fn from_snapshot(s: &InstanceSnapshot) -> Self {
+        let mut d = LoadDigest {
+            id: s.id,
+            kv_utilization: s.kv_utilization,
+            waiting: s.waiting,
+            ..Default::default()
+        };
+        for w in &s.work {
+            d.add(w);
+        }
+        d
+    }
+
+    /// Fold one unfinished work item into the counters (O(1)).
+    pub fn add(&mut self, w: &WorkItem) {
+        if w.is_done() {
+            return;
+        }
+        self.pending_prefill += w.prefill_remaining;
+        self.pending_decode += w.decode_remaining;
+        self.total_context += w.context;
+        self.segments += 1;
+        if w.in_decode_phase() {
+            self.decode_count += 1;
+            self.decode_context += w.context;
+            self.active_decode_tokens += w.decode_remaining;
+        }
+    }
+
+    /// Inverse of [`LoadDigest::add`]. Callers must pass the item's state
+    /// as it was when added (underflow panics in debug builds are the
+    /// drift canary).
+    pub fn remove(&mut self, w: &WorkItem) {
+        if w.is_done() {
+            return;
+        }
+        self.pending_prefill -= w.prefill_remaining;
+        self.pending_decode -= w.decode_remaining;
+        self.total_context -= w.context;
+        self.segments -= 1;
+        if w.in_decode_phase() {
+            self.decode_count -= 1;
+            self.decode_context -= w.context;
+            self.active_decode_tokens -= w.decode_remaining;
+        }
+    }
+
+    /// Queued prefill tokens (pool-placement key of the disagg baseline).
+    pub fn queued_prefill_tokens(&self) -> usize {
+        self.pending_prefill
+    }
+
+    pub fn active_decodes(&self) -> usize {
+        self.decode_count
     }
 }
 
@@ -150,6 +250,119 @@ pub fn completion_time(items: &[WorkItem], profile: &ProfileTable, cfg: &Predict
     t
 }
 
+/// Digest-based drain-time probe: the same two-phase model as
+/// [`completion_time`] computed over [`LoadDigest`] aggregates — one
+/// virtual prefill stream, one homogeneous decode-phase group, and a
+/// "gated" group whose decode work unlocks when the prefill drains.
+///
+/// Zero allocations and O(prefill passes + 2) profile lookups per probe,
+/// vs the exact path's O(items) virtual batch. For a homogeneous
+/// pure-decode load it is *identical* to `completion_time`; for mixed
+/// loads it is the aggregate approximation the hot path trades for speed
+/// (the exact probe stays available via `GlobalScheduler::schedule_exact`).
+pub fn completion_time_digest(
+    d: &LoadDigest,
+    extra: Option<WorkItem>,
+    profile: &ProfileTable,
+    cfg: &PredictorConfig,
+) -> f64 {
+    let mut pf = d.pending_prefill;
+    let mut dec_n = d.decode_count;
+    let mut dec_ctx = d.decode_context;
+    let mut dec_rem = d.active_decode_tokens;
+    let mut gated_n = d.segments - d.decode_count;
+    let mut gated_rem = d.pending_decode - d.active_decode_tokens;
+    let mut gated_ctx = d.total_context - d.decode_context;
+    if let Some(w) = extra {
+        if w.in_decode_phase() {
+            dec_n += 1;
+            dec_ctx += w.context;
+            dec_rem += w.decode_remaining;
+        } else if !w.is_done() {
+            pf += w.prefill_remaining;
+            gated_n += 1;
+            gated_rem += w.decode_remaining;
+            gated_ctx += w.context;
+        }
+    }
+    // By the time the prefill stream drains, every gated segment's context
+    // has grown by its prefill share — `pf` tokens in aggregate.
+    let gated_ctx_end = gated_ctx + pf;
+
+    let mut t = 0.0f64;
+    let mut passes = 0usize;
+    // Phase 1: drain the prefill stream with the decode group riding along.
+    while pf > 0 && passes < cfg.max_passes {
+        let n = dec_n.min(cfg.max_seqs);
+        let ctx = if dec_n == 0 { 0 } else { dec_ctx / dec_n };
+        let budget = profile.max_prefill_tokens(cfg.slo, ctx, n).max(64);
+        let take = pf.min(budget);
+        // Stable-composition jump (cf. completion_time): identical passes
+        // until the prefill stream or the decode group drains.
+        let mut j = pf.div_ceil(take);
+        if dec_n > 0 {
+            j = j.min((dec_rem / dec_n).max(1));
+        }
+        let j = j.clamp(1, cfg.max_passes - passes);
+        passes += j;
+        t += j as f64 * profile.estimate(take, ctx, n);
+        pf = pf.saturating_sub(take * j);
+        if dec_n > 0 {
+            let consumed = (j * dec_n).min(dec_rem);
+            dec_rem -= consumed;
+            dec_ctx += consumed;
+            if dec_rem == 0 {
+                dec_n = 0;
+                dec_ctx = 0;
+            }
+        }
+    }
+
+    // Phase 2: pure-decode tail over up to two homogeneous groups,
+    // fewest-remaining first (mirrors completion_time's grouped tail).
+    let mut groups: [(usize, usize, usize); 2] = [(0, 0, 0); 2]; // (n, Σctx, Σrem)
+    let mut ng = 0usize;
+    if dec_n > 0 && dec_rem > 0 {
+        groups[ng] = (dec_n, dec_ctx, dec_rem);
+        ng += 1;
+    }
+    if gated_rem > 0 {
+        // pure-prefill segments contribute no decode; cap the width by the
+        // remaining tokens so empty decoders never widen the batch
+        let n = gated_n.min(gated_rem).max(1);
+        groups[ng] = (n, gated_ctx_end, gated_rem);
+        ng += 1;
+    }
+    if ng == 2 && groups[0].2 / groups[0].0 > groups[1].2 / groups[1].0 {
+        groups.swap(0, 1);
+    }
+    let mut idx = 0usize;
+    while idx < ng {
+        let active = &groups[idx..ng];
+        let n_total: usize = active.iter().map(|g| g.0).sum();
+        let ctx_sum: usize = active.iter().map(|g| g.1).sum();
+        let steps = (active[0].2 / active[0].0).max(1);
+        let n = n_total.min(cfg.max_seqs);
+        let avg_ctx = ctx_sum / n_total + steps / 2;
+        t += steps as f64 * profile.estimate(0, avg_ctx, n);
+        for g in groups[idx..ng].iter_mut() {
+            let consumed = (steps * g.0).min(g.2);
+            g.2 -= consumed;
+            g.1 += consumed;
+            if g.2 == 0 {
+                // drained (possibly out of sorted order on integer-avg
+                // ties): stop counting it toward batch width/context
+                g.0 = 0;
+                g.1 = 0;
+            }
+        }
+        while idx < ng && groups[idx].2 == 0 {
+            idx += 1;
+        }
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,6 +428,113 @@ mod tests {
         let longest = completion_time(&[WorkItem::pure_decode(256, 1000)], &p, &cfg);
         assert!(t >= longest, "t={t} longest={longest}");
         assert!(t < longest * 1.6, "t={t} longest={longest}");
+    }
+
+    #[test]
+    fn digest_reduction_matches_manual_counters() {
+        let snap = InstanceSnapshot {
+            id: 3,
+            work: vec![
+                WorkItem { prefill_remaining: 100, context: 40, decode_remaining: 7 },
+                WorkItem::pure_decode(512, 30),
+                WorkItem::pure_decode(256, 5),
+                WorkItem { prefill_remaining: 0, context: 64, decode_remaining: 0 }, // done: ignored
+            ],
+            kv_utilization: 0.25,
+            waiting: 2,
+        };
+        let d = LoadDigest::from_snapshot(&snap);
+        assert_eq!(d.id, 3);
+        assert_eq!(d.pending_prefill, 100);
+        assert_eq!(d.pending_decode, 42);
+        assert_eq!(d.segments, 3);
+        assert_eq!(d.decode_count, 2);
+        assert_eq!(d.decode_context, 768);
+        assert_eq!(d.active_decode_tokens, 35);
+        assert_eq!(d.total_context, 808);
+        assert_eq!(d.waiting, 2);
+    }
+
+    #[test]
+    fn digest_add_remove_roundtrip() {
+        let items = [
+            WorkItem { prefill_remaining: 300, context: 10, decode_remaining: 64 },
+            WorkItem::pure_decode(1024, 200),
+        ];
+        let mut d = LoadDigest::idle(0);
+        for w in &items {
+            d.add(w);
+        }
+        for w in &items {
+            d.remove(w);
+        }
+        assert_eq!(d, LoadDigest::idle(0));
+    }
+
+    #[test]
+    fn digest_probe_matches_exact_on_homogeneous_decode() {
+        let p = profile();
+        let cfg = PredictorConfig::default();
+        let items: Vec<WorkItem> = (0..12).map(|_| WorkItem::pure_decode(800, 150)).collect();
+        let exact = completion_time(&items, &p, &cfg);
+        let snap = InstanceSnapshot { id: 0, work: items, kv_utilization: 0.0, waiting: 0 };
+        let approx =
+            completion_time_digest(&LoadDigest::from_snapshot(&snap), None, &p, &cfg);
+        assert!(
+            (exact - approx).abs() <= 1e-12 * exact.max(1.0),
+            "exact={exact} digest={approx}"
+        );
+    }
+
+    #[test]
+    fn digest_probe_empty_and_monotone() {
+        let p = profile();
+        let cfg = PredictorConfig::default();
+        assert_eq!(completion_time_digest(&LoadDigest::idle(0), None, &p, &cfg), 0.0);
+        let small = InstanceSnapshot {
+            id: 0,
+            work: vec![WorkItem { prefill_remaining: 512, context: 0, decode_remaining: 32 }],
+            kv_utilization: 0.0,
+            waiting: 0,
+        };
+        let big = InstanceSnapshot {
+            id: 0,
+            work: vec![WorkItem { prefill_remaining: 4096, context: 0, decode_remaining: 256 }],
+            kv_utilization: 0.0,
+            waiting: 0,
+        };
+        let ts = completion_time_digest(&LoadDigest::from_snapshot(&small), None, &p, &cfg);
+        let tb = completion_time_digest(&LoadDigest::from_snapshot(&big), None, &p, &cfg);
+        assert!(tb > ts * 2.0, "small={ts} big={tb}");
+        // an extra hypothetical item can only add time
+        let extra = WorkItem { prefill_remaining: 1024, context: 0, decode_remaining: 128 };
+        let with =
+            completion_time_digest(&LoadDigest::from_snapshot(&small), Some(extra), &p, &cfg);
+        assert!(with > ts, "with={with} base={ts}");
+    }
+
+    #[test]
+    fn digest_probe_is_fast() {
+        // the digest probe must be far under the exact probe's budget
+        let p = profile();
+        let cfg = PredictorConfig::default();
+        let work: Vec<WorkItem> = (0..128)
+            .map(|i| WorkItem {
+                prefill_remaining: 1024 + i * 7,
+                context: 0,
+                decode_remaining: 200 + i,
+            })
+            .collect();
+        let snap = InstanceSnapshot { id: 0, work, kv_utilization: 0.0, waiting: 0 };
+        let d = LoadDigest::from_snapshot(&snap);
+        let t0 = std::time::Instant::now();
+        let n = 1000;
+        for _ in 0..n {
+            completion_time_digest(&d, None, &p, &cfg);
+        }
+        let per = t0.elapsed().as_secs_f64() / n as f64;
+        let bound = if cfg!(debug_assertions) { 5e-3 } else { 5e-4 };
+        assert!(per < bound, "digest probe too slow: {per}s");
     }
 
     #[test]

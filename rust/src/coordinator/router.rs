@@ -5,23 +5,32 @@
 
 /// Pick (alpha_idx, beta_idx): the two smallest drain times, ties rotated
 /// by `rr`. With a single instance both indices coincide.
+///
+/// Allocation-free single scan (this runs on every arrival): indices are
+/// visited in `rr`-rotated order and only a *strictly* smaller time
+/// displaces a held minimum, which reproduces the stable-sort-on-rotated-
+/// order tie-breaking of the original implementation.
 pub fn pick_pair(drain_times: &[f64], rr: &mut usize) -> (usize, usize) {
     assert!(!drain_times.is_empty());
-    if drain_times.len() == 1 {
+    let n = drain_times.len();
+    if n == 1 {
         return (0, 0);
     }
-    let n = drain_times.len();
-    let mut order: Vec<usize> = (0..n).collect();
     let start = *rr % n;
     *rr = rr.wrapping_add(1);
-    // rotate index order for deterministic round-robin tie-breaking
-    order.rotate_left(start);
-    order.sort_by(|&a, &b| {
-        drain_times[a]
-            .partial_cmp(&drain_times[b])
-            .unwrap_or(std::cmp::Ordering::Equal)
-    });
-    (order[0], order[1])
+    let mut first = usize::MAX;
+    let mut second = usize::MAX;
+    for j in 0..n {
+        let i = (start + j) % n;
+        let t = drain_times[i];
+        if first == usize::MAX || t < drain_times[first] {
+            second = first;
+            first = i;
+        } else if second == usize::MAX || t < drain_times[second] {
+            second = i;
+        }
+    }
+    (first, second)
 }
 
 /// Plain round-robin over `n` targets (colocation baseline routing).
@@ -65,6 +74,15 @@ mod tests {
         firsts.sort();
         firsts.dedup();
         assert!(firsts.len() >= 2, "round-robin should vary the pick: {firsts:?}");
+    }
+
+    #[test]
+    fn ties_break_by_rotated_order() {
+        // equal times: the earliest position in rr-rotated order wins,
+        // as under the previous stable-sort implementation
+        let mut rr = 1;
+        let times = [0.5, 0.5, 0.5, 1.0];
+        assert_eq!(pick_pair(&times, &mut rr), (1, 2));
     }
 
     #[test]

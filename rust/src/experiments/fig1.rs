@@ -21,6 +21,8 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     println!("Figure 1: throughput vs SLO attainment (Qwen-14B, BurstGPT, 100ms TBT SLO)\n");
     let mut t = Table::new(["system", "qps", "throughput tok/s", "attainment %", "p99 TBT ms"]);
     let mut series = Vec::new();
+    // one sweep per system, reused by the frontier check below
+    let mut frontiers = Vec::new();
     for sys in System::all_default() {
         let pts = qps_sweep(sys, &llm, TraceKind::BurstGpt, &qps, duration, seed, slo);
         for (q, s) in &pts {
@@ -38,14 +40,14 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
                 ("attainment", Json::from(s.attainment)),
             ]));
         }
+        frontiers.push((sys, pts));
     }
     t.print();
 
-    // frontier check: best attainment at high load
+    // frontier check: best attainment at high load (reuses the sweeps)
     println!("\nShape check (expected: DynaServe dominates the top-right):");
     let mut t2 = Table::new(["system", "max tok/s @ attainment >= 99%"]);
-    for sys in System::all_default() {
-        let pts = qps_sweep(sys, &llm, TraceKind::BurstGpt, &qps, duration, seed, slo);
+    for (sys, pts) in &frontiers {
         let best = pts
             .iter()
             .filter(|(_, s)| s.attainment >= 0.99)

@@ -5,7 +5,7 @@
 //! PD ratio ≈ 0.3 of the decode assigned to GPU-1), motivating Insight 1:
 //! balance execution time across GPUs.
 
-use crate::coordinator::{InstanceSnapshot, ProfileTable};
+use crate::coordinator::{LoadDigest, ProfileTable};
 use crate::core::{MicroRequest, Request, Role};
 use crate::costmodel::LlmSpec;
 use crate::experiments::runners::build_sim;
@@ -30,7 +30,7 @@ impl Policy for FixedSplitPolicy {
     fn place(
         &mut self,
         req: &Request,
-        _snapshots: &[InstanceSnapshot],
+        _loads: &[LoadDigest],
         _profile: &ProfileTable,
     ) -> Placement {
         let l = req.predicted_len();

@@ -3,7 +3,7 @@
 //! workloads and model scales (14B default; --models all for 32B/72B too).
 
 use crate::costmodel::LlmSpec;
-use crate::experiments::runners::{coloc_chunk_for, qps_sweep, System};
+use crate::experiments::runners::{coloc_chunk_for, run_cells, run_once, sweep_threads, System};
 use crate::experiments::write_results;
 use crate::metrics::SloConfig;
 use crate::util::cli::{Args, Table};
@@ -35,12 +35,25 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             println!("--- {} / {} (goodput tok/s vs QPS) ---", llm.name, kind.name());
             let mut t = Table::new(["system", "qps", "goodput", "attain %", "p99 TBT ms"]);
             let mut best = vec![];
-            for sys in [
+            let systems = [
                 System::Coloc { chunk: coloc_chunk_for(kind) },
                 System::Disagg,
                 System::DynaServe,
-            ] {
-                let pts = qps_sweep(sys, llm, kind, &qps, duration, seed, slo);
+            ];
+            // flatten (system × qps) into one deterministic parallel batch
+            let cells: Vec<(System, f64)> = systems
+                .iter()
+                .flat_map(|&sys| qps.iter().map(move |&q| (sys, q)))
+                .collect();
+            let summaries = run_cells(&cells, sweep_threads(), |&(sys, q)| {
+                run_once(sys, llm, kind, q, duration, seed, slo).0
+            });
+            for (si, &sys) in systems.iter().enumerate() {
+                let pts: Vec<(f64, crate::metrics::Summary)> = qps
+                    .iter()
+                    .copied()
+                    .zip(summaries[si * qps.len()..(si + 1) * qps.len()].iter().copied())
+                    .collect();
                 let peak = pts.iter().map(|(_, s)| s.goodput_tok_s).fold(0.0, f64::max);
                 best.push((sys.name(), peak));
                 for (q, s) in &pts {

@@ -4,7 +4,7 @@
 //! average.
 
 use crate::costmodel::LlmSpec;
-use crate::experiments::runners::{coloc_chunk_for, run_once, System};
+use crate::experiments::runners::{coloc_chunk_for, run_cells, run_once, sweep_threads, System};
 use crate::experiments::write_results;
 use crate::metrics::{capacity_search, SloConfig};
 use crate::util::cli::{Args, Table};
@@ -34,10 +34,24 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     let mut t = Table::new(["workload", "PD Coloc.", "PD Disagg.", "DynaServe", "Dyn/Coloc", "Dyn/Disagg"]);
     let mut results = Vec::new();
     let (mut rc, mut rd) = (Vec::new(), Vec::new());
-    for kind in TraceKind::all_datasets() {
-        let (c, _) = capacity_of(System::Coloc { chunk: coloc_chunk_for(kind) }, &llm, kind, duration, seed, slo);
-        let (d, _) = capacity_of(System::Disagg, &llm, kind, duration, seed, slo);
-        let (y, _) = capacity_of(System::DynaServe, &llm, kind, duration, seed, slo);
+    // each capacity search is an independent cell: fan all
+    // (system × workload) searches across the worker pool
+    let kinds = TraceKind::all_datasets();
+    let cells: Vec<(System, TraceKind)> = kinds
+        .iter()
+        .flat_map(|&kind| {
+            [System::Coloc { chunk: coloc_chunk_for(kind) }, System::Disagg, System::DynaServe]
+                .into_iter()
+                .map(move |sys| (sys, kind))
+        })
+        .collect();
+    let caps = run_cells(&cells, sweep_threads(), |&(sys, kind)| {
+        capacity_of(sys, &llm, kind, duration, seed, slo)
+    });
+    for (ki, &kind) in kinds.iter().enumerate() {
+        let (c, _) = caps[ki * 3];
+        let (d, _) = caps[ki * 3 + 1];
+        let (y, _) = caps[ki * 3 + 2];
         let (xc, xd) = (y / c.max(1e-9), y / d.max(1e-9));
         rc.push(xc);
         rd.push(xd);

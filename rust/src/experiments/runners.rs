@@ -1,10 +1,18 @@
-//! Shared experiment plumbing: standard system configurations (§6.1) and
-//! sim construction for the three compared architectures.
+//! Shared experiment plumbing: standard system configurations (§6.1), sim
+//! construction for the three compared architectures, and the scoped
+//! worker pool that fans independent (system × trace × QPS × seed) cells
+//! across threads.
 //!
 //! Deployment shapes follow the paper: every system gets the same GPU
 //! count; DynaServe and PD-disagg run 2 instances (α/β or 1P1D), PD-coloc
 //! runs 2 DP replicas. Model scale maps to TP degree (14B→TP1, 32B→TP2,
 //! 72B→TP4).
+//!
+//! **Determinism contract** (EXPERIMENTS.md §Perf): every cell is a pure
+//! function of its inputs — a fresh `Simulator` over a seeded workload —
+//! and [`run_cells`] stores results by input index, so sweep outputs are
+//! byte-identical for any worker count (`DYNASERVE_THREADS=1` forces the
+//! serial path; the equality is asserted under test).
 
 use crate::baselines::{ColocPolicy, DisaggPolicy};
 use crate::coordinator::{GlobalConfig, LocalConfig};
@@ -97,7 +105,59 @@ pub fn run_once(
     (summary, sim)
 }
 
-/// Sweep QPS and return (qps, summary) pairs.
+/// Worker count for experiment sweeps: `DYNASERVE_THREADS` when set
+/// (clamped to ≥ 1; `1` forces the serial path), else the machine's
+/// available parallelism. The `experiments` binary also accepts
+/// `--threads N` and forwards it through this variable.
+pub fn sweep_threads() -> usize {
+    if let Ok(v) = std::env::var("DYNASERVE_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f` over `cells` on a `std::thread::scope` worker pool (no new
+/// dependencies), returning results **in input order** regardless of
+/// which worker finished first. `f` must be a pure function of its cell
+/// for the determinism contract to hold; with `threads <= 1` the cells
+/// run serially on the caller's thread.
+pub fn run_cells<T, R, F>(cells: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = cells.len();
+    if threads <= 1 || n <= 1 {
+        return cells.iter().map(&f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results: std::sync::Mutex<Vec<Option<R>>> =
+        std::sync::Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&cells[i]);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("worker completed every claimed cell"))
+        .collect()
+}
+
+/// Sweep QPS and return (qps, summary) pairs; points fan out across the
+/// [`sweep_threads`] worker pool.
 pub fn qps_sweep(
     system: System,
     llm: &LlmSpec,
@@ -107,10 +167,26 @@ pub fn qps_sweep(
     seed: u64,
     slo: SloConfig,
 ) -> Vec<(f64, Summary)> {
-    qps_points
-        .iter()
-        .map(|&q| (q, run_once(system, llm, kind, q, duration, seed, slo).0))
-        .collect()
+    qps_sweep_with_threads(system, llm, kind, qps_points, duration, seed, slo, sweep_threads())
+}
+
+/// [`qps_sweep`] with an explicit worker count (serial/parallel
+/// equivalence is asserted under test with this entry point).
+#[allow(clippy::too_many_arguments)]
+pub fn qps_sweep_with_threads(
+    system: System,
+    llm: &LlmSpec,
+    kind: TraceKind,
+    qps_points: &[f64],
+    duration: f64,
+    seed: u64,
+    slo: SloConfig,
+    threads: usize,
+) -> Vec<(f64, Summary)> {
+    let summaries = run_cells(qps_points, threads, |&q| {
+        run_once(system, llm, kind, q, duration, seed, slo).0
+    });
+    qps_points.iter().copied().zip(summaries).collect()
 }
 
 /// Default per-workload chunk size for the colocation baseline (the paper
@@ -143,5 +219,35 @@ mod tests {
         assert_eq!(tp_for(&LlmSpec::qwen25_14b()), 1);
         assert_eq!(tp_for(&LlmSpec::qwen25_32b()), 2);
         assert_eq!(tp_for(&LlmSpec::qwen25_72b()), 4);
+    }
+
+    #[test]
+    fn run_cells_preserves_input_order() {
+        let cells: Vec<usize> = (0..37).collect();
+        let serial = run_cells(&cells, 1, |&i| i * 3 + 1);
+        let parallel = run_cells(&cells, 8, |&i| i * 3 + 1);
+        assert_eq!(serial, (0..37).map(|i| i * 3 + 1).collect::<Vec<_>>());
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn serial_and_parallel_sweeps_byte_identical() {
+        let llm = LlmSpec::qwen25_14b();
+        let qps = [0.5, 1.0, 1.5, 2.0];
+        let slo = SloConfig::default();
+        for sys in [System::DynaServe, System::Coloc { chunk: 1024 }] {
+            let serial = qps_sweep_with_threads(
+                sys, &llm, TraceKind::BurstGpt, &qps, 10.0, 5, slo, 1,
+            );
+            let parallel = qps_sweep_with_threads(
+                sys, &llm, TraceKind::BurstGpt, &qps, 10.0, 5, slo, 4,
+            );
+            assert_eq!(
+                format!("{serial:?}"),
+                format!("{parallel:?}"),
+                "{}: serial vs parallel sweep outputs must be byte-identical",
+                sys.name()
+            );
+        }
     }
 }

@@ -119,52 +119,9 @@ impl BlockAllocator {
     }
 }
 
-/// Lightweight KV accounting for the simulator: tracks resident tokens per
-/// request without materializing block ids (the allocator above is used by
-/// the live engine; the simulator only needs capacity arithmetic).
-#[derive(Debug, Default)]
-pub struct KvAccounting {
-    capacity_tokens: usize,
-    resident: HashMap<RequestId, usize>,
-    total: usize,
-}
-
-impl KvAccounting {
-    pub fn new(capacity_tokens: usize) -> Self {
-        KvAccounting { capacity_tokens, ..Default::default() }
-    }
-
-    pub fn can_fit(&self, extra: usize) -> bool {
-        self.total + extra <= self.capacity_tokens
-    }
-
-    pub fn set_resident(&mut self, id: RequestId, tokens: usize) {
-        let old = self.resident.insert(id, tokens).unwrap_or(0);
-        self.total = self.total + tokens - old;
-    }
-
-    pub fn release(&mut self, id: RequestId) {
-        if let Some(tokens) = self.resident.remove(&id) {
-            self.total -= tokens;
-        }
-    }
-
-    pub fn resident_tokens(&self) -> usize {
-        self.total
-    }
-
-    pub fn utilization(&self) -> f64 {
-        if self.capacity_tokens == 0 {
-            0.0
-        } else {
-            self.total as f64 / self.capacity_tokens as f64
-        }
-    }
-
-    pub fn capacity(&self) -> usize {
-        self.capacity_tokens
-    }
-}
+// (The simulator's token-level capacity meter used to live here as
+// `KvAccounting`; it moved to `sim/instance.rs::KvMeter` — per-segment
+// tokens are stored in the arena slots, so no per-request map is needed.)
 
 #[cfg(test)]
 mod tests {
@@ -213,18 +170,4 @@ mod tests {
         assert!(b1.iter().all(|b| !b2.contains(b)));
     }
 
-    #[test]
-    fn accounting_tracks_totals() {
-        let mut k = KvAccounting::new(1000);
-        k.set_resident(1, 300);
-        k.set_resident(2, 400);
-        assert_eq!(k.resident_tokens(), 700);
-        assert!(k.can_fit(300));
-        assert!(!k.can_fit(301));
-        k.set_resident(1, 350);
-        assert_eq!(k.resident_tokens(), 750);
-        k.release(2);
-        assert_eq!(k.resident_tokens(), 350);
-        assert!((k.utilization() - 0.35).abs() < 1e-12);
-    }
 }

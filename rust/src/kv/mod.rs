@@ -4,5 +4,5 @@
 pub mod block;
 pub mod transfer;
 
-pub use block::{BlockAllocator, KvAccounting};
+pub use block::BlockAllocator;
 pub use transfer::{chunked_timeline, monolithic_timeline, LinkSpec, TransferEngine, TransferJob};

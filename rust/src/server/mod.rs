@@ -20,8 +20,8 @@ use anyhow::{Context, Result};
 use crate::coordinator::local::{DecodeEntry, PrefillEntry};
 use crate::coordinator::predictor::PredictorConfig;
 use crate::coordinator::{
-    GlobalConfig, GlobalScheduler, InstanceSnapshot, LocalConfig, LocalScheduler, ProfileTable,
-    WorkItem,
+    GlobalConfig, GlobalScheduler, InstanceSnapshot, LoadDigest, LocalConfig, LocalScheduler,
+    ProfileTable, WorkItem,
 };
 use crate::core::{Request, RequestId};
 use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
@@ -176,7 +176,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     // ── instances ───────────────────────────────────────────────────────
     let snapshots: Arc<Mutex<Vec<InstanceSnapshot>>> = Arc::new(Mutex::new(
         (0..cfg.n_instances)
-            .map(|id| InstanceSnapshot { id, work: vec![], kv_utilization: 0.0 })
+            .map(|id| InstanceSnapshot { id, ..Default::default() })
             .collect(),
     ));
     let transfer = Arc::new(TransferEngine::new(LinkSpec { bandwidth: 2e9, latency: 20e-6 }));
@@ -261,8 +261,15 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         if target > now {
             thread::sleep(std::time::Duration::from_secs_f64(target - now));
         }
-        let snaps = snapshots.lock().unwrap().clone();
-        let out = global.schedule(req, &snaps, &profile);
+        // reduce the published snapshots to O(1) digests — same hot path
+        // as the simulator, and no per-request snapshot clone
+        let loads: Vec<LoadDigest> = snapshots
+            .lock()
+            .unwrap()
+            .iter()
+            .map(LoadDigest::from_snapshot)
+            .collect();
+        let out = global.schedule(req, &loads, &profile);
         let (a, b) = out.decision.to_micro_requests(req);
         let prompt: Vec<i32> = (0..req.prompt_len)
             .map(|_| rng.range(1, llm.vocab as u64) as i32)

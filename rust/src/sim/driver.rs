@@ -1,16 +1,23 @@
 //! The discrete-event simulation driver: arrivals → policy placement →
 //! per-instance iteration loops → chunked KV transfers → token metrics.
+//!
+//! Hot-path contract (DESIGN.md §Perf, "Simulator hot path"): the default
+//! arrival path feeds the policy O(1) [`LoadDigest`]s maintained
+//! incrementally by each instance — zero `InstanceSnapshot` clones per
+//! arrival. The exact snapshot path stays available behind
+//! `SimConfig::exact_snapshots`, and debug builds assert on every
+//! arrival that the incremental digests equal the snapshot reduction.
 
 use std::collections::{BinaryHeap, HashMap};
 use std::time::Instant;
 
 use crate::coordinator::local::BatchPlan;
-use crate::coordinator::{LocalConfig, LocalScheduler, ProfileTable};
+use crate::coordinator::{LoadDigest, LocalConfig, LocalScheduler, ProfileTable};
 use crate::core::{Request, RequestId};
 use crate::costmodel::InstanceSpec;
 use crate::kv::{chunked_timeline, monolithic_timeline, LinkSpec};
 use crate::metrics::{Collector, SloConfig, Summary};
-use crate::sim::instance::{SeqKey, SimInstance, SimSeq};
+use crate::sim::instance::{KvSpan, SeqKey, SimInstance, SimSeq};
 use crate::sim::policy::Policy;
 use crate::util::stats::Samples;
 
@@ -29,6 +36,9 @@ pub struct SimConfig {
     pub transfer_chunk_tokens: usize,
     /// false = ship the whole KV at handoff (§6.6 ablation baseline).
     pub chunked_transfer: bool,
+    /// Feed policies full `InstanceSnapshot`s instead of load digests —
+    /// the exact reference path (slower; for equivalence tests/debugging).
+    pub exact_snapshots: bool,
     /// Safety cap on simulated seconds.
     pub horizon: f64,
 }
@@ -44,6 +54,7 @@ impl SimConfig {
             link: LinkSpec::default(),
             transfer_chunk_tokens: 512,
             chunked_transfer: true,
+            exact_snapshots: false,
             horizon: 100_000.0,
         }
     }
@@ -109,11 +120,14 @@ pub struct Simulator {
     events: BinaryHeap<Event>,
     event_seq: u64,
     reqs: HashMap<RequestId, ReqState>,
-    next_key: SeqKey,
     pub transfer: TransferReport,
     /// Wall-clock seconds spent inside policy.place (Table 3).
     pub sched_overhead: Samples,
     pub time: f64,
+    /// Reusable digest buffer (keeps the arrival path allocation-free).
+    loads: Vec<LoadDigest>,
+    /// Reusable completed-segment buffer for iteration application.
+    completed_buf: Vec<SeqKey>,
 }
 
 impl Simulator {
@@ -140,10 +154,11 @@ impl Simulator {
             events: BinaryHeap::new(),
             event_seq: 0,
             reqs: HashMap::new(),
-            next_key: 0,
             transfer: TransferReport::default(),
             sched_overhead: Samples::new(),
             time: 0.0,
+            loads: Vec::new(),
+            completed_buf: Vec::new(),
         }
     }
 
@@ -168,15 +183,9 @@ impl Simulator {
                     self.on_iter_done(instance, plan, latency)
                 }
                 EventKind::SeqReady { instance, key } => {
-                    // the segment may still be in the KV-backpressure
-                    // waiting queue — mark it ready wherever it lives
-                    if let Some(s) = self.instances[instance].seqs.get_mut(&key) {
-                        s.ready = true;
-                    } else if let Some(s) = self.instances[instance]
-                        .waiting
-                        .iter_mut()
-                        .find(|s| s.key == key)
-                    {
+                    // the arena holds the segment whether it is admitted or
+                    // still in the KV-backpressure queue
+                    if let Some(s) = self.instances[instance].get_mut(key) {
                         s.ready = true;
                     }
                     self.kick(instance);
@@ -189,7 +198,7 @@ impl Simulator {
         }
         debug_assert!(
             self.reqs.values().all(|r| r.beta.is_none())
-                || self.instances.iter().all(|i| i.seqs.is_empty() && i.waiting.is_empty()),
+                || self.instances.iter().all(|i| i.is_empty()),
             "simulation drained its events with segments still resident"
         );
         self.collector.summarize(self.time.max(1e-9))
@@ -198,17 +207,33 @@ impl Simulator {
     /// Requests that never completed (should be 0 — any residue indicates
     /// a scheduling deadlock and invalidates the run).
     pub fn stuck_requests(&self) -> usize {
-        self.instances
-            .iter()
-            .map(|i| i.seqs.len() + i.waiting.len())
-            .sum()
+        self.instances.iter().map(|i| i.len()).sum()
     }
 
     fn on_arrival(&mut self, req: Request) {
-        let snapshots: Vec<_> = self.instances.iter().map(|i| i.snapshot()).collect();
-        let t0 = Instant::now();
-        let placement = self.policy.place(&req, &snapshots, &self.profile);
-        self.sched_overhead.push(t0.elapsed().as_secs_f64());
+        let placement = if self.cfg.exact_snapshots {
+            let snapshots: Vec<_> = self.instances.iter().map(|i| i.snapshot()).collect();
+            let t0 = Instant::now();
+            let p = self.policy.place_exact(&req, &snapshots, &self.profile);
+            self.sched_overhead.push(t0.elapsed().as_secs_f64());
+            p
+        } else {
+            self.loads.clear();
+            self.loads.extend(self.instances.iter().map(|i| i.digest()));
+            #[cfg(debug_assertions)]
+            for (inst, d) in self.instances.iter().zip(self.loads.iter()) {
+                debug_assert_eq!(
+                    &LoadDigest::from_snapshot(&inst.snapshot()),
+                    d,
+                    "incremental digest drifted from the snapshot reduction on instance {}",
+                    inst.id
+                );
+            }
+            let t0 = Instant::now();
+            let p = self.policy.place(&req, &self.loads, &self.profile);
+            self.sched_overhead.push(t0.elapsed().as_secs_f64());
+            p
+        };
 
         // Clamp spans by the true processing length (positions 0..P+D-1).
         let l_proc = req.prompt_len + req.decode_len - 1;
@@ -219,72 +244,19 @@ impl Simulator {
             .filter(|b| b.start < l_proc)
             .map(|b| (b.instance, b.start, l_proc));
 
-        let alpha_key = self.alloc_key();
         let alpha_end = if beta_span.is_some() { s } else { l_proc };
-        let alpha_seq = self.make_seq(
-            alpha_key,
-            &req,
-            placement.alpha.instance,
-            0,
-            alpha_end,
-            beta_span.is_none(),
-            beta_span.is_some(),
-        );
-        let beta = beta_span.map(|(inst, start, end)| {
-            let key = self.alloc_key();
-            let mut seq = self.make_seq(key, &req, inst, start, end, true, false);
-            seq.ready = false; // gated on KV transfer
-            (inst, key, seq)
-        });
-
-        self.reqs.insert(
-            req.id,
-            ReqState { beta: beta.as_ref().map(|(i, k, _)| (*i, *k)) },
-        );
+        let alpha_seq =
+            make_seq(&req, 0, alpha_end, beta_span.is_none(), beta_span.is_some());
         let a_inst = placement.alpha.instance;
         self.instances[a_inst].accept(alpha_seq);
+        let beta = beta_span.map(|(inst, start, end)| {
+            let mut seq = make_seq(&req, start, end, true, false);
+            seq.ready = false; // gated on KV transfer
+            (inst, self.instances[inst].accept(seq))
+        });
+        self.reqs.insert(req.id, ReqState { beta });
         self.kick(a_inst);
-        if let Some((inst, _, seq)) = beta {
-            self.instances[inst].accept(seq);
-            // no kick: not ready until transfer completes
-        }
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn make_seq(
-        &mut self,
-        key: SeqKey,
-        req: &Request,
-        _instance: usize,
-        start: usize,
-        end_exec: usize,
-        last_segment: bool,
-        track_kv: bool,
-    ) -> SimSeq {
-        let p = req.prompt_len;
-        SimSeq {
-            key,
-            request: req.id,
-            start,
-            end_exec,
-            prompt_len: p,
-            work: crate::coordinator::WorkItem {
-                prefill_remaining: end_exec.min(p).saturating_sub(start),
-                context: start,
-                decode_remaining: end_exec.saturating_sub(start.max(p)),
-            },
-            ready: true,
-            emits_first_token: start < p && end_exec >= p,
-            last_segment,
-            kv_history: Vec::new(),
-            track_kv_history: track_kv,
-            arrival: req.arrival,
-        }
-    }
-
-    fn alloc_key(&mut self) -> SeqKey {
-        self.next_key += 1;
-        self.next_key
+        // no kick for β: not ready until the transfer completes
     }
 
     /// Start an iteration if the instance is idle and has ready work.
@@ -294,7 +266,6 @@ impl Simulator {
         }
         let plan = self.instances[i].plan_batch();
         if plan.is_empty() {
-            self.instances[i].busy = false;
             return;
         }
         let latency = self.instances[i].plan_latency(&plan);
@@ -309,69 +280,62 @@ impl Simulator {
             .record(plan.shape.prefill_tokens, plan.shape.decode_ctx, plan.shape.decode_reqs, latency);
         self.instances[i].record_stats(&plan, latency);
 
-        let mut completed: Vec<SeqKey> = Vec::new();
+        let mut completed = std::mem::take(&mut self.completed_buf);
+        completed.clear();
         // apply prefill chunks
         for &(key, chunk) in &plan.prefill {
-            let inst = &mut self.instances[i];
-            let Some(seq) = inst.seqs.get_mut(&key) else { continue };
-            seq.work.prefill_remaining -= chunk;
-            seq.work.context += chunk;
-            if seq.track_kv_history {
-                seq.kv_history.push((now, chunk));
+            let Some(out) = self.instances[i].apply_prefill(key, chunk, now) else { continue };
+            if let Some((req, arr)) = out.emit {
+                self.collector.on_token(req, arr, now);
             }
-            if seq.work.prefill_remaining == 0 {
-                if seq.emits_first_token {
-                    let (req, arr) = (seq.request, seq.arrival);
-                    self.collector.on_token(req, arr, now);
-                }
-                if seq.work.decode_remaining == 0 {
-                    completed.push(key);
-                }
+            if out.completed {
+                completed.push(key);
             }
         }
         // apply decode steps
         for &key in &plan.decodes {
-            let inst = &mut self.instances[i];
-            let Some(seq) = inst.seqs.get_mut(&key) else { continue };
-            seq.work.decode_remaining -= 1;
-            seq.work.context += 1;
-            if seq.track_kv_history {
-                seq.kv_history.push((now, 1));
+            let Some(out) = self.instances[i].apply_decode(key, now) else { continue };
+            if let Some((req, arr)) = out.emit {
+                self.collector.on_token(req, arr, now);
             }
-            let (req, arr) = (seq.request, seq.arrival);
-            self.collector.on_token(req, arr, now);
-            if seq.work.is_done() {
+            if out.completed {
                 completed.push(key);
             }
         }
-        for key in completed {
+        for key in completed.drain(..) {
             self.on_segment_done(i, key);
         }
+        self.completed_buf = completed;
         self.instances[i].busy = false;
         self.kick(i);
     }
 
     fn on_segment_done(&mut self, i: usize, key: SeqKey) {
-        let seq = self.instances[i].seqs.get(&key).expect("segment exists").clone();
-        let req_state = self.reqs.get(&seq.request);
-        let has_beta_wait = req_state
-            .and_then(|r| r.beta)
-            .map(|(_, bk)| bk != key)
-            .unwrap_or(false);
+        let seq = self.instances[i].get(key).expect("completed segment resident");
+        let (request, last_segment) = (seq.request, seq.last_segment);
+        let beta_ref = self.reqs.get(&request).and_then(|r| r.beta);
+        // arena keys are only unique per instance (two arenas both start
+        // at slot 0), so β must be identified by (instance, key)
+        let has_beta_wait = beta_ref.map(|(bi, bk)| (bi, bk) != (i, key)).unwrap_or(false);
 
-        if seq.last_segment {
-            self.collector.on_complete(seq.request);
+        if last_segment {
+            self.collector.on_complete(request);
             self.instances[i].evict(key);
             self.kick(i);
-            self.reqs.remove(&seq.request);
+            self.reqs.remove(&request);
             return;
         }
 
         // α completed and a β segment waits: schedule the KV transfer.
         if has_beta_wait {
-            let (b_inst, b_key) = req_state.unwrap().beta.unwrap();
+            let (b_inst, b_key) = beta_ref.unwrap();
+            // α is done executing — take its history instead of cloning it
+            let history = self.instances[i]
+                .get_mut(key)
+                .map(|s| std::mem::take(&mut s.kv_history))
+                .unwrap_or_default();
             let kv_bytes = self.cfg.spec.llm.kv_bytes_per_token();
-            let ready = group_chunks(&seq.kv_history, self.cfg.transfer_chunk_tokens, kv_bytes);
+            let ready = group_chunks(&history, self.cfg.transfer_chunk_tokens, kv_bytes);
             let chunked = chunked_timeline(&ready, &self.cfg.link);
             let mono = monolithic_timeline(&ready, &self.cfg.link);
             self.transfer.chunked_exposed += chunked.exposed;
@@ -400,20 +364,58 @@ impl Simulator {
     }
 }
 
+fn make_seq(
+    req: &Request,
+    start: usize,
+    end_exec: usize,
+    last_segment: bool,
+    track_kv: bool,
+) -> SimSeq {
+    let p = req.prompt_len;
+    SimSeq {
+        request: req.id,
+        start,
+        end_exec,
+        prompt_len: p,
+        work: crate::coordinator::WorkItem {
+            prefill_remaining: end_exec.min(p).saturating_sub(start),
+            context: start,
+            decode_remaining: end_exec.saturating_sub(start.max(p)),
+        },
+        ready: true,
+        emits_first_token: start < p && end_exec >= p,
+        last_segment,
+        admitted: false,
+        kv_history: Vec::new(),
+        track_kv_history: track_kv,
+        arrival: req.arrival,
+    }
+}
+
 /// Group an α-side KV production history into transfer chunks of
-/// ~`chunk_tokens`: (ready_time, bytes) per chunk.
-fn group_chunks(history: &[(f64, usize)], chunk_tokens: usize, kv_bytes: f64) -> Vec<(f64, f64)> {
-    let mut out = Vec::new();
+/// ~`chunk_tokens`: (ready_time, bytes) per chunk. The history is
+/// run-length coalesced ([`KvSpan`]); chunk-ready times inside a decode
+/// run interpolate linearly over the run's step times. The output is
+/// pre-sized: exactly ⌈total/chunk⌉ entries, no re-push loops.
+fn group_chunks(history: &[KvSpan], chunk_tokens: usize, kv_bytes: f64) -> Vec<(f64, f64)> {
+    let total: usize = history.iter().map(|h| h.tokens).sum();
+    if total == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(total / chunk_tokens + 1);
     let mut acc = 0usize;
-    for &(t, n) in history {
-        acc += n;
-        while acc >= chunk_tokens {
-            out.push((t, chunk_tokens as f64 * kv_bytes));
-            acc -= chunk_tokens;
+    for span in history {
+        let mut used = 0usize;
+        while acc + (span.tokens - used) >= chunk_tokens {
+            let need = chunk_tokens - acc;
+            used += need;
+            acc = 0;
+            out.push((span.time_of(used), chunk_tokens as f64 * kv_bytes));
         }
+        acc += span.tokens - used;
     }
     if acc > 0 {
-        let t = history.last().map(|h| h.0).unwrap_or(0.0);
+        let t = history.last().map(|h| h.t1).unwrap_or(0.0);
         out.push((t, acc as f64 * kv_bytes));
     }
     out
@@ -513,13 +515,38 @@ mod tests {
         }
     }
 
+    fn chunk(t: f64, tokens: usize) -> KvSpan {
+        KvSpan { t0: t, t1: t, tokens, decode_run: false }
+    }
+
     #[test]
     fn group_chunks_conserves_tokens() {
-        let hist = vec![(0.1, 300), (0.2, 300), (0.3, 300)];
+        let hist = vec![chunk(0.1, 300), chunk(0.2, 300), chunk(0.3, 300)];
         let chunks = group_chunks(&hist, 256, 2.0);
         let total: f64 = chunks.iter().map(|c| c.1).sum();
         assert_eq!(total, 900.0 * 2.0);
         assert!(chunks.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn group_chunks_conserves_tokens_over_decode_runs() {
+        // a prefill chunk followed by a 500-token decode run: the
+        // run-length representation must conserve tokens and keep chunk
+        // ready-times monotone within the run's [t0, t1] window
+        let hist = vec![
+            chunk(0.05, 300),
+            KvSpan { t0: 0.1, t1: 5.1, tokens: 500, decode_run: true },
+        ];
+        let chunks = group_chunks(&hist, 256, 1.0);
+        let total: f64 = chunks.iter().map(|c| c.1).sum();
+        assert_eq!(total, 800.0);
+        assert!(chunks.windows(2).all(|w| w[0].0 <= w[1].0));
+        // every interpolated time stays inside the run window
+        for (t, _) in &chunks[1..] {
+            assert!(*t >= 0.1 - 1e-12 && *t <= 5.1 + 1e-12, "t={t}");
+        }
+        // pre-sizing is exact: ⌈800/256⌉ = 4 chunks
+        assert_eq!(chunks.len(), 4);
     }
 
     #[test]
@@ -529,5 +556,55 @@ mod tests {
         let (sl, _) = run_policy(Box::new(ColocPolicy::new()), light);
         let (sh, _) = run_policy(Box::new(ColocPolicy::new()), heavy);
         assert!(sh.p99_tbt >= sl.p99_tbt);
+    }
+
+    #[test]
+    fn same_seed_runs_are_bit_identical() {
+        let run = || {
+            let reqs = poisson_workload(TraceKind::BurstGpt, 3.0, 20.0, 19);
+            let (s, _) = run_policy(
+                Box::new(DynaServePolicy::new(GlobalConfig::default())),
+                reqs,
+            );
+            format!("{s:?}")
+        };
+        assert_eq!(run(), run(), "same (trace, qps, seed) must be bit-identical");
+    }
+
+    #[test]
+    fn exact_snapshot_path_matches_digest_path_for_baselines() {
+        // Coloc/Disagg decisions read only digest-representable load, so
+        // the exact and digest paths must produce identical summaries.
+        let mk = |exact: bool, policy: Box<dyn Policy>| {
+            let mut cfg = SimConfig::new(spec(), 2);
+            cfg.exact_snapshots = exact;
+            let reqs = poisson_workload(TraceKind::BurstGpt, 2.0, 25.0, 29);
+            let mut sim = Simulator::new(cfg, policy);
+            format!("{:?}", sim.run(reqs))
+        };
+        assert_eq!(
+            mk(false, Box::new(ColocPolicy::new())),
+            mk(true, Box::new(ColocPolicy::new()))
+        );
+        assert_eq!(
+            mk(false, Box::new(DisaggPolicy::new(1))),
+            mk(true, Box::new(DisaggPolicy::new(1)))
+        );
+    }
+
+    #[test]
+    fn exact_snapshot_path_completes_dynaserve() {
+        // DynaServe's exact path probes per-item state — decisions may
+        // differ from the digest path, but conservation must hold.
+        let mut cfg = SimConfig::new(spec(), 2);
+        cfg.exact_snapshots = true;
+        let reqs = poisson_workload(TraceKind::MiniReasoning, 1.5, 25.0, 31);
+        let n = reqs.len();
+        let expect: usize = reqs.iter().map(|r| r.decode_len).sum();
+        let mut sim =
+            Simulator::new(cfg, Box::new(DynaServePolicy::new(GlobalConfig::default())));
+        let s = sim.run(reqs);
+        assert_eq!(s.completed, n);
+        assert_eq!(s.total_tokens, expect);
     }
 }

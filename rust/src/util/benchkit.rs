@@ -1,6 +1,15 @@
 //! Minimal benchmarking harness (criterion is not in the offline vendor
 //! set). Used by the `harness = false` bench targets: warms up, runs timed
 //! iterations until a time budget, reports mean / p50 / p99 per iteration.
+//!
+//! Environment knobs:
+//! * `DYNASERVE_BENCH_BUDGET` — override every bench's time budget in
+//!   seconds (CI's bench-smoke job sets a sub-second budget so the custom
+//!   `harness = false` targets are actually *executed*, which
+//!   `cargo test` never does).
+//! * `DYNASERVE_BENCH_JSON` — when set, [`write_json_report`] writes the
+//!   collected results to that path (`make artifacts` uses this to emit
+//!   `BENCH_sim.json` for the per-PR perf trajectory).
 
 use std::time::Instant;
 
@@ -37,8 +46,20 @@ pub fn fmt_time(s: f64) -> String {
     }
 }
 
-/// Benchmark `f` for ~`budget_secs` (after a short warmup). Returns stats.
+/// The effective time budget: `DYNASERVE_BENCH_BUDGET` overrides the
+/// caller's default (clamped to a sane floor).
+fn effective_budget(default_secs: f64) -> f64 {
+    std::env::var("DYNASERVE_BENCH_BUDGET")
+        .ok()
+        .and_then(|v| v.trim().parse::<f64>().ok())
+        .map(|b| b.max(0.01))
+        .unwrap_or(default_secs)
+}
+
+/// Benchmark `f` for ~`budget_secs` (after a short warmup; the budget is
+/// overridable via `DYNASERVE_BENCH_BUDGET`). Returns stats.
 pub fn bench<F: FnMut()>(name: &str, budget_secs: f64, mut f: F) -> BenchResult {
+    let budget_secs = effective_budget(budget_secs);
     // warmup
     let warm_until = Instant::now() + std::time::Duration::from_secs_f64(budget_secs * 0.2);
     while Instant::now() < warm_until {
@@ -72,6 +93,35 @@ pub fn bench<F: FnMut()>(name: &str, budget_secs: f64, mut f: F) -> BenchResult 
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+/// Write `results` as a JSON array to `$DYNASERVE_BENCH_JSON` when set
+/// (no-op otherwise). Best-effort: failures are warnings, never panics —
+/// bench runs should not die on a read-only results directory.
+pub fn write_json_report(results: &[BenchResult]) {
+    let Ok(path) = std::env::var("DYNASERVE_BENCH_JSON") else { return };
+    use crate::util::json::{obj, Json};
+    let arr = Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                obj([
+                    ("name", Json::from(r.name.clone())),
+                    ("iters", Json::from(r.iters as f64)),
+                    ("mean_s", Json::from(r.mean)),
+                    ("p50_s", Json::from(r.p50)),
+                    ("p99_s", Json::from(r.p99)),
+                ])
+            })
+            .collect(),
+    );
+    if let Some(dir) = std::path::Path::new(&path).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    match std::fs::write(&path, arr.dump_pretty()) {
+        Ok(()) => println!("[bench json -> {path}]"),
+        Err(e) => eprintln!("warn: could not write {path}: {e}"),
+    }
 }
 
 #[cfg(test)]

@@ -179,6 +179,26 @@ fn prediction_error_token_conservation() {
     });
 }
 
+/// Hot-path refactor contract: the same (system, trace, qps, seed) cell
+/// run twice yields a bit-identical Summary — the digest-based arrival
+/// path and arena-backed instances introduce no iteration-order or
+/// allocation-order nondeterminism.
+#[test]
+fn run_once_is_bit_identical_across_runs() {
+    let llm = LlmSpec::qwen25_14b();
+    let slo = SloConfig::default();
+    for sys in [System::Coloc { chunk: 1024 }, System::Disagg, System::DynaServe] {
+        let a = run_once(sys, &llm, TraceKind::BurstGpt, 2.5, 20.0, 13, slo).0;
+        let b = run_once(sys, &llm, TraceKind::BurstGpt, 2.5, 20.0, 13, slo).0;
+        assert_eq!(
+            format!("{a:?}"),
+            format!("{b:?}"),
+            "{}: repeated runs must be bit-identical",
+            sys.name()
+        );
+    }
+}
+
 /// Four instances: the unified pool balances and still conserves tokens.
 #[test]
 fn four_instance_pool() {
