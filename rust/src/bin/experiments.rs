@@ -5,6 +5,8 @@
 //!   cargo run --release --bin experiments -- <id> [--duration S] [--seed N] [--threads N] …
 //!   cargo run --release --bin experiments -- all
 //!   cargo run --release --bin experiments -- list
+//!   cargo run --release --bin experiments -- scenarios --list
+//!   cargo run --release --bin experiments -- scenarios --name hybrid
 //!
 //! Sweep cells fan out across a worker pool sized by `--threads` /
 //! `DYNASERVE_THREADS` (default: available parallelism; results are

@@ -77,6 +77,15 @@ impl GlobalScheduler {
         self.cfg.link.transfer_time(bytes) * (1.0 - self.cfg.transfer_overlap)
     }
 
+    /// Predictor tuning for one request: the configured defaults, with the
+    /// SLO slack swapped for the request's own TBT target when it has one.
+    fn predictor_for(&self, req: &Request) -> PredictorConfig {
+        match req.slo {
+            Some(s) => PredictorConfig { slo: s.tbt, ..self.cfg.predictor },
+            None => self.cfg.predictor,
+        }
+    }
+
     /// Algorithm 1 over incremental [`LoadDigest`]s — the default hot
     /// path: no per-segment clones, no per-probe allocations. `loads` is
     /// the current digest of every instance in the unified pool;
@@ -89,7 +98,13 @@ impl GlobalScheduler {
     ) -> ScheduleOutcome {
         assert!(!loads.is_empty());
         let l = req.predicted_len().max(1);
-        let pcfg = &self.cfg.predictor;
+        // Per-request SLO slack: a request carrying its own TBT target is
+        // probed with that budget — a tighter target shrinks the virtual
+        // per-pass prefill budget, lengthening predicted drain times under
+        // queued prefill, so the split balances against the latency class
+        // actually at stake (DESIGN.md §Scenarios).
+        let pcfg = self.predictor_for(req);
+        let pcfg = &pcfg;
 
         // Single instance: degenerate to colocation.
         if loads.len() == 1 {
@@ -173,7 +188,9 @@ impl GlobalScheduler {
     ) -> ScheduleOutcome {
         assert!(!snapshots.is_empty());
         let l = req.predicted_len().max(1);
-        let pcfg = &self.cfg.predictor;
+        // Same per-request SLO slack as the digest path.
+        let pcfg = self.predictor_for(req);
+        let pcfg = &pcfg;
 
         // Single instance: degenerate to colocation.
         if snapshots.len() == 1 {
@@ -396,6 +413,32 @@ mod tests {
             "dynamic={imbalance} static={static_imbalance}"
         );
         assert!(out.decision.split > s_static, "split={}", out.decision.split);
+    }
+
+    #[test]
+    fn tight_request_slo_lengthens_probes() {
+        // Per-request SLO slack (scenario classes): a tighter TBT target
+        // probes with smaller virtual prefill chunks, so the predicted
+        // drain of the same backlog grows — the split is balanced against
+        // the latency class actually at stake.
+        let p = profile();
+        let mut snaps = idle(2);
+        for s in snaps.iter_mut() {
+            s.work =
+                vec![WorkItem { prefill_remaining: 16384, context: 0, decode_remaining: 64 }];
+        }
+        let loads = digests(&snaps);
+        let r_loose = req(1024, 1024);
+        let mut r_tight = req(1024, 1024);
+        r_tight.slo = Some(crate::core::SloTarget { tbt: 0.020, ttft: Some(0.5) });
+        let o_loose = GlobalScheduler::new(GlobalConfig::default()).schedule(&r_loose, &loads, &p);
+        let o_tight = GlobalScheduler::new(GlobalConfig::default()).schedule(&r_tight, &loads, &p);
+        assert!(
+            o_tight.t_alpha > o_loose.t_alpha,
+            "tight {:.4}s should exceed loose {:.4}s",
+            o_tight.t_alpha,
+            o_loose.t_alpha
+        );
     }
 
     #[test]

@@ -1,14 +1,29 @@
-//! Local scheduler (§4.2, Algorithm 2): SLO-aware dynamic batch
+//! Local scheduler (paper §4.2, Algorithm 2): SLO-aware dynamic batch
 //! composition on each unified instance.
 //!
-//! Per iteration it (1) RECORDs the previous batch's measured latency into
-//! the profile table, (2) admits every decode-phase sequence (decodes are
-//! latency-critical and advance one token per pass), (3) derives the
-//! maximum prefill token budget M that keeps the predicted batch latency
-//! under the TBT SLO given the decode composition, and (4) greedily fills
-//! M with prefill chunks in arrival order. A safety multiplier inside the
-//! profile table tightens on observed breaches and relaxes with headroom —
-//! the "reconfigure when latency approaches the SLO" behaviour of §3.1.
+//! Per iteration [`LocalScheduler::next_batch`] (1) RECORDs the previous
+//! batch's measured latency into the [`ProfileTable`]
+//! ([`LocalScheduler::record_execution`]), (2) admits every decode-phase
+//! sequence (decodes are latency-critical and advance one token per pass),
+//! (3) inverts the profile for the maximum prefill token budget M that
+//! keeps the predicted batch latency under the TBT SLO given the decode
+//! composition ([`ProfileTable::max_prefill_tokens`]), and (4) greedily
+//! fills M with prefill chunks in arrival order into a [`BatchPlan`]. A
+//! safety multiplier inside the profile table tightens on observed
+//! breaches and relaxes with headroom — the "reconfigure when latency
+//! approaches the SLO" behaviour of §3.1.
+//!
+//! Both executors drive this same code: the discrete-event simulator
+//! ([`crate::sim`]) through `SimInstance::plan_batch`, and the live PJRT
+//! server ([`crate::server`]) on each instance thread — DESIGN.md §3's
+//! shared-scheduler invariant. [`LocalConfig::fixed_budget`] is the
+//! Figure 11 ablation ("without SLO-aware batching") and doubles as the
+//! chunked-prefill colocation baseline's static chunk size
+//! ([`crate::baselines::ColocPolicy`]). The TBT target here is the
+//! *pool-wide* batching bound; per-request [`crate::core::SloTarget`]s
+//! from scenario traffic classes are scored by the metrics layer and fed
+//! to Algorithm 1's probes, while Algorithm 2 batches to the pool bound
+//! (DESIGN.md §Scenarios).
 
 use super::profile::ProfileTable;
 use crate::costmodel::BatchShape;

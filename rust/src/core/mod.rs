@@ -11,6 +11,22 @@
 
 pub type RequestId = u64;
 pub type InstanceId = usize;
+/// Traffic-class index into the active scenario's class list
+/// (`crate::workload::scenario`); `0` is the default class for workloads
+/// that don't distinguish traffic.
+pub type ClassId = usize;
+
+/// Per-request latency targets. Scenario traffic classes attach these so a
+/// single run can score interactive chat against a tight TTFT/TBT bound
+/// while batch summarization rides a loose one (DistServe-style goodput:
+/// a token only counts when it met *its own* request's SLO).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTarget {
+    /// Time-between-tokens bound, seconds.
+    pub tbt: f64,
+    /// Time-to-first-token bound, seconds (None = unconstrained).
+    pub ttft: Option<f64>,
+}
 
 /// An inference request as seen by the global scheduler.
 #[derive(Debug, Clone, PartialEq)]
@@ -26,6 +42,11 @@ pub struct Request {
     /// Decode length estimate D̂ from the length predictor (what the
     /// scheduler is allowed to look at).
     pub predicted_decode: usize,
+    /// Traffic class this request belongs to (0 = default).
+    pub class: ClassId,
+    /// This request's own latency targets; None = the pool-wide default
+    /// SLO configured on the metrics collector.
+    pub slo: Option<SloTarget>,
 }
 
 impl Request {
@@ -36,7 +57,17 @@ impl Request {
             prompt_len,
             decode_len,
             predicted_decode: decode_len,
+            class: 0,
+            slo: None,
         }
+    }
+
+    /// Tag the request with a traffic class and that class's SLO targets
+    /// (builder-style; used by the scenario generator).
+    pub fn with_class(mut self, class: ClassId, slo: SloTarget) -> Self {
+        self.class = class;
+        self.slo = Some(slo);
+        self
     }
 
     /// True logical length L = P + D.
@@ -221,6 +252,17 @@ mod tests {
         let (a, b) = d.to_micro_requests(&r);
         assert_eq!(a.unwrap().end, 15);
         assert!(b.is_none());
+    }
+
+    #[test]
+    fn class_and_slo_default_then_tag() {
+        let r = req(100, 50);
+        assert_eq!(r.class, 0);
+        assert_eq!(r.slo, None);
+        let slo = SloTarget { tbt: 0.05, ttft: Some(0.5) };
+        let tagged = r.with_class(3, slo);
+        assert_eq!(tagged.class, 3);
+        assert_eq!(tagged.slo, Some(slo));
     }
 
     #[test]

@@ -17,6 +17,7 @@ pub mod fig10;
 pub mod fig11;
 pub mod kvxfer;
 pub mod runners;
+pub mod scenarios;
 pub mod table1;
 pub mod table2;
 pub mod table3;
@@ -42,6 +43,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
         ("table3", "per-request global scheduling overhead vs QPS", table3::run),
         ("table4", "goodput sensitivity to length-prediction error", table4::run),
         ("kvxfer", "chunked KV transfer: non-overlapped time reduction", kvxfer::run),
+        (
+            "scenarios",
+            "mixed-SLO scenario suite (hybrid/burst/diurnal/ramp/multi-turn), per-class goodput",
+            scenarios::run,
+        ),
     ]
 }
 

@@ -1,0 +1,155 @@
+//! Scenario suite: mixed-SLO traffic classes under shaped load
+//! (`workload::scenario`), scored per class — the goodput-under-SLO
+//! claim (§6.4) stressed the way §3.1 intends, beyond the per-figure
+//! static traces.
+//!
+//! Usage:
+//!   experiments -- scenarios --list            enumerate named scenarios
+//!   experiments -- scenarios --name hybrid     run one scenario
+//!   experiments -- scenarios                   run the whole suite
+//!   experiments -- scenarios --smoke           tiny CI variant per shape
+//!
+//! Each scenario runs DynaServe and both baselines over the *same*
+//! generated request stream (cells fan out via `runners::run_cells`) and
+//! writes `results/scenario_<name>.json` with the global summary plus
+//! per-class goodput / SLO attainment / TTFT-TBT percentiles. Per-class
+//! counters partition the global summary exactly (asserted in
+//! `tests/scenarios.rs`).
+
+use crate::costmodel::LlmSpec;
+use crate::experiments::runners::{build_sim, run_cells, sweep_threads, System};
+use crate::experiments::write_results;
+use crate::metrics::{ClassSummary, SloConfig, Summary};
+use crate::util::cli::{ms, pct, Args, Table};
+use crate::util::json::{obj, Json};
+use crate::workload::Scenario;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    if args.bool("list") {
+        println!("named scenarios (experiments -- scenarios --name <id>):");
+        for s in Scenario::suite() {
+            println!("  {:<12} {}", s.name, s.description);
+        }
+        return Ok(());
+    }
+    let seed = args.u64_or("seed", 42);
+    let smoke = args.bool("smoke");
+    let scenarios: Vec<Scenario> = match args.get("name") {
+        Some(name) => vec![Scenario::by_name(name).ok_or_else(|| {
+            let known: Vec<_> = Scenario::suite().iter().map(|s| s.name).collect();
+            anyhow::anyhow!("unknown scenario '{name}' (known: {})", known.join(", "))
+        })?],
+        None => Scenario::suite(),
+    };
+    for sc in scenarios {
+        let mut sc = if smoke { sc.smoke() } else { sc };
+        if let Some(d) = args.get("duration").and_then(|s| s.parse::<f64>().ok()) {
+            // rescales the shape's time structure too, so a shortened
+            // burst/diurnal scenario keeps its defining feature
+            sc = sc.with_duration(d);
+        }
+        run_scenario(&sc, seed)?;
+    }
+    Ok(())
+}
+
+fn run_scenario(sc: &Scenario, seed: u64) -> anyhow::Result<()> {
+    let llm = LlmSpec::qwen25_14b();
+    let slo = SloConfig::default();
+    let requests = sc.generate(seed);
+    println!(
+        "\nscenario '{}' — {} ({} requests over {:.0}s, seed {seed})",
+        sc.name,
+        sc.description,
+        requests.len(),
+        sc.duration
+    );
+
+    let systems = System::all_default();
+    let results: Vec<(Summary, Vec<ClassSummary>)> = run_cells(&systems, sweep_threads(), |&sys| {
+        let mut sim = build_sim(sys, &llm, slo);
+        let summary = sim.run(requests.clone());
+        let classes = sim.collector.class_summaries(summary.duration);
+        (summary, classes)
+    });
+
+    let mut t = Table::new([
+        "system", "class", "goodput tok/s", "attain %", "ttft-ok %", "req-slo %", "p99 TTFT ms",
+        "p99 TBT ms",
+    ]);
+    let mut sys_objs = Vec::new();
+    for (sys, (summary, classes)) in systems.iter().zip(&results) {
+        t.row([
+            sys.name().to_string(),
+            "(all)".to_string(),
+            format!("{:.1}", summary.goodput_tok_s),
+            pct(summary.attainment),
+            "-".to_string(),
+            pct(summary.req_slo_frac),
+            ms(summary.p99_ttft),
+            ms(summary.p99_tbt),
+        ]);
+        let mut class_objs = Vec::new();
+        for c in classes {
+            let name = sc.classes.get(c.class).map(|k| k.name).unwrap_or("?");
+            t.row([
+                String::new(),
+                name.to_string(),
+                format!("{:.1}", c.goodput_tok_s),
+                pct(c.attainment),
+                pct(c.ttft_attainment),
+                pct(c.req_slo_frac),
+                ms(c.p99_ttft),
+                ms(c.p99_tbt),
+            ]);
+            class_objs.push(obj([
+                ("name", Json::from(name)),
+                ("class", Json::from(c.class)),
+                ("tbt_slo", Json::from(c.tbt_slo)),
+                ("ttft_slo", c.ttft_slo.map(Json::from).unwrap_or(Json::Null)),
+                ("completed", Json::from(c.completed)),
+                ("total_tokens", Json::from(c.total_tokens)),
+                ("good_tokens", Json::from(c.good_tokens)),
+                ("goodput_tok_s", Json::from(c.goodput_tok_s)),
+                ("attainment", Json::from(c.attainment)),
+                ("ttft_attainment", Json::from(c.ttft_attainment)),
+                ("req_slo_frac", Json::from(c.req_slo_frac)),
+                ("p50_tbt", Json::from(c.p50_tbt)),
+                ("p99_tbt", Json::from(c.p99_tbt)),
+                ("p50_ttft", Json::from(c.p50_ttft)),
+                ("p99_ttft", Json::from(c.p99_ttft)),
+            ]));
+        }
+        sys_objs.push(obj([
+            ("system", Json::from(sys.name())),
+            (
+                "summary",
+                obj([
+                    ("completed", Json::from(summary.completed)),
+                    ("total_tokens", Json::from(summary.total_tokens)),
+                    ("good_tokens", Json::from(summary.good_tokens)),
+                    ("goodput_tok_s", Json::from(summary.goodput_tok_s)),
+                    ("throughput_tok_s", Json::from(summary.throughput_tok_s)),
+                    ("attainment", Json::from(summary.attainment)),
+                    ("req_slo_frac", Json::from(summary.req_slo_frac)),
+                    ("p99_tbt", Json::from(summary.p99_tbt)),
+                    ("p99_ttft", Json::from(summary.p99_ttft)),
+                ]),
+            ),
+            ("classes", Json::Arr(class_objs)),
+        ]));
+    }
+    t.print();
+
+    let artifact = obj([
+        ("scenario", Json::from(sc.name)),
+        ("description", Json::from(sc.description)),
+        ("seed", Json::from(seed as usize)),
+        ("duration_s", Json::from(sc.duration)),
+        ("shape", Json::from(format!("{:?}", sc.shape))),
+        ("requests", Json::from(requests.len())),
+        ("systems", Json::Arr(sys_objs)),
+    ]);
+    write_results(&format!("scenario_{}", sc.name), &artifact);
+    Ok(())
+}

@@ -1,13 +1,25 @@
-//! Serving metrics (§6.1): TTFT / TBT recording, SLO attainment, goodput
-//! (useful output tokens per second under the latency SLO), serving
-//! capacity search, and per-instance utilization aggregation.
+//! Serving metrics (paper §6.1): TTFT / TBT recording, SLO attainment,
+//! goodput (useful output tokens per second under the latency SLO), serving
+//! capacity search, and per-traffic-class attainment reporting.
+//!
+//! Goodput follows the DistServe definition (arXiv 2401.09670): a token is
+//! *good* only if it met the latency targets of the request it belongs to.
+//! Each request may carry its own [`crate::core::SloTarget`] (attached by
+//! the scenario engine, [`crate::workload::scenario`]); requests without
+//! one are scored against the pool-wide [`SloConfig`] default, which keeps
+//! every pre-scenario experiment bit-identical. The [`Collector`] streams
+//! token events in and produces a global [`Summary`] plus per-class
+//! [`ClassSummary`] rows whose counters reconcile exactly with the global
+//! ones (asserted under test) — see DESIGN.md §Scenarios.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
-use crate::core::RequestId;
+use crate::core::{ClassId, Request, RequestId, SloTarget};
 use crate::util::stats::Samples;
 
-/// Latency objectives. The paper enforces a uniform 100 ms P99 TBT SLO.
+/// Pool-wide latency objectives — the fallback for requests that carry no
+/// [`SloTarget`] of their own. The paper enforces a uniform 100 ms P99 TBT
+/// SLO.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SloConfig {
     /// Time-between-tokens bound, seconds.
@@ -23,6 +35,12 @@ impl Default for SloConfig {
     }
 }
 
+impl From<SloTarget> for SloConfig {
+    fn from(t: SloTarget) -> Self {
+        SloConfig { tbt: t.tbt, ttft: t.ttft }
+    }
+}
+
 #[derive(Debug, Clone)]
 struct ReqState {
     arrival: f64,
@@ -31,6 +49,10 @@ struct ReqState {
     tokens: usize,
     tbt_violations: usize,
     max_tbt: f64,
+    /// Traffic class (0 = default).
+    class: ClassId,
+    /// Effective targets this request is scored against.
+    slo: SloConfig,
 }
 
 /// Completed-request record.
@@ -43,6 +65,8 @@ pub struct RequestRecord {
     pub tokens: usize,
     pub tbt_violations: usize,
     pub max_tbt: f64,
+    /// Traffic class the request was scored under (0 = default).
+    pub class: ClassId,
 }
 
 impl RequestRecord {
@@ -57,6 +81,45 @@ impl RequestRecord {
     }
 }
 
+/// Per-traffic-class aggregation, keyed by [`ClassId`]. Every token and
+/// completion lands in exactly one class, so summing any counter over the
+/// classes reproduces the global figure exactly.
+#[derive(Debug, Default)]
+struct ClassAgg {
+    slo: SloConfig,
+    tbt: Samples,
+    ttft: Samples,
+    good_tokens: usize,
+    total_tokens: usize,
+    completed: usize,
+    req_slo_met: usize,
+    ttft_ok: usize,
+}
+
+/// Single initialization site for per-request scoring state — both the
+/// registration path ([`Collector::on_request`]) and the lazy first-token
+/// fallback go through here, so the defaults can never drift apart. A free
+/// function over the map (not a method) keeps the borrow field-disjoint
+/// from the collector's other counters.
+fn ensure_state(
+    active: &mut HashMap<RequestId, ReqState>,
+    id: RequestId,
+    arrival: f64,
+    class: ClassId,
+    slo: SloConfig,
+) -> &mut ReqState {
+    active.entry(id).or_insert(ReqState {
+        arrival,
+        first_token: None,
+        last_token: 0.0,
+        tokens: 0,
+        tbt_violations: 0,
+        max_tbt: 0.0,
+        class,
+        slo,
+    })
+}
+
 /// Streams token events in, produces a [`Summary`] out.
 #[derive(Debug, Default)]
 pub struct Collector {
@@ -67,6 +130,11 @@ pub struct Collector {
     ttft: Samples,
     good_tokens: usize,
     total_tokens: usize,
+    /// Inter-token gaps that met their own request's TBT bound (the
+    /// numerator of the global attainment figure).
+    gaps_within_slo: usize,
+    /// BTreeMap for deterministic class iteration order.
+    classes: BTreeMap<ClassId, ClassAgg>,
 }
 
 impl Collector {
@@ -78,33 +146,58 @@ impl Collector {
         self.slo
     }
 
+    /// Register an arriving request's class and SLO targets before its
+    /// tokens stream in. Optional: unregistered requests are scored in
+    /// class 0 against the pool default, exactly as before the scenario
+    /// engine existed.
+    ///
+    /// Invariant: all requests sharing a class id must carry the same
+    /// [`SloTarget`] (the scenario generator guarantees this — a class
+    /// *is* its target). Tokens are always scored against their own
+    /// request's target, but the per-class attainment row reports one
+    /// bound per class, last registration winning.
+    pub fn on_request(&mut self, req: &Request) {
+        let slo = req.slo.map(SloConfig::from).unwrap_or(self.slo);
+        ensure_state(&mut self.active, req.id, req.arrival, req.class, slo);
+        // remember the class targets even if the request never completes
+        let agg = self.classes.entry(req.class).or_default();
+        agg.slo = slo;
+    }
+
     /// Record one emitted output token for `id` at time `t`.
     pub fn on_token(&mut self, id: RequestId, arrival: f64, t: f64) {
-        let st = self.active.entry(id).or_insert(ReqState {
-            arrival,
-            first_token: None,
-            last_token: 0.0,
-            tokens: 0,
-            tbt_violations: 0,
-            max_tbt: 0.0,
-        });
+        let default_slo = self.slo;
+        let st = ensure_state(&mut self.active, id, arrival, 0, default_slo);
+        let (st_class, st_slo) = (st.class, st.slo);
+        let agg = self
+            .classes
+            .entry(st_class)
+            .or_insert_with(|| ClassAgg { slo: st_slo, ..Default::default() });
         self.total_tokens += 1;
+        agg.total_tokens += 1;
         match st.first_token {
             None => {
                 st.first_token = Some(t);
-                self.ttft.push(t - arrival);
+                let ttft = t - st.arrival;
+                self.ttft.push(ttft);
+                agg.ttft.push(ttft);
                 // first token counts as good unless a TTFT SLO is set
-                let ok = self.slo.ttft.map(|b| t - arrival <= b).unwrap_or(true);
+                let ok = st.slo.ttft.map(|b| ttft <= b).unwrap_or(true);
                 if ok {
                     self.good_tokens += 1;
+                    agg.good_tokens += 1;
+                    agg.ttft_ok += 1;
                 }
             }
             Some(_) => {
                 let gap = t - st.last_token;
                 self.tbt.push(gap);
+                agg.tbt.push(gap);
                 st.max_tbt = st.max_tbt.max(gap);
-                if gap <= self.slo.tbt {
+                if gap <= st.slo.tbt {
                     self.good_tokens += 1;
+                    self.gaps_within_slo += 1;
+                    agg.good_tokens += 1;
                 } else {
                     st.tbt_violations += 1;
                 }
@@ -117,7 +210,7 @@ impl Collector {
     /// Mark `id` finished (all decode tokens emitted).
     pub fn on_complete(&mut self, id: RequestId) {
         if let Some(st) = self.active.remove(&id) {
-            self.completed.push(RequestRecord {
+            let rec = RequestRecord {
                 id,
                 arrival: st.arrival,
                 finish: st.last_token,
@@ -125,7 +218,14 @@ impl Collector {
                 tokens: st.tokens,
                 tbt_violations: st.tbt_violations,
                 max_tbt: st.max_tbt,
-            });
+                class: st.class,
+            };
+            let agg = self.classes.entry(st.class).or_default();
+            agg.completed += 1;
+            if rec.meets_slo_p99() {
+                agg.req_slo_met += 1;
+            }
+            self.completed.push(rec);
         }
     }
 
@@ -134,7 +234,6 @@ impl Collector {
     }
 
     pub fn summarize(&mut self, duration: f64) -> Summary {
-        let slo = self.slo.tbt;
         Summary {
             duration,
             completed: self.completed.len(),
@@ -143,10 +242,13 @@ impl Collector {
             goodput_tok_s: self.good_tokens as f64 / duration,
             throughput_tok_s: self.total_tokens as f64 / duration,
             rps: self.completed.len() as f64 / duration,
+            // each gap scored against its own request's TBT, consistent
+            // with good_tokens (identical to fraction_leq(pool slo) when
+            // no request carries its own target)
             attainment: if self.tbt.is_empty() {
                 1.0
             } else {
-                self.tbt.fraction_leq(slo)
+                self.gaps_within_slo as f64 / self.tbt.len() as f64
             },
             p50_tbt: self.tbt.p50(),
             p99_tbt: self.tbt.p99(),
@@ -173,6 +275,74 @@ impl Collector {
     pub fn tbt_samples(&mut self) -> &mut Samples {
         &mut self.tbt
     }
+
+    /// Per-class attainment rows, ordered by class id. Counter fields
+    /// (`completed`, `total_tokens`, `good_tokens`) partition the global
+    /// [`Summary`] exactly: summing them over the classes reproduces the
+    /// global figures (asserted in tests — the scenario reconciliation
+    /// invariant).
+    pub fn class_summaries(&mut self, duration: f64) -> Vec<ClassSummary> {
+        let mut out = Vec::with_capacity(self.classes.len());
+        for (&class, agg) in self.classes.iter_mut() {
+            out.push(ClassSummary {
+                class,
+                tbt_slo: agg.slo.tbt,
+                ttft_slo: agg.slo.ttft,
+                completed: agg.completed,
+                total_tokens: agg.total_tokens,
+                good_tokens: agg.good_tokens,
+                goodput_tok_s: agg.good_tokens as f64 / duration,
+                attainment: if agg.tbt.is_empty() {
+                    1.0
+                } else {
+                    agg.tbt.fraction_leq(agg.slo.tbt)
+                },
+                ttft_attainment: if agg.ttft.is_empty() {
+                    1.0
+                } else {
+                    agg.ttft_ok as f64 / agg.ttft.len() as f64
+                },
+                req_slo_frac: if agg.completed == 0 {
+                    1.0
+                } else {
+                    agg.req_slo_met as f64 / agg.completed as f64
+                },
+                p50_tbt: agg.tbt.p50(),
+                p99_tbt: agg.tbt.p99(),
+                p50_ttft: agg.ttft.p50(),
+                p99_ttft: agg.ttft.p99(),
+            });
+        }
+        out
+    }
+}
+
+/// Attainment statistics for one traffic class — what the scenario suite
+/// reports per (system × scenario × class). Produced by
+/// [`Collector::class_summaries`].
+#[derive(Debug, Clone)]
+pub struct ClassSummary {
+    pub class: ClassId,
+    /// The TBT bound this class was scored against.
+    pub tbt_slo: f64,
+    /// The TTFT bound this class was scored against (None = unconstrained).
+    pub ttft_slo: Option<f64>,
+    pub completed: usize,
+    pub total_tokens: usize,
+    /// Tokens that met this class's own SLO targets.
+    pub good_tokens: usize,
+    pub goodput_tok_s: f64,
+    /// Fraction of this class's inter-token gaps within its TBT bound.
+    pub attainment: f64,
+    /// Fraction of this class's first tokens within its TTFT bound
+    /// (1.0 when unconstrained).
+    pub ttft_attainment: f64,
+    /// Fraction of completed requests meeting the per-request p99 SLO.
+    pub req_slo_frac: f64,
+    pub p50_tbt: f64,
+    pub p99_tbt: f64,
+    pub p50_ttft: f64,
+    pub p99_ttft: f64,
 }
 
 /// Aggregated serving statistics for one run.
@@ -186,7 +356,8 @@ pub struct Summary {
     pub goodput_tok_s: f64,
     pub throughput_tok_s: f64,
     pub rps: f64,
-    /// Fraction of inter-token gaps within the SLO.
+    /// Fraction of inter-token gaps within their own request's TBT bound
+    /// (the pool default when a request carries no [`crate::core::SloTarget`]).
     pub attainment: f64,
     pub p50_tbt: f64,
     pub p99_tbt: f64,
@@ -299,6 +470,7 @@ mod tests {
             tokens: 200,
             tbt_violations: 2,
             max_tbt: 0.5,
+            class: 0,
         };
         assert!(!r.meets_slo_strict());
         assert!(r.meets_slo_p99()); // 2/200 = 1%
@@ -319,6 +491,92 @@ mod tests {
         assert_eq!(s.total_tokens, 100);
         // 9 late gaps among 99 gaps, first token free
         assert_eq!(s.good_tokens, 100 - 9);
+    }
+
+    #[test]
+    fn per_request_slo_overrides_default() {
+        use crate::core::{Request, SloTarget};
+        // default slo is loose (1.0 s); the request carries a tight 10 ms
+        // TBT + 100 ms TTFT target and must be scored against its own.
+        let mut c = Collector::new(SloConfig { tbt: 1.0, ttft: None });
+        let req = Request::new(1, 0.0, 10, 3)
+            .with_class(2, SloTarget { tbt: 0.010, ttft: Some(0.100) });
+        c.on_request(&req);
+        // first token at 0.5 (TTFT blown), gaps of 0.05 (TBT blown twice)
+        c.on_token(1, 0.0, 0.5);
+        c.on_token(1, 0.0, 0.55);
+        c.on_token(1, 0.0, 0.60);
+        c.on_complete(1);
+        let s = c.summarize(1.0);
+        assert_eq!(s.total_tokens, 3);
+        assert_eq!(s.good_tokens, 0, "every token blew the request's own SLO");
+        let classes = c.class_summaries(1.0);
+        assert_eq!(classes.len(), 1);
+        let cls = &classes[0];
+        assert_eq!(cls.class, 2);
+        assert_eq!(cls.tbt_slo, 0.010);
+        assert_eq!(cls.ttft_slo, Some(0.100));
+        assert_eq!(cls.good_tokens, 0);
+        assert_eq!(cls.ttft_attainment, 0.0);
+        assert_eq!(cls.attainment, 0.0);
+        assert_eq!(cls.req_slo_frac, 0.0);
+    }
+
+    #[test]
+    fn class_counters_reconcile_with_global() {
+        use crate::core::{Request, SloTarget};
+        let mut c = Collector::new(SloConfig::default());
+        let tight = SloTarget { tbt: 0.020, ttft: Some(0.200) };
+        let loose = SloTarget { tbt: 0.500, ttft: None };
+        // 6 requests across two classes with different targets
+        for i in 0..6u64 {
+            let (class, slo) = if i % 2 == 0 { (1, tight) } else { (2, loose) };
+            c.on_request(&Request::new(i, 0.0, 10, 5).with_class(class, slo));
+        }
+        let mut t = 0.0;
+        for i in 0..6u64 {
+            t = i as f64 * 0.01;
+            for _ in 0..4 {
+                t += 0.05; // 50 ms gaps: good for class 2, bad for class 1
+                c.on_token(i, 0.0, t);
+            }
+            c.on_complete(i);
+        }
+        let s = c.summarize(t);
+        let classes = c.class_summaries(t);
+        assert_eq!(classes.len(), 2);
+        let sum_completed: usize = classes.iter().map(|x| x.completed).sum();
+        let sum_total: usize = classes.iter().map(|x| x.total_tokens).sum();
+        let sum_good: usize = classes.iter().map(|x| x.good_tokens).sum();
+        assert_eq!(sum_completed, s.completed);
+        assert_eq!(sum_total, s.total_tokens);
+        assert_eq!(sum_good, s.good_tokens);
+        // tight class: 50 ms gaps blow its 20 ms bound; first tokens fine
+        let c1 = classes.iter().find(|x| x.class == 1).unwrap();
+        let c2 = classes.iter().find(|x| x.class == 2).unwrap();
+        assert_eq!(c1.attainment, 0.0);
+        assert_eq!(c2.attainment, 1.0);
+        assert!(c1.good_tokens < c2.good_tokens);
+        // global attainment scores each gap against its own request's
+        // bound: 9 of 18 gaps (all of class 2's) were within bound
+        assert!((s.attainment - 0.5).abs() < 1e-12, "attainment={}", s.attainment);
+    }
+
+    #[test]
+    fn unregistered_requests_score_as_default_class() {
+        // the legacy path: on_token without on_request — identical to the
+        // pre-scenario collector, everything in class 0 at the default SLO
+        let mut c = Collector::new(SloConfig::default());
+        c.on_token(1, 0.0, 0.5);
+        c.on_token(1, 0.0, 0.55);
+        c.on_complete(1);
+        let s = c.summarize(1.0);
+        let classes = c.class_summaries(1.0);
+        assert_eq!(classes.len(), 1);
+        assert_eq!(classes[0].class, 0);
+        assert_eq!(classes[0].tbt_slo, c.slo().tbt);
+        assert_eq!(classes[0].total_tokens, s.total_tokens);
+        assert_eq!(classes[0].good_tokens, s.good_tokens);
     }
 
     #[test]

@@ -252,6 +252,9 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     let mut key_alloc = 0u64;
     let mut rng = Rng::with_stream(cfg.seed, 0x70cc);
     let n_requests = requests.len();
+    // metrics collector up front so each request's class / per-request SLO
+    // targets register at submission — same scoring path as the simulator
+    let mut collector = Collector::new(cfg.slo);
     // serving clock starts after engine compilation/calibration
     let serve_start = t(Instant::now());
     for req in &requests {
@@ -289,6 +292,8 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
             (b.instance, key_alloc)
         });
         let arrival = t(Instant::now());
+        // register on the serving clock (token events use the same basis)
+        collector.on_request(&Request { arrival, ..req.clone() });
         let alpha_spec = SegmentSpec {
             key: alpha_key,
             request: req.id,
@@ -322,7 +327,6 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     }
 
     // ── collect until all requests complete ─────────────────────────────
-    let mut collector = Collector::new(cfg.slo);
     let mut done = 0usize;
     let mut iter_counts = vec![0u64; cfg.n_instances];
     let mut iter_lat_sum = 0.0;

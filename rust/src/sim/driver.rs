@@ -211,6 +211,8 @@ impl Simulator {
     }
 
     fn on_arrival(&mut self, req: Request) {
+        // register class + per-request SLO targets before tokens stream in
+        self.collector.on_request(&req);
         let placement = if self.cfg.exact_snapshots {
             let snapshots: Vec<_> = self.instances.iter().map(|i| i.snapshot()).collect();
             let t0 = Instant::now();

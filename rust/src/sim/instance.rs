@@ -283,8 +283,12 @@ impl SimInstance {
 
     /// Accept a segment: admit it if KV capacity permits, else queue it.
     /// Either way it enters the arena; the assigned key is returned.
+    /// Admission is strictly FCFS: while segments wait for KV capacity, a
+    /// new arrival queues behind them even if it would fit — otherwise a
+    /// stream of small requests could starve a large waiting segment by
+    /// grabbing every sliver of freed capacity ahead of it.
     pub fn accept(&mut self, seq: SimSeq) -> SeqKey {
-        let fits = self.kv.can_fit(seq.end_exec);
+        let fits = self.waiting.is_empty() && self.kv.can_fit(seq.end_exec);
         self.load.add(&seq.work);
         let key = self.arena.insert(seq);
         if fits {
@@ -570,6 +574,24 @@ mod tests {
         i.evict(k1);
         assert_eq!(i.waiting_len(), 0);
         assert!(i.get(k2).unwrap().admitted);
+    }
+
+    #[test]
+    fn arrivals_do_not_jump_the_waiting_queue() {
+        let mut i = inst();
+        let cap = i.kv.capacity();
+        let k1 = i.accept(seq(1, 0, cap - 50, cap - 60)); // nearly fills
+        let kw = i.accept(seq(2, 0, 200, 150)); // 200 > 50 → waits
+        assert_eq!(i.waiting_len(), 1);
+        // a small arrival that WOULD fit must still queue behind kw (FCFS)
+        let ks = i.accept(seq(3, 0, 20, 10));
+        assert_eq!(i.waiting_len(), 2);
+        assert!(!i.get(ks).unwrap().admitted);
+        // once capacity frees, both admit in FCFS order
+        i.evict(k1);
+        assert_eq!(i.waiting_len(), 0);
+        assert!(i.get(kw).unwrap().admitted);
+        assert!(i.get(ks).unwrap().admitted);
     }
 
     #[test]

@@ -1,11 +1,32 @@
-//! Workload substrate: request-shape generators fitted to the four datasets
-//! the paper evaluates (§6.1) plus arrival processes (Poisson, time-varying
-//! replay) and the hybrid mixer of §6.4.
+//! Workload substrate: everything that turns "the paper's traffic" into a
+//! deterministic request vector the simulator and live server can replay.
+//!
+//! Three layers compose here:
+//!
+//! * [`traces`] — request-*shape* samplers fitted to the four datasets the
+//!   paper evaluates (§2.3, §6.1, Table 1), plus `Fixed` microbenchmark
+//!   shapes and the §6.4 `Hybrid` mixer ([`TraceKind`], [`TraceSampler`]).
+//! * [`arrival`] — arrival *processes*: homogeneous Poisson
+//!   ([`PoissonArrivals`], the paper's default) and the thinning-based
+//!   time-varying [`ReplayArrivals`] behind the Figure 10 replay and every
+//!   shaped scenario.
+//! * [`scenario`] — the scenario engine: arrival shapes (steady / burst /
+//!   diurnal / ramp) composed with mixed-SLO traffic classes, each
+//!   carrying its own length model and [`crate::core::SloTarget`], plus
+//!   multi-turn conversations whose follow-up prompts reuse prior context
+//!   ([`Scenario`], [`TrafficClass`]). See DESIGN.md §Scenarios.
+//!
+//! [`WorkloadGen`] glues a shape sampler to an arrival process for the
+//! single-class experiments; [`Scenario::generate`] is the multi-class
+//! equivalent. Everything is seeded: the same seed replays the same
+//! requests bit-for-bit (EXPERIMENTS.md records the seeds).
 
 pub mod arrival;
+pub mod scenario;
 pub mod traces;
 
 pub use arrival::{ArrivalProcess, PoissonArrivals, ReplayArrivals};
+pub use scenario::{ArrivalShape, LengthModel, MultiTurnConfig, Scenario, TrafficClass};
 pub use traces::{TraceKind, TraceSampler};
 
 use crate::core::Request;

@@ -1,0 +1,614 @@
+//! Scenario engine: mixed-SLO traffic classes composed with shaped arrival
+//! processes — the workload axis the paper's headline claim lives on
+//! (goodput *under SLO* on real-world, unbalanced, dynamic workloads).
+//!
+//! A [`Scenario`] is an [`ArrivalShape`] (steady Poisson, burst injection,
+//! diurnal sinusoid, linear ramp) plus a set of [`TrafficClass`]es. Each
+//! class carries its own length model and explicit TTFT/TBT targets
+//! ([`crate::core::SloTarget`]), so one run mixes interactive chat against
+//! a tight bound with batch summarization on a loose one — DistServe-style
+//! per-class goodput (arXiv 2401.09670) instead of one implicit SLO. A
+//! multi-turn chat class chains follow-up turns whose prompts carry the
+//! conversation's prior context, reproducing the growing-context traffic
+//! that stresses Algorithm 1's split search (DESIGN.md §Scenarios).
+//!
+//! Generation is fully deterministic per seed: the same `(scenario, seed)`
+//! pair yields an identical request vector, and the simulator over it a
+//! bit-identical [`crate::metrics::Summary`] (asserted under test). The
+//! named suite ([`Scenario::suite`]) is driven by
+//! `experiments -- scenarios` (see EXPERIMENTS.md §Scenarios).
+
+use crate::core::{Request, SloTarget};
+use crate::util::rng::{lognormal_params, Rng};
+use crate::workload::arrival::{ArrivalProcess, PoissonArrivals, ReplayArrivals};
+use crate::workload::traces::LenDist;
+
+/// Hard cap on any generated prompt length (multi-turn context carrying
+/// would otherwise grow without bound).
+const MAX_PROMPT_TOKENS: usize = 32_768;
+
+/// Time-varying arrival rate envelope for a scenario.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalShape {
+    /// Homogeneous Poisson at `qps`.
+    Steady { qps: f64 },
+    /// `base_qps` with a rectangular burst of `peak_factor × base_qps`
+    /// injected over `[start, start + width)` seconds.
+    Burst { base_qps: f64, peak_factor: f64, start: f64, width: f64 },
+    /// `base_qps · (1 + amplitude · sin(2πt/period))` — a compressed
+    /// day/night cycle. `amplitude` must stay within [0, 1).
+    Diurnal { base_qps: f64, amplitude: f64, period: f64 },
+    /// Linear ramp from `start_qps` to `end_qps` over the scenario.
+    Ramp { start_qps: f64, end_qps: f64 },
+}
+
+impl ArrivalShape {
+    /// Instantaneous arrival rate at `t`, for a scenario of `total` seconds.
+    pub fn rate_at(&self, t: f64, total: f64) -> f64 {
+        match *self {
+            ArrivalShape::Steady { qps } => qps,
+            ArrivalShape::Burst { base_qps, peak_factor, start, width } => {
+                if t >= start && t < start + width {
+                    base_qps * peak_factor
+                } else {
+                    base_qps
+                }
+            }
+            ArrivalShape::Diurnal { base_qps, amplitude, period } => {
+                base_qps * (1.0 + amplitude * (t / period * std::f64::consts::TAU).sin())
+            }
+            ArrivalShape::Ramp { start_qps, end_qps } => {
+                let f = if total > 0.0 { (t / total).clamp(0.0, 1.0) } else { 0.0 };
+                start_qps + f * (end_qps - start_qps)
+            }
+        }
+    }
+
+    /// Peak rate over `[0, total)` — closed form per shape.
+    pub fn peak_rate(&self, total: f64) -> f64 {
+        match *self {
+            ArrivalShape::Steady { qps } => qps,
+            ArrivalShape::Burst { base_qps, peak_factor, .. } => base_qps * peak_factor,
+            ArrivalShape::Diurnal { base_qps, amplitude, period } => {
+                if total >= period / 4.0 {
+                    base_qps * (1.0 + amplitude)
+                } else {
+                    self.rate_at(total, total)
+                }
+            }
+            ArrivalShape::Ramp { start_qps, end_qps } => start_qps.max(end_qps),
+        }
+    }
+
+    /// Mean rate over `[0, total)` — closed form per shape (the sinusoid
+    /// integrates over whole periods; scenarios use whole-period horizons).
+    pub fn mean_rate(&self, total: f64) -> f64 {
+        match *self {
+            ArrivalShape::Steady { qps } => qps,
+            ArrivalShape::Burst { base_qps, peak_factor, start, width } => {
+                let covered = (start + width).min(total) - start.min(total);
+                let frac = (covered / total).clamp(0.0, 1.0);
+                base_qps * (1.0 + (peak_factor - 1.0) * frac)
+            }
+            ArrivalShape::Diurnal { base_qps, .. } => base_qps,
+            ArrivalShape::Ramp { start_qps, end_qps } => 0.5 * (start_qps + end_qps),
+        }
+    }
+
+    /// Build the arrival process realizing this shape over `total` seconds.
+    /// Steady maps to [`PoissonArrivals`]; the time-varying shapes map to
+    /// the thinning-based [`ReplayArrivals`] over a knot envelope (double
+    /// knots encode the burst's rate discontinuities exactly; the sinusoid
+    /// is sampled at period/64 so the piecewise-linear error is negligible).
+    pub fn process(&self, total: f64) -> Box<dyn ArrivalProcess> {
+        let clamp = |r: f64| r.max(0.01);
+        match *self {
+            ArrivalShape::Steady { qps } => Box::new(PoissonArrivals::new(qps)),
+            ArrivalShape::Burst { base_qps, peak_factor, start, width } => {
+                let (b, p) = (clamp(base_qps), clamp(base_qps * peak_factor));
+                let end = (start + width).min(total);
+                let mut knots = vec![(0.0, b)];
+                if start < total {
+                    knots.push((start, b));
+                    knots.push((start, p));
+                    knots.push((end, p));
+                    knots.push((end, b));
+                }
+                knots.push((total, b));
+                Box::new(ReplayArrivals::new(knots))
+            }
+            ArrivalShape::Diurnal { period, .. } => {
+                let step = (period / 64.0).max(1e-3);
+                let mut knots = Vec::new();
+                let mut t = 0.0;
+                while t < total + step {
+                    knots.push((t.min(total), clamp(self.rate_at(t.min(total), total))));
+                    t += step;
+                }
+                Box::new(ReplayArrivals::new(knots))
+            }
+            ArrivalShape::Ramp { start_qps, end_qps } => Box::new(ReplayArrivals::new(vec![
+                (0.0, clamp(start_qps)),
+                (total, clamp(end_qps)),
+            ])),
+        }
+    }
+}
+
+/// Lognormal prompt/decode length model — each traffic class carries its
+/// own instead of sharing one trace-wide fit. Built on the same
+/// [`LenDist`](crate::workload::traces) fit the dataset samplers use.
+#[derive(Debug, Clone, Copy)]
+pub struct LengthModel {
+    prompt: LenDist,
+    decode: LenDist,
+}
+
+impl LengthModel {
+    /// Fit from (median, mean) pairs, as [`crate::workload::traces`] does
+    /// for the paper's datasets.
+    pub fn fit(
+        prompt_median: f64,
+        prompt_mean: f64,
+        prompt_clamp: (usize, usize),
+        decode_median: f64,
+        decode_mean: f64,
+        decode_clamp: (usize, usize),
+    ) -> LengthModel {
+        LengthModel {
+            prompt: LenDist::fit(prompt_median, prompt_mean, prompt_clamp.0, prompt_clamp.1),
+            decode: LenDist::fit(decode_median, decode_mean, decode_clamp.0, decode_clamp.1),
+        }
+    }
+
+    /// Sample (prompt_len, decode_len).
+    pub fn sample(&self, rng: &mut Rng) -> (usize, usize) {
+        (self.prompt.sample(rng), self.decode.sample(rng))
+    }
+
+    fn sample_decode(&self, rng: &mut Rng) -> usize {
+        self.decode.sample(rng)
+    }
+}
+
+/// Multi-turn conversation behaviour for a chat-style class: each turn may
+/// spawn a follow-up whose prompt carries the conversation's full prior
+/// context (previous prompt + generated reply) plus a fresh user message.
+#[derive(Debug, Clone, Copy)]
+pub struct MultiTurnConfig {
+    /// Probability that a turn is followed by another.
+    pub continue_prob: f64,
+    /// Hard cap on follow-up turns per conversation.
+    pub max_followups: usize,
+    /// Think-time between turns, lognormal (median, mean) seconds.
+    pub think_median: f64,
+    pub think_mean: f64,
+    /// Fresh user-message length per follow-up, lognormal (median, mean).
+    pub message_median: f64,
+    pub message_mean: f64,
+}
+
+/// One traffic class: its share of arrivals, its length model, its latency
+/// targets, and optional multi-turn chaining.
+#[derive(Debug, Clone)]
+pub struct TrafficClass {
+    pub name: &'static str,
+    /// Relative arrival weight (normalized over the scenario's classes).
+    pub weight: f64,
+    pub lengths: LengthModel,
+    pub slo: SloTarget,
+    pub multi_turn: Option<MultiTurnConfig>,
+}
+
+/// Interactive chat: BurstGPT-ish shapes under a tight TTFT/TBT bound.
+pub fn interactive_chat(weight: f64) -> TrafficClass {
+    TrafficClass {
+        name: "interactive-chat",
+        weight,
+        lengths: LengthModel::fit(1500.0, 2048.0, (32, 8192), 380.0, 512.0, (8, 4096)),
+        slo: SloTarget { tbt: 0.100, ttft: Some(0.5) },
+        multi_turn: None,
+    }
+}
+
+/// Batch summarization: long inputs, moderate outputs, loose targets —
+/// arXiv-summarization-shaped throughput traffic.
+pub fn batch_summarization(weight: f64) -> TrafficClass {
+    TrafficClass {
+        name: "batch-summ",
+        weight,
+        lengths: LengthModel::fit(7200.0, 8000.0, (1024, 16384), 210.0, 256.0, (32, 1024)),
+        slo: SloTarget { tbt: 0.250, ttft: Some(10.0) },
+        multi_turn: None,
+    }
+}
+
+/// Long-context RAG: big retrieved prefixes, short grounded answers,
+/// moderate targets.
+pub fn longcontext_rag(weight: f64) -> TrafficClass {
+    TrafficClass {
+        name: "long-rag",
+        weight,
+        lengths: LengthModel::fit(7000.0, 8192.0, (512, 16384), 100.0, 140.0, (16, 512)),
+        slo: SloTarget { tbt: 0.150, ttft: Some(2.0) },
+        multi_turn: None,
+    }
+}
+
+/// Multi-turn chat: short opening turns, growing context on follow-ups,
+/// the tightest interactive targets.
+pub fn multiturn_chat(weight: f64) -> TrafficClass {
+    TrafficClass {
+        name: "multi-turn-chat",
+        weight,
+        lengths: LengthModel::fit(200.0, 260.0, (16, 2048), 250.0, 330.0, (16, 2048)),
+        slo: SloTarget { tbt: 0.080, ttft: Some(0.4) },
+        multi_turn: Some(MultiTurnConfig {
+            continue_prob: 0.65,
+            max_followups: 6,
+            think_median: 4.0,
+            think_mean: 6.0,
+            message_median: 80.0,
+            message_mean: 120.0,
+        }),
+    }
+}
+
+/// A named workload scenario: shape × classes × horizon.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub shape: ArrivalShape,
+    pub classes: Vec<TrafficClass>,
+    /// Arrival-window length in simulated seconds.
+    pub duration: f64,
+}
+
+/// Expand one conversation: the opening turn plus follow-up turns whose
+/// prompts carry the accumulated context. Returns `(arrival, prompt,
+/// decode)` per turn, arrivals strictly increasing and < `duration`.
+/// Factored out of [`Scenario::generate`] so the context-carrying invariant
+/// is directly testable.
+fn conversation_turns(
+    t0: f64,
+    class: &TrafficClass,
+    cfg: &MultiTurnConfig,
+    duration: f64,
+    rng: &mut Rng,
+) -> Vec<(f64, usize, usize)> {
+    let (p0, d0) = class.lengths.sample(rng);
+    let mut turns = vec![(t0, p0, d0)];
+    let (think_mu, think_sigma) = lognormal_params(cfg.think_median, cfg.think_mean);
+    let (msg_mu, msg_sigma) = lognormal_params(cfg.message_median, cfg.message_mean);
+    let mut carried = p0 + d0;
+    let mut t = t0;
+    for _ in 0..cfg.max_followups {
+        if !rng.bool(cfg.continue_prob) {
+            break;
+        }
+        t += rng.lognormal(think_mu, think_sigma).max(0.1);
+        if t >= duration {
+            break;
+        }
+        let msg = rng.lognormal(msg_mu, msg_sigma).round().max(1.0) as usize;
+        let prompt = (carried + msg).min(MAX_PROMPT_TOKENS);
+        let decode = class.lengths.sample_decode(rng);
+        turns.push((t, prompt, decode));
+        carried = (prompt + decode).min(MAX_PROMPT_TOKENS);
+    }
+    turns
+}
+
+impl Scenario {
+    /// The named suite `experiments -- scenarios` runs: one scenario per
+    /// arrival shape plus the multi-turn chaining one.
+    pub fn suite() -> Vec<Scenario> {
+        vec![
+            Scenario {
+                name: "hybrid",
+                description: "steady arrivals, 3 SLO classes (chat/summ/RAG) — §6.4-style mix",
+                shape: ArrivalShape::Steady { qps: 2.0 },
+                classes: vec![
+                    interactive_chat(0.4),
+                    batch_summarization(0.3),
+                    longcontext_rag(0.3),
+                ],
+                duration: 90.0,
+            },
+            Scenario {
+                name: "burst",
+                description: "4x burst injected into steady chat+RAG traffic",
+                shape: ArrivalShape::Burst {
+                    base_qps: 1.5,
+                    peak_factor: 4.0,
+                    start: 30.0,
+                    width: 15.0,
+                },
+                classes: vec![interactive_chat(0.7), longcontext_rag(0.3)],
+                duration: 90.0,
+            },
+            Scenario {
+                name: "diurnal",
+                description: "compressed day/night sinusoid over chat+summarization",
+                shape: ArrivalShape::Diurnal { base_qps: 1.5, amplitude: 0.6, period: 60.0 },
+                classes: vec![interactive_chat(0.5), batch_summarization(0.5)],
+                duration: 120.0,
+            },
+            Scenario {
+                name: "ramp",
+                description: "linear load ramp 0.5→3 qps over chat+summarization",
+                shape: ArrivalShape::Ramp { start_qps: 0.5, end_qps: 3.0 },
+                classes: vec![interactive_chat(0.6), batch_summarization(0.4)],
+                duration: 90.0,
+            },
+            Scenario {
+                name: "multi-turn",
+                description: "conversations with context-carrying follow-up turns",
+                shape: ArrivalShape::Steady { qps: 1.2 },
+                classes: vec![multiturn_chat(0.8), interactive_chat(0.2)],
+                duration: 90.0,
+            },
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<Scenario> {
+        Self::suite().into_iter().find(|s| s.name == name)
+    }
+
+    /// Retarget the scenario to a new horizon, rescaling the shape's time
+    /// structure (burst window, sinusoid period) proportionally so the
+    /// scenario keeps its defining feature at any duration — without this
+    /// a shortened `burst` would place its burst past the horizon and
+    /// silently degenerate to steady traffic.
+    pub fn with_duration(mut self, new_duration: f64) -> Scenario {
+        assert!(new_duration > 0.0, "scenario duration must be positive");
+        let f = new_duration / self.duration;
+        self.shape = match self.shape {
+            ArrivalShape::Burst { base_qps, peak_factor, start, width } => {
+                ArrivalShape::Burst { base_qps, peak_factor, start: start * f, width: width * f }
+            }
+            ArrivalShape::Diurnal { base_qps, amplitude, period } => {
+                ArrivalShape::Diurnal { base_qps, amplitude, period: period * f }
+            }
+            other => other,
+        };
+        self.duration = new_duration;
+        self
+    }
+
+    /// Shrunk variant for CI smoke runs: an 8-second horizon with the
+    /// shape's time structure rescaled into it.
+    pub fn smoke(self) -> Scenario {
+        self.with_duration(8.0)
+    }
+
+    /// Generate the scenario's request stream: arrivals from the shape,
+    /// classes drawn by weight, conversations expanded, all sorted by
+    /// arrival with ids assigned in arrival order. Deterministic per seed.
+    pub fn generate(&self, seed: u64) -> Vec<Request> {
+        assert!(!self.classes.is_empty(), "scenario needs at least one class");
+        let mut arrivals = self.shape.process(self.duration);
+        // independent streams: arrival thinning vs class/length sampling,
+        // so reshaping arrivals never perturbs the sampled request shapes
+        let mut arrival_rng = Rng::with_stream(seed, 0x5c3a);
+        let mut sample_rng = Rng::with_stream(seed, 0xc1a5);
+        let weights: Vec<f64> = self.classes.iter().map(|c| c.weight).collect();
+
+        // (arrival, class, prompt, decode), unsorted while conversations append
+        let mut raw: Vec<(f64, usize, usize, usize)> = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t = match arrivals.next_after(t, &mut arrival_rng) {
+                Some(next) if next < self.duration => next,
+                _ => break,
+            };
+            let ci = sample_rng.categorical(&weights);
+            let class = &self.classes[ci];
+            match class.multi_turn {
+                Some(mt) => {
+                    for (at, p, d) in
+                        conversation_turns(t, class, &mt, self.duration, &mut sample_rng)
+                    {
+                        raw.push((at, ci, p, d));
+                    }
+                }
+                None => {
+                    let (p, d) = class.lengths.sample(&mut sample_rng);
+                    raw.push((t, ci, p, d));
+                }
+            }
+        }
+        // stable sort on arrival: equal instants keep generation order
+        raw.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        raw.iter()
+            .enumerate()
+            .map(|(id, &(at, ci, p, d))| {
+                Request::new(id as u64, at, p, d).with_class(ci, self.classes[ci].slo)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_names_unique_and_resolvable() {
+        let suite = Scenario::suite();
+        assert_eq!(suite.len(), 5);
+        for s in &suite {
+            let found = Scenario::by_name(s.name).expect("suite scenario resolves by name");
+            assert_eq!(found.name, s.name);
+            assert!(!found.classes.is_empty());
+        }
+        let mut names: Vec<_> = suite.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), suite.len());
+        assert!(Scenario::by_name("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn generate_is_deterministic_sorted_and_tagged() {
+        for sc in Scenario::suite() {
+            let a = sc.generate(42);
+            let b = sc.generate(42);
+            assert_eq!(a, b, "{}: same seed must replay identically", sc.name);
+            assert!(!a.is_empty(), "{}: empty scenario", sc.name);
+            assert!(
+                a.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+                "{}: arrivals unsorted",
+                sc.name
+            );
+            for (i, r) in a.iter().enumerate() {
+                assert_eq!(r.id, i as u64, "{}: ids must follow arrival order", sc.name);
+                assert!(r.class < sc.classes.len());
+                assert_eq!(r.slo, Some(sc.classes[r.class].slo));
+                assert!(r.arrival < sc.duration);
+                assert!(r.prompt_len > 0 && r.decode_len > 0);
+            }
+            let c = sc.generate(43);
+            assert_ne!(a, c, "{}: different seeds must differ", sc.name);
+        }
+    }
+
+    #[test]
+    fn burst_shape_hits_configured_peak_to_mean_ratio() {
+        let shape =
+            ArrivalShape::Burst { base_qps: 4.0, peak_factor: 5.0, start: 40.0, width: 20.0 };
+        let total = 100.0;
+        // analytic: mean = base·(1 + (pf−1)·width/total), peak = base·pf
+        assert!((shape.mean_rate(total) - 4.0 * 1.8).abs() < 1e-12);
+        assert!((shape.peak_rate(total) - 20.0).abs() < 1e-12);
+        let want_ratio = shape.peak_rate(total) / shape.mean_rate(total);
+
+        // empirical: realize the process and measure in-burst vs overall
+        let mut proc = shape.process(total);
+        let mut rng = Rng::new(7);
+        let (mut in_burst, mut all) = (0usize, 0usize);
+        let mut t = 0.0;
+        while let Some(next) = proc.next_after(t, &mut rng) {
+            if next >= total {
+                break;
+            }
+            t = next;
+            all += 1;
+            if (40.0..60.0).contains(&t) {
+                in_burst += 1;
+            }
+        }
+        assert!(all > 400, "too few arrivals: {all}");
+        let got_ratio = (in_burst as f64 / 20.0) / (all as f64 / total);
+        assert!(
+            (got_ratio - want_ratio).abs() / want_ratio < 0.25,
+            "peak/mean ratio: got {got_ratio:.2}, configured {want_ratio:.2}"
+        );
+    }
+
+    #[test]
+    fn diurnal_rate_envelope_and_density() {
+        let shape = ArrivalShape::Diurnal { base_qps: 2.0, amplitude: 0.5, period: 60.0 };
+        assert!((shape.peak_rate(120.0) - 3.0).abs() < 1e-12);
+        assert!((shape.mean_rate(120.0) - 2.0).abs() < 1e-12);
+        // peak quarter-period is denser than trough quarter-period
+        let mut proc = shape.process(120.0);
+        let mut rng = Rng::new(11);
+        let (mut peak_n, mut trough_n) = (0usize, 0usize);
+        let mut t = 0.0;
+        while let Some(next) = proc.next_after(t, &mut rng) {
+            if next >= 120.0 {
+                break;
+            }
+            t = next;
+            // sin > 0 on (0,30) and (60,90); sin < 0 on (30,60), (90,120)
+            let phase = (t / 60.0).fract();
+            if phase < 0.5 {
+                peak_n += 1;
+            } else {
+                trough_n += 1;
+            }
+        }
+        assert!(
+            peak_n as f64 > 1.3 * trough_n as f64,
+            "peak {peak_n} vs trough {trough_n}"
+        );
+    }
+
+    #[test]
+    fn ramp_rate_is_linear() {
+        let shape = ArrivalShape::Ramp { start_qps: 1.0, end_qps: 5.0 };
+        assert!((shape.rate_at(0.0, 100.0) - 1.0).abs() < 1e-12);
+        assert!((shape.rate_at(50.0, 100.0) - 3.0).abs() < 1e-12);
+        assert!((shape.rate_at(100.0, 100.0) - 5.0).abs() < 1e-12);
+        assert!((shape.mean_rate(100.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conversations_carry_context_forward() {
+        let class = multiturn_chat(1.0);
+        let mut cfg = class.multi_turn.unwrap();
+        cfg.continue_prob = 1.0; // force full-length conversations
+        let mut rng = Rng::new(3);
+        let turns = conversation_turns(0.0, &class, &cfg, 1e9, &mut rng);
+        assert_eq!(turns.len(), 1 + cfg.max_followups);
+        // arrivals strictly increase; prompts grow monotonically because
+        // each follow-up carries prior prompt + reply + a fresh message
+        for w in turns.windows(2) {
+            let ((t0, p0, d0), (t1, p1, _)) = (w[0], w[1]);
+            assert!(t1 > t0, "think time must advance arrivals");
+            assert!(
+                p1 > p0 + d0 || p1 == MAX_PROMPT_TOKENS,
+                "follow-up prompt {p1} must carry context {p0}+{d0}"
+            );
+        }
+    }
+
+    #[test]
+    fn multiturn_scenario_contains_grown_prompts() {
+        let sc = Scenario::by_name("multi-turn").unwrap();
+        let reqs = sc.generate(42);
+        let chat: Vec<_> = reqs.iter().filter(|r| r.class == 0).collect();
+        assert!(!chat.is_empty());
+        // opening turns clamp at 2048; any prompt past that proves a
+        // follow-up carried its conversation's context
+        let grown = chat.iter().filter(|r| r.prompt_len > 2048).count();
+        assert!(grown > 0, "no follow-up carried context past the first-turn clamp");
+    }
+
+    #[test]
+    fn duration_override_rescales_shape_structure() {
+        let sc = Scenario::by_name("burst").unwrap().with_duration(20.0);
+        assert_eq!(sc.duration, 20.0);
+        match sc.shape {
+            ArrivalShape::Burst { start, width, .. } => {
+                assert!(width > 0.0);
+                assert!(
+                    start + width <= 20.0,
+                    "burst [{start}, {}) must stay inside the horizon",
+                    start + width
+                );
+            }
+            other => panic!("burst scenario lost its shape: {other:?}"),
+        }
+        let sc = Scenario::by_name("diurnal").unwrap().with_duration(30.0);
+        match sc.shape {
+            // 120 s horizon with a 60 s period → rescaled to two 15 s cycles
+            ArrivalShape::Diurnal { period, .. } => assert!((period - 15.0).abs() < 1e-9),
+            other => panic!("diurnal scenario lost its shape: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn smoke_variants_stay_tiny_but_nonempty() {
+        for sc in Scenario::suite() {
+            let small = sc.smoke();
+            assert!(small.duration <= 10.0);
+            let reqs = small.generate(42);
+            assert!(!reqs.is_empty(), "{}: smoke scenario generated nothing", small.name);
+            assert!(reqs.len() < 2000, "{}: smoke scenario too big", small.name);
+            assert!(reqs.iter().all(|r| r.arrival < small.duration));
+        }
+    }
+}

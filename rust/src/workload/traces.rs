@@ -62,9 +62,11 @@ impl TraceKind {
     }
 }
 
-/// Lognormal length model: (median, mean, clamp lo, clamp hi).
+/// Lognormal length model: (median, mean, clamp lo, clamp hi). Shared with
+/// the scenario engine's per-class length models
+/// (`crate::workload::scenario::LengthModel`).
 #[derive(Debug, Clone, Copy)]
-struct LenDist {
+pub(crate) struct LenDist {
     mu: f64,
     sigma: f64,
     lo: usize,
@@ -72,12 +74,12 @@ struct LenDist {
 }
 
 impl LenDist {
-    fn fit(median: f64, mean: f64, lo: usize, hi: usize) -> LenDist {
+    pub(crate) fn fit(median: f64, mean: f64, lo: usize, hi: usize) -> LenDist {
         let (mu, sigma) = lognormal_params(median, mean);
         LenDist { mu, sigma, lo, hi }
     }
 
-    fn sample(&self, rng: &mut Rng) -> usize {
+    pub(crate) fn sample(&self, rng: &mut Rng) -> usize {
         let v = rng.lognormal(self.mu, self.sigma).round() as i64;
         (v.max(self.lo as i64) as usize).min(self.hi)
     }

@@ -1,0 +1,97 @@
+//! Scenario-engine integration tests: the full generate → simulate →
+//! per-class metrics path for every named scenario, plus the two
+//! invariants the engine is built around — same-seed replay is
+//! bit-identical, and per-class attainment counters partition the global
+//! Summary exactly.
+
+use dynaserve::costmodel::LlmSpec;
+use dynaserve::experiments::runners::{build_sim, System};
+use dynaserve::metrics::SloConfig;
+use dynaserve::workload::Scenario;
+
+/// Same (scenario, seed) twice → bit-identical Summary and per-class rows,
+/// for every system. The scenario layer must not introduce any iteration-
+/// order or float nondeterminism on top of the simulator's contract.
+#[test]
+fn same_seed_scenario_replay_is_bit_identical() {
+    let llm = LlmSpec::qwen25_14b();
+    for sc in Scenario::suite() {
+        let sc = sc.smoke();
+        for sys in System::all_default() {
+            let run = || {
+                let reqs = sc.generate(42);
+                let mut sim = build_sim(sys, &llm, SloConfig::default());
+                let summary = sim.run(reqs);
+                let classes = sim.collector.class_summaries(summary.duration);
+                format!("{summary:?}|{classes:?}")
+            };
+            assert_eq!(
+                run(),
+                run(),
+                "{}/{}: same-seed scenario replay must be bit-identical",
+                sc.name,
+                sys.name()
+            );
+        }
+    }
+}
+
+/// Per-class counters reconcile exactly with the global Summary for every
+/// named scenario and every system: classes partition completions, tokens
+/// and good tokens with nothing lost or double-counted.
+#[test]
+fn class_counters_partition_global_summary() {
+    let llm = LlmSpec::qwen25_14b();
+    for sc in Scenario::suite() {
+        let sc = sc.smoke();
+        let reqs = sc.generate(42);
+        let n = reqs.len();
+        let expect_tokens: usize = reqs.iter().map(|r| r.decode_len).sum();
+        for sys in System::all_default() {
+            let mut sim = build_sim(sys, &llm, SloConfig::default());
+            let summary = sim.run(reqs.clone());
+            let classes = sim.collector.class_summaries(summary.duration);
+            assert_eq!(summary.completed, n, "{}/{}", sc.name, sys.name());
+            assert_eq!(summary.total_tokens, expect_tokens, "{}/{}", sc.name, sys.name());
+            assert!(!classes.is_empty());
+            let sum_completed: usize = classes.iter().map(|c| c.completed).sum();
+            let sum_tokens: usize = classes.iter().map(|c| c.total_tokens).sum();
+            let sum_good: usize = classes.iter().map(|c| c.good_tokens).sum();
+            assert_eq!(sum_completed, summary.completed, "{}/{}", sc.name, sys.name());
+            assert_eq!(sum_tokens, summary.total_tokens, "{}/{}", sc.name, sys.name());
+            assert_eq!(sum_good, summary.good_tokens, "{}/{}", sc.name, sys.name());
+            for c in &classes {
+                assert!(c.class < sc.classes.len());
+                assert!(c.good_tokens <= c.total_tokens);
+                assert!((0.0..=1.0).contains(&c.attainment));
+                assert!((0.0..=1.0).contains(&c.ttft_attainment));
+                assert!((0.0..=1.0).contains(&c.req_slo_frac));
+                // the class is scored against its own targets
+                let want = sc.classes[c.class].slo;
+                assert_eq!(c.tbt_slo, want.tbt);
+                assert_eq!(c.ttft_slo, want.ttft);
+            }
+        }
+    }
+}
+
+/// The hybrid scenario — the acceptance-criteria workload — runs all three
+/// systems at full scale and produces a populated per-class report.
+#[test]
+fn hybrid_scenario_full_run_all_systems() {
+    let llm = LlmSpec::qwen25_14b();
+    let sc = Scenario::by_name("hybrid").expect("hybrid scenario exists");
+    let reqs = sc.generate(42);
+    assert!(reqs.len() > 50, "hybrid should generate a real stream");
+    for sys in System::all_default() {
+        let mut sim = build_sim(sys, &llm, SloConfig::default());
+        let summary = sim.run(reqs.clone());
+        let classes = sim.collector.class_summaries(summary.duration);
+        assert_eq!(summary.completed, reqs.len(), "{}", sys.name());
+        assert_eq!(classes.len(), sc.classes.len(), "{}", sys.name());
+        assert!(summary.goodput_tok_s > 0.0, "{}", sys.name());
+        for c in &classes {
+            assert!(c.completed > 0, "{}: class {} starved", sys.name(), c.class);
+        }
+    }
+}
