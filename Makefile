@@ -4,7 +4,7 @@
 ARTIFACTS ?= artifacts
 PYTHON    ?= python3
 
-.PHONY: artifacts build test bench experiments clean
+.PHONY: artifacts build test bench experiments parity clean
 
 # Lower the TinyQwen step function to HLO text + params + manifest, and
 # snapshot the simulator bench rows to BENCH_sim.json so every artifact
@@ -21,6 +21,11 @@ build:
 
 test:
 	cargo test -q
+
+# Sim↔live executor parity: the same scenario trace through both facades
+# of the shared exec/ lifecycle must score bit-identically (DESIGN.md §3).
+parity:
+	cargo test --test parity
 
 bench:
 	cargo bench --bench bench_schedulers

@@ -13,10 +13,11 @@
 //! breaches and relaxes with headroom — the "reconfigure when latency
 //! approaches the SLO" behaviour of §3.1.
 //!
-//! Both executors drive this same code: the discrete-event simulator
-//! ([`crate::sim`]) through `SimInstance::plan_batch`, and the live PJRT
-//! server ([`crate::server`]) on each instance thread — DESIGN.md §3's
-//! shared-scheduler invariant. [`LocalConfig::fixed_budget`] is the
+//! Both executors drive this same code through one call site —
+//! `exec::InstanceRuntime::plan_batch` — the discrete-event simulator
+//! ([`crate::sim`]) per iteration event and the live PJRT server
+//! ([`crate::server`]) on each instance thread: DESIGN.md §3's
+//! shared-lifecycle invariant. [`LocalConfig::fixed_budget`] is the
 //! Figure 11 ablation ("without SLO-aware batching") and doubles as the
 //! chunked-prefill colocation baseline's static chunk size
 //! ([`crate::baselines::ColocPolicy`]). The TBT target here is the
@@ -58,6 +59,13 @@ pub struct BatchPlan {
     pub shape: BatchShape,
     /// The prefill budget M the plan was built against.
     pub budget: usize,
+    /// The ctx key the budget inversion queried the profile with
+    /// (`avg decode ctx ⊔ head-of-queue prefill ctx`). RECORD must use
+    /// this same key so the measured latency refines the exact cell the
+    /// plan was priced from — recording under a different reduction of
+    /// the batch shape would pollute a neighbouring bucket for mixed
+    /// batches.
+    pub query_ctx: usize,
 }
 
 impl BatchPlan {
@@ -105,13 +113,15 @@ impl Default for LocalConfig {
 pub struct LocalScheduler {
     pub cfg: LocalConfig,
     profile: ProfileTable,
-    /// Previous batch awaiting its RECORD (shape only; key list not needed).
-    last_shape: Option<BatchShape>,
+    /// Previous batch awaiting its RECORD: (shape, planning-time query
+    /// ctx). The ctx is remembered so RECORD hits the same profile cell
+    /// the budget inversion read (key list not needed).
+    last_plan: Option<(BatchShape, usize)>,
 }
 
 impl LocalScheduler {
     pub fn new(cfg: LocalConfig, profile: ProfileTable) -> Self {
-        LocalScheduler { cfg, profile, last_shape: None }
+        LocalScheduler { cfg, profile, last_plan: None }
     }
 
     pub fn profile(&self) -> &ProfileTable {
@@ -123,15 +133,13 @@ impl LocalScheduler {
     }
 
     /// RECORD the measured latency of the previously composed batch
-    /// (Algorithm 2, line 1) and adapt the safety multiplier.
+    /// (Algorithm 2, line 1) and adapt the safety multiplier. The record
+    /// lands under the plan's own `query_ctx` key — the cell the budget
+    /// inversion was priced from — not a post-hoc reduction of the batch
+    /// shape, which can fall in a different bucket for mixed batches.
     pub fn record_execution(&mut self, latency: f64) {
-        if let Some(shape) = self.last_shape.take() {
-            self.profile.record(
-                shape.prefill_tokens,
-                shape.decode_ctx.max(shape.prefill_ctx),
-                shape.decode_reqs,
-                latency,
-            );
+        if let Some((shape, query_ctx)) = self.last_plan.take() {
+            self.profile.record(shape.prefill_tokens, query_ctx, shape.decode_reqs, latency);
             if shape.prefill_tokens > 0 || shape.decode_reqs > 0 {
                 self.profile.adapt_safety(latency, self.cfg.slo);
             }
@@ -163,7 +171,7 @@ impl LocalScheduler {
         };
 
         // Greedy FCFS prefill fill within the budget.
-        let mut plan = BatchPlan { budget, ..Default::default() };
+        let mut plan = BatchPlan { budget, query_ctx, ..Default::default() };
         plan.decodes = admitted.iter().map(|d| d.key).collect();
         let mut used = 0usize;
         let mut ctx_weighted = 0usize;
@@ -191,7 +199,7 @@ impl LocalScheduler {
             decode_reqs: dnum,
             decode_ctx: avg_ctx,
         };
-        self.last_shape = Some(plan.shape);
+        self.last_plan = Some((plan.shape, plan.query_ctx));
         plan
     }
 }
@@ -279,6 +287,51 @@ mod tests {
             "budget did not shrink: {} -> {}",
             plan1.shape.prefill_tokens,
             plan2.shape.prefill_tokens
+        );
+    }
+
+    /// RECORD must land in the same profile cell the budget inversion
+    /// queried. For a mixed batch whose head-of-queue prefill resumes
+    /// deep into a long prompt, the planning key is that deep context —
+    /// not `decode_ctx.max(prefill_ctx)`, which falls in a much lower
+    /// bucket and used to soak up the measurements.
+    #[test]
+    fn record_lands_under_planning_ctx_key() {
+        // Mixed batch where the two keys genuinely diverge: the head
+        // prefill resumes deep (ctx 8192) but contributes few tokens, so
+        // the token-weighted prefill_ctx — the old RECORD key — collapses
+        // to a low bucket. A fixed budget keeps the composed shape
+        // identical across iterations so every record hits one cell.
+        let mut s = sched(LocalConfig { fixed_budget: Some(512), ..LocalConfig::default() });
+        let queue = vec![
+            PrefillEntry { key: 1, remaining: 32, context: 8192 },
+            PrefillEntry { key: 2, remaining: 100_000, context: 0 },
+        ];
+        let decodes = decs(4, 128);
+        let plan = s.next_batch(&decodes, &queue);
+        assert_eq!(plan.query_ctx, 8192, "planning key = head prefill ctx");
+        assert_eq!(plan.shape.prefill_tokens, 512);
+        let plen = plan.shape.prefill_tokens;
+        let old_key = plan.shape.decode_ctx.max(plan.shape.prefill_ctx);
+        assert!(old_key < 1024, "old RECORD key must fall in a lower bucket: {old_key}");
+        let seed_right = s.profile().estimate(plen, plan.query_ctx, 4);
+        let seed_wrong = s.profile().estimate(plen, old_key, 4);
+        // observed latency inside [0.8·slo, slo] so the safety multiplier
+        // stays put and only the recorded cell moves
+        let observed = 0.095;
+        for _ in 0..16 {
+            s.record_execution(observed);
+            s.next_batch(&decodes, &queue);
+        }
+        let after_right = s.profile().estimate(plen, plan.query_ctx, 4);
+        let after_wrong = s.profile().estimate(plen, old_key, 4);
+        assert!(
+            (after_right - observed).abs() < (seed_right - observed).abs(),
+            "planning-time cell must absorb the measurements: seed {seed_right} -> {after_right}"
+        );
+        assert_eq!(
+            after_wrong, seed_wrong,
+            "the old max(decode_ctx, prefill_ctx) cell must stay untouched"
         );
     }
 

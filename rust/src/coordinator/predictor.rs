@@ -41,11 +41,13 @@ impl InstanceSnapshot {
 /// O(1) per-instance load summary — the unit the default scheduling path
 /// operates on (DESIGN.md §Perf, "Simulator hot path").
 ///
-/// `SimInstance` maintains one of these incrementally on every
+/// `exec::InstanceRuntime` maintains one of these incrementally on every
 /// accept / iteration-step / evict, so the global scheduler reads load
-/// without cloning per-segment state. [`LoadDigest::from_snapshot`] is the
-/// reference reduction the incremental counters must match *exactly*; the
-/// simulator debug-asserts that equivalence on every arrival and it is
+/// without cloning per-segment state — on both executors: the simulator's
+/// arrival path and the live server's published per-thread digests.
+/// [`LoadDigest::from_snapshot`] is the reference reduction the
+/// incremental counters must match *exactly*; the virtual executor
+/// debug-asserts that equivalence on every arrival and it is
 /// property-tested under randomized op sequences.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct LoadDigest {

@@ -1,0 +1,90 @@
+//! The time seam between the two executors.
+//!
+//! Every lifecycle transition ([`InstanceRuntime`](super::InstanceRuntime)
+//! methods) takes `now: f64` — seconds on the executor's clock — so the
+//! state machine itself is time-source-agnostic. Hosts own a [`Clock`]:
+//! the discrete-event host advances a [`VirtualClock`] to each event's
+//! timestamp; the live server reads a [`WallClock`] anchored at process
+//! startup. Timestamps flow into token metrics, KV-production histories,
+//! and transfer timelines, so the same lifecycle scored by the same
+//! [`Collector`](crate::metrics::Collector) works on either time base.
+
+use std::time::Instant;
+
+/// A monotonic clock in seconds since the executor's epoch.
+pub trait Clock {
+    fn now(&self) -> f64;
+}
+
+/// Discrete-event time: the host sets it to each event's timestamp.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VirtualClock {
+    t: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { t: 0.0 }
+    }
+
+    /// Advance to an event's timestamp (the event loop is the only writer).
+    pub fn set(&mut self, t: f64) {
+        self.t = t;
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.t
+    }
+}
+
+/// Wall-clock time since a shared epoch (the live server's serving clock;
+/// every instance thread copies the same epoch so timestamps agree).
+#[derive(Debug, Clone, Copy)]
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    pub fn starting_now() -> Self {
+        WallClock { epoch: Instant::now() }
+    }
+
+    pub fn from_epoch(epoch: Instant) -> Self {
+        WallClock { epoch }
+    }
+
+    /// Seconds since the epoch of an arbitrary instant (for pacing math).
+    pub fn at(&self, i: Instant) -> f64 {
+        i.duration_since(self.epoch).as_secs_f64()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_tracks_sets() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.set(12.5);
+        assert_eq!(c.now(), 12.5);
+    }
+
+    #[test]
+    fn wall_clock_is_monotone_nonnegative() {
+        let c = WallClock::starting_now();
+        let a = c.now();
+        let b = c.now();
+        assert!(a >= 0.0 && b >= a);
+        assert!(c.at(Instant::now()) >= b);
+    }
+}

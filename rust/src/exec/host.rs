@@ -1,0 +1,353 @@
+//! [`VirtualExecutor`]: the discrete-event host that drives the shared
+//! lifecycle in virtual time — arrivals → policy placement → per-instance
+//! iteration loops → modeled KV transfers → token metrics.
+//!
+//! This is one of the two thin instantiations of the `exec` core
+//! (DESIGN.md §3): [`VirtualClock`] + [`ModeledTransport`] + cost-model
+//! iteration latencies. The live PJRT server is the other (wall clock +
+//! real engine + out-of-band KV payloads); both drive the *same*
+//! [`InstanceRuntime`] state machine, so `sim::Simulator` is simply a
+//! re-export of this type.
+//!
+//! Hot-path contract (DESIGN.md §Perf, "Simulator hot path"): the default
+//! arrival path feeds the policy O(1) [`LoadDigest`]s maintained
+//! incrementally by each runtime — zero `InstanceSnapshot` clones per
+//! arrival. The exact snapshot path stays available behind
+//! [`ExecConfig::exact_snapshots`], and debug builds assert on every
+//! arrival that the incremental digests equal the snapshot reduction.
+
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use crate::coordinator::local::BatchPlan;
+use crate::coordinator::{LoadDigest, LocalConfig, LocalScheduler, ProfileTable};
+use crate::core::Request;
+use crate::costmodel::InstanceSpec;
+use crate::exec::clock::{Clock, VirtualClock};
+use crate::exec::policy::Policy;
+use crate::exec::runtime::{InstanceRuntime, SegmentDisposition, SeqKey};
+use crate::exec::submit::{make_segment, plan_submission};
+use crate::exec::transport::ModeledTransport;
+use crate::kv::LinkSpec;
+use crate::metrics::{Collector, SloConfig, Summary};
+use crate::util::stats::Samples;
+
+/// Configuration of a virtual-time executor (re-exported as
+/// `sim::SimConfig`).
+#[derive(Debug, Clone)]
+pub struct ExecConfig {
+    pub spec: InstanceSpec,
+    pub n_instances: usize,
+    /// Local scheduler config for all instances…
+    pub local: LocalConfig,
+    /// …with per-instance overrides (e.g. disagg prefill pool uses a fixed
+    /// chunk budget, decode pool decodes only).
+    pub local_overrides: Vec<(usize, LocalConfig)>,
+    pub slo: SloConfig,
+    pub link: LinkSpec,
+    /// KV transfer granularity (tokens per chunk).
+    pub transfer_chunk_tokens: usize,
+    /// false = ship the whole KV at handoff (§6.6 ablation baseline).
+    pub chunked_transfer: bool,
+    /// Feed policies full `InstanceSnapshot`s instead of load digests —
+    /// the exact reference path (slower; for equivalence tests/debugging).
+    pub exact_snapshots: bool,
+    /// Safety cap on simulated seconds.
+    pub horizon: f64,
+}
+
+impl ExecConfig {
+    pub fn new(spec: InstanceSpec, n_instances: usize) -> Self {
+        ExecConfig {
+            spec,
+            n_instances,
+            local: LocalConfig::default(),
+            local_overrides: vec![],
+            slo: SloConfig::default(),
+            link: LinkSpec::default(),
+            transfer_chunk_tokens: 512,
+            chunked_transfer: true,
+            exact_snapshots: false,
+            horizon: 100_000.0,
+        }
+    }
+}
+
+#[derive(Debug)]
+enum EventKind {
+    Arrival(Request),
+    IterDone { instance: usize, plan: BatchPlan, latency: f64 },
+    SeqReady { instance: usize, key: SeqKey },
+    AlphaEvict { instance: usize, key: SeqKey },
+}
+
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    // reversed: BinaryHeap becomes a min-heap on (time, seq)
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// The discrete-event executor (re-exported as `sim::Simulator`).
+pub struct VirtualExecutor {
+    pub cfg: ExecConfig,
+    pub instances: Vec<InstanceRuntime>,
+    policy: Box<dyn Policy>,
+    profile: ProfileTable,
+    pub collector: Collector,
+    events: BinaryHeap<Event>,
+    event_seq: u64,
+    /// Modeled α→β KV transport; `transport.report` carries the §6.6
+    /// accounting.
+    pub transport: ModeledTransport,
+    /// Wall-clock seconds spent inside policy.place (Table 3).
+    pub sched_overhead: Samples,
+    pub clock: VirtualClock,
+    /// True when the last `run` stopped at `cfg.horizon` with events still
+    /// queued (resident segments are then a truncation artifact, not a
+    /// scheduling deadlock).
+    truncated: bool,
+    /// Reusable digest buffer (keeps the arrival path allocation-free).
+    loads: Vec<LoadDigest>,
+    /// Reusable completed-segment buffer for iteration application.
+    completed_buf: Vec<SeqKey>,
+}
+
+impl VirtualExecutor {
+    pub fn new(cfg: ExecConfig, policy: Box<dyn Policy>) -> Self {
+        let profile = ProfileTable::seeded(&cfg.spec);
+        let instances = (0..cfg.n_instances)
+            .map(|id| {
+                let mut lc = cfg.local;
+                for (i, o) in &cfg.local_overrides {
+                    if *i == id {
+                        lc = *o;
+                    }
+                }
+                lc.slo = cfg.slo.tbt;
+                InstanceRuntime::new(id, cfg.spec.clone(), LocalScheduler::new(lc, profile.clone()))
+            })
+            .collect();
+        let transport = ModeledTransport::new(
+            cfg.link,
+            cfg.transfer_chunk_tokens,
+            cfg.chunked_transfer,
+            cfg.spec.llm.kv_bytes_per_token(),
+        );
+        VirtualExecutor {
+            collector: Collector::new(cfg.slo),
+            cfg,
+            instances,
+            policy,
+            profile,
+            events: BinaryHeap::new(),
+            event_seq: 0,
+            transport,
+            sched_overhead: Samples::new(),
+            clock: VirtualClock::new(),
+            truncated: false,
+            loads: Vec::new(),
+            completed_buf: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, time: f64, kind: EventKind) {
+        self.event_seq += 1;
+        self.events.push(Event { time, seq: self.event_seq, kind });
+    }
+
+    /// Current virtual time in seconds.
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// Run to completion over `requests`; returns the serving summary.
+    pub fn run(&mut self, requests: Vec<Request>) -> Summary {
+        for r in requests {
+            self.push(r.arrival, EventKind::Arrival(r));
+        }
+        self.truncated = false;
+        while let Some(ev) = self.events.pop() {
+            if ev.time > self.cfg.horizon {
+                self.truncated = true;
+                break;
+            }
+            self.clock.set(ev.time);
+            match ev.kind {
+                EventKind::Arrival(req) => self.on_arrival(req),
+                EventKind::IterDone { instance, plan, latency } => {
+                    self.on_iter_done(instance, plan, latency)
+                }
+                EventKind::SeqReady { instance, key } => {
+                    // the arena holds the segment whether it is admitted or
+                    // still in the KV-backpressure queue
+                    self.instances[instance].mark_ready(key);
+                    self.kick(instance);
+                }
+                EventKind::AlphaEvict { instance, key } => {
+                    self.instances[instance].evict(key);
+                    self.kick(instance);
+                }
+            }
+        }
+        debug_assert!(
+            self.truncated || self.stuck_requests() == 0,
+            "executor drained its events with segments still resident"
+        );
+        self.collector.summarize(self.now().max(1e-9))
+    }
+
+    /// Segments that never completed (should be 0 — any residue indicates
+    /// a scheduling deadlock, unless the run was [`Self::truncated`]).
+    pub fn stuck_requests(&self) -> usize {
+        self.instances.iter().map(|i| i.len()).sum()
+    }
+
+    /// Whether the last `run` stopped at the `cfg.horizon` cap with events
+    /// still queued — residual segments are then a truncation artifact,
+    /// not a deadlock.
+    pub fn truncated(&self) -> bool {
+        self.truncated
+    }
+
+    fn on_arrival(&mut self, req: Request) {
+        // register class + per-request SLO targets before tokens stream in
+        self.collector.on_request(&req);
+        let placement = if self.cfg.exact_snapshots {
+            let snapshots: Vec<_> = self.instances.iter().map(|i| i.snapshot()).collect();
+            let t0 = Instant::now();
+            let p = self.policy.place_exact(&req, &snapshots, &self.profile);
+            self.sched_overhead.push(t0.elapsed().as_secs_f64());
+            p
+        } else {
+            self.loads.clear();
+            self.loads.extend(self.instances.iter().map(|i| i.digest()));
+            #[cfg(debug_assertions)]
+            for (inst, d) in self.instances.iter().zip(self.loads.iter()) {
+                debug_assert_eq!(
+                    &LoadDigest::from_snapshot(&inst.snapshot()),
+                    d,
+                    "incremental digest drifted from the snapshot reduction on instance {}",
+                    inst.id
+                );
+            }
+            let t0 = Instant::now();
+            let p = self.policy.place(&req, &self.loads, &self.profile);
+            self.sched_overhead.push(t0.elapsed().as_secs_f64());
+            p
+        };
+
+        // One clamping path for both executors (exec::submit).
+        let plan = plan_submission(&placement, &req);
+        let a_inst = plan.alpha.instance;
+        let a_key = self.instances[a_inst].accept(make_segment(
+            &req,
+            &plan.alpha,
+            false,
+            plan.beta.is_some(),
+        ));
+        if let Some(bp) = &plan.beta {
+            // β is gated on its KV transfer; α carries the handoff address
+            let b_key = self.instances[bp.instance].accept(make_segment(&req, bp, true, false));
+            if let Some(a) = self.instances[a_inst].get_mut(a_key) {
+                a.beta_dest = Some((bp.instance, b_key));
+            }
+        }
+        self.kick(a_inst);
+        // no kick for β: not ready until the transfer completes
+    }
+
+    /// Start an iteration if the instance is idle and has ready work.
+    fn kick(&mut self, i: usize) {
+        if self.instances[i].busy {
+            return;
+        }
+        let plan = self.instances[i].plan_batch();
+        if plan.is_empty() {
+            return;
+        }
+        let latency = self.instances[i].plan_latency(&plan);
+        self.instances[i].busy = true;
+        self.push(self.now() + latency, EventKind::IterDone { instance: i, plan, latency });
+    }
+
+    fn on_iter_done(&mut self, i: usize, plan: BatchPlan, latency: f64) {
+        let now = self.now();
+        // RECORD into the instance's own profile (under the plan's query
+        // key) and the pool-wide table the policy probes read.
+        self.instances[i].record_iteration(&plan, latency);
+        self.profile
+            .record(plan.shape.prefill_tokens, plan.query_ctx, plan.shape.decode_reqs, latency);
+
+        let mut completed = std::mem::take(&mut self.completed_buf);
+        completed.clear();
+        // apply prefill chunks
+        for &(key, chunk) in &plan.prefill {
+            let Some(out) = self.instances[i].apply_prefill(key, chunk, now) else { continue };
+            if let Some((req, arr)) = out.emit {
+                self.collector.on_token(req, arr, now);
+            }
+            if out.completed {
+                completed.push(key);
+            }
+        }
+        // apply decode steps
+        for &key in &plan.decodes {
+            let Some(out) = self.instances[i].apply_decode(key, now) else { continue };
+            if let Some((req, arr)) = out.emit {
+                self.collector.on_token(req, arr, now);
+            }
+            if out.completed {
+                completed.push(key);
+            }
+        }
+        for key in completed.drain(..) {
+            let disposition =
+                self.instances[i].complete_segment(key, now, &mut self.collector, &mut self.transport);
+            match disposition {
+                // nothing to schedule: the instance is still mid-iteration
+                // (busy), and the unconditional kick below restarts it
+                SegmentDisposition::Finished => {}
+                SegmentDisposition::Handoff { dest, ready_at } => {
+                    // β wakes when its context lands; α's KV stays pinned
+                    // until the transfer drains.
+                    self.push(ready_at, EventKind::SeqReady { instance: dest.0, key: dest.1 });
+                    self.push(ready_at, EventKind::AlphaEvict { instance: i, key });
+                }
+            }
+        }
+        self.completed_buf = completed;
+        self.instances[i].busy = false;
+        self.kick(i);
+    }
+
+    pub fn profile(&self) -> &ProfileTable {
+        &self.profile
+    }
+
+    /// Mean per-request scheduling overhead in seconds (Table 3).
+    pub fn mean_sched_overhead(&mut self) -> f64 {
+        self.sched_overhead.mean()
+    }
+}

@@ -1,0 +1,51 @@
+//! The unified micro-request lifecycle layer — the one place the segment
+//! lifecycle exists (DESIGN.md §3).
+//!
+//! The paper's core claim is *unified* execution: every GPU instance runs
+//! the same micro-request lifecycle regardless of whether it is serving an
+//! α (prefill-heavy) or β (decode) segment. This repo used to implement
+//! that lifecycle twice — once in virtual time across the simulator and
+//! once in wall-clock threads in the live server — and the duplication
+//! produced real parity bugs. It now exists exactly once, here:
+//!
+//! * [`runtime`] — [`InstanceRuntime`]: the per-instance state machine
+//!   owning admission (FCFS KV backpressure), [`LocalScheduler`] batch
+//!   planning, prefill/decode application, completion, and the α→β
+//!   handoff trigger. The arena/digest hot-path machinery lives inside.
+//! * [`submit`] — the single placement→segments path: clamp a
+//!   [`Placement`](policy::Placement) by the request's true length and
+//!   materialize α/β [`Segment`]s.
+//! * [`clock`] — the [`Clock`] seam: [`VirtualClock`] (discrete-event
+//!   time) vs [`WallClock`] (live serving time).
+//! * [`transport`] — the [`Transport`] seam for the α→β KV handoff:
+//!   [`ModeledTransport`] prices the chunked/monolithic timelines and
+//!   returns a virtual ready time; the live server's transport ships real
+//!   payloads through `forward_kv` and signals readiness out-of-band.
+//! * [`policy`] — the [`Policy`](policy::Policy) trait (how arrivals
+//!   become placed segments) and DynaServe's APS implementation.
+//! * [`host`] — [`VirtualExecutor`]: the discrete-event host that drives
+//!   the lifecycle in virtual time. `sim::Simulator` *is* this type; the
+//!   live server instantiates the same [`InstanceRuntime`] per PJRT
+//!   thread with [`WallClock`] + its live transport.
+//!
+//! The sim↔live parity guarantee (`rust/tests/parity.rs`): the same
+//! scenario trace driven through the simulator facade and the server
+//! facade's stub-engine executor produces bit-identical
+//! [`Collector`](crate::metrics::Collector) summaries and per-class rows.
+//!
+//! [`LocalScheduler`]: crate::coordinator::LocalScheduler
+
+pub mod clock;
+pub mod host;
+pub mod policy;
+pub mod runtime;
+pub mod submit;
+pub mod transport;
+
+pub use clock::{Clock, VirtualClock, WallClock};
+pub use host::{ExecConfig, VirtualExecutor};
+pub use runtime::{EventSink, InstanceRuntime, Segment, SegmentDisposition, SeqKey, StepOutcome};
+pub use submit::{make_segment, plan_submission, SegmentPlan, SubmitPlan};
+pub use transport::{
+    Handoff, HandoffDisposition, ModeledTransport, Transport, TransferReport,
+};

@@ -1,0 +1,970 @@
+//! [`InstanceRuntime`]: the per-instance micro-request lifecycle state
+//! machine — the one implementation both executors drive (DESIGN.md §3).
+//!
+//! One runtime owns, for a single unified GPU instance:
+//!
+//! * **Admission** — strictly FCFS KV backpressure: segments enter a
+//!   generation-tagged [`SeqArena`] slab and either reserve KV capacity
+//!   immediately or queue behind earlier waiters.
+//! * **Batch planning** — [`plan_batch`](InstanceRuntime::plan_batch)
+//!   composes the next iteration through the shared
+//!   [`LocalScheduler`] (Algorithm 2) over the FCFS order queue.
+//! * **Application** — [`apply_prefill`](InstanceRuntime::apply_prefill) /
+//!   [`apply_decode`](InstanceRuntime::apply_decode) advance segment work
+//!   items, stream token emissions, and maintain the incremental
+//!   [`LoadDigest`] and run-length KV history.
+//! * **Completion & handoff** —
+//!   [`complete_segment`](InstanceRuntime::complete_segment) retires a
+//!   finished segment: final segments report to the [`EventSink`]; α
+//!   segments with a waiting β hand their KV history to the
+//!   [`Transport`], which either schedules a modeled transfer (virtual
+//!   time) or ships real payload out-of-band (live).
+//!
+//! The discrete-event host ([`super::VirtualExecutor`]) and the live PJRT
+//! server's instance threads are thin drivers around these methods; only
+//! the execution engine (cost model vs PJRT) and the [`Clock`]/
+//! [`Transport`] instantiations differ.
+//!
+//! Hot-path layout (DESIGN.md §Perf, "Simulator hot path"):
+//!
+//! * Segments live in [`SeqArena`] — a generation-tagged slab indexed by
+//!   dense slot ids packed into the `SeqKey` (`generation << 32 | slot`).
+//!   Insert/lookup/remove are O(1) with a LIFO free list; stale keys from
+//!   a reused slot fail the generation check instead of aliasing.
+//! * The FCFS `order` queue is tombstone-aware: eviction never scans it;
+//!   dead keys are skipped during batch composition and compacted when
+//!   they outnumber the live ones.
+//! * The KV-admission `waiting` queue is a `VecDeque` of keys (the
+//!   segments themselves stay in the arena so readiness events need no
+//!   two-place search).
+//! * A [`LoadDigest`] is maintained incrementally on accept / step /
+//!   evict; the digest must equal `LoadDigest::from_snapshot(&snapshot())`
+//!   at all times (debug-asserted by the host, property-tested below).
+//!
+//! [`Clock`]: super::Clock
+
+use std::collections::VecDeque;
+
+use crate::coordinator::local::{BatchPlan, DecodeEntry, PrefillEntry};
+use crate::coordinator::{InstanceSnapshot, LoadDigest, LocalScheduler};
+use crate::core::RequestId;
+use crate::costmodel::InstanceSpec;
+use crate::exec::transport::{Handoff, HandoffDisposition, Transport};
+use crate::metrics::Collector;
+
+/// Packed arena key: `(generation << 32) | slot_index`.
+pub type SeqKey = u64;
+
+#[inline]
+fn key_of(idx: u32, gen: u32) -> SeqKey {
+    ((gen as u64) << 32) | idx as u64
+}
+
+#[inline]
+fn idx_of(key: SeqKey) -> usize {
+    (key & 0xffff_ffff) as usize
+}
+
+#[inline]
+fn gen_of(key: SeqKey) -> u32 {
+    (key >> 32) as u32
+}
+
+/// Run-length KV production entry: `tokens` produced over `[t0, t1]`.
+/// Prefill chunks land as point entries (`t0 == t1`); consecutive decode
+/// steps extend one run entry instead of pushing one element per token.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KvSpan {
+    pub t0: f64,
+    pub t1: f64,
+    pub tokens: usize,
+    /// True for a decode run (eligible for extension by the next step).
+    pub decode_run: bool,
+}
+
+impl KvSpan {
+    /// Ready time of this span's k-th token (1-based): point entries are
+    /// ready at `t0`; decode runs interpolate linearly over the run.
+    pub fn time_of(&self, k: usize) -> f64 {
+        if self.tokens <= 1 || self.t1 <= self.t0 {
+            self.t1
+        } else {
+            self.t0 + (self.t1 - self.t0) * (k - 1) as f64 / (self.tokens - 1) as f64
+        }
+    }
+}
+
+/// One resident segment (micro-request) of a request. Identified by the
+/// arena key [`InstanceRuntime::accept`] returns — the segment itself
+/// does not carry it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Segment {
+    pub request: RequestId,
+    /// Executable span [start, end_exec) in *input token* positions (the
+    /// submit path already clamped the span by the true length).
+    pub start: usize,
+    pub end_exec: usize,
+    /// Remaining work.
+    pub work: crate::coordinator::WorkItem,
+    /// True once the required context KV ([0, start)) is resident.
+    pub ready: bool,
+    /// Emits the position-P first token when its prefill completes.
+    pub emits_first_token: bool,
+    /// Whether this is the request's final segment (frees the request).
+    pub last_segment: bool,
+    /// True once KV capacity was reserved (admitted to the batch queue).
+    pub admitted: bool,
+    /// α only: the waiting β's `(instance, key)` — keys are
+    /// executor-scoped (arena keys in virtual time, leader-assigned ids
+    /// on the live path). Drives the handoff at completion.
+    pub beta_dest: Option<(usize, u64)>,
+    /// α-side KV production history for the transfer timeline; run-length
+    /// coalesced, tracked only when a β segment waits on this one.
+    pub kv_history: Vec<KvSpan>,
+    pub track_kv_history: bool,
+    pub arrival: f64,
+}
+
+impl Segment {
+    /// Build a segment from span counts — the shared constructor both
+    /// executors' submit paths funnel through (see [`super::submit`]).
+    /// `gated` marks a β segment that must wait for its context transfer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        request: RequestId,
+        arrival: f64,
+        start: usize,
+        prefill: usize,
+        decode: usize,
+        emits_first: bool,
+        last_segment: bool,
+        gated: bool,
+    ) -> Segment {
+        Segment {
+            request,
+            start,
+            end_exec: start + prefill + decode,
+            work: crate::coordinator::WorkItem {
+                prefill_remaining: prefill,
+                context: start,
+                decode_remaining: decode,
+            },
+            ready: !gated,
+            emits_first_token: emits_first,
+            last_segment,
+            admitted: false,
+            beta_dest: None,
+            kv_history: Vec::new(),
+            track_kv_history: false,
+            arrival,
+        }
+    }
+
+    pub fn finished(&self) -> bool {
+        self.work.is_done()
+    }
+}
+
+/// What one applied batch step did to a segment (executor feedback).
+#[derive(Debug, Clone, Copy)]
+pub struct StepOutcome {
+    /// Token to credit to the sink: (request, arrival).
+    pub emit: Option<(RequestId, f64)>,
+    /// The segment's work is now fully done.
+    pub completed: bool,
+}
+
+/// Where token emissions and request completions land: the metrics
+/// [`Collector`] in virtual time, an `UpMsg` channel on the live path.
+pub trait EventSink {
+    /// One output token of `request` (arrived at `arrival`) emitted at `at`.
+    fn on_emit(&mut self, request: RequestId, arrival: f64, at: f64);
+    /// All of `request`'s segments completed.
+    fn on_done(&mut self, request: RequestId);
+}
+
+impl EventSink for Collector {
+    fn on_emit(&mut self, request: RequestId, arrival: f64, at: f64) {
+        self.on_token(request, arrival, at);
+    }
+
+    fn on_done(&mut self, request: RequestId) {
+        self.on_complete(request);
+    }
+}
+
+/// How [`InstanceRuntime::complete_segment`] retired a segment.
+#[derive(Debug, Clone, Copy)]
+pub enum SegmentDisposition {
+    /// Fully retired: evicted, KV freed (and the request reported done if
+    /// this was its final segment).
+    Finished,
+    /// α completed with a modeled transfer scheduled: the host must wake
+    /// β (`dest`) at `ready_at` and evict the still-pinned α there.
+    Handoff { dest: (usize, u64), ready_at: f64 },
+}
+
+/// Generation-tagged slab of resident segments.
+#[derive(Debug, Default)]
+pub struct SeqArena {
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+#[derive(Debug)]
+struct Slot {
+    gen: u32,
+    seq: Option<Segment>,
+}
+
+impl SeqArena {
+    pub fn insert(&mut self, seq: Segment) -> SeqKey {
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.slots.push(Slot { gen: 0, seq: None });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        let slot = &mut self.slots[idx as usize];
+        let key = key_of(idx, slot.gen);
+        slot.seq = Some(seq);
+        self.live += 1;
+        key
+    }
+
+    pub fn get(&self, key: SeqKey) -> Option<&Segment> {
+        let slot = self.slots.get(idx_of(key))?;
+        if slot.gen != gen_of(key) {
+            return None;
+        }
+        slot.seq.as_ref()
+    }
+
+    pub fn get_mut(&mut self, key: SeqKey) -> Option<&mut Segment> {
+        let slot = self.slots.get_mut(idx_of(key))?;
+        if slot.gen != gen_of(key) {
+            return None;
+        }
+        slot.seq.as_mut()
+    }
+
+    pub fn remove(&mut self, key: SeqKey) -> Option<Segment> {
+        let idx = idx_of(key);
+        let slot = self.slots.get_mut(idx)?;
+        if slot.gen != gen_of(key) {
+            return None;
+        }
+        let seq = slot.seq.take()?;
+        slot.gen = slot.gen.wrapping_add(1);
+        self.free.push(idx as u32);
+        self.live -= 1;
+        Some(seq)
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Live segments in deterministic slot order.
+    pub fn iter(&self) -> impl Iterator<Item = &Segment> {
+        self.slots.iter().filter_map(|s| s.seq.as_ref())
+    }
+}
+
+/// O(1) KV-capacity meter (the block-level allocator in `kv/block.rs`
+/// serves the live engine's tensors; the lifecycle only needs token
+/// arithmetic, held per-segment in the arena).
+#[derive(Debug, Clone, Copy)]
+pub struct KvMeter {
+    capacity: usize,
+    resident: usize,
+}
+
+impl KvMeter {
+    pub fn new(capacity: usize) -> Self {
+        KvMeter { capacity, resident: 0 }
+    }
+
+    pub fn can_fit(&self, extra: usize) -> bool {
+        self.resident + extra <= self.capacity
+    }
+
+    fn reserve(&mut self, tokens: usize) {
+        self.resident += tokens;
+    }
+
+    fn release(&mut self, tokens: usize) {
+        debug_assert!(tokens <= self.resident, "KV release underflow");
+        self.resident -= tokens;
+    }
+
+    pub fn resident_tokens(&self) -> usize {
+        self.resident
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.capacity == 0 {
+            0.0
+        } else {
+            self.resident as f64 / self.capacity as f64
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+/// Aggregated per-instance utilization counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InstanceStats {
+    pub busy_time: f64,
+    pub iterations: u64,
+    pub flops: f64,
+    pub mfu_weighted: f64,
+    /// Time-weighted KV utilization integral (∫ util dt over busy time).
+    pub kv_util_weighted: f64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+}
+
+/// The per-instance lifecycle state machine (see module docs).
+pub struct InstanceRuntime {
+    pub id: usize,
+    pub spec: InstanceSpec,
+    pub local: LocalScheduler,
+    arena: SeqArena,
+    /// FCFS admission order of segments; tombstone-aware (see module doc).
+    order: VecDeque<SeqKey>,
+    order_dead: usize,
+    pub kv: KvMeter,
+    /// Segments accepted but not yet KV-admitted (capacity backpressure).
+    waiting: VecDeque<SeqKey>,
+    pub busy: bool,
+    pub stats: InstanceStats,
+    /// Incremental load counters; `id`/`kv_utilization` filled by digest().
+    load: LoadDigest,
+    scratch_decodes: Vec<DecodeEntry>,
+    scratch_prefills: Vec<PrefillEntry>,
+}
+
+impl InstanceRuntime {
+    pub fn new(id: usize, spec: InstanceSpec, local: LocalScheduler) -> Self {
+        let kv = KvMeter::new(spec.kv_capacity_tokens());
+        InstanceRuntime {
+            id,
+            spec,
+            local,
+            arena: SeqArena::default(),
+            order: VecDeque::new(),
+            order_dead: 0,
+            kv,
+            waiting: VecDeque::new(),
+            busy: false,
+            stats: InstanceStats::default(),
+            load: LoadDigest::default(),
+            scratch_decodes: Vec::new(),
+            scratch_prefills: Vec::new(),
+        }
+    }
+
+    /// Accept a segment: admit it if KV capacity permits, else queue it.
+    /// Either way it enters the arena; the assigned key is returned.
+    /// Admission is strictly FCFS: while segments wait for KV capacity, a
+    /// new arrival queues behind them even if it would fit — otherwise a
+    /// stream of small requests could starve a large waiting segment by
+    /// grabbing every sliver of freed capacity ahead of it.
+    ///
+    /// A segment larger than the whole KV pool can never be admitted and,
+    /// under strict FCFS, would wedge every later arrival behind it —
+    /// callers must clamp request lengths against
+    /// `spec.kv_capacity_tokens()` (debug-asserted here; in release the
+    /// deadlock surfaces via `stuck_requests`).
+    pub fn accept(&mut self, seq: Segment) -> SeqKey {
+        debug_assert!(
+            seq.end_exec <= self.kv.capacity(),
+            "segment [{}..{}) of request {} needs {} KV tokens but the pool holds {} — \
+             it can never be admitted and will wedge FCFS admission",
+            seq.start,
+            seq.end_exec,
+            seq.request,
+            seq.end_exec,
+            self.kv.capacity()
+        );
+        let fits = self.waiting.is_empty() && self.kv.can_fit(seq.end_exec);
+        self.load.add(&seq.work);
+        let key = self.arena.insert(seq);
+        if fits {
+            self.admit(key);
+        } else {
+            self.waiting.push_back(key);
+            self.load.waiting += 1;
+        }
+        key
+    }
+
+    fn admit(&mut self, key: SeqKey) {
+        let seq = self.arena.get_mut(key).expect("admit: live segment");
+        seq.admitted = true;
+        // β holds the full [0, end) context after transfer; α holds [0, end).
+        let tokens = seq.end_exec;
+        self.kv.reserve(tokens);
+        self.order.push_back(key);
+    }
+
+    /// Admit from the waiting queue while capacity allows (FCFS).
+    pub fn drain_waiting(&mut self) {
+        while let Some(&key) = self.waiting.front() {
+            // None = evicted while waiting (tombstone): drop and continue
+            let fits = self.arena.get(key).map(|seq| self.kv.can_fit(seq.end_exec));
+            match fits {
+                None => {
+                    self.waiting.pop_front();
+                }
+                Some(true) => {
+                    self.waiting.pop_front();
+                    self.load.waiting -= 1;
+                    self.admit(key);
+                }
+                Some(false) => break,
+            }
+        }
+    }
+
+    /// Remove a finished/cancelled segment, free its KV, backfill from the
+    /// waiting queue. O(1) amortized — the order queue is tombstoned, not
+    /// scanned.
+    pub fn evict(&mut self, key: SeqKey) -> Option<Segment> {
+        let seq = self.arena.remove(key)?;
+        if seq.admitted {
+            self.kv.release(seq.end_exec);
+            self.order_dead += 1;
+            self.compact_order();
+        } else {
+            self.load.waiting -= 1;
+        }
+        // no-op for finished segments (already removed at completion time)
+        self.load.remove(&seq.work);
+        self.drain_waiting();
+        Some(seq)
+    }
+
+    fn compact_order(&mut self) {
+        // cheap incremental cleanup at the front…
+        while let Some(&k) = self.order.front() {
+            if self.arena.get(k).is_some() {
+                break;
+            }
+            self.order.pop_front();
+            self.order_dead -= 1;
+        }
+        // …full sweep only when tombstones dominate
+        if self.order_dead > 32 && self.order_dead * 2 > self.order.len() {
+            let arena = &self.arena;
+            self.order.retain(|&k| arena.get(k).is_some());
+            self.order_dead = 0;
+        }
+    }
+
+    pub fn get(&self, key: SeqKey) -> Option<&Segment> {
+        self.arena.get(key)
+    }
+
+    pub fn get_mut(&mut self, key: SeqKey) -> Option<&mut Segment> {
+        self.arena.get_mut(key)
+    }
+
+    /// Mark a gated β segment's context resident (transfer completed).
+    /// Tolerates stale keys — the segment may have been cancelled.
+    pub fn mark_ready(&mut self, key: SeqKey) {
+        if let Some(s) = self.arena.get_mut(key) {
+            s.ready = true;
+        }
+    }
+
+    /// Resident segments (admitted + waiting, incl. finished-but-pinned).
+    pub fn len(&self) -> usize {
+        self.arena.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arena.is_empty()
+    }
+
+    /// KV-admission queue depth (live entries only).
+    pub fn waiting_len(&self) -> usize {
+        self.load.waiting
+    }
+
+    /// Apply one prefill chunk to a segment, maintaining the load digest
+    /// and the run-length KV history. Returns `None` for a stale key.
+    pub fn apply_prefill(&mut self, key: SeqKey, chunk: usize, now: f64) -> Option<StepOutcome> {
+        let load = &mut self.load;
+        let seq = self.arena.get_mut(key)?;
+        load.remove(&seq.work);
+        seq.work.prefill_remaining -= chunk;
+        seq.work.context += chunk;
+        if seq.track_kv_history {
+            seq.kv_history.push(KvSpan { t0: now, t1: now, tokens: chunk, decode_run: false });
+        }
+        load.add(&seq.work); // no-op once the segment is done
+        let completed = seq.work.is_done();
+        let emit = (seq.work.prefill_remaining == 0 && seq.emits_first_token)
+            .then_some((seq.request, seq.arrival));
+        Some(StepOutcome { emit, completed })
+    }
+
+    /// Apply one decode step to a segment (always emits a token).
+    pub fn apply_decode(&mut self, key: SeqKey, now: f64) -> Option<StepOutcome> {
+        let load = &mut self.load;
+        let seq = self.arena.get_mut(key)?;
+        load.remove(&seq.work);
+        seq.work.decode_remaining -= 1;
+        seq.work.context += 1;
+        if seq.track_kv_history {
+            // run-length: extend the open decode run instead of pushing
+            // one history element per generated token
+            match seq.kv_history.last_mut() {
+                Some(last) if last.decode_run => {
+                    last.t1 = now;
+                    last.tokens += 1;
+                }
+                _ => {
+                    seq.kv_history.push(KvSpan { t0: now, t1: now, tokens: 1, decode_run: true });
+                }
+            }
+        }
+        load.add(&seq.work); // no-op once the segment is done
+        Some(StepOutcome {
+            emit: Some((seq.request, seq.arrival)),
+            completed: seq.work.is_done(),
+        })
+    }
+
+    /// Compose the next batch via the local scheduler (Algorithm 2).
+    pub fn plan_batch(&mut self) -> BatchPlan {
+        self.scratch_decodes.clear();
+        self.scratch_prefills.clear();
+        for &key in &self.order {
+            let Some(s) = self.arena.get(key) else { continue };
+            if !s.ready || s.finished() {
+                continue;
+            }
+            if s.work.in_decode_phase() {
+                self.scratch_decodes.push(DecodeEntry { key, context: s.work.context });
+            } else if s.work.prefill_remaining > 0 {
+                self.scratch_prefills.push(PrefillEntry {
+                    key,
+                    remaining: s.work.prefill_remaining,
+                    context: s.work.context,
+                });
+            }
+        }
+        self.local.next_batch(&self.scratch_decodes, &self.scratch_prefills)
+    }
+
+    /// Ground-truth latency of a plan from the cost model.
+    pub fn plan_latency(&self, plan: &BatchPlan) -> f64 {
+        self.spec.iteration_cost(&plan.shape).latency
+    }
+
+    /// RECORD an executed iteration: feed the measured (or modeled)
+    /// latency back to the local scheduler's profile under the plan's own
+    /// query key, and accumulate utilization stats.
+    pub fn record_iteration(&mut self, plan: &BatchPlan, latency: f64) {
+        self.local.record_execution(latency);
+        self.record_stats(plan, latency);
+    }
+
+    /// Retire a segment whose work just completed: report final segments
+    /// to the sink, trigger the α→β handoff through the transport, and
+    /// evict — unless the transport scheduled a modeled transfer, in
+    /// which case α's KV pages stay pinned until the host evicts it at
+    /// the returned time.
+    pub fn complete_segment(
+        &mut self,
+        key: SeqKey,
+        now: f64,
+        sink: &mut dyn EventSink,
+        transport: &mut dyn Transport,
+    ) -> SegmentDisposition {
+        let seq = self.get(key).expect("completed segment resident");
+        let (request, last_segment, beta_dest) = (seq.request, seq.last_segment, seq.beta_dest);
+
+        if last_segment {
+            sink.on_done(request);
+            self.evict(key);
+            return SegmentDisposition::Finished;
+        }
+
+        // α completed and a β segment waits: hand its KV over.
+        if let Some(dest) = beta_dest {
+            // α is done executing — take its history instead of cloning it
+            let history = self
+                .get_mut(key)
+                .map(|s| std::mem::take(&mut s.kv_history))
+                .unwrap_or_default();
+            match transport.handoff(now, Handoff { request, source: key, dest, history }) {
+                HandoffDisposition::Scheduled { ready_at } => {
+                    // α's KV pages stay pinned until the transfer drains.
+                    SegmentDisposition::Handoff { dest, ready_at }
+                }
+                HandoffDisposition::Detached => {
+                    self.evict(key);
+                    SegmentDisposition::Finished
+                }
+            }
+        } else {
+            // α with no β (β was cancelled by early-termination clamping)
+            self.evict(key);
+            SegmentDisposition::Finished
+        }
+    }
+
+    /// O(1) load digest for the global scheduler's probes.
+    pub fn digest(&self) -> LoadDigest {
+        LoadDigest { id: self.id, kv_utilization: self.kv.utilization(), ..self.load }
+    }
+
+    /// Exact snapshot for the reference scheduling path and for the
+    /// digest-equivalence checks. O(resident segments). The `waiting`
+    /// depth is recounted from the queue itself (not read from the
+    /// incremental counter) so the digest/snapshot equivalence assertions
+    /// can actually catch waiting-counter drift.
+    pub fn snapshot(&self) -> InstanceSnapshot {
+        let work: Vec<crate::coordinator::WorkItem> =
+            self.arena.iter().filter(|s| !s.finished()).map(|s| s.work).collect();
+        let waiting = self.waiting.iter().filter(|&&k| self.arena.get(k).is_some()).count();
+        InstanceSnapshot { id: self.id, work, kv_utilization: self.kv.utilization(), waiting }
+    }
+
+    /// Record utilization for a completed iteration.
+    pub fn record_stats(&mut self, plan: &BatchPlan, latency: f64) {
+        let cost = self.spec.iteration_cost(&plan.shape);
+        self.stats.busy_time += latency;
+        self.stats.iterations += 1;
+        self.stats.flops += cost.flops;
+        self.stats.mfu_weighted += cost.mfu * latency;
+        self.stats.kv_util_weighted += self.kv.utilization() * latency;
+        self.stats.prefill_tokens += plan.shape.prefill_tokens as u64;
+        self.stats.decode_tokens += plan.shape.decode_reqs as u64;
+    }
+
+    /// Mean MFU over busy time.
+    pub fn mfu(&self) -> f64 {
+        if self.stats.busy_time == 0.0 {
+            0.0
+        } else {
+            self.stats.mfu_weighted / self.stats.busy_time
+        }
+    }
+
+    /// Mean KV (HBM) utilization over busy time, plus the weight share.
+    pub fn kv_util(&self) -> f64 {
+        if self.stats.busy_time == 0.0 {
+            0.0
+        } else {
+            self.stats.kv_util_weighted / self.stats.busy_time
+        }
+    }
+
+    /// HBM usage fraction including weights (Table 1's metric).
+    pub fn hbm_usage(&self) -> f64 {
+        let total = self.spec.gpu.hbm_capacity * self.spec.tp as f64;
+        let weights = self.spec.llm.weight_bytes();
+        let kv_bytes = self.kv_util() * self.spec.kv_capacity_bytes();
+        ((weights + kv_bytes) / total).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{LocalConfig, ProfileTable, WorkItem};
+    use crate::costmodel::{GpuSpec, LlmSpec};
+
+    fn inst() -> InstanceRuntime {
+        let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
+        let local = LocalScheduler::new(LocalConfig::default(), ProfileTable::seeded(&spec));
+        InstanceRuntime::new(0, spec, local)
+    }
+
+    fn seq(req: u64, start: usize, end: usize, p: usize) -> Segment {
+        Segment::from_parts(
+            req,
+            0.0,
+            start,
+            end.min(p).saturating_sub(start),
+            end.saturating_sub(start.max(p)),
+            start < p && end.min(p) == p,
+            true,
+            false,
+        )
+    }
+
+    #[test]
+    fn accept_admit_evict_cycle() {
+        let mut i = inst();
+        let k = i.accept(seq(1, 0, 1000, 800));
+        assert_eq!(i.len(), 1);
+        assert_eq!(i.kv.resident_tokens(), 1000);
+        i.evict(k);
+        assert!(i.is_empty());
+        assert_eq!(i.kv.resident_tokens(), 0);
+    }
+
+    #[test]
+    fn capacity_backpressure_queues_then_admits() {
+        let mut i = inst();
+        let cap = i.kv.capacity();
+        let k1 = i.accept(seq(1, 0, cap, cap - 10)); // fills the pool
+        let k2 = i.accept(seq(2, 0, 100, 80));
+        assert_eq!(i.waiting_len(), 1);
+        assert!(!i.get(k2).unwrap().admitted);
+        i.evict(k1);
+        assert_eq!(i.waiting_len(), 0);
+        assert!(i.get(k2).unwrap().admitted);
+    }
+
+    #[test]
+    fn arrivals_do_not_jump_the_waiting_queue() {
+        let mut i = inst();
+        let cap = i.kv.capacity();
+        let k1 = i.accept(seq(1, 0, cap - 50, cap - 60)); // nearly fills
+        let kw = i.accept(seq(2, 0, 200, 150)); // 200 > 50 → waits
+        assert_eq!(i.waiting_len(), 1);
+        // a small arrival that WOULD fit must still queue behind kw (FCFS)
+        let ks = i.accept(seq(3, 0, 20, 10));
+        assert_eq!(i.waiting_len(), 2);
+        assert!(!i.get(ks).unwrap().admitted);
+        // once capacity frees, both admit in FCFS order
+        i.evict(k1);
+        assert_eq!(i.waiting_len(), 0);
+        assert!(i.get(kw).unwrap().admitted);
+        assert!(i.get(ks).unwrap().admitted);
+    }
+
+    #[test]
+    fn plan_batch_mixes_ready_work() {
+        let mut i = inst();
+        let mut d = seq(1, 0, 600, 100);
+        d.work = WorkItem::pure_decode(300, 50); // mid-decode
+        let kd = i.accept(d);
+        let kp = i.accept(seq(2, 0, 900, 800)); // fresh prefill
+        let plan = i.plan_batch();
+        assert_eq!(plan.decodes, vec![kd]);
+        assert_eq!(plan.prefill.first().map(|p| p.0), Some(kp));
+        assert!(i.plan_latency(&plan) > 0.0);
+    }
+
+    #[test]
+    fn not_ready_sequences_excluded() {
+        let mut i = inst();
+        let mut s = seq(3, 500, 900, 400); // β awaiting transfer
+        s.ready = false;
+        let k = i.accept(s);
+        let plan = i.plan_batch();
+        assert!(plan.is_empty());
+        // transfer lands: the segment becomes schedulable
+        i.mark_ready(k);
+        let plan = i.plan_batch();
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn snapshot_includes_waiting() {
+        let mut i = inst();
+        let cap = i.kv.capacity();
+        i.accept(seq(1, 0, cap, cap - 10));
+        i.accept(seq(2, 0, 100, 80));
+        let snap = i.snapshot();
+        assert_eq!(snap.work.len(), 2);
+        assert_eq!(snap.waiting, 1);
+    }
+
+    #[test]
+    fn stale_keys_do_not_alias_reused_slots() {
+        let mut i = inst();
+        let k1 = i.accept(seq(1, 0, 100, 80));
+        i.evict(k1);
+        // slot reused by a new segment: the old key must not resolve
+        let k2 = i.accept(seq(2, 0, 200, 150));
+        assert_ne!(k1, k2);
+        assert!(i.get(k1).is_none());
+        assert_eq!(i.get(k2).unwrap().request, 2);
+        // mark_ready on the stale key must not touch the new occupant
+        i.mark_ready(k1);
+    }
+
+    #[test]
+    fn tombstoned_order_queue_compacts() {
+        let mut i = inst();
+        let keys: Vec<SeqKey> = (0..100).map(|r| i.accept(seq(r, 0, 64, 50))).collect();
+        for &k in &keys[..80] {
+            i.evict(k);
+        }
+        // the survivors still plan, in FCFS order
+        let plan = i.plan_batch();
+        assert_eq!(plan.prefill.first().map(|p| p.0), Some(keys[80]));
+        assert_eq!(i.len(), 20);
+    }
+
+    #[test]
+    fn decode_kv_history_is_run_length_coalesced() {
+        let mut i = inst();
+        let mut s = seq(1, 0, 600, 100);
+        s.track_kv_history = true;
+        let k = i.accept(s);
+        // prefill in two chunks, then 50 decode steps
+        i.apply_prefill(k, 60, 0.1);
+        i.apply_prefill(k, 40, 0.2);
+        for step in 0..50 {
+            i.apply_decode(k, 0.3 + step as f64 * 0.01);
+        }
+        let h = &i.get(k).unwrap().kv_history;
+        assert_eq!(h.len(), 3, "decode steps must coalesce: {h:?}");
+        assert_eq!(h[0], KvSpan { t0: 0.1, t1: 0.1, tokens: 60, decode_run: false });
+        assert_eq!(h[1].tokens, 40);
+        let run = h[2];
+        assert!(run.decode_run);
+        assert_eq!(run.tokens, 50);
+        assert!((run.t0 - 0.3).abs() < 1e-12 && (run.t1 - 0.79).abs() < 1e-9);
+        // total tokens conserved across the coalesced representation
+        let total: usize = h.iter().map(|e| e.tokens).sum();
+        assert_eq!(total, 150);
+    }
+
+    /// The completion lifecycle: a final segment reports to the sink and
+    /// frees its KV; an α with a waiting β hands off through the
+    /// transport and stays pinned until the scheduled evict (modeled) or
+    /// retires immediately (detached).
+    #[test]
+    fn complete_segment_dispositions() {
+        use crate::exec::transport::ModeledTransport;
+        use crate::kv::LinkSpec;
+
+        #[derive(Default)]
+        struct RecSink {
+            done: Vec<RequestId>,
+            emitted: usize,
+        }
+        impl EventSink for RecSink {
+            fn on_emit(&mut self, _r: RequestId, _a: f64, _t: f64) {
+                self.emitted += 1;
+            }
+            fn on_done(&mut self, r: RequestId) {
+                self.done.push(r);
+            }
+        }
+        struct DetachedTransport {
+            handoffs: usize,
+        }
+        impl Transport for DetachedTransport {
+            fn handoff(&mut self, _now: f64, _h: Handoff) -> HandoffDisposition {
+                self.handoffs += 1;
+                HandoffDisposition::Detached
+            }
+        }
+
+        let mut sink = RecSink::default();
+        let mut modeled = ModeledTransport::new(LinkSpec::default(), 256, true, 2.0);
+        let mut detached = DetachedTransport { handoffs: 0 };
+
+        // final segment → Finished + on_done + KV freed
+        let mut i = inst();
+        let mut s = seq(7, 0, 100, 90);
+        s.work = WorkItem { prefill_remaining: 0, context: 100, decode_remaining: 0 };
+        let k = i.accept(s);
+        match i.complete_segment(k, 1.0, &mut sink, &mut modeled) {
+            SegmentDisposition::Finished => {}
+            d => panic!("final segment must finish: {d:?}"),
+        }
+        assert_eq!(sink.done, vec![7]);
+        assert!(i.is_empty());
+
+        // α with β, modeled transport → Handoff, α stays pinned
+        let mut a = seq(8, 0, 100, 90);
+        a.last_segment = false;
+        a.beta_dest = Some((1, 42));
+        a.track_kv_history = true;
+        a.work = WorkItem { prefill_remaining: 0, context: 100, decode_remaining: 0 };
+        a.kv_history = vec![KvSpan { t0: 0.5, t1: 0.5, tokens: 100, decode_run: false }];
+        let k = i.accept(a);
+        match i.complete_segment(k, 1.0, &mut sink, &mut modeled) {
+            SegmentDisposition::Handoff { dest, ready_at } => {
+                assert_eq!(dest, (1, 42));
+                assert!(ready_at >= 1.0);
+            }
+            d => panic!("modeled handoff expected: {d:?}"),
+        }
+        assert_eq!(i.len(), 1, "α pinned until the scheduled evict");
+        assert_eq!(modeled.report.transfers, 1);
+        i.evict(k);
+
+        // α with β, detached transport → Finished, evicted immediately
+        let mut a = seq(9, 0, 100, 90);
+        a.last_segment = false;
+        a.beta_dest = Some((1, 43));
+        a.work = WorkItem { prefill_remaining: 0, context: 100, decode_remaining: 0 };
+        let k = i.accept(a);
+        match i.complete_segment(k, 1.0, &mut sink, &mut detached) {
+            SegmentDisposition::Finished => {}
+            d => panic!("detached handoff must finish: {d:?}"),
+        }
+        assert_eq!(detached.handoffs, 1);
+        assert!(i.is_empty());
+        // neither α reported done (not last segments)
+        assert_eq!(sink.done, vec![7]);
+    }
+
+    #[test]
+    fn digest_matches_snapshot_reduction_under_random_ops() {
+        use crate::util::proptest_lite::check;
+        check("digest == snapshot reduction", 25, |rng| {
+            let mut i = inst();
+            let mut keys: Vec<SeqKey> = Vec::new();
+            for step in 0..200u64 {
+                let op = rng.range(0, 10);
+                if op < 4 || keys.is_empty() {
+                    let p = rng.range_usize(1, 3000);
+                    let end = p + rng.range_usize(0, 600);
+                    let start = rng.range_usize(0, p);
+                    let mut s = seq(step, start, end, p);
+                    s.ready = !rng.bool(0.2);
+                    keys.push(i.accept(s));
+                } else if op < 8 {
+                    let k = keys[rng.range_usize(0, keys.len())];
+                    let state = i
+                        .get(k)
+                        .filter(|s| !s.finished())
+                        .map(|s| (s.work.prefill_remaining, s.work.in_decode_phase()));
+                    match state {
+                        Some((rem, _)) if rem > 0 => {
+                            let chunk = rng.range_usize(1, rem + 1);
+                            i.apply_prefill(k, chunk, step as f64);
+                        }
+                        Some((_, true)) => {
+                            i.apply_decode(k, step as f64);
+                        }
+                        _ => {}
+                    }
+                } else {
+                    let at = rng.range_usize(0, keys.len());
+                    let k = keys.swap_remove(at);
+                    i.evict(k);
+                }
+                assert_eq!(
+                    i.digest(),
+                    LoadDigest::from_snapshot(&i.snapshot()),
+                    "digest drifted at step {step}"
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,222 @@
+//! The single placement→segments path (request submission).
+//!
+//! A [`Placement`] speaks in *predicted* token positions (β's end is the
+//! predicted end L̂). Execution stops at the true end-of-sequence, which
+//! may come earlier or later, so both executors must clamp the placed
+//! spans by the true processing length before materializing segments.
+//! That clamping — and the first-token / last-segment / gating flags that
+//! fall out of it — used to be duplicated between the simulator's arrival
+//! handler and the live server's leader; it lives here now, once.
+//!
+//! A request with prompt `P` and true decode length `D` processes input
+//! tokens `0..P+D-1`: processing token `P-1` (the prefill tail) emits
+//! output position `P`, and each decode step processing token `p ≥ P`
+//! emits position `p+1` — `D` output tokens in total, however the request
+//! is split into segments.
+
+use crate::core::Request;
+use crate::exec::policy::Placement;
+use crate::exec::runtime::Segment;
+
+/// One clamped segment, ready to materialize on its instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SegmentPlan {
+    pub instance: usize,
+    /// Span [start, end) in input-token positions, clamped by the true
+    /// processing length.
+    pub start: usize,
+    pub end: usize,
+    /// Prompt tokens this segment must prefill (span ∩ [0, P)).
+    pub prefill: usize,
+    /// Decode tokens this segment must generate (span ∩ [P, L_proc)).
+    pub decode: usize,
+    /// Emits the position-P first token when its prefill completes.
+    pub emits_first: bool,
+    /// Completing this segment completes the request.
+    pub last_segment: bool,
+}
+
+impl SegmentPlan {
+    /// The prompt-token range this segment prefills — safe to slice a
+    /// length-P prompt with even when the span lies entirely past P.
+    pub fn prompt_range(&self, prompt_len: usize) -> std::ops::Range<usize> {
+        self.start.min(prompt_len)..(self.start + self.prefill).min(prompt_len)
+    }
+}
+
+/// The clamped α/β pair for one request.
+#[derive(Debug, Clone, Copy)]
+pub struct SubmitPlan {
+    pub alpha: SegmentPlan,
+    /// `None` when the whole request runs as α (no split, or β's span was
+    /// cancelled by early-termination clamping).
+    pub beta: Option<SegmentPlan>,
+    /// Probe count (telemetry; Table 3).
+    pub probes: usize,
+}
+
+fn span_plan(
+    instance: usize,
+    start: usize,
+    end: usize,
+    prompt_len: usize,
+    last_segment: bool,
+) -> SegmentPlan {
+    SegmentPlan {
+        instance,
+        start,
+        end,
+        prefill: end.min(prompt_len).saturating_sub(start),
+        decode: end.saturating_sub(start.max(prompt_len)),
+        emits_first: start < prompt_len && end >= prompt_len,
+        last_segment,
+    }
+}
+
+/// Clamp a policy placement by the request's *true* processing length and
+/// derive the per-segment flags. β is dropped when the true length ends
+/// the request before β's span begins (its α then covers everything).
+pub fn plan_submission(placement: &Placement, req: &Request) -> SubmitPlan {
+    // Input-token positions run 0..P+D-1 (see module docs).
+    let l_proc = req.prompt_len + req.decode_len - 1;
+    let s = placement.alpha.end.min(l_proc);
+    let beta = placement
+        .beta
+        .as_ref()
+        .filter(|b| b.start < l_proc)
+        .map(|b| span_plan(b.instance, b.start, l_proc, req.prompt_len, true));
+    let alpha_end = if beta.is_some() { s } else { l_proc };
+    SubmitPlan {
+        alpha: span_plan(
+            placement.alpha.instance,
+            0,
+            alpha_end,
+            req.prompt_len,
+            beta.is_none(),
+        ),
+        beta,
+        probes: placement.probes,
+    }
+}
+
+/// Materialize a planned segment. `gated` marks a β that must wait for
+/// its context transfer before becoming schedulable; `track_kv` records
+/// the run-length KV production history an α needs for the modeled
+/// transfer timeline.
+pub fn make_segment(req: &Request, sp: &SegmentPlan, gated: bool, track_kv: bool) -> Segment {
+    let mut seg = Segment::from_parts(
+        req.id,
+        req.arrival,
+        sp.start,
+        sp.prefill,
+        sp.decode,
+        sp.emits_first,
+        sp.last_segment,
+        gated,
+    );
+    seg.track_kv_history = track_kv;
+    seg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{MicroRequest, Role};
+
+    fn placement(alpha_end: usize, beta_start: Option<usize>, l_hat: usize, p: usize) -> Placement {
+        Placement {
+            alpha: MicroRequest {
+                request: 1,
+                role: Role::Alpha,
+                start: 0,
+                end: alpha_end,
+                prompt_len: p,
+                instance: 0,
+                arrival: 0.0,
+            },
+            beta: beta_start.map(|s| MicroRequest {
+                request: 1,
+                role: Role::Beta,
+                start: s,
+                end: l_hat,
+                prompt_len: p,
+                instance: 1,
+                arrival: 0.0,
+            }),
+            probes: 3,
+        }
+    }
+
+    #[test]
+    fn unsplit_request_covers_true_length() {
+        let req = Request::new(1, 0.0, 100, 50);
+        let plan = plan_submission(&placement(150, None, 150, 100), &req);
+        assert!(plan.beta.is_none());
+        assert_eq!(plan.alpha, SegmentPlan {
+            instance: 0,
+            start: 0,
+            end: 149, // L_proc = P + D - 1
+            prefill: 100,
+            decode: 49,
+            emits_first: true,
+            last_segment: true,
+        });
+        assert_eq!(plan.probes, 3);
+    }
+
+    #[test]
+    fn split_inside_prompt_gives_beta_the_first_token() {
+        let req = Request::new(1, 0.0, 100, 50);
+        let plan = plan_submission(&placement(60, Some(60), 150, 100), &req);
+        let beta = plan.beta.expect("split survives clamping");
+        assert!(!plan.alpha.emits_first && !plan.alpha.last_segment);
+        assert_eq!(plan.alpha.prefill, 60);
+        assert_eq!(plan.alpha.decode, 0);
+        assert_eq!(beta.start, 60);
+        assert_eq!(beta.prefill, 40);
+        assert_eq!(beta.decode, 49);
+        assert!(beta.emits_first && beta.last_segment);
+        // spans tile the true processing length exactly
+        assert_eq!(plan.alpha.end, beta.start);
+        assert_eq!(beta.end, 149);
+    }
+
+    #[test]
+    fn overestimated_prediction_cancels_beta() {
+        // predicted decode 400 ⇒ β placed at 450, but the true length ends
+        // at 109: α must absorb the whole request and become last/first.
+        let mut req = Request::new(1, 0.0, 100, 10);
+        req.predicted_decode = 400;
+        let plan = plan_submission(&placement(450, Some(450), 500, 100), &req);
+        assert!(plan.beta.is_none());
+        assert_eq!(plan.alpha.end, 109);
+        assert!(plan.alpha.emits_first && plan.alpha.last_segment);
+    }
+
+    #[test]
+    fn prompt_range_is_always_in_bounds() {
+        let p = 100usize;
+        for (start, end) in [(0usize, 60usize), (60, 149), (100, 149), (120, 149)] {
+            let sp = span_plan(0, start, end, p, true);
+            let r = sp.prompt_range(p);
+            assert!(r.start <= r.end && r.end <= p, "range {r:?} for span {start}..{end}");
+            assert_eq!(r.len(), sp.prefill, "range length must equal prefill work");
+        }
+    }
+
+    #[test]
+    fn made_segments_carry_gating_and_flags() {
+        let req = Request::new(1, 0.25, 100, 50);
+        let plan = plan_submission(&placement(60, Some(60), 150, 100), &req);
+        let alpha = make_segment(&req, &plan.alpha, false, true);
+        let beta = make_segment(&req, &plan.beta.unwrap(), true, false);
+        assert!(alpha.ready && alpha.track_kv_history);
+        assert!(!beta.ready && !beta.track_kv_history);
+        assert_eq!(alpha.arrival, 0.25);
+        assert_eq!(alpha.work.prefill_remaining, 60);
+        assert_eq!(beta.work.context, 60);
+        assert_eq!(beta.work.prefill_remaining, 40);
+        assert_eq!(beta.work.decode_remaining, 49);
+        assert_eq!(beta.end_exec, 149);
+    }
+}

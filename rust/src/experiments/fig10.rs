@@ -49,6 +49,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     for sys in System::all_default() {
         let mut sim = build_sim(sys, &llm, slo);
         sim.run(reqs.clone());
+        crate::experiments::runners::warn_if_stuck(&format!("fig10 {}", sys.name()), &sim);
         // window goodput from completed-request records
         let mut good = vec![0.0f64; windows];
         for rec in &sim.collector.completed {

@@ -42,6 +42,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             );
         }
         let s = sim.run(reqs);
+        crate::experiments::runners::warn_if_stuck(&format!("fig11 {label}"), &sim);
         let cdf = sim.collector.tbt_samples().cdf(12);
         println!("--- {label}: attainment {:.1}%, p99 {:.1} ms ---", s.attainment * 100.0, s.p99_tbt * 1e3);
         let mut t = Table::new(["TBT ms", "CDF"]);

@@ -77,6 +77,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         // swap in the fixed-split policy, keeping the standard instances
         sim = Simulator::new(sim.cfg.clone(), Box::new(FixedSplitPolicy { split: pos }));
         let s = sim.run(reqs);
+        crate::experiments::runners::warn_if_stuck(&format!("fig5 split={pos}"), &sim);
         if s.throughput_tok_s > best.1 {
             best = (pos, s.throughput_tok_s);
         }

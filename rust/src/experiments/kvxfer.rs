@@ -18,7 +18,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     let slo = SloConfig::default();
 
     let (_, sim) = run_once(System::DynaServe, &llm, TraceKind::MiniReasoning, qps, duration, seed, slo);
-    let tr = sim.transfer;
+    let tr = sim.transport.report;
     println!("Chunk-based KV transfer (Mini-Reasoning, qps={qps}, {} transfers)\n", tr.transfers);
     let mut t = Table::new(["scheme", "exposed transfer time (s)", "per transfer (ms)"]);
     let per = |x: f64| {

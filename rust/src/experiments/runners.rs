@@ -54,8 +54,42 @@ pub fn tp_for(llm: &LlmSpec) -> usize {
     }
 }
 
-/// Build a simulator for `system` over two instances of `llm`.
-pub fn build_sim(system: System, llm: &LlmSpec, slo: SloConfig) -> Simulator {
+/// Which facade instantiates the shared `exec` lifecycle core for an
+/// experiment: the simulator (`sim::Simulator`) or the server facade's
+/// stub-engine entry (`server::virtual_executor`). Both must stay thin
+/// wrappers over the same `exec::VirtualExecutor`, making results
+/// bit-identical — `rust/tests/parity.rs` fails if either facade grows
+/// its own lifecycle. (The live PJRT *thread* wiring is separately
+/// pinned to the shared submission path by the server's marshalling
+/// round-trip unit test; it executes only with `--features pjrt`.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutorKind {
+    Sim,
+    /// The server facade's executor with the engine stubbed out
+    /// (virtual clock + modeled transport).
+    LiveVirtual,
+}
+
+impl ExecutorKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecutorKind::Sim => "sim",
+            ExecutorKind::LiveVirtual => "live-virtual",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<ExecutorKind> {
+        match s {
+            "sim" => Some(ExecutorKind::Sim),
+            "live" | "live-virtual" => Some(ExecutorKind::LiveVirtual),
+            _ => None,
+        }
+    }
+}
+
+/// The (config, policy) pair every experiment cell is built from — one
+/// construction path shared by both executor facades.
+fn sim_parts(system: System, llm: &LlmSpec, slo: SloConfig) -> (SimConfig, Box<dyn Policy>) {
     let spec = InstanceSpec::new(GpuSpec::a100(), llm.clone(), tp_for(llm));
     let mut cfg = SimConfig::new(spec.clone(), 2);
     cfg.slo = slo;
@@ -86,7 +120,53 @@ pub fn build_sim(system: System, llm: &LlmSpec, slo: SloConfig) -> Simulator {
             Box::new(DisaggPolicy::new(1))
         }
     };
+    (cfg, policy)
+}
+
+/// Build a simulator for `system` over two instances of `llm`.
+pub fn build_sim(system: System, llm: &LlmSpec, slo: SloConfig) -> Simulator {
+    let (cfg, policy) = sim_parts(system, llm, slo);
     Simulator::new(cfg, policy)
+}
+
+/// Build an executor for `system` through the chosen facade (see
+/// [`ExecutorKind`]).
+pub fn build_executor(
+    kind: ExecutorKind,
+    system: System,
+    llm: &LlmSpec,
+    slo: SloConfig,
+) -> Simulator {
+    let (cfg, policy) = sim_parts(system, llm, slo);
+    match kind {
+        ExecutorKind::Sim => Simulator::new(cfg, policy),
+        ExecutorKind::LiveVirtual => crate::server::virtual_executor(cfg, policy),
+    }
+}
+
+/// Warn (to stderr) when a finished run left segments resident — a
+/// scheduling deadlock that would otherwise masquerade as low goodput
+/// (or, for a horizon-truncated run, an under-sized `ExecConfig::horizon`).
+/// Returns the stuck-segment count so harnesses can record it in their
+/// JSON artifacts.
+pub fn warn_if_stuck(context: &str, sim: &Simulator) -> usize {
+    let stuck = sim.stuck_requests();
+    if stuck > 0 {
+        if sim.truncated() {
+            eprintln!(
+                "warning: {context}: run hit the {:.0}s simulation horizon with {stuck} \
+                 segment(s) still resident — figures for this cell cover a truncated run \
+                 (raise cfg.horizon to drain it)",
+                sim.cfg.horizon
+            );
+        } else {
+            eprintln!(
+                "warning: {context}: run ended with {stuck} stuck segment(s) — scheduling \
+                 deadlock; goodput/attainment figures for this cell are invalid"
+            );
+        }
+    }
+    stuck
 }
 
 /// Run one Poisson workload through a fresh sim of `system`.
@@ -102,6 +182,10 @@ pub fn run_once(
     let reqs = poisson_workload(kind, qps, duration, seed);
     let mut sim = build_sim(system, llm, slo);
     let summary = sim.run(reqs);
+    warn_if_stuck(
+        &format!("{} {kind:?} qps={qps} seed={seed}", system.name()),
+        &sim,
+    );
     (summary, sim)
 }
 
@@ -212,6 +296,15 @@ mod tests {
             assert!(s.completed > 5, "{}: {} completed", sys.name(), s.completed);
             assert!(s.goodput_tok_s > 0.0);
         }
+    }
+
+    #[test]
+    fn executor_kind_names_round_trip() {
+        for kind in [ExecutorKind::Sim, ExecutorKind::LiveVirtual] {
+            assert_eq!(ExecutorKind::by_name(kind.name()), Some(kind));
+        }
+        assert_eq!(ExecutorKind::by_name("live"), Some(ExecutorKind::LiveVirtual));
+        assert_eq!(ExecutorKind::by_name("no-such-executor"), None);
     }
 
     #[test]

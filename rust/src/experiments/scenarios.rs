@@ -8,16 +8,25 @@
 //!   experiments -- scenarios --name hybrid     run one scenario
 //!   experiments -- scenarios                   run the whole suite
 //!   experiments -- scenarios --smoke           tiny CI variant per shape
+//!   experiments -- scenarios --executor live   run through the server
+//!                                              facade's stub-engine
+//!                                              executor (bit-identical
+//!                                              to --executor sim; the
+//!                                              parity test pins it)
 //!
 //! Each scenario runs DynaServe and both baselines over the *same*
 //! generated request stream (cells fan out via `runners::run_cells`) and
 //! writes `results/scenario_<name>.json` with the global summary plus
 //! per-class goodput / SLO attainment / TTFT-TBT percentiles. Per-class
 //! counters partition the global summary exactly (asserted in
-//! `tests/scenarios.rs`).
+//! `tests/scenarios.rs`). A run that ends with stuck segments (scheduling
+//! deadlock) is flagged on stderr and in the artifact's `stuck_requests`
+//! field so it can't masquerade as low goodput.
 
 use crate::costmodel::LlmSpec;
-use crate::experiments::runners::{build_sim, run_cells, sweep_threads, System};
+use crate::experiments::runners::{
+    build_executor, run_cells, sweep_threads, ExecutorKind, System,
+};
 use crate::experiments::write_results;
 use crate::metrics::{ClassSummary, SloConfig, Summary};
 use crate::util::cli::{ms, pct, Args, Table};
@@ -34,6 +43,12 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     }
     let seed = args.u64_or("seed", 42);
     let smoke = args.bool("smoke");
+    let executor = match args.get("executor") {
+        Some(name) => ExecutorKind::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown executor '{name}' (known: sim, live-virtual)")
+        })?,
+        None => ExecutorKind::Sim,
+    };
     let scenarios: Vec<Scenario> = match args.get("name") {
         Some(name) => vec![Scenario::by_name(name).ok_or_else(|| {
             let known: Vec<_> = Scenario::suite().iter().map(|s| s.name).collect();
@@ -48,37 +63,45 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             // burst/diurnal scenario keeps its defining feature
             sc = sc.with_duration(d);
         }
-        run_scenario(&sc, seed)?;
+        run_scenario(&sc, seed, executor)?;
     }
     Ok(())
 }
 
-fn run_scenario(sc: &Scenario, seed: u64) -> anyhow::Result<()> {
+fn run_scenario(sc: &Scenario, seed: u64, executor: ExecutorKind) -> anyhow::Result<()> {
     let llm = LlmSpec::qwen25_14b();
     let slo = SloConfig::default();
     let requests = sc.generate(seed);
     println!(
-        "\nscenario '{}' — {} ({} requests over {:.0}s, seed {seed})",
+        "\nscenario '{}' — {} ({} requests over {:.0}s, seed {seed}, executor {})",
         sc.name,
         sc.description,
         requests.len(),
-        sc.duration
+        sc.duration,
+        executor.name()
     );
 
     let systems = System::all_default();
-    let results: Vec<(Summary, Vec<ClassSummary>)> = run_cells(&systems, sweep_threads(), |&sys| {
-        let mut sim = build_sim(sys, &llm, slo);
-        let summary = sim.run(requests.clone());
-        let classes = sim.collector.class_summaries(summary.duration);
-        (summary, classes)
-    });
+    let results: Vec<(Summary, Vec<ClassSummary>, usize)> =
+        run_cells(&systems, sweep_threads(), |&sys| {
+            let mut sim = build_executor(executor, sys, &llm, slo);
+            let summary = sim.run(requests.clone());
+            let classes = sim.collector.class_summaries(summary.duration);
+            let stuck = crate::experiments::runners::warn_if_stuck(
+                &format!("scenario '{}' / {}", sc.name, sys.name()),
+                &sim,
+            );
+            (summary, classes, stuck)
+        });
 
     let mut t = Table::new([
         "system", "class", "goodput tok/s", "attain %", "ttft-ok %", "req-slo %", "p99 TTFT ms",
         "p99 TBT ms",
     ]);
     let mut sys_objs = Vec::new();
-    for (sys, (summary, classes)) in systems.iter().zip(&results) {
+    // (stuck-run stderr warnings were already emitted by warn_if_stuck
+    // inside each run cell; `stuck` lands in the JSON artifact below)
+    for (sys, (summary, classes, stuck)) in systems.iter().zip(&results) {
         t.row([
             sys.name().to_string(),
             "(all)".to_string(),
@@ -136,6 +159,8 @@ fn run_scenario(sc: &Scenario, seed: u64) -> anyhow::Result<()> {
                     ("p99_ttft", Json::from(summary.p99_ttft)),
                 ]),
             ),
+            // nonzero = scheduling deadlock; see the stderr warning
+            ("stuck_requests", Json::from(*stuck)),
             ("classes", Json::Arr(class_objs)),
         ]));
     }
@@ -145,6 +170,7 @@ fn run_scenario(sc: &Scenario, seed: u64) -> anyhow::Result<()> {
         ("scenario", Json::from(sc.name)),
         ("description", Json::from(sc.description)),
         ("seed", Json::from(seed as usize)),
+        ("executor", Json::from(executor.name())),
         ("duration_s", Json::from(sc.duration)),
         ("shape", Json::from(format!("{:?}", sc.shape))),
         ("requests", Json::from(requests.len())),

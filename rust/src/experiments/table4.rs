@@ -46,6 +46,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         }
         let mut sim = build_sim(System::DynaServe, &llm, slo);
         let s = sim.run(reqs);
+        crate::experiments::runners::warn_if_stuck(&format!("table4 sigma={sigma}"), &sim);
         let rel = base.map(|b: f64| s.goodput_tok_s / b).unwrap_or(1.0);
         if base.is_none() {
             base = Some(s.goodput_tok_s);

@@ -119,8 +119,8 @@ impl BlockAllocator {
     }
 }
 
-// (The simulator's token-level capacity meter used to live here as
-// `KvAccounting`; it moved to `sim/instance.rs::KvMeter` — per-segment
+// (The lifecycle's token-level capacity meter used to live here as
+// `KvAccounting`; it moved to `exec/runtime.rs::KvMeter` — per-segment
 // tokens are stored in the arena slots, so no per-request map is needed.)
 
 #[cfg(test)]

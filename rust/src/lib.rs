@@ -23,6 +23,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod core;
 pub mod costmodel;
+pub mod exec;
 pub mod experiments;
 pub mod kv;
 pub mod metrics;

@@ -2,12 +2,21 @@
 //! TinyQwen artifacts on PJRT CPU instances.
 //!
 //! Topology: a leader thread runs the global scheduler (Algorithm 1) over
-//! live instance snapshots and dispatches α/β micro-request segments to
+//! live load digests and dispatches α/β micro-request segments to
 //! instance threads over channels. Each instance thread owns a PJRT
-//! [`Engine`], runs the *same* [`LocalScheduler`] (Algorithm 2) as the
-//! simulator — its profile table calibrated online from measured step
-//! latencies — and streams KV chunks to β instances through the paced
-//! [`TransferEngine`] (§4.3). Python is nowhere on this path.
+//! [`Engine`] *and* the same [`InstanceRuntime`] lifecycle state machine
+//! the discrete-event simulator drives (`crate::exec`, DESIGN.md §3):
+//! admission, Algorithm-2 batch planning, prefill/decode application,
+//! completion, and the α→β handoff trigger are the shared code; only the
+//! executor differs — measured PJRT steps on a [`WallClock`] instead of
+//! cost-model latencies in virtual time, and a live transport that
+//! streams real KV chunks to β instances through the paced
+//! [`TransferEngine`] (§4.3) instead of the modeled timelines. Python is
+//! nowhere on this path.
+//!
+//! [`virtual_executor`] is the same wiring with the engine stubbed out:
+//! the server facade's deterministic virtual-time executor, pinned
+//! bit-identical to the simulator facade by `rust/tests/parity.rs`.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -17,19 +26,21 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::local::{DecodeEntry, PrefillEntry};
 use crate::coordinator::predictor::PredictorConfig;
-use crate::coordinator::{
-    GlobalConfig, GlobalScheduler, InstanceSnapshot, LoadDigest, LocalConfig, LocalScheduler,
-    ProfileTable, WorkItem,
-};
+use crate::coordinator::{GlobalConfig, LoadDigest, LocalConfig, LocalScheduler, ProfileTable};
 use crate::core::{Request, RequestId};
 use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+use crate::exec::clock::{Clock, WallClock};
+use crate::exec::policy::{DynaServePolicy, Policy};
+use crate::exec::runtime::{EventSink, InstanceRuntime, Segment, SeqKey};
+use crate::exec::submit::{plan_submission, SegmentPlan};
+use crate::exec::transport::{Handoff, HandoffDisposition, Transport};
+use crate::exec::{ExecConfig, VirtualExecutor};
 use crate::kv::{LinkSpec, TransferEngine, TransferJob};
 use crate::metrics::{Collector, SloConfig, Summary};
 use crate::runtime::{Engine, KvState};
 use crate::util::rng::Rng;
-use crate::workload::{PoissonArrivals, TraceKind, WorkloadGen, TraceSampler};
+use crate::workload::{PoissonArrivals, TraceKind, TraceSampler, WorkloadGen};
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -42,8 +53,12 @@ pub struct ServeConfig {
     pub slo: SloConfig,
 }
 
-/// One placed segment, as sent to an instance thread.
+/// One placed segment, as sent to an instance thread. Field meanings
+/// mirror [`crate::exec::submit::SegmentPlan`] — the leader derives both
+/// from the same `plan_submission` output.
 struct SegmentSpec {
+    /// Leader-assigned id (executor-scoped key; the thread maps it to its
+    /// arena key on accept).
     key: u64,
     request: RequestId,
     arrival: f64,
@@ -61,6 +76,53 @@ struct SegmentSpec {
     gated: bool,
 }
 
+impl SegmentSpec {
+    /// Leader-side marshalling of one clamped [`crate::exec::submit::SegmentPlan`].
+    fn from_plan(
+        key: u64,
+        req: &Request,
+        arrival: f64,
+        prompt: &[i32],
+        sp: &SegmentPlan,
+        beta_dest: Option<(usize, u64)>,
+        gated: bool,
+    ) -> SegmentSpec {
+        SegmentSpec {
+            key,
+            request: req.id,
+            arrival,
+            prompt: prompt[sp.prompt_range(req.prompt_len)].to_vec(),
+            start: sp.start,
+            decode_budget: sp.decode,
+            emits_first: sp.emits_first,
+            last_segment: sp.last_segment,
+            beta_dest,
+            gated,
+        }
+    }
+
+    /// Instance-thread reconstruction of the lifecycle segment. This is
+    /// the live half of the sim↔live parity contract: the round-trip
+    /// `SegmentPlan → SegmentSpec → Segment` must land on exactly the
+    /// segment `exec::submit::make_segment` builds from the same plan
+    /// (unit-tested below), so the leader channel cannot drift from the
+    /// virtual executor's submission path.
+    fn to_segment(&self) -> Segment {
+        let mut seg = Segment::from_parts(
+            self.request,
+            self.arrival,
+            self.start,
+            self.prompt.len(),
+            self.decode_budget,
+            self.emits_first,
+            self.last_segment,
+            self.gated,
+        );
+        seg.beta_dest = self.beta_dest;
+        seg
+    }
+}
+
 enum InstMsg {
     Segment(SegmentSpec),
     /// KV chunk for a gated β segment (payload = k||v for the token range).
@@ -74,16 +136,59 @@ enum UpMsg {
     IterStats { instance: usize, latency: f64 },
 }
 
-struct LiveSeq {
-    spec: SegmentSpec,
+/// Engine-side state of one live segment (the lifecycle state lives in
+/// the shared [`InstanceRuntime`]; this is only what PJRT needs: the real
+/// KV tensors, the token ids, and the decode continuation).
+struct LiveState {
     kv: KvState,
+    prompt: Vec<i32>,
     prefill_done: usize,
-    emitted: usize,
     /// Next token to feed when decoding.
     next_token: Option<i32>,
-    ready: bool,
-    /// KV chunks received so far (β gating).
+    /// KV chunk tokens received so far (β gating telemetry).
     received_tokens: usize,
+    /// Leader-assigned id (for reverse lookup cleanup).
+    leader_key: u64,
+}
+
+/// [`EventSink`] over the instance→leader channel: token emissions and
+/// request completions stream to the leader's [`Collector`] — the same
+/// sink interface the virtual executor satisfies with the collector
+/// directly.
+struct ChannelSink {
+    up: mpsc::Sender<UpMsg>,
+}
+
+impl EventSink for ChannelSink {
+    fn on_emit(&mut self, request: RequestId, arrival: f64, at: f64) {
+        self.up.send(UpMsg::Token { request, arrival, at }).ok();
+    }
+
+    fn on_done(&mut self, request: RequestId) {
+        self.up.send(UpMsg::Done { request }).ok();
+    }
+}
+
+/// The live α→β transport: completion handoffs are recorded and then
+/// shipped as *real* KV payloads on a detached thread ([`forward_kv`]),
+/// so the lifecycle returns [`HandoffDisposition::Detached`] — α's arena
+/// slot frees immediately and β readiness is signaled by the final chunk.
+#[derive(Default)]
+struct LiveTransport {
+    pending: Vec<Handoff>,
+}
+
+impl LiveTransport {
+    fn take_pending(&mut self) -> Vec<Handoff> {
+        std::mem::take(&mut self.pending)
+    }
+}
+
+impl Transport for LiveTransport {
+    fn handoff(&mut self, _now: f64, h: Handoff) -> HandoffDisposition {
+        self.pending.push(h);
+        HandoffDisposition::Detached
+    }
 }
 
 /// Serving report printed by `dynaserve serve`.
@@ -128,6 +233,20 @@ impl ServeReport {
     }
 }
 
+/// The server facade's *stub-engine* executor: the same shared `exec`
+/// lifecycle core the PJRT threads drive, in virtual time with the
+/// modeled transport — deterministic, and bit-identical to the simulator
+/// facade for the same config/policy. `rust/tests/parity.rs` pins this
+/// facade (it must stay a thin instantiation of the one core — any
+/// server-side lifecycle fork breaks the bit-identity there); the real
+/// thread wiring in [`serve`]/`instance_loop` is pinned to the shared
+/// submission path by the marshalling round-trip unit test below and
+/// executes only with `--features pjrt`.
+/// `experiments -- scenarios --executor live` routes through here.
+pub fn virtual_executor(cfg: ExecConfig, policy: Box<dyn Policy>) -> VirtualExecutor {
+    VirtualExecutor::new(cfg, policy)
+}
+
 /// Scale a sampled (P, D) shape to the tiny model's context budget.
 /// Fixed shapes are taken as-is (just clamped); trace shapes divide by 64
 /// so their prefill/decode *ratio* distribution survives the scaling.
@@ -152,8 +271,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         "`serve` drives the live PJRT engine; rebuild with `cargo build --features pjrt` \
          (the default build ships the stub backend — see README.md)"
     );
-    let epoch = Instant::now();
-    let t = |i: Instant| i.duration_since(epoch).as_secs_f64();
+    let clock = WallClock::starting_now();
 
     // ── workload ────────────────────────────────────────────────────────
     let mut gen = WorkloadGen::new(
@@ -174,10 +292,10 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     }
 
     // ── instances ───────────────────────────────────────────────────────
-    let snapshots: Arc<Mutex<Vec<InstanceSnapshot>>> = Arc::new(Mutex::new(
-        (0..cfg.n_instances)
-            .map(|id| InstanceSnapshot { id, ..Default::default() })
-            .collect(),
+    // Threads publish O(1) digests straight from their runtime — the same
+    // load representation the simulator's arrival path feeds the policy.
+    let digests: Arc<Mutex<Vec<LoadDigest>>> = Arc::new(Mutex::new(
+        (0..cfg.n_instances).map(LoadDigest::idle).collect(),
     ));
     let transfer = Arc::new(TransferEngine::new(LinkSpec { bandwidth: 2e9, latency: 20e-6 }));
     let (up_tx, up_rx) = mpsc::channel::<UpMsg>();
@@ -192,7 +310,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         let (tx, rx) = mpsc::channel::<InstMsg>();
         inst_txs.push(tx);
         let up = up_tx.clone();
-        let snaps = snapshots.clone();
+        let digests = digests.clone();
         let dir = cfg.artifacts.clone();
         let slo = cfg.slo;
         let stop = stop.clone();
@@ -206,7 +324,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
                 .name(format!("instance-{id}"))
                 .spawn(move || {
                     if let Err(e) = instance_loop(
-                        id, &dir, rx, up, snaps, slo, epoch, stop, calib, transfer,
+                        id, &dir, rx, up, digests, slo, clock, stop, calib, transfer,
                         inst_txs_for_fw,
                     ) {
                         eprintln!("instance {id} failed: {e:#}");
@@ -242,7 +360,9 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         thread::sleep(std::time::Duration::from_millis(20));
     };
     let llm = LlmSpec::tinyqwen();
-    let mut global = GlobalScheduler::new(GlobalConfig {
+    // One dispatch path for both executors: the same Policy trait the
+    // simulator's arrival handler calls (Algorithm 1 behind it).
+    let mut policy = DynaServePolicy::new(GlobalConfig {
         kv_bytes_per_token: llm.kv_bytes_per_token(),
         predictor: PredictorConfig { slo: cfg.slo.tbt, ..Default::default() },
         min_span: 8,
@@ -256,72 +376,37 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     // targets register at submission — same scoring path as the simulator
     let mut collector = Collector::new(cfg.slo);
     // serving clock starts after engine compilation/calibration
-    let serve_start = t(Instant::now());
+    let serve_start = clock.now();
     for req in &requests {
         // pace arrivals in real time
         let target = serve_start + req.arrival;
-        let now = t(Instant::now());
+        let now = clock.now();
         if target > now {
             thread::sleep(std::time::Duration::from_secs_f64(target - now));
         }
-        // reduce the published snapshots to O(1) digests — same hot path
-        // as the simulator, and no per-request snapshot clone
-        let loads: Vec<LoadDigest> = snapshots
-            .lock()
-            .unwrap()
-            .iter()
-            .map(LoadDigest::from_snapshot)
-            .collect();
-        let out = global.schedule(req, &loads, &profile);
-        let (a, b) = out.decision.to_micro_requests(req);
+        // the threads publish O(1) digests — same hot path as the
+        // simulator, and no per-request snapshot clone
+        let loads: Vec<LoadDigest> = digests.lock().unwrap().clone();
+        let placement = policy.place(req, &loads, &profile);
+        // …and the same span clamping / flag derivation (exec::submit)
+        let plan = plan_submission(&placement, req);
         let prompt: Vec<i32> = (0..req.prompt_len)
             .map(|_| rng.range(1, llm.vocab as u64) as i32)
             .collect();
-        let l_proc = req.prompt_len + req.decode_len - 1;
-        let (a, b) = match (a, b) {
-            (Some(a), b) => (a, b),
-            (None, Some(b)) => (crate::core::MicroRequest { role: crate::core::Role::Alpha, ..b }, None),
-            _ => unreachable!(),
-        };
-        let s = a.end.min(l_proc);
-        let beta = b.filter(|b| b.start < l_proc);
         key_alloc += 1;
         let alpha_key = key_alloc;
-        let beta_info = beta.as_ref().map(|b| {
+        let beta_info = plan.beta.as_ref().map(|bp| {
             key_alloc += 1;
-            (b.instance, key_alloc)
+            (bp.instance, key_alloc)
         });
-        let arrival = t(Instant::now());
+        let arrival = clock.now();
         // register on the serving clock (token events use the same basis)
         collector.on_request(&Request { arrival, ..req.clone() });
-        let alpha_spec = SegmentSpec {
-            key: alpha_key,
-            request: req.id,
-            arrival,
-            prompt: prompt[..s.min(req.prompt_len)].to_vec(),
-            start: 0,
-            decode_budget: s.saturating_sub(req.prompt_len),
-            emits_first: s >= req.prompt_len,
-            last_segment: beta_info.is_none(),
-            beta_dest: beta_info,
-            gated: false,
-        };
-        inst_txs[a.instance]
-            .send(InstMsg::Segment(alpha_spec))
-            .ok();
-        if let (Some(bmr), Some((b_inst, b_key))) = (&beta, beta_info) {
-            let beta_spec = SegmentSpec {
-                key: b_key,
-                request: req.id,
-                arrival,
-                prompt: prompt[bmr.start.min(req.prompt_len)..req.prompt_len].to_vec(),
-                start: bmr.start,
-                decode_budget: l_proc.saturating_sub(bmr.start.max(req.prompt_len)),
-                emits_first: bmr.start < req.prompt_len,
-                last_segment: true,
-                beta_dest: None,
-                gated: true,
-            };
+        let alpha_spec =
+            SegmentSpec::from_plan(alpha_key, req, arrival, &prompt, &plan.alpha, beta_info, false);
+        inst_txs[plan.alpha.instance].send(InstMsg::Segment(alpha_spec)).ok();
+        if let (Some(bp), Some((b_inst, b_key))) = (plan.beta, beta_info) {
+            let beta_spec = SegmentSpec::from_plan(b_key, req, arrival, &prompt, &bp, None, true);
             inst_txs[b_inst].send(InstMsg::Segment(beta_spec)).ok();
         }
     }
@@ -353,7 +438,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     for (_, j) in joins {
         j.join().ok();
     }
-    let wall = t(Instant::now()) - serve_start;
+    let wall = clock.now() - serve_start;
     let stats = transfer.stats();
     Ok(ServeReport {
         summary: collector.summarize(wall),
@@ -371,23 +456,19 @@ fn instance_loop(
     artifacts: &str,
     rx: mpsc::Receiver<InstMsg>,
     up: mpsc::Sender<UpMsg>,
-    snapshots: Arc<Mutex<Vec<InstanceSnapshot>>>,
+    digests: Arc<Mutex<Vec<LoadDigest>>>,
     slo: SloConfig,
-    epoch: Instant,
+    clock: WallClock,
     stop: Arc<AtomicBool>,
     calib: Arc<Mutex<Option<ProfileTable>>>,
     transfer: Arc<TransferEngine>,
     peer_txs: Arc<Mutex<Vec<mpsc::Sender<InstMsg>>>>,
 ) -> Result<()> {
     let engine = Engine::load(artifacts)?;
-    let now = |x: Instant| x.duration_since(epoch).as_secs_f64();
+    let spec = InstanceSpec::new(GpuSpec::cpu_pjrt(), LlmSpec::tinyqwen(), 1);
 
     // ── calibration: instance 0 seeds the shared profile table ──────────
-    let mut profile = ProfileTable::seeded(&InstanceSpec::new(
-        GpuSpec::cpu_pjrt(),
-        LlmSpec::tinyqwen(),
-        1,
-    ));
+    let mut profile = ProfileTable::seeded(&spec);
     {
         let mut guard = calib.lock().unwrap();
         if guard.is_none() {
@@ -404,7 +485,7 @@ fn instance_loop(
         }
     }
 
-    let mut local = LocalScheduler::new(
+    let local = LocalScheduler::new(
         LocalConfig {
             slo: slo.tbt,
             max_decodes: engine.manifest.max_decode_batch(1).max(1),
@@ -416,37 +497,46 @@ fn instance_loop(
         profile,
     );
 
-    let mut seqs: HashMap<u64, LiveSeq> = HashMap::new();
-    let mut order: Vec<u64> = Vec::new();
+    // The shared lifecycle state machine — identical to the simulator's
+    // per-instance core; this loop is just its PJRT executor.
+    let mut runtime = InstanceRuntime::new(id, spec, local);
+    let mut live: HashMap<SeqKey, LiveState> = HashMap::new();
+    let mut by_leader: HashMap<u64, SeqKey> = HashMap::new();
+    let mut sink = ChannelSink { up: up.clone() };
+    let mut transport = LiveTransport::default();
 
     loop {
         // drain control + transfer channels
+        let mut accepted = false;
         loop {
             match rx.try_recv() {
                 Ok(InstMsg::Segment(spec)) => {
-                    let key = spec.key;
                     let cap = if spec.start + spec.prompt.len() + spec.decode_budget + 1 <= 128 {
                         128
                     } else {
                         256
                     };
-                    let gated = spec.gated;
-                    seqs.insert(
+                    // reconstruct the shared lifecycle segment (pinned to
+                    // the virtual submission path by the round-trip test)
+                    let key = runtime.accept(spec.to_segment());
+                    accepted = true;
+                    by_leader.insert(spec.key, key);
+                    live.insert(
                         key,
-                        LiveSeq {
+                        LiveState {
                             kv: engine.new_kv(cap),
+                            prompt: spec.prompt,
                             prefill_done: 0,
-                            emitted: 0,
                             next_token: None,
-                            ready: !gated,
                             received_tokens: 0,
-                            spec,
+                            leader_key: spec.key,
                         },
                     );
-                    order.push(key);
                 }
                 Ok(InstMsg::Kv { key, job, next_token }) => {
-                    inject_chunk(&engine, &mut seqs, key, job, next_token);
+                    if let Some(&k) = by_leader.get(&key) {
+                        inject_chunk(&engine, &mut runtime, &mut live, k, job, next_token);
+                    }
                 }
                 Ok(InstMsg::Shutdown) => return Ok(()),
                 Err(mpsc::TryRecvError::Empty) => break,
@@ -456,42 +546,38 @@ fn instance_loop(
         if stop.load(Ordering::SeqCst) {
             return Ok(());
         }
-
-        // ── compose the next batch (Algorithm 2, the *same* code path the
-        //    simulator uses) ────────────────────────────────────────────
-        let mut decodes = Vec::new();
-        let mut prefills = Vec::new();
-        for key in &order {
-            let s = &seqs[key];
-            if !s.ready {
-                continue;
-            }
-            let pf_left = s.spec.prompt.len() - s.prefill_done;
-            if pf_left > 0 {
-                prefills.push(PrefillEntry {
-                    key: *key,
-                    remaining: pf_left,
-                    context: s.kv.len,
-                });
-            } else if s.emitted < s.spec.decode_budget && s.next_token.is_some() {
-                decodes.push(DecodeEntry { key: *key, context: s.kv.len });
-            }
+        // publish accepted-but-not-yet-executed load immediately: a gated
+        // β (awaiting its KV transfer) produces no iteration here, and
+        // without this the leader would keep seeing this instance as idle
+        // for the whole transfer — the sim's arrival path reads digests
+        // that include such segments, so the live leader must too
+        if accepted {
+            digests.lock().unwrap()[id] = runtime.digest();
         }
-        let plan = local.next_batch(&decodes, &prefills);
+
+        // ── compose the next batch through the shared lifecycle
+        //    (Algorithm 2 over the runtime's FCFS order queue — the
+        //    *same* code path the simulator uses) ─────────────────────
+        let plan = runtime.plan_batch();
         if plan.is_empty() {
             thread::sleep(std::time::Duration::from_micros(300));
             continue;
         }
 
         let iter_start = Instant::now();
-        let mut finished: Vec<u64> = Vec::new();
+        let mut finished: Vec<SeqKey> = Vec::new();
 
         // decode sub-batches through the widest fitting bucket
-        let mut pending: Vec<u64> = plan.decodes.clone();
+        let mut pending: Vec<SeqKey> = plan
+            .decodes
+            .iter()
+            .copied()
+            .filter(|k| live.get(k).map(|s| s.next_token.is_some()).unwrap_or(false))
+            .collect();
         while !pending.is_empty() {
             let max_ctx = pending
                 .iter()
-                .map(|k| seqs[k].kv.len + 1)
+                .map(|k| live[k].kv.len + 1)
                 .max()
                 .unwrap();
             let bucket = engine
@@ -500,11 +586,11 @@ fn instance_loop(
                 .or_else(|| engine.manifest.select_bucket(1, 1, max_ctx))
                 .context("no decode bucket")?
                 .clone();
-            let take: Vec<u64> = pending.drain(..pending.len().min(bucket.batch)).collect();
-            // temporarily remove the sequences so we can hold disjoint &mut
-            let mut taken: Vec<(u64, LiveSeq)> = take
+            let take: Vec<SeqKey> = pending.drain(..pending.len().min(bucket.batch)).collect();
+            // temporarily remove the states so we can hold disjoint &mut
+            let mut taken: Vec<(SeqKey, LiveState)> = take
                 .iter()
-                .map(|k| (*k, seqs.remove(k).expect("decode seq")))
+                .map(|k| (*k, live.remove(k).expect("decode state")))
                 .collect();
             let tokens: Vec<[i32; 1]> =
                 taken.iter().map(|(_, s)| [s.next_token.unwrap()]).collect();
@@ -519,26 +605,24 @@ fn instance_loop(
             let out = engine.step(&bucket, &mut refs, &chunks)?;
             for (i, (k, mut s)) in taken.into_iter().enumerate() {
                 let tok = Engine::argmax(&out.logits[i]);
-                s.emitted += 1;
                 s.next_token = Some(tok);
-                up.send(UpMsg::Token {
-                    request: s.spec.request,
-                    arrival: s.spec.arrival,
-                    at: now(Instant::now()),
-                })
-                .ok();
-                if s.emitted >= s.spec.decode_budget {
-                    finished.push(k);
+                live.insert(k, s);
+                if let Some(o) = runtime.apply_decode(k, clock.now()) {
+                    if let Some((req, arr)) = o.emit {
+                        sink.on_emit(req, arr, clock.now());
+                    }
+                    if o.completed {
+                        finished.push(k);
+                    }
                 }
-                seqs.insert(k, s);
             }
         }
 
         // prefill chunks (one b=1 call per plan entry)
-        for (key, chunk_tokens) in &plan.prefill {
-            let s = seqs.get_mut(key).unwrap();
+        for &(key, chunk_tokens) in &plan.prefill {
+            let Some(s) = live.get_mut(&key) else { continue };
             let from = s.prefill_done;
-            let n = (*chunk_tokens).min(128).min(s.spec.prompt.len() - from);
+            let n = chunk_tokens.min(128).min(s.prompt.len() - from);
             if n == 0 {
                 continue;
             }
@@ -551,69 +635,66 @@ fn instance_loop(
             if s.kv.capacity < bucket.capacity {
                 s.kv = engine.grow_kv(&s.kv, bucket.capacity);
             }
-            let toks = s.spec.prompt[from..from + n].to_vec();
+            let toks = s.prompt[from..from + n].to_vec();
             let mut refs = [&mut s.kv];
             let out = engine.step(&bucket, &mut refs, &[&toks])?;
             s.prefill_done += n;
-            if s.prefill_done == s.spec.prompt.len() {
-                let tok = Engine::argmax(&out.logits[0]);
-                s.next_token = Some(tok);
-                if s.spec.emits_first {
-                    s.emitted_first(&up, now(Instant::now()));
+            if s.prefill_done == s.prompt.len() {
+                // continuation token for the decode phase
+                s.next_token = Some(Engine::argmax(&out.logits[0]));
+            }
+            if let Some(o) = runtime.apply_prefill(key, n, clock.now()) {
+                if let Some((req, arr)) = o.emit {
+                    sink.on_emit(req, arr, clock.now());
                 }
-                if s.spec.decode_budget == 0 {
-                    finished.push(*key);
+                if o.completed {
+                    finished.push(key);
                 }
             }
         }
 
         let iter_latency = iter_start.elapsed().as_secs_f64();
-        local.record_execution(iter_latency);
+        // RECORD into the shared profile under the plan's own query key,
+        // exactly like the virtual executor
+        runtime.record_iteration(&plan, iter_latency);
         up.send(UpMsg::IterStats { instance: id, latency: iter_latency }).ok();
 
-        // completions: forward KV to β (detached, overlapped with compute)
-        // or finish the request
+        // completions through the shared lifecycle: final segments report
+        // Done, α segments with a waiting β queue a live handoff
         for key in finished {
-            let s = seqs.remove(&key).expect("finished seq");
-            order.retain(|k| *k != key);
-            if s.spec.last_segment {
-                up.send(UpMsg::Done { request: s.spec.request }).ok();
-            }
-            if let Some((b_inst, b_key)) = s.spec.beta_dest {
-                let meta = (
-                    engine.manifest.model.n_layers,
-                    engine.manifest.model.n_kv_heads,
-                    engine.manifest.model.head_dim,
-                );
-                let transfer = transfer.clone();
-                let peers = peer_txs.clone();
-                thread::spawn(move || {
-                    forward_kv(meta, &transfer, &peers, &s, b_inst, b_key);
-                });
+            let hands_off = runtime
+                .get(key)
+                .map(|s| !s.last_segment && s.beta_dest.is_some())
+                .unwrap_or(false);
+            runtime.complete_segment(key, clock.now(), &mut sink, &mut transport);
+            if !hands_off {
+                // retired outright — drop the engine-side state too (the
+                // handoff case keeps it until the payload ships below)
+                if let Some(st) = live.remove(&key) {
+                    by_leader.remove(&st.leader_key);
+                }
             }
         }
-
-        // publish a load snapshot for the global scheduler
-        {
-            let mut snaps = snapshots.lock().unwrap();
-            snaps[id].work = order
-                .iter()
-                .filter_map(|k| seqs.get(k))
-                .map(|s| WorkItem {
-                    prefill_remaining: s.spec.prompt.len() - s.prefill_done,
-                    context: s.kv.len,
-                    decode_remaining: s.spec.decode_budget - s.emitted,
-                })
-                .collect();
+        // ship queued handoffs: real KV payload to β, detached so pacing
+        // never blocks this engine loop (the §4.3 overlap)
+        for h in transport.take_pending() {
+            let Some(st) = live.remove(&h.source) else { continue };
+            by_leader.remove(&st.leader_key);
+            let meta = (
+                engine.manifest.model.n_layers,
+                engine.manifest.model.n_kv_heads,
+                engine.manifest.model.head_dim,
+            );
+            let transfer = transfer.clone();
+            let peers = peer_txs.clone();
+            let (b_inst, b_key) = h.dest;
+            thread::spawn(move || {
+                forward_kv(meta, &transfer, &peers, &st.kv, st.next_token, h.request, b_inst, b_key);
+            });
         }
-    }
-}
 
-impl LiveSeq {
-    fn emitted_first(&mut self, up: &mpsc::Sender<UpMsg>, at: f64) {
-        self.emitted += 0; // first token is "free" w.r.t. the decode budget
-        up.send(UpMsg::Token { request: self.spec.request, arrival: self.spec.arrival, at })
-            .ok();
+        // publish the O(1) load digest for the global scheduler
+        digests.lock().unwrap()[id] = runtime.digest();
     }
 }
 
@@ -621,16 +702,19 @@ impl LiveSeq {
 /// chunks through the paced transfer engine, then the activation metadata
 /// on the final chunk. Runs on a detached thread so pacing never blocks
 /// the α instance's engine loop (the §4.3 overlap).
+#[allow(clippy::too_many_arguments)]
 fn forward_kv(
     (l, h, d): (usize, usize, usize),
     transfer: &TransferEngine,
     peers: &Arc<Mutex<Vec<mpsc::Sender<InstMsg>>>>,
-    seq: &LiveSeq,
+    kv: &KvState,
+    next_token: Option<i32>,
+    request: RequestId,
     b_inst: usize,
     b_key: u64,
 ) {
     let chunk_tokens = 64;
-    let total = seq.kv.len;
+    let total = kv.len;
     let dest = {
         let peers = peers.lock().unwrap();
         match peers.get(b_inst) {
@@ -641,11 +725,11 @@ fn forward_kv(
     let mut start = 0;
     while start < total {
         let end = (start + chunk_tokens).min(total);
-        let payload = extract_kv_range(&seq.kv, (l, h, d), start, end);
+        let payload = extract_kv_range(kv, (l, h, d), start, end);
         let (tx, rx) = mpsc::channel();
         transfer.push(
             TransferJob {
-                request: seq.spec.request,
+                request,
                 token_range: (start, end),
                 payload,
                 last: end == total,
@@ -654,7 +738,7 @@ fn forward_kv(
         );
         // rendezvous: the paced engine delivers when the link would have
         if let Ok(job) = rx.recv() {
-            let next = (end == total).then(|| seq.next_token.unwrap_or(0));
+            let next = (end == total).then(|| next_token.unwrap_or(0));
             dest.send(InstMsg::Kv { key: b_key, job, next_token: next }).ok();
         }
         start = end;
@@ -678,27 +762,31 @@ fn extract_kv_range(kv: &KvState, (l, h, d): (usize, usize, usize), a: usize, b:
 }
 
 /// Inject a received chunk into a β sequence's KV; activate on the final
-/// chunk (setting the continuation token for pure-decode β segments).
+/// chunk (setting the continuation token for pure-decode β segments and
+/// marking the runtime segment ready — the live analogue of the virtual
+/// executor's `SeqReady` event).
 fn inject_chunk(
     engine: &Engine,
-    seqs: &mut HashMap<u64, LiveSeq>,
-    key: u64,
+    runtime: &mut InstanceRuntime,
+    live: &mut HashMap<SeqKey, LiveState>,
+    key: SeqKey,
     job: TransferJob,
     next_token: Option<i32>,
 ) {
-    let Some(seq) = seqs.get_mut(&key) else { return };
+    let Some(seq_end) = runtime.get(key).map(|s| s.end_exec) else { return };
+    let Some(st) = live.get_mut(&key) else { return };
     let (a, b) = job.token_range;
     let m = &engine.manifest.model;
     let (l, h, d) = (m.n_layers, m.n_kv_heads, m.head_dim);
-    let needed = seq.spec.start + seq.spec.prompt.len() + seq.spec.decode_budget + 1;
-    if seq.kv.capacity < needed.max(b) {
-        seq.kv = engine.grow_kv(&seq.kv, 256);
+    let needed = seq_end + 1;
+    if st.kv.capacity < needed.max(b) {
+        st.kv = engine.grow_kv(&st.kv, 256);
     }
-    let s = seq.kv.capacity;
+    let s = st.kv.capacity;
     let n = b - a;
     let half = job.payload.len() / 2;
     for (dst, payload) in
-        [(&mut seq.kv.k, &job.payload[..half]), (&mut seq.kv.v, &job.payload[half..])]
+        [(&mut st.kv.k, &job.payload[..half]), (&mut st.kv.v, &job.payload[half..])]
     {
         let mut p = 0;
         for li in 0..l {
@@ -709,14 +797,87 @@ fn inject_chunk(
             }
         }
     }
-    seq.received_tokens += n;
+    st.received_tokens += n;
     if job.last {
-        seq.kv.len = b;
+        st.kv.len = b;
         // pure-decode β continues from α's last generated token; β with a
         // prefill remainder derives its own continuation from that prefill
-        if seq.spec.prompt.is_empty() {
-            seq.next_token = next_token;
+        if st.prompt.is_empty() {
+            st.next_token = next_token;
         }
-        seq.ready = true;
+        runtime.mark_ready(key);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ProfileTable;
+    use crate::exec::submit::make_segment;
+
+    /// The live half of the sim↔live parity contract (`tests/parity.rs`
+    /// pins the facade wiring; this pins the real server marshalling):
+    /// the leader serializes each clamped `SegmentPlan` into a channel
+    /// `SegmentSpec`, and the instance thread reconstructs the lifecycle
+    /// `Segment` from it. That round-trip must land on exactly the
+    /// segment the virtual executor builds from the same plan — modulo
+    /// `track_kv_history`, which only the modeled transport consumes —
+    /// so a drift in either direction (flags, spans, budgets, prompt
+    /// slicing) fails here instead of surfacing as a live-only metrics
+    /// bug, the class of divergence that motivated the exec/ layer.
+    #[test]
+    fn segment_spec_round_trip_matches_virtual_submission() {
+        let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
+        let profile = ProfileTable::seeded(&spec);
+        let mut policy = DynaServePolicy::new(GlobalConfig::default());
+        let loads: Vec<LoadDigest> = (0..2).map(LoadDigest::idle).collect();
+        let cases = vec![
+            Request::new(1, 0.0, 100, 50),
+            Request::new(2, 0.5, 2000, 400),
+            {
+                // over-prediction: β may be cancelled by true-length clamping
+                let mut r = Request::new(3, 1.0, 800, 10);
+                r.predicted_decode = 600;
+                r
+            },
+            {
+                // decode-heavy: the split lands past the prefill boundary
+                let mut r = Request::new(4, 1.5, 64, 900);
+                r.predicted_decode = 900;
+                r
+            },
+        ];
+        for req in cases {
+            let placement = policy.place(&req, &loads, &profile);
+            let plan = plan_submission(&placement, &req);
+            let prompt: Vec<i32> = (0..req.prompt_len as i32).collect();
+            let beta_info = plan.beta.as_ref().map(|bp| (bp.instance, 2u64));
+
+            let alpha_spec =
+                SegmentSpec::from_plan(1, &req, req.arrival, &prompt, &plan.alpha, beta_info, false);
+            let mut want_alpha = make_segment(&req, &plan.alpha, false, false);
+            want_alpha.beta_dest = beta_info;
+            assert_eq!(
+                alpha_spec.to_segment(),
+                want_alpha,
+                "req {}: α marshalling drifted from the virtual submission path",
+                req.id
+            );
+            assert_eq!(alpha_spec.prompt.len(), plan.alpha.prefill, "req {}: α prompt slice", req.id);
+
+            if let Some(bp) = &plan.beta {
+                let beta_spec = SegmentSpec::from_plan(2, &req, req.arrival, &prompt, bp, None, true);
+                let want_beta = make_segment(&req, bp, true, false);
+                assert_eq!(
+                    beta_spec.to_segment(),
+                    want_beta,
+                    "req {}: β marshalling drifted from the virtual submission path",
+                    req.id
+                );
+                assert_eq!(beta_spec.prompt.len(), bp.prefill, "req {}: β prompt slice", req.id);
+                // the reconstructed β is gated exactly like the sim's
+                assert!(!beta_spec.to_segment().ready);
+            }
+        }
     }
 }

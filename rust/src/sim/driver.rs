@@ -1,435 +1,29 @@
-//! The discrete-event simulation driver: arrivals → policy placement →
-//! per-instance iteration loops → chunked KV transfers → token metrics.
+//! The simulator facade: a re-export of the shared discrete-event host.
 //!
-//! Hot-path contract (DESIGN.md §Perf, "Simulator hot path"): the default
-//! arrival path feeds the policy O(1) [`LoadDigest`]s maintained
-//! incrementally by each instance — zero `InstanceSnapshot` clones per
-//! arrival. The exact snapshot path stays available behind
-//! `SimConfig::exact_snapshots`, and debug builds assert on every
-//! arrival that the incremental digests equal the snapshot reduction.
+//! The arrival → placement → iteration → transfer → metrics lifecycle
+//! lives once, in [`crate::exec`]; [`Simulator`] *is*
+//! [`crate::exec::VirtualExecutor`] (virtual clock + modeled transport +
+//! cost-model latencies) and [`SimConfig`] is
+//! [`crate::exec::ExecConfig`]. The live PJRT server instantiates the
+//! same per-instance lifecycle with a wall clock and real KV payloads
+//! (`rust/tests/parity.rs` pins the two facades to bit-identical
+//! summaries).
+//!
+//! The tests below exercise the whole simulated substrate through this
+//! facade, exactly as experiment harnesses do.
 
-use std::collections::{BinaryHeap, HashMap};
-use std::time::Instant;
-
-use crate::coordinator::local::BatchPlan;
-use crate::coordinator::{LoadDigest, LocalConfig, LocalScheduler, ProfileTable};
-use crate::core::{Request, RequestId};
-use crate::costmodel::InstanceSpec;
-use crate::kv::{chunked_timeline, monolithic_timeline, LinkSpec};
-use crate::metrics::{Collector, SloConfig, Summary};
-use crate::sim::instance::{KvSpan, SeqKey, SimInstance, SimSeq};
-use crate::sim::policy::Policy;
-use crate::util::stats::Samples;
-
-#[derive(Debug, Clone)]
-pub struct SimConfig {
-    pub spec: InstanceSpec,
-    pub n_instances: usize,
-    /// Local scheduler config for all instances…
-    pub local: LocalConfig,
-    /// …with per-instance overrides (e.g. disagg prefill pool uses a fixed
-    /// chunk budget, decode pool decodes only).
-    pub local_overrides: Vec<(usize, LocalConfig)>,
-    pub slo: SloConfig,
-    pub link: LinkSpec,
-    /// KV transfer granularity (tokens per chunk).
-    pub transfer_chunk_tokens: usize,
-    /// false = ship the whole KV at handoff (§6.6 ablation baseline).
-    pub chunked_transfer: bool,
-    /// Feed policies full `InstanceSnapshot`s instead of load digests —
-    /// the exact reference path (slower; for equivalence tests/debugging).
-    pub exact_snapshots: bool,
-    /// Safety cap on simulated seconds.
-    pub horizon: f64,
-}
-
-impl SimConfig {
-    pub fn new(spec: InstanceSpec, n_instances: usize) -> Self {
-        SimConfig {
-            spec,
-            n_instances,
-            local: LocalConfig::default(),
-            local_overrides: vec![],
-            slo: SloConfig::default(),
-            link: LinkSpec::default(),
-            transfer_chunk_tokens: 512,
-            chunked_transfer: true,
-            exact_snapshots: false,
-            horizon: 100_000.0,
-        }
-    }
-}
-
-#[derive(Debug)]
-enum EventKind {
-    Arrival(Request),
-    IterDone { instance: usize, plan: BatchPlan, latency: f64 },
-    SeqReady { instance: usize, key: SeqKey },
-    AlphaEvict { instance: usize, key: SeqKey },
-}
-
-struct Event {
-    time: f64,
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    // reversed: BinaryHeap becomes a min-heap on (time, seq)
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
-    }
-}
-
-struct ReqState {
-    beta: Option<(usize, SeqKey)>,
-}
-
-/// KV-transfer accounting for the §6.6 experiment.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct TransferReport {
-    /// Exposed (non-overlapped) seconds with chunked transfer.
-    pub chunked_exposed: f64,
-    /// Exposed seconds the same transfers would cost monolithically.
-    pub mono_exposed: f64,
-    pub bytes: f64,
-    pub transfers: u64,
-}
-
-pub struct Simulator {
-    pub cfg: SimConfig,
-    pub instances: Vec<SimInstance>,
-    policy: Box<dyn Policy>,
-    profile: ProfileTable,
-    pub collector: Collector,
-    events: BinaryHeap<Event>,
-    event_seq: u64,
-    reqs: HashMap<RequestId, ReqState>,
-    pub transfer: TransferReport,
-    /// Wall-clock seconds spent inside policy.place (Table 3).
-    pub sched_overhead: Samples,
-    pub time: f64,
-    /// Reusable digest buffer (keeps the arrival path allocation-free).
-    loads: Vec<LoadDigest>,
-    /// Reusable completed-segment buffer for iteration application.
-    completed_buf: Vec<SeqKey>,
-}
-
-impl Simulator {
-    pub fn new(cfg: SimConfig, policy: Box<dyn Policy>) -> Self {
-        let profile = ProfileTable::seeded(&cfg.spec);
-        let instances = (0..cfg.n_instances)
-            .map(|id| {
-                let mut lc = cfg.local;
-                for (i, o) in &cfg.local_overrides {
-                    if *i == id {
-                        lc = *o;
-                    }
-                }
-                lc.slo = cfg.slo.tbt;
-                SimInstance::new(id, cfg.spec.clone(), LocalScheduler::new(lc, profile.clone()))
-            })
-            .collect();
-        Simulator {
-            collector: Collector::new(cfg.slo),
-            cfg,
-            instances,
-            policy,
-            profile,
-            events: BinaryHeap::new(),
-            event_seq: 0,
-            reqs: HashMap::new(),
-            transfer: TransferReport::default(),
-            sched_overhead: Samples::new(),
-            time: 0.0,
-            loads: Vec::new(),
-            completed_buf: Vec::new(),
-        }
-    }
-
-    fn push(&mut self, time: f64, kind: EventKind) {
-        self.event_seq += 1;
-        self.events.push(Event { time, seq: self.event_seq, kind });
-    }
-
-    /// Run to completion over `requests`; returns the serving summary.
-    pub fn run(&mut self, requests: Vec<Request>) -> Summary {
-        for r in requests {
-            self.push(r.arrival, EventKind::Arrival(r));
-        }
-        while let Some(ev) = self.events.pop() {
-            if ev.time > self.cfg.horizon {
-                break;
-            }
-            self.time = ev.time;
-            match ev.kind {
-                EventKind::Arrival(req) => self.on_arrival(req),
-                EventKind::IterDone { instance, plan, latency } => {
-                    self.on_iter_done(instance, plan, latency)
-                }
-                EventKind::SeqReady { instance, key } => {
-                    // the arena holds the segment whether it is admitted or
-                    // still in the KV-backpressure queue
-                    if let Some(s) = self.instances[instance].get_mut(key) {
-                        s.ready = true;
-                    }
-                    self.kick(instance);
-                }
-                EventKind::AlphaEvict { instance, key } => {
-                    self.instances[instance].evict(key);
-                    self.kick(instance);
-                }
-            }
-        }
-        debug_assert!(
-            self.reqs.values().all(|r| r.beta.is_none())
-                || self.instances.iter().all(|i| i.is_empty()),
-            "simulation drained its events with segments still resident"
-        );
-        self.collector.summarize(self.time.max(1e-9))
-    }
-
-    /// Requests that never completed (should be 0 — any residue indicates
-    /// a scheduling deadlock and invalidates the run).
-    pub fn stuck_requests(&self) -> usize {
-        self.instances.iter().map(|i| i.len()).sum()
-    }
-
-    fn on_arrival(&mut self, req: Request) {
-        // register class + per-request SLO targets before tokens stream in
-        self.collector.on_request(&req);
-        let placement = if self.cfg.exact_snapshots {
-            let snapshots: Vec<_> = self.instances.iter().map(|i| i.snapshot()).collect();
-            let t0 = Instant::now();
-            let p = self.policy.place_exact(&req, &snapshots, &self.profile);
-            self.sched_overhead.push(t0.elapsed().as_secs_f64());
-            p
-        } else {
-            self.loads.clear();
-            self.loads.extend(self.instances.iter().map(|i| i.digest()));
-            #[cfg(debug_assertions)]
-            for (inst, d) in self.instances.iter().zip(self.loads.iter()) {
-                debug_assert_eq!(
-                    &LoadDigest::from_snapshot(&inst.snapshot()),
-                    d,
-                    "incremental digest drifted from the snapshot reduction on instance {}",
-                    inst.id
-                );
-            }
-            let t0 = Instant::now();
-            let p = self.policy.place(&req, &self.loads, &self.profile);
-            self.sched_overhead.push(t0.elapsed().as_secs_f64());
-            p
-        };
-
-        // Clamp spans by the true processing length (positions 0..P+D-1).
-        let l_proc = req.prompt_len + req.decode_len - 1;
-        let s = placement.alpha.end.min(l_proc);
-        let beta_span = placement
-            .beta
-            .as_ref()
-            .filter(|b| b.start < l_proc)
-            .map(|b| (b.instance, b.start, l_proc));
-
-        let alpha_end = if beta_span.is_some() { s } else { l_proc };
-        let alpha_seq =
-            make_seq(&req, 0, alpha_end, beta_span.is_none(), beta_span.is_some());
-        let a_inst = placement.alpha.instance;
-        self.instances[a_inst].accept(alpha_seq);
-        let beta = beta_span.map(|(inst, start, end)| {
-            let mut seq = make_seq(&req, start, end, true, false);
-            seq.ready = false; // gated on KV transfer
-            (inst, self.instances[inst].accept(seq))
-        });
-        self.reqs.insert(req.id, ReqState { beta });
-        self.kick(a_inst);
-        // no kick for β: not ready until the transfer completes
-    }
-
-    /// Start an iteration if the instance is idle and has ready work.
-    fn kick(&mut self, i: usize) {
-        if self.instances[i].busy {
-            return;
-        }
-        let plan = self.instances[i].plan_batch();
-        if plan.is_empty() {
-            return;
-        }
-        let latency = self.instances[i].plan_latency(&plan);
-        self.instances[i].busy = true;
-        self.push(self.time + latency, EventKind::IterDone { instance: i, plan, latency });
-    }
-
-    fn on_iter_done(&mut self, i: usize, plan: BatchPlan, latency: f64) {
-        let now = self.time;
-        self.instances[i].local.record_execution(latency);
-        self.profile
-            .record(plan.shape.prefill_tokens, plan.shape.decode_ctx, plan.shape.decode_reqs, latency);
-        self.instances[i].record_stats(&plan, latency);
-
-        let mut completed = std::mem::take(&mut self.completed_buf);
-        completed.clear();
-        // apply prefill chunks
-        for &(key, chunk) in &plan.prefill {
-            let Some(out) = self.instances[i].apply_prefill(key, chunk, now) else { continue };
-            if let Some((req, arr)) = out.emit {
-                self.collector.on_token(req, arr, now);
-            }
-            if out.completed {
-                completed.push(key);
-            }
-        }
-        // apply decode steps
-        for &key in &plan.decodes {
-            let Some(out) = self.instances[i].apply_decode(key, now) else { continue };
-            if let Some((req, arr)) = out.emit {
-                self.collector.on_token(req, arr, now);
-            }
-            if out.completed {
-                completed.push(key);
-            }
-        }
-        for key in completed.drain(..) {
-            self.on_segment_done(i, key);
-        }
-        self.completed_buf = completed;
-        self.instances[i].busy = false;
-        self.kick(i);
-    }
-
-    fn on_segment_done(&mut self, i: usize, key: SeqKey) {
-        let seq = self.instances[i].get(key).expect("completed segment resident");
-        let (request, last_segment) = (seq.request, seq.last_segment);
-        let beta_ref = self.reqs.get(&request).and_then(|r| r.beta);
-        // arena keys are only unique per instance (two arenas both start
-        // at slot 0), so β must be identified by (instance, key)
-        let has_beta_wait = beta_ref.map(|(bi, bk)| (bi, bk) != (i, key)).unwrap_or(false);
-
-        if last_segment {
-            self.collector.on_complete(request);
-            self.instances[i].evict(key);
-            self.kick(i);
-            self.reqs.remove(&request);
-            return;
-        }
-
-        // α completed and a β segment waits: schedule the KV transfer.
-        if has_beta_wait {
-            let (b_inst, b_key) = beta_ref.unwrap();
-            // α is done executing — take its history instead of cloning it
-            let history = self.instances[i]
-                .get_mut(key)
-                .map(|s| std::mem::take(&mut s.kv_history))
-                .unwrap_or_default();
-            let kv_bytes = self.cfg.spec.llm.kv_bytes_per_token();
-            let ready = group_chunks(&history, self.cfg.transfer_chunk_tokens, kv_bytes);
-            let chunked = chunked_timeline(&ready, &self.cfg.link);
-            let mono = monolithic_timeline(&ready, &self.cfg.link);
-            self.transfer.chunked_exposed += chunked.exposed;
-            self.transfer.mono_exposed += mono.exposed;
-            self.transfer.bytes += chunked.total_bytes;
-            self.transfer.transfers += 1;
-            let done = if self.cfg.chunked_transfer { chunked.done } else { mono.done };
-            let done = done.max(self.time);
-            self.push(done, EventKind::SeqReady { instance: b_inst, key: b_key });
-            // α's KV pages stay pinned until the transfer drains.
-            self.push(done, EventKind::AlphaEvict { instance: i, key });
-        } else {
-            // α with no β (β was cancelled by early termination clamping)
-            self.instances[i].evict(key);
-            self.kick(i);
-        }
-    }
-
-    pub fn profile(&self) -> &ProfileTable {
-        &self.profile
-    }
-
-    /// Mean per-request scheduling overhead in seconds (Table 3).
-    pub fn mean_sched_overhead(&mut self) -> f64 {
-        self.sched_overhead.mean()
-    }
-}
-
-fn make_seq(
-    req: &Request,
-    start: usize,
-    end_exec: usize,
-    last_segment: bool,
-    track_kv: bool,
-) -> SimSeq {
-    let p = req.prompt_len;
-    SimSeq {
-        request: req.id,
-        start,
-        end_exec,
-        prompt_len: p,
-        work: crate::coordinator::WorkItem {
-            prefill_remaining: end_exec.min(p).saturating_sub(start),
-            context: start,
-            decode_remaining: end_exec.saturating_sub(start.max(p)),
-        },
-        ready: true,
-        emits_first_token: start < p && end_exec >= p,
-        last_segment,
-        admitted: false,
-        kv_history: Vec::new(),
-        track_kv_history: track_kv,
-        arrival: req.arrival,
-    }
-}
-
-/// Group an α-side KV production history into transfer chunks of
-/// ~`chunk_tokens`: (ready_time, bytes) per chunk. The history is
-/// run-length coalesced ([`KvSpan`]); chunk-ready times inside a decode
-/// run interpolate linearly over the run's step times. The output is
-/// pre-sized: exactly ⌈total/chunk⌉ entries, no re-push loops.
-fn group_chunks(history: &[KvSpan], chunk_tokens: usize, kv_bytes: f64) -> Vec<(f64, f64)> {
-    let total: usize = history.iter().map(|h| h.tokens).sum();
-    if total == 0 {
-        return Vec::new();
-    }
-    let mut out = Vec::with_capacity(total / chunk_tokens + 1);
-    let mut acc = 0usize;
-    for span in history {
-        let mut used = 0usize;
-        while acc + (span.tokens - used) >= chunk_tokens {
-            let need = chunk_tokens - acc;
-            used += need;
-            acc = 0;
-            out.push((span.time_of(used), chunk_tokens as f64 * kv_bytes));
-        }
-        acc += span.tokens - used;
-    }
-    if acc > 0 {
-        let t = history.last().map(|h| h.t1).unwrap_or(0.0);
-        out.push((t, acc as f64 * kv_bytes));
-    }
-    out
-}
+pub use crate::exec::host::{ExecConfig as SimConfig, VirtualExecutor as Simulator};
+pub use crate::exec::transport::TransferReport;
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::baselines::{ColocPolicy, DisaggPolicy};
     use crate::coordinator::GlobalConfig;
-    use crate::costmodel::{GpuSpec, LlmSpec};
-    use crate::sim::policy::DynaServePolicy;
+    use crate::core::Request;
+    use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+    use crate::metrics::Summary;
+    use crate::sim::policy::{DynaServePolicy, Policy};
     use crate::workload::{poisson_workload, TraceKind};
 
     fn spec() -> InstanceSpec {
@@ -457,8 +51,8 @@ mod tests {
         let (s, sim) = run_policy(Box::new(DisaggPolicy::new(1)), reqs);
         assert_eq!(s.completed, 1);
         assert_eq!(s.total_tokens, 40);
-        assert_eq!(sim.transfer.transfers, 1);
-        assert!(sim.transfer.bytes > 0.0);
+        assert_eq!(sim.transport.report.transfers, 1);
+        assert!(sim.transport.report.bytes > 0.0);
     }
 
     #[test]
@@ -512,43 +106,9 @@ mod tests {
             Box::new(DynaServePolicy::new(GlobalConfig::default())),
             reqs,
         );
-        if sim.transfer.transfers > 0 {
-            assert!(sim.transfer.chunked_exposed <= sim.transfer.mono_exposed);
+        if sim.transport.report.transfers > 0 {
+            assert!(sim.transport.report.chunked_exposed <= sim.transport.report.mono_exposed);
         }
-    }
-
-    fn chunk(t: f64, tokens: usize) -> KvSpan {
-        KvSpan { t0: t, t1: t, tokens, decode_run: false }
-    }
-
-    #[test]
-    fn group_chunks_conserves_tokens() {
-        let hist = vec![chunk(0.1, 300), chunk(0.2, 300), chunk(0.3, 300)];
-        let chunks = group_chunks(&hist, 256, 2.0);
-        let total: f64 = chunks.iter().map(|c| c.1).sum();
-        assert_eq!(total, 900.0 * 2.0);
-        assert!(chunks.windows(2).all(|w| w[0].0 <= w[1].0));
-    }
-
-    #[test]
-    fn group_chunks_conserves_tokens_over_decode_runs() {
-        // a prefill chunk followed by a 500-token decode run: the
-        // run-length representation must conserve tokens and keep chunk
-        // ready-times monotone within the run's [t0, t1] window
-        let hist = vec![
-            chunk(0.05, 300),
-            KvSpan { t0: 0.1, t1: 5.1, tokens: 500, decode_run: true },
-        ];
-        let chunks = group_chunks(&hist, 256, 1.0);
-        let total: f64 = chunks.iter().map(|c| c.1).sum();
-        assert_eq!(total, 800.0);
-        assert!(chunks.windows(2).all(|w| w[0].0 <= w[1].0));
-        // every interpolated time stays inside the run window
-        for (t, _) in &chunks[1..] {
-            assert!(*t >= 0.1 - 1e-12 && *t <= 5.1 + 1e-12, "t={t}");
-        }
-        // pre-sizing is exact: ⌈800/256⌉ = 4 chunks
-        assert_eq!(chunks.len(), 4);
     }
 
     #[test]

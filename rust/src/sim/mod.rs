@@ -1,17 +1,23 @@
 //! Discrete-event cluster simulator — the substrate that reproduces the
 //! paper's A100-scale evaluation (DESIGN.md §1).
 //!
-//! The simulator drives the *same* scheduler code as the live PJRT server:
-//! [`crate::coordinator::GlobalScheduler`] for split decisions and
-//! [`crate::coordinator::LocalScheduler`] for per-iteration batch
-//! composition. Only the executor differs — iteration latencies come from
-//! the calibrated analytical cost model instead of a GPU.
+//! Since the `exec` refactor this module is a *facade*: the micro-request
+//! lifecycle (admission, Algorithm-2 batching, prefill/decode
+//! application, α→β handoff, completion, metrics registration) lives once
+//! in [`crate::exec`], and [`Simulator`] is the discrete-event
+//! instantiation of that core — virtual clock, modeled KV transport,
+//! iteration latencies from the calibrated analytical cost model. The
+//! live PJRT server ([`crate::server`]) instantiates the *same*
+//! [`crate::exec::InstanceRuntime`] per instance thread with a wall
+//! clock and real KV payloads; `rust/tests/parity.rs` pins the two
+//! facades to bit-identical summaries.
 //!
-//! Token-position bookkeeping (see `instance.rs`): a request with prompt P
-//! and true decode length D processes input tokens `0..P+D-1`; processing
-//! token `P-1` (the prefill tail) emits output position `P`, and each
-//! decode step processing token `p ≥ P` emits position `p+1` — D output
-//! tokens in total, however the request is split into segments.
+//! Token-position bookkeeping (see [`crate::exec::submit`]): a request
+//! with prompt P and true decode length D processes input tokens
+//! `0..P+D-1`; processing token `P-1` (the prefill tail) emits output
+//! position `P`, and each decode step processing token `p ≥ P` emits
+//! position `p+1` — D output tokens in total, however the request is
+//! split into segments.
 
 pub mod driver;
 pub mod instance;

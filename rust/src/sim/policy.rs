@@ -1,134 +1,7 @@
-//! Scheduling policies: how arriving requests become placed micro-request
-//! segments. DynaServe's APS policy lives here; the PD-colocation and
-//! PD-disaggregation baselines implement the same trait in
-//! [`crate::baselines`].
+//! Policy facade: the [`Policy`] trait and DynaServe's APS policy moved
+//! to [`crate::exec::policy`] so both executors dispatch through one code
+//! path; these re-exports keep the simulator-side paths
+//! (`sim::policy::Policy` etc.) stable for the baselines and experiment
+//! harnesses.
 
-use crate::coordinator::{
-    GlobalConfig, GlobalScheduler, InstanceSnapshot, LoadDigest, ProfileTable, ScheduleOutcome,
-};
-use crate::core::{MicroRequest, Request, Role};
-
-/// The segments a policy created for one request (one segment = no split).
-#[derive(Debug, Clone)]
-pub struct Placement {
-    pub alpha: MicroRequest,
-    pub beta: Option<MicroRequest>,
-    /// Probe count (telemetry; Table 3).
-    pub probes: usize,
-}
-
-pub trait Policy: Send {
-    fn name(&self) -> &'static str;
-
-    /// Decide split and placement for `req` given per-instance load
-    /// digests — the default hot path: digests are maintained
-    /// incrementally by the instances, so no per-arrival snapshot clones.
-    /// `profile` is the pool-wide latency profile table.
-    fn place(
-        &mut self,
-        req: &Request,
-        loads: &[LoadDigest],
-        profile: &ProfileTable,
-    ) -> Placement;
-
-    /// Exact-snapshot placement — the reference path (selected with
-    /// `SimConfig::exact_snapshots`). The default reduces the snapshots
-    /// to digests, so policies whose decisions only read digest fields
-    /// behave identically on both paths.
-    fn place_exact(
-        &mut self,
-        req: &Request,
-        snapshots: &[InstanceSnapshot],
-        profile: &ProfileTable,
-    ) -> Placement {
-        let loads: Vec<LoadDigest> = snapshots.iter().map(LoadDigest::from_snapshot).collect();
-        self.place(req, &loads, profile)
-    }
-}
-
-/// DynaServe's Adaptive Request Partitioning and Scheduling (§3–§4):
-/// Algorithm 1 picks the split ratio; the α/β segments go to the two
-/// least-loaded unified instances.
-pub struct DynaServePolicy {
-    pub sched: GlobalScheduler,
-}
-
-impl DynaServePolicy {
-    pub fn new(cfg: GlobalConfig) -> Self {
-        DynaServePolicy { sched: GlobalScheduler::new(cfg) }
-    }
-}
-
-fn outcome_to_placement(out: ScheduleOutcome, req: &Request) -> Placement {
-    let (alpha, beta) = out.decision.to_micro_requests(req);
-    match (alpha, beta) {
-        (Some(a), b) => Placement { alpha: a, beta: b, probes: out.probes },
-        // split == 0: the whole request is "β" — normalize so callers
-        // always have an alpha segment.
-        (None, Some(b)) => Placement {
-            alpha: MicroRequest { role: Role::Alpha, ..b },
-            beta: None,
-            probes: out.probes,
-        },
-        (None, None) => unreachable!("empty request"),
-    }
-}
-
-impl Policy for DynaServePolicy {
-    fn name(&self) -> &'static str {
-        "dynaserve"
-    }
-
-    fn place(
-        &mut self,
-        req: &Request,
-        loads: &[LoadDigest],
-        profile: &ProfileTable,
-    ) -> Placement {
-        outcome_to_placement(self.sched.schedule(req, loads, profile), req)
-    }
-
-    fn place_exact(
-        &mut self,
-        req: &Request,
-        snapshots: &[InstanceSnapshot],
-        profile: &ProfileTable,
-    ) -> Placement {
-        outcome_to_placement(self.sched.schedule_exact(req, snapshots, profile), req)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
-
-    #[test]
-    fn dynaserve_placement_covers_request() {
-        let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
-        let profile = ProfileTable::seeded(&spec);
-        let mut p = DynaServePolicy::new(GlobalConfig::default());
-        let loads: Vec<LoadDigest> = (0..2).map(LoadDigest::idle).collect();
-        let req = Request::new(1, 0.0, 1024, 512);
-        let pl = p.place(&req, &loads, &profile);
-        let total = pl.alpha.len() + pl.beta.as_ref().map(|b| b.len()).unwrap_or(0);
-        assert_eq!(total, req.predicted_len());
-        assert_eq!(pl.alpha.start, 0);
-        if let Some(b) = &pl.beta {
-            assert_eq!(b.start, pl.alpha.end);
-        }
-    }
-
-    #[test]
-    fn exact_path_covers_request_too() {
-        let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
-        let profile = ProfileTable::seeded(&spec);
-        let mut p = DynaServePolicy::new(GlobalConfig::default());
-        let snaps: Vec<InstanceSnapshot> =
-            (0..2).map(|id| InstanceSnapshot { id, ..Default::default() }).collect();
-        let req = Request::new(1, 0.0, 1024, 512);
-        let pl = p.place_exact(&req, &snaps, &profile);
-        let total = pl.alpha.len() + pl.beta.as_ref().map(|b| b.len()).unwrap_or(0);
-        assert_eq!(total, req.predicted_len());
-    }
-}
+pub use crate::exec::policy::{DynaServePolicy, Placement, Policy};

@@ -119,12 +119,13 @@ fn chunked_transfer_reduces_exposed_time() {
         Box::new(DynaServePolicy::new(GlobalConfig::default())),
     );
     sim.run(reqs);
-    assert!(sim.transfer.transfers > 0, "splits should induce transfers");
+    let tr = sim.transport.report;
+    assert!(tr.transfers > 0, "splits should induce transfers");
     assert!(
-        sim.transfer.chunked_exposed < sim.transfer.mono_exposed * 0.5,
+        tr.chunked_exposed < tr.mono_exposed * 0.5,
         "chunked {:.4}s vs mono {:.4}s",
-        sim.transfer.chunked_exposed,
-        sim.transfer.mono_exposed
+        tr.chunked_exposed,
+        tr.mono_exposed
     );
 }
 

@@ -1,0 +1,79 @@
+//! Sim↔live parity: the tentpole guardrail of the `exec` refactor
+//! (DESIGN.md §3).
+//!
+//! The micro-request lifecycle — admission, Algorithm-2 batching,
+//! prefill/decode application, α→β handoff, completion, collector
+//! registration — exists once, in `dynaserve::exec`. The simulator facade
+//! (`sim::Simulator`) and the live server facade's stub-engine executor
+//! (`server::virtual_executor`) must stay two thin instantiations of that
+//! one core, so the same scenario trace driven through both must produce
+//! **bit-identical** `Summary` and per-class `ClassSummary` rows. An
+//! earlier PR had to retrofit live-server collector registration
+//! precisely because duplicated paths had drifted.
+//!
+//! Scope: this file pins the *facade wiring* — if either facade grows its
+//! own lifecycle or diverges in how it constructs the shared core, the
+//! bit-identity here breaks. The live server's thread-side marshalling
+//! (leader `SegmentSpec` channel → `InstanceRuntime` segment) is pinned
+//! against the virtual submission path by
+//! `server::tests::segment_spec_round_trip_matches_virtual_submission`;
+//! together the two checks cover the seams where sim↔live drift can
+//! reappear. (`make parity` runs this file on its own.)
+
+use dynaserve::costmodel::LlmSpec;
+use dynaserve::experiments::runners::{build_executor, ExecutorKind, System};
+use dynaserve::metrics::SloConfig;
+use dynaserve::workload::{poisson_workload, Scenario, TraceKind};
+
+/// Run one request stream through a facade and dump everything the
+/// scoring layer produces.
+fn run_via(
+    kind: ExecutorKind,
+    sys: System,
+    requests: &[dynaserve::core::Request],
+) -> (String, String, usize) {
+    let llm = LlmSpec::qwen25_14b();
+    let mut ex = build_executor(kind, sys, &llm, SloConfig::default());
+    let summary = ex.run(requests.to_vec());
+    let classes = ex.collector.class_summaries(summary.duration);
+    (format!("{summary:?}"), format!("{classes:?}"), ex.stuck_requests())
+}
+
+/// The satellite's guardrail: one small mixed-SLO scenario, all three
+/// systems, both executors — identical global summaries AND identical
+/// per-class rows, with no stuck segments on either side.
+#[test]
+fn scenario_trace_is_bit_identical_across_executors() {
+    let sc = Scenario::by_name("hybrid").expect("hybrid scenario exists").smoke();
+    let requests = sc.generate(7);
+    assert!(!requests.is_empty());
+    for sys in System::all_default() {
+        let (sum_sim, cls_sim, stuck_sim) = run_via(ExecutorKind::Sim, sys, &requests);
+        let (sum_live, cls_live, stuck_live) = run_via(ExecutorKind::LiveVirtual, sys, &requests);
+        assert_eq!(
+            sum_sim,
+            sum_live,
+            "{}: global summaries diverged between executors",
+            sys.name()
+        );
+        assert_eq!(
+            cls_sim,
+            cls_live,
+            "{}: per-class rows diverged between executors",
+            sys.name()
+        );
+        assert_eq!(stuck_sim, 0, "{}: sim executor left stuck segments", sys.name());
+        assert_eq!(stuck_live, 0, "{}: live executor left stuck segments", sys.name());
+    }
+}
+
+/// Parity must also hold on a plain single-class trace at pressure (the
+/// α→β handoff path fires constantly on the decode-heavy shape).
+#[test]
+fn handoff_heavy_trace_is_bit_identical_across_executors() {
+    let requests = poisson_workload(TraceKind::MiniReasoning, 2.0, 20.0, 23);
+    let (sum_sim, cls_sim, _) = run_via(ExecutorKind::Sim, System::DynaServe, &requests);
+    let (sum_live, cls_live, _) = run_via(ExecutorKind::LiveVirtual, System::DynaServe, &requests);
+    assert_eq!(sum_sim, sum_live);
+    assert_eq!(cls_sim, cls_live);
+}
