@@ -4,7 +4,7 @@
 ARTIFACTS ?= artifacts
 PYTHON    ?= python3
 
-.PHONY: artifacts build test bench experiments parity clean
+.PHONY: artifacts build test bench experiments parity elastic clean
 
 # Lower the TinyQwen step function to HLO text + params + manifest, and
 # snapshot the simulator bench rows to BENCH_sim.json so every artifact
@@ -23,9 +23,16 @@ test:
 	cargo test -q
 
 # Sim↔live executor parity: the same scenario trace through both facades
-# of the shared exec/ lifecycle must score bit-identically (DESIGN.md §3).
+# of the shared exec/ lifecycle must score bit-identically (DESIGN.md §3)
+# — scale events included.
 parity:
 	cargo test --test parity
+
+# Elastic fleet evaluation: fixed vs scheduled vs autoscaled instance
+# counts on the diurnal scenario, scored by goodput-per-GPU-second
+# (EXPERIMENTS.md §Elastic). Emits results/elastic.json.
+elastic:
+	cargo run --release --bin experiments -- elastic
 
 bench:
 	cargo bench --bench bench_schedulers

@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         workload: TraceKind::BurstGpt, // shapes scaled to the tiny context
         seed: 42,
         slo: SloConfig { tbt: 0.250, ttft: None },
+        autoscale: None, // fixed two-instance fleet for the quickstart
     })?;
 
     report.print();

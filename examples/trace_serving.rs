@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
             s.p99_tbt * 1e3,
             s.attainment * 100.0,
         );
-        for inst in &sim.instances {
+        for inst in sim.instances() {
             println!(
                 "             └ instance {}: MFU {:.1}%  HBM {:.1}%",
                 inst.id,

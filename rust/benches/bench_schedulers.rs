@@ -8,7 +8,7 @@ use dynaserve::coordinator::{
     GlobalConfig, GlobalScheduler, InstanceSnapshot, LoadDigest, LocalConfig, LocalScheduler,
     ProfileTable, WorkItem,
 };
-use dynaserve::core::Request;
+use dynaserve::core::{InstanceId, Request};
 use dynaserve::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
 use dynaserve::util::benchkit::{bench, black_box};
 
@@ -25,7 +25,12 @@ fn main() {
         })
         .collect();
     let snaps: Vec<InstanceSnapshot> = (0..2)
-        .map(|id| InstanceSnapshot { id, work: work.clone(), kv_utilization: 0.4, waiting: 0 })
+        .map(|id| InstanceSnapshot {
+            id: InstanceId(id),
+            work: work.clone(),
+            kv_utilization: 0.4,
+            waiting: 0,
+        })
         .collect();
     let loads: Vec<LoadDigest> = snaps.iter().map(LoadDigest::from_snapshot).collect();
 

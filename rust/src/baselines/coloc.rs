@@ -55,13 +55,14 @@ impl Policy for ColocPolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::InstanceId;
     use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
 
     #[test]
     fn round_robin_no_split() {
         let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
         let profile = ProfileTable::seeded(&spec);
-        let loads: Vec<LoadDigest> = (0..2).map(LoadDigest::idle).collect();
+        let loads: Vec<LoadDigest> = (0..2).map(|i| LoadDigest::idle(InstanceId(i))).collect();
         let mut p = ColocPolicy::new();
         let mut targets = Vec::new();
         for i in 0..4 {
@@ -71,6 +72,9 @@ mod tests {
             assert_eq!(pl.alpha.len(), 150);
             targets.push(pl.alpha.instance);
         }
-        assert_eq!(targets, vec![0, 1, 0, 1]);
+        assert_eq!(
+            targets,
+            vec![InstanceId(0), InstanceId(1), InstanceId(0), InstanceId(1)]
+        );
     }
 }

@@ -73,6 +73,7 @@ impl Policy for DisaggPolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::InstanceId;
     use crate::coordinator::{InstanceSnapshot, WorkItem};
     use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
 
@@ -82,30 +83,30 @@ mod tests {
 
     #[test]
     fn splits_exactly_at_pd_boundary() {
-        let loads: Vec<LoadDigest> = (0..2).map(LoadDigest::idle).collect();
+        let loads: Vec<LoadDigest> = (0..2).map(|i| LoadDigest::idle(InstanceId(i))).collect();
         let mut p = DisaggPolicy::new(1);
         let req = Request::new(1, 0.0, 1000, 400);
         let pl = p.place(&req, &loads, &profile());
         assert_eq!(pl.alpha.end, 1000);
-        assert_eq!(pl.alpha.instance, 0);
+        assert_eq!(pl.alpha.instance, InstanceId(0));
         let b = pl.beta.unwrap();
         assert_eq!(b.start, 1000);
         assert_eq!(b.end, 1400);
-        assert_eq!(b.instance, 1);
+        assert_eq!(b.instance, InstanceId(1));
         assert_eq!(b.prefill_tokens(), 0);
     }
 
     #[test]
     fn least_loaded_within_pools() {
         let mut snaps: Vec<InstanceSnapshot> =
-            (0..4).map(|id| InstanceSnapshot { id, ..Default::default() }).collect();
+            (0..4).map(|id| InstanceSnapshot { id: InstanceId::bootstrap(id), ..Default::default() }).collect();
         // prefill pool {0,1}: load 0 heavier; decode pool {2,3}: 2 heavier
         snaps[0].work = vec![WorkItem { prefill_remaining: 9000, context: 0, decode_remaining: 0 }];
         snaps[2].work = (0..8).map(|_| WorkItem::pure_decode(512, 100)).collect();
         let loads: Vec<LoadDigest> = snaps.iter().map(LoadDigest::from_snapshot).collect();
         let mut p = DisaggPolicy::new(2);
         let pl = p.place(&Request::new(1, 0.0, 500, 300), &loads, &profile());
-        assert_eq!(pl.alpha.instance, 1);
-        assert_eq!(pl.beta.unwrap().instance, 3);
+        assert_eq!(pl.alpha.instance, InstanceId(1));
+        assert_eq!(pl.beta.unwrap().instance, InstanceId(3));
     }
 }

@@ -294,6 +294,7 @@ fn with_item(work: &[WorkItem], extra: Option<WorkItem>) -> Vec<WorkItem> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::InstanceId;
     use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
 
     fn profile() -> ProfileTable {
@@ -301,7 +302,7 @@ mod tests {
     }
 
     fn idle(n: usize) -> Vec<InstanceSnapshot> {
-        (0..n).map(|id| InstanceSnapshot { id, ..Default::default() }).collect()
+        (0..n).map(|id| InstanceSnapshot { id: InstanceId::bootstrap(id), ..Default::default() }).collect()
     }
 
     fn digests(snaps: &[InstanceSnapshot]) -> Vec<LoadDigest> {
@@ -353,7 +354,7 @@ mod tests {
         let r = req(1024, 1024);
         let out = g.schedule(&r, &digests(&snaps), &p);
         // α must be the emptier instance 0
-        assert_eq!(out.decision.alpha_instance, 0);
+        assert_eq!(out.decision.alpha_instance, InstanceId(0));
         assert!(
             out.decision.split > 1024,
             "split={} should exceed P when β side is congested",
@@ -374,7 +375,7 @@ mod tests {
         // α is the emptier instance (1). With the other instance crushed,
         // balancing pushes the split all the way to L: the request runs
         // entirely on the idle instance (adaptive colocation).
-        assert_eq!(out.decision.alpha_instance, 1);
+        assert_eq!(out.decision.alpha_instance, InstanceId(1));
         assert_eq!(out.decision.split, 4096 + 512, "split={}", out.decision.split);
         assert_eq!(out.decision.beta_instance, out.decision.alpha_instance);
     }

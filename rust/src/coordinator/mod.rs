@@ -65,7 +65,7 @@ impl WorkItem {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::{MicroRequest, Role};
+    use crate::core::{InstanceId, MicroRequest, Role};
 
     #[test]
     fn work_item_from_alpha_and_beta() {
@@ -75,7 +75,7 @@ mod tests {
             start: 0,
             end: 120,
             prompt_len: 100,
-            instance: 0,
+            instance: InstanceId(0),
             arrival: 0.0,
         };
         let w = WorkItem::from_micro_request(&alpha);
@@ -89,7 +89,7 @@ mod tests {
             start: 120,
             end: 150,
             prompt_len: 100,
-            instance: 1,
+            instance: InstanceId(1),
             arrival: 0.0,
         };
         let w = WorkItem::from_micro_request(&beta);

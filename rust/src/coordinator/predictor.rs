@@ -13,13 +13,14 @@
 
 use super::profile::ProfileTable;
 use super::WorkItem;
+use crate::core::InstanceId;
 
 /// What the global scheduler knows about one instance when probing the
 /// exact path: the full per-segment work list. Cloning this is
 /// O(resident segments); the default hot path uses [`LoadDigest`] instead.
 #[derive(Debug, Clone, Default)]
 pub struct InstanceSnapshot {
-    pub id: usize,
+    pub id: InstanceId,
     /// Remaining work of every resident/queued micro-request.
     pub work: Vec<WorkItem>,
     /// KV utilization in [0,1] — used by the router for placement ties.
@@ -51,7 +52,7 @@ impl InstanceSnapshot {
 /// property-tested under randomized op sequences.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct LoadDigest {
-    pub id: usize,
+    pub id: InstanceId,
     /// Σ prompt tokens still to prefill (resident + KV-waiting segments).
     pub pending_prefill: usize,
     /// Σ decode tokens still to generate across all unfinished segments.
@@ -74,7 +75,7 @@ pub struct LoadDigest {
 
 impl LoadDigest {
     /// Digest of an idle instance (test/bootstrap helper).
-    pub fn idle(id: usize) -> Self {
+    pub fn idle(id: InstanceId) -> Self {
         LoadDigest { id, ..Default::default() }
     }
 
@@ -435,7 +436,7 @@ mod tests {
     #[test]
     fn digest_reduction_matches_manual_counters() {
         let snap = InstanceSnapshot {
-            id: 3,
+            id: InstanceId(3),
             work: vec![
                 WorkItem { prefill_remaining: 100, context: 40, decode_remaining: 7 },
                 WorkItem::pure_decode(512, 30),
@@ -446,7 +447,7 @@ mod tests {
             waiting: 2,
         };
         let d = LoadDigest::from_snapshot(&snap);
-        assert_eq!(d.id, 3);
+        assert_eq!(d.id, InstanceId(3));
         assert_eq!(d.pending_prefill, 100);
         assert_eq!(d.pending_decode, 42);
         assert_eq!(d.segments, 3);
@@ -463,14 +464,14 @@ mod tests {
             WorkItem { prefill_remaining: 300, context: 10, decode_remaining: 64 },
             WorkItem::pure_decode(1024, 200),
         ];
-        let mut d = LoadDigest::idle(0);
+        let mut d = LoadDigest::idle(InstanceId(0));
         for w in &items {
             d.add(w);
         }
         for w in &items {
             d.remove(w);
         }
-        assert_eq!(d, LoadDigest::idle(0));
+        assert_eq!(d, LoadDigest::idle(InstanceId(0)));
     }
 
     #[test]
@@ -479,7 +480,7 @@ mod tests {
         let cfg = PredictorConfig::default();
         let items: Vec<WorkItem> = (0..12).map(|_| WorkItem::pure_decode(800, 150)).collect();
         let exact = completion_time(&items, &p, &cfg);
-        let snap = InstanceSnapshot { id: 0, work: items, kv_utilization: 0.0, waiting: 0 };
+        let snap = InstanceSnapshot { id: InstanceId(0), work: items, kv_utilization: 0.0, waiting: 0 };
         let approx =
             completion_time_digest(&LoadDigest::from_snapshot(&snap), None, &p, &cfg);
         assert!(
@@ -492,15 +493,15 @@ mod tests {
     fn digest_probe_empty_and_monotone() {
         let p = profile();
         let cfg = PredictorConfig::default();
-        assert_eq!(completion_time_digest(&LoadDigest::idle(0), None, &p, &cfg), 0.0);
+        assert_eq!(completion_time_digest(&LoadDigest::idle(InstanceId(0)), None, &p, &cfg), 0.0);
         let small = InstanceSnapshot {
-            id: 0,
+            id: InstanceId(0),
             work: vec![WorkItem { prefill_remaining: 512, context: 0, decode_remaining: 32 }],
             kv_utilization: 0.0,
             waiting: 0,
         };
         let big = InstanceSnapshot {
-            id: 0,
+            id: InstanceId(0),
             work: vec![WorkItem { prefill_remaining: 4096, context: 0, decode_remaining: 256 }],
             kv_utilization: 0.0,
             waiting: 0,
@@ -527,7 +528,7 @@ mod tests {
                 decode_remaining: 200 + i,
             })
             .collect();
-        let snap = InstanceSnapshot { id: 0, work, kv_utilization: 0.0, waiting: 0 };
+        let snap = InstanceSnapshot { id: InstanceId(0), work, kv_utilization: 0.0, waiting: 0 };
         let d = LoadDigest::from_snapshot(&snap);
         let t0 = std::time::Instant::now();
         let n = 1000;

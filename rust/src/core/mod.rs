@@ -10,7 +10,33 @@
 //! prefill (splits only inside `0..P`) and PD disaggregation (always s = P).
 
 pub type RequestId = u64;
-pub type InstanceId = usize;
+
+/// Stable identity of one GPU instance in the cluster.
+///
+/// A newtype, **not** a dense `Vec` index: since the elastic control plane
+/// (`crate::exec::cluster`) instances can be added and drained at runtime,
+/// so the set of live ids is sparse and positions in any digest slice
+/// shift as membership changes. Everything that routes work — placements,
+/// segments, β-handoff destinations, load digests — carries an
+/// `InstanceId` and resolves it through the cluster registry; ids are
+/// allocated monotonically and never reused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct InstanceId(pub u32);
+
+impl InstanceId {
+    /// The id the bootstrap fleet assigns to its `i`-th instance (ids are
+    /// dense only at construction; never index with this after a scale
+    /// event).
+    pub fn bootstrap(i: usize) -> InstanceId {
+        InstanceId(i as u32)
+    }
+}
+
+impl std::fmt::Display for InstanceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
 /// Traffic-class index into the active scenario's class list
 /// (`crate::workload::scenario`); `0` is the default class for workloads
 /// that don't distinguish traffic.
@@ -195,7 +221,7 @@ mod tests {
     fn micro_request_classification() {
         // split inside prefill: α pure prefill, β mixed
         let r = req(100, 50);
-        let d = SplitDecision { ratio: 0.4, split: 60, alpha_instance: 0, beta_instance: 1 };
+        let d = SplitDecision { ratio: 0.4, split: 60, alpha_instance: InstanceId(0), beta_instance: InstanceId(1) };
         let (a, b) = d.to_micro_requests(&r);
         let a = a.unwrap();
         let b = b.unwrap();
@@ -210,7 +236,7 @@ mod tests {
     #[test]
     fn split_at_pd_boundary_is_disaggregation() {
         let r = req(100, 50);
-        let d = SplitDecision { ratio: 100.0 / 150.0, split: 100, alpha_instance: 0, beta_instance: 1 };
+        let d = SplitDecision { ratio: 100.0 / 150.0, split: 100, alpha_instance: InstanceId(0), beta_instance: InstanceId(1) };
         let (a, b) = d.to_micro_requests(&r);
         let (a, b) = (a.unwrap(), b.unwrap());
         assert_eq!(a.prefill_tokens(), 100);
@@ -222,7 +248,7 @@ mod tests {
     #[test]
     fn split_past_prefill_moves_decode_to_alpha() {
         let r = req(100, 50);
-        let d = SplitDecision { ratio: 0.8, split: 120, alpha_instance: 0, beta_instance: 1 };
+        let d = SplitDecision { ratio: 0.8, split: 120, alpha_instance: InstanceId(0), beta_instance: InstanceId(1) };
         let (a, b) = d.to_micro_requests(&r);
         let (a, b) = (a.unwrap(), b.unwrap());
         assert_eq!(a.prefill_tokens(), 100);
@@ -234,12 +260,12 @@ mod tests {
     #[test]
     fn degenerate_splits_drop_empty_half() {
         let r = req(100, 50);
-        let full = SplitDecision { ratio: 1.0, split: 150, alpha_instance: 0, beta_instance: 1 };
+        let full = SplitDecision { ratio: 1.0, split: 150, alpha_instance: InstanceId(0), beta_instance: InstanceId(1) };
         let (a, b) = full.to_micro_requests(&r);
         assert!(b.is_none());
         assert_eq!(a.unwrap().len(), 150);
 
-        let none = SplitDecision { ratio: 0.0, split: 0, alpha_instance: 0, beta_instance: 1 };
+        let none = SplitDecision { ratio: 0.0, split: 0, alpha_instance: InstanceId(0), beta_instance: InstanceId(1) };
         let (a, b) = none.to_micro_requests(&r);
         assert!(a.is_none());
         assert_eq!(b.unwrap().len(), 150);
@@ -248,7 +274,7 @@ mod tests {
     #[test]
     fn split_clamped_to_length() {
         let r = req(10, 5);
-        let d = SplitDecision { ratio: 1.0, split: 999, alpha_instance: 0, beta_instance: 0 };
+        let d = SplitDecision { ratio: 1.0, split: 999, alpha_instance: InstanceId(0), beta_instance: InstanceId(0) };
         let (a, b) = d.to_micro_requests(&r);
         assert_eq!(a.unwrap().end, 15);
         assert!(b.is_none());
@@ -268,7 +294,7 @@ mod tests {
     #[test]
     fn resident_kv_accounting() {
         let r = req(100, 50);
-        let d = SplitDecision { ratio: 0.5, split: 75, alpha_instance: 0, beta_instance: 1 };
+        let d = SplitDecision { ratio: 0.5, split: 75, alpha_instance: InstanceId(0), beta_instance: InstanceId(1) };
         let (a, b) = d.to_micro_requests(&r);
         assert_eq!(a.unwrap().resident_kv(), 75);
         assert_eq!(b.unwrap().resident_kv(), 150);

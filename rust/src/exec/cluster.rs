@@ -1,0 +1,654 @@
+//! The elastic cluster control plane: dynamic instance membership for the
+//! unified pool (the paper's *elastic* claim, §6 — adapting instance
+//! counts to workload shifts instead of serving from a fixed fleet).
+//!
+//! A [`Cluster`] is the registry of every instance the executor has ever
+//! provisioned, keyed by stable [`InstanceId`]s (allocated monotonically,
+//! never reused — **not** dense `Vec` indices). Each [`Member`] walks a
+//! one-way lifecycle:
+//!
+//! ```text
+//! add_instance ──► Warming ──(warm-up elapses)──► Active ──drain──► Draining ──(empties)──► Retired
+//!                     │  modeled engine bring-up      ▲ placeable        │ finishes resident
+//!                     └──────────────────────────────-┘                  │ segments, refuses
+//!                                                                        ▼ new placements
+//!                                                            GPU-seconds stop accruing
+//! ```
+//!
+//! * **Warming** — provisioned (its GPU-seconds accrue from `add_instance`
+//!   on: bring-up is paid for) but not yet placeable; the host defers any
+//!   work kick until the warm-up elapses.
+//! * **Active** — placeable: its [`LoadDigest`] appears in the dynamic
+//!   digest view fed to `Policy::place`.
+//! * **Draining** — refuses new placements (dropped from the digest view);
+//!   resident segments run to completion, and pending β-handoffs destined
+//!   for it are re-placed by the host onto an active peer.
+//! * **Retired** — empty and removed: `removed_at` freezes its
+//!   GPU-second meter. The member stays in the registry so utilization
+//!   stats and the fleet timeline survive the instance.
+//!
+//! Scaling decisions come from two seams: deterministic [`ScaleEvent`]s
+//! attached to a scenario (`crate::workload::scenario`), and the
+//! [`Autoscaler`] trait whose default [`BandAutoscaler`] keeps the fleet's
+//! mean [`pressure`] inside a utilization band — both driven purely by the
+//! same O(1) digests the schedulers already consume.
+
+use crate::coordinator::LoadDigest;
+use crate::core::InstanceId;
+use crate::exec::runtime::InstanceRuntime;
+
+/// Where a member is in the membership lifecycle (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MemberState {
+    /// Provisioned, accruing GPU-seconds, not yet placeable.
+    Warming { until: f64 },
+    /// Placeable: appears in the digest view policies place over.
+    Active,
+    /// Refusing new placements; finishing resident segments.
+    Draining,
+    /// Removed from the fleet; GPU-second meter frozen at `removed_at`.
+    Retired,
+}
+
+/// One provisioned instance: its runtime plus membership bookkeeping.
+pub struct Member {
+    pub id: InstanceId,
+    pub runtime: InstanceRuntime,
+    pub state: MemberState,
+    /// When `add_instance` provisioned it (GPU-seconds accrue from here).
+    pub added_at: f64,
+    /// Set exactly once, by retirement; the GPU-second meter stops here.
+    pub removed_at: Option<f64>,
+    /// Last time the host applied any event to this member's runtime —
+    /// the drain-correctness tests pin `last_activity <= removed_at`.
+    pub last_activity: f64,
+}
+
+impl Member {
+    /// May new segments be placed here?
+    pub fn placeable(&self) -> bool {
+        matches!(self.state, MemberState::Active)
+    }
+
+    /// Still part of the fleet (accruing GPU-seconds)?
+    pub fn provisioned(&self) -> bool {
+        !matches!(self.state, MemberState::Retired)
+    }
+
+    /// GPU-seconds this member has accrued by `now` (per GPU of the
+    /// instance; the cluster scales by its GPU count). Clamped to `now`
+    /// so a retirement stamped after the accounting instant (e.g. a
+    /// scheduled drain that outlives the last token) never charges more
+    /// than a member that simply stayed up.
+    fn lifetime(&self, now: f64) -> f64 {
+        (self.removed_at.map_or(now, |r| r.min(now)) - self.added_at).max(0.0)
+    }
+}
+
+/// One membership transition, for the fleet timeline artifact.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FleetChange {
+    Added,
+    /// Warm-up elapsed; the member became placeable.
+    Warmed,
+    DrainStarted,
+    Removed,
+}
+
+/// Timestamped membership transition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetEvent {
+    pub at: f64,
+    pub id: InstanceId,
+    pub change: FleetChange,
+}
+
+/// The membership registry (see module docs). Members are stored in id
+/// order (ids are monotonic), retired ones included, so iteration order —
+/// and therefore every digest view — is deterministic.
+pub struct Cluster {
+    members: Vec<Member>,
+    next_id: u32,
+    /// GPUs per instance (the TP degree); scales the GPU-second meter.
+    pub gpus_per_instance: f64,
+    timeline: Vec<FleetEvent>,
+}
+
+impl Cluster {
+    pub fn new(gpus_per_instance: f64) -> Cluster {
+        Cluster { members: Vec::new(), next_id: 0, gpus_per_instance, timeline: Vec::new() }
+    }
+
+    /// The id the next `add_instance` will assign (lets callers build the
+    /// runtime for it).
+    pub fn next_id(&self) -> InstanceId {
+        InstanceId(self.next_id)
+    }
+
+    /// Provision a new instance: `build` receives the allocated id and
+    /// returns its runtime. With `warmup > 0` the member is not placeable
+    /// until `now + warmup` (the modeled engine bring-up); its GPU-seconds
+    /// accrue from `now` either way.
+    pub fn add_instance(
+        &mut self,
+        now: f64,
+        warmup: f64,
+        build: impl FnOnce(InstanceId) -> InstanceRuntime,
+    ) -> InstanceId {
+        let id = InstanceId(self.next_id);
+        self.next_id += 1;
+        let state = if warmup > 0.0 {
+            MemberState::Warming { until: now + warmup }
+        } else {
+            MemberState::Active
+        };
+        self.members.push(Member {
+            id,
+            runtime: build(id),
+            state,
+            added_at: now,
+            removed_at: None,
+            last_activity: now,
+        });
+        self.timeline.push(FleetEvent { at: now, id, change: FleetChange::Added });
+        if matches!(state, MemberState::Active) {
+            self.timeline.push(FleetEvent { at: now, id, change: FleetChange::Warmed });
+        }
+        id
+    }
+
+    /// Promote every member whose warm-up has elapsed. The `Warmed`
+    /// timeline entry is stamped with the warm-up *deadline*, not the
+    /// observation time, so the timeline is exact however sparsely the
+    /// host polls.
+    pub fn promote_warm(&mut self, now: f64) {
+        for m in &mut self.members {
+            if let MemberState::Warming { until } = m.state {
+                if now >= until {
+                    m.state = MemberState::Active;
+                    self.timeline.push(FleetEvent {
+                        at: until,
+                        id: m.id,
+                        change: FleetChange::Warmed,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Begin draining `id`: it refuses new placements from here on.
+    /// Refused (returns false) for unknown / already draining / retired
+    /// members, and when no *other* member is active or warming — a fleet
+    /// must keep at least one instance that can take placements.
+    pub fn drain(&mut self, id: InstanceId, now: f64) -> bool {
+        let survivors = self
+            .members
+            .iter()
+            .filter(|m| {
+                m.id != id && matches!(m.state, MemberState::Active | MemberState::Warming { .. })
+            })
+            .count();
+        let Some(i) = self.idx(id) else { return false };
+        let m = &mut self.members[i];
+        if !matches!(m.state, MemberState::Active | MemberState::Warming { .. }) || survivors == 0 {
+            return false;
+        }
+        m.state = MemberState::Draining;
+        self.timeline.push(FleetEvent { at: now, id, change: FleetChange::DrainStarted });
+        true
+    }
+
+    /// Retire a drained member whose runtime has emptied: freezes its
+    /// GPU-second meter at `now`. Panics (debug) if segments are still
+    /// resident — the host must only call this once the drain completed.
+    pub fn retire(&mut self, id: InstanceId, now: f64) {
+        let Some(i) = self.idx(id) else { return };
+        let m = &mut self.members[i];
+        debug_assert!(
+            m.runtime.is_empty(),
+            "retire({id}): {} segment(s) still resident",
+            m.runtime.len()
+        );
+        if matches!(m.state, MemberState::Retired) {
+            return;
+        }
+        m.state = MemberState::Retired;
+        m.removed_at = Some(now);
+        self.timeline.push(FleetEvent { at: now, id, change: FleetChange::Removed });
+    }
+
+    /// O(1) id→index: ids are allocated densely and members are never
+    /// removed from the registry, so member `id` sits at index `id.0`.
+    #[inline]
+    fn idx(&self, id: InstanceId) -> Option<usize> {
+        let i = id.0 as usize;
+        let m = self.members.get(i)?;
+        debug_assert_eq!(m.id, id, "registry order drifted from id allocation");
+        Some(i)
+    }
+
+    pub fn member(&self, id: InstanceId) -> Option<&Member> {
+        self.idx(id).map(|i| &self.members[i])
+    }
+
+    pub fn member_mut(&mut self, id: InstanceId) -> Option<&mut Member> {
+        self.idx(id).map(move |i| &mut self.members[i])
+    }
+
+    pub fn runtime(&self, id: InstanceId) -> Option<&InstanceRuntime> {
+        self.member(id).map(|m| &m.runtime)
+    }
+
+    /// The member's runtime, stamping `last_activity` — the host routes
+    /// every event application through here. Retired members still
+    /// resolve (their empty runtime no-ops on stale keys) but are not
+    /// stamped: nothing real can happen to an instance after removal,
+    /// and the drain tests pin `last_activity <= removed_at`.
+    pub fn runtime_mut(&mut self, id: InstanceId, now: f64) -> Option<&mut InstanceRuntime> {
+        let m = self.member_mut(id)?;
+        if !matches!(m.state, MemberState::Retired) {
+            m.last_activity = m.last_activity.max(now);
+        }
+        Some(&mut m.runtime)
+    }
+
+    /// All members ever provisioned, retired included, in id order.
+    pub fn members(&self) -> &[Member] {
+        &self.members
+    }
+
+    /// Runtimes of every member (id order) — the compatibility view the
+    /// pre-elastic `sim.instances` consumers iterate.
+    pub fn runtimes(&self) -> impl Iterator<Item = &InstanceRuntime> {
+        self.members.iter().map(|m| &m.runtime)
+    }
+
+    /// The dynamic digest view: promote due warm-ups, then collect the
+    /// digests of every placeable member in id order. This — not a dense
+    /// `0..n` slice — is what `Policy::place` sees; the `id` carried by
+    /// each digest is the routing key.
+    pub fn placeable_digests_into(&mut self, now: f64, out: &mut Vec<LoadDigest>) {
+        self.promote_warm(now);
+        out.clear();
+        out.extend(self.members.iter().filter(|m| m.placeable()).map(|m| m.runtime.digest()));
+    }
+
+    pub fn placeable_count(&self) -> usize {
+        self.members.iter().filter(|m| m.placeable()).count()
+    }
+
+    /// Members still in the fleet (warming + active + draining).
+    pub fn provisioned_count(&self) -> usize {
+        self.members.iter().filter(|m| m.provisioned()).count()
+    }
+
+    /// The most recently added drainable member (active *or* still
+    /// warming — consistent with what [`Cluster::drain`] accepts) — the
+    /// deterministic scale-down victim of [`ScaleAction::DrainNewest`].
+    /// Including warming members keeps "drain what was just added"
+    /// semantics even when the drain event lands inside the warm-up
+    /// window; the alternative would silently drain a loaded older
+    /// instance while keeping the idle new one.
+    pub fn newest_active(&self) -> Option<InstanceId> {
+        self.members
+            .iter()
+            .rev()
+            .find(|m| matches!(m.state, MemberState::Active | MemberState::Warming { .. }))
+            .map(|m| m.id)
+    }
+
+    /// Fleet GPU-seconds accrued by `now`: Σ over members of
+    /// (removed_at | now) − added_at, × GPUs per instance. The
+    /// denominator of goodput-per-GPU-second.
+    pub fn gpu_seconds(&self, now: f64) -> f64 {
+        self.members.iter().map(|m| m.lifetime(now)).sum::<f64>() * self.gpus_per_instance
+    }
+
+    /// Chronological membership transitions.
+    pub fn timeline(&self) -> &[FleetEvent] {
+        &self.timeline
+    }
+
+    /// Provisioned-fleet size as a step function: (time, instance count)
+    /// after each change, collapsed per instant — the per-system fleet
+    /// timeline the elastic experiment emits.
+    pub fn size_timeline(&self) -> Vec<(f64, usize)> {
+        let mut events: Vec<FleetEvent> = self
+            .timeline
+            .iter()
+            .filter(|e| matches!(e.change, FleetChange::Added | FleetChange::Removed))
+            .copied()
+            .collect();
+        events.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap_or(std::cmp::Ordering::Equal));
+        let mut out: Vec<(f64, usize)> = Vec::new();
+        let mut n = 0usize;
+        for e in events {
+            match e.change {
+                FleetChange::Added => n += 1,
+                FleetChange::Removed => n -= 1,
+                _ => {}
+            }
+            match out.last_mut() {
+                Some(last) if last.0 == e.at => last.1 = n,
+                _ => out.push((e.at, n)),
+            }
+        }
+        out
+    }
+}
+
+/// One scaling instruction from an [`Autoscaler`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScaleDirective {
+    /// Provision `count` new instances (warm-up applies to each).
+    Add { count: usize },
+    /// Begin draining a specific member.
+    Drain { id: InstanceId },
+}
+
+/// Deterministic scaling action for scenario-attached [`ScaleEvent`]s —
+/// resolved against the membership at execution time, so a scenario can
+/// describe "drain one instance at t=40s" without knowing ids up front.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScaleAction {
+    Add { count: usize },
+    /// Drain the `count` most recently added members (active or still
+    /// warming — see [`Cluster::newest_active`]).
+    DrainNewest { count: usize },
+}
+
+/// A scheduled scaling action attachable to a `Scenario` — shaped loads
+/// (diurnal/burst) exercise scale-up/scale-down deterministically with
+/// these, independent of any autoscaler.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleEvent {
+    /// Virtual seconds from scenario start.
+    pub at: f64,
+    pub action: ScaleAction,
+}
+
+/// The autoscaling seam: called periodically by the executor with the
+/// current *placeable* digest view; returns directives the host applies
+/// (subject to the cluster's own guard rails). Implementations must be
+/// deterministic functions of `(now, digests)` and their own state for
+/// same-seed elastic runs to stay bit-identical.
+pub trait Autoscaler: Send {
+    fn decide(&mut self, now: f64, digests: &[LoadDigest]) -> Vec<ScaleDirective>;
+}
+
+/// Scalar load pressure of one instance in [0, ∞): the max of its KV
+/// occupancy, its queued-prefill backlog normalized by `prefill_budget`
+/// tokens, and a saturating 1.0 whenever KV admission is backed up
+/// (waiting segments mean the instance is at capacity no matter what the
+/// meter reads).
+pub fn pressure(d: &LoadDigest, prefill_budget: usize) -> f64 {
+    let backlog = d.pending_prefill as f64 / prefill_budget.max(1) as f64;
+    let waiting = if d.waiting > 0 { 1.0 } else { 0.0 };
+    d.kv_utilization.max(backlog).max(waiting)
+}
+
+/// Tuning for the [`BandAutoscaler`].
+#[derive(Debug, Clone, Copy)]
+pub struct BandConfig {
+    /// Mean fleet pressure above which to add an instance.
+    pub high: f64,
+    /// Mean fleet pressure below which to drain one.
+    pub low: f64,
+    pub min_instances: usize,
+    pub max_instances: usize,
+    /// Seconds between directives (should cover the warm-up delay, or the
+    /// scaler re-adds while the last instance is still warming).
+    pub cooldown: f64,
+    /// Queued prefill tokens equated to pressure 1.0 (see [`pressure`]).
+    pub prefill_backlog_budget: usize,
+}
+
+impl Default for BandConfig {
+    fn default() -> Self {
+        BandConfig {
+            high: 0.75,
+            low: 0.25,
+            min_instances: 1,
+            max_instances: 8,
+            cooldown: 5.0,
+            prefill_backlog_budget: 16_384,
+        }
+    }
+}
+
+/// The default utilization-band autoscaler: adds one instance when mean
+/// fleet [`pressure`] exceeds `high`, drains the newest active member when
+/// it sinks below `low`, one directive per cooldown window. Driven
+/// entirely by the digests the schedulers already maintain — no extra
+/// state is collected from the instances.
+///
+/// `decide` only sees the *placeable* view, so an instance it just added
+/// is invisible while it warms up. The scaler therefore remembers the
+/// fleet size its last directive should produce and holds off until the
+/// view catches up — without this, any warm-up longer than the cooldown
+/// would trigger an add storm past `max_instances` (and a low-pressure
+/// dip during a warm-up would drain a loaded older instance while the
+/// idle new one is kept).
+pub struct BandAutoscaler {
+    pub cfg: BandConfig,
+    last_action: f64,
+    /// Placeable-fleet size the last directive targets; directives are
+    /// withheld while the observed view is still below it.
+    expected_fleet: usize,
+}
+
+impl BandAutoscaler {
+    pub fn new(cfg: BandConfig) -> Self {
+        BandAutoscaler { cfg, last_action: f64::NEG_INFINITY, expected_fleet: 0 }
+    }
+}
+
+impl Autoscaler for BandAutoscaler {
+    fn decide(&mut self, now: f64, digests: &[LoadDigest]) -> Vec<ScaleDirective> {
+        let n = digests.len();
+        // Did the view reach what the last directive targeted? A stale
+        // expectation (2 cooldowns without materializing — the host's
+        // provisioning cap refused the add, or a live spawn died before
+        // publishing readiness) is reconciled so a single refused add
+        // cannot gate the scaler off for the rest of the run; but only a
+        // *genuinely* caught-up view unlocks draining, so the stale-reset
+        // path can never drain a loaded older member while the add it
+        // lost track of is still warming.
+        let caught_up = n >= self.expected_fleet;
+        if caught_up || now - self.last_action >= 2.0 * self.cfg.cooldown {
+            self.expected_fleet = n;
+        }
+        if n == 0 || n < self.expected_fleet || now - self.last_action < self.cfg.cooldown {
+            return vec![];
+        }
+        let mean = digests
+            .iter()
+            .map(|d| pressure(d, self.cfg.prefill_backlog_budget))
+            .sum::<f64>()
+            / n as f64;
+        if mean > self.cfg.high && n < self.cfg.max_instances {
+            self.last_action = now;
+            self.expected_fleet = n + 1;
+            return vec![ScaleDirective::Add { count: 1 }];
+        }
+        if caught_up && mean < self.cfg.low && n > self.cfg.min_instances {
+            // newest member of the placeable view (nothing is warming
+            // here — the expected_fleet gate above saw to that)
+            let id = digests.iter().map(|d| d.id).max().expect("non-empty view");
+            self.last_action = now;
+            self.expected_fleet = n - 1;
+            return vec![ScaleDirective::Drain { id }];
+        }
+        vec![]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{LocalConfig, LocalScheduler, ProfileTable};
+    use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+
+    fn cluster_with(n: usize) -> Cluster {
+        let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
+        let profile = ProfileTable::seeded(&spec);
+        let mut c = Cluster::new(spec.tp as f64);
+        for _ in 0..n {
+            c.add_instance(0.0, 0.0, |id| {
+                InstanceRuntime::new(
+                    id,
+                    spec.clone(),
+                    LocalScheduler::new(LocalConfig::default(), profile.clone()),
+                )
+            });
+        }
+        c
+    }
+
+    fn add(c: &mut Cluster, now: f64, warmup: f64) -> InstanceId {
+        let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
+        let profile = ProfileTable::seeded(&spec);
+        c.add_instance(now, warmup, |id| {
+            InstanceRuntime::new(
+                id,
+                spec.clone(),
+                LocalScheduler::new(LocalConfig::default(), profile.clone()),
+            )
+        })
+    }
+
+    #[test]
+    fn ids_are_monotonic_and_never_reused() {
+        let mut c = cluster_with(2);
+        let a = add(&mut c, 1.0, 0.0);
+        assert_eq!(a, InstanceId(2));
+        assert!(c.drain(a, 2.0));
+        c.retire(a, 2.0);
+        let b = add(&mut c, 3.0, 0.0);
+        assert_eq!(b, InstanceId(3), "retired ids must not be recycled");
+        assert_eq!(c.provisioned_count(), 3);
+        assert_eq!(c.members().len(), 4);
+    }
+
+    #[test]
+    fn warmup_gates_placeability_but_not_gpu_seconds() {
+        let mut c = cluster_with(1);
+        let id = add(&mut c, 10.0, 5.0);
+        let mut v = Vec::new();
+        c.placeable_digests_into(12.0, &mut v);
+        assert_eq!(v.len(), 1, "warming member must not be placeable");
+        c.placeable_digests_into(15.0, &mut v);
+        assert_eq!(v.len(), 2, "warm-up elapsed at 15.0");
+        assert_eq!(v[1].id, id);
+        // the Warmed timeline entry carries the deadline, not poll time
+        let warmed = c
+            .timeline()
+            .iter()
+            .find(|e| e.id == id && e.change == FleetChange::Warmed)
+            .unwrap();
+        assert_eq!(warmed.at, 15.0);
+        // bring-up is paid for: GPU-seconds accrue from add time
+        assert!((c.gpu_seconds(20.0) - (20.0 + 10.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drain_refuses_last_placeable_member() {
+        let mut c = cluster_with(2);
+        assert!(c.drain(InstanceId(1), 1.0));
+        assert!(!c.drain(InstanceId(0), 1.0), "must keep one placeable member");
+        assert!(!c.drain(InstanceId(1), 1.0), "already draining");
+        assert!(!c.drain(InstanceId(9), 1.0), "unknown id");
+        assert_eq!(c.placeable_count(), 1);
+    }
+
+    #[test]
+    fn retire_freezes_gpu_seconds() {
+        let mut c = cluster_with(2);
+        assert!(c.drain(InstanceId(1), 4.0));
+        c.retire(InstanceId(1), 6.0);
+        let m = c.member(InstanceId(1)).unwrap();
+        assert_eq!(m.removed_at, Some(6.0));
+        // member 0 runs to 10.0 (10 GPU-s), member 1 stopped at 6.0
+        assert!((c.gpu_seconds(10.0) - 16.0).abs() < 1e-9);
+        // meter stays frozen however late we read it
+        assert!((c.gpu_seconds(100.0) - 106.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn size_timeline_steps_through_membership() {
+        let mut c = cluster_with(2);
+        let a = add(&mut c, 5.0, 1.0);
+        assert!(c.drain(a, 8.0));
+        c.retire(a, 9.0);
+        assert_eq!(c.size_timeline(), vec![(0.0, 2), (5.0, 3), (9.0, 2)]);
+    }
+
+    #[test]
+    fn newest_active_is_the_scale_down_victim() {
+        let mut c = cluster_with(3);
+        assert_eq!(c.newest_active(), Some(InstanceId(2)));
+        assert!(c.drain(InstanceId(2), 1.0));
+        assert_eq!(c.newest_active(), Some(InstanceId(1)));
+    }
+
+    #[test]
+    fn newest_active_prefers_a_still_warming_member() {
+        // DrainNewest inside the warm-up window must pick the instance
+        // that was just added, not a loaded older one
+        let mut c = cluster_with(2);
+        let warming = add(&mut c, 10.0, 5.0);
+        assert_eq!(c.newest_active(), Some(warming));
+        assert!(c.drain(warming, 12.0), "a warming member is drainable");
+        assert_eq!(c.newest_active(), Some(InstanceId(1)));
+    }
+
+    #[test]
+    fn band_autoscaler_scales_up_under_pressure() {
+        let mut a = BandAutoscaler::new(BandConfig {
+            cooldown: 2.0,
+            max_instances: 4,
+            ..Default::default()
+        });
+        let hot = |id: u32| LoadDigest {
+            id: InstanceId(id),
+            kv_utilization: 0.9,
+            ..Default::default()
+        };
+        let v: Vec<LoadDigest> = (0..2).map(hot).collect();
+        assert_eq!(a.decide(0.0, &v), vec![ScaleDirective::Add { count: 1 }]);
+        // cooldown suppresses the immediate follow-up…
+        assert_eq!(a.decide(1.0, &v), vec![]);
+        // …and past the cooldown the scaler still waits for the placeable
+        // view to reflect its last add (the member is warming) — without
+        // this gate a warm-up longer than the cooldown means add storms
+        assert_eq!(a.decide(2.5, &v), vec![]);
+        let v3: Vec<LoadDigest> = (0..3).map(hot).collect();
+        assert_eq!(a.decide(2.5, &v3), vec![ScaleDirective::Add { count: 1 }]);
+        // at max_instances it stops adding
+        let v4: Vec<LoadDigest> = (0..4).map(hot).collect();
+        assert_eq!(a.decide(10.0, &v4), vec![]);
+    }
+
+    #[test]
+    fn band_autoscaler_drains_newest_when_idle() {
+        let mut a = BandAutoscaler::new(BandConfig { min_instances: 2, ..Default::default() });
+        let idle: Vec<LoadDigest> =
+            (0..3).map(|i| LoadDigest::idle(InstanceId(i))).collect();
+        assert_eq!(a.decide(100.0, &idle), vec![ScaleDirective::Drain { id: InstanceId(2) }]);
+        // at min_instances it holds steady
+        let mut b = BandAutoscaler::new(BandConfig { min_instances: 2, ..Default::default() });
+        let two: Vec<LoadDigest> = (0..2).map(|i| LoadDigest::idle(InstanceId(i))).collect();
+        assert_eq!(b.decide(100.0, &two), vec![]);
+    }
+
+    #[test]
+    fn pressure_saturates_on_admission_backpressure() {
+        let mut d = LoadDigest::idle(InstanceId(0));
+        d.kv_utilization = 0.2;
+        assert!((pressure(&d, 1000) - 0.2).abs() < 1e-12);
+        d.pending_prefill = 500;
+        assert!((pressure(&d, 1000) - 0.5).abs() < 1e-12);
+        d.waiting = 1;
+        assert!(pressure(&d, 1000) >= 1.0);
+    }
+}

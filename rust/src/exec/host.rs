@@ -1,6 +1,7 @@
 //! [`VirtualExecutor`]: the discrete-event host that drives the shared
 //! lifecycle in virtual time — arrivals → policy placement → per-instance
-//! iteration loops → modeled KV transfers → token metrics.
+//! iteration loops → modeled KV transfers → token metrics — over an
+//! **elastic** [`Cluster`] whose membership can change mid-run.
 //!
 //! This is one of the two thin instantiations of the `exec` core
 //! (DESIGN.md §3): [`VirtualClock`] + [`ModeledTransport`] + cost-model
@@ -8,6 +9,17 @@
 //! real engine + out-of-band KV payloads); both drive the *same*
 //! [`InstanceRuntime`] state machine, so `sim::Simulator` is simply a
 //! re-export of this type.
+//!
+//! Elastic control plane (DESIGN.md §Elastic): instances live in a
+//! [`Cluster`] registry keyed by stable [`InstanceId`]s. Scheduled
+//! [`ScaleEvent`]s ([`VirtualExecutor::push_scale_events`]) and an
+//! optional [`Autoscaler`] ([`VirtualExecutor::set_autoscaler`], ticked
+//! every `cfg.autoscale_interval` virtual seconds) add instances (with a
+//! modeled `cfg.warmup` bring-up before they become placeable) and drain
+//! them ([`VirtualExecutor::drain`]: no new placements, pending
+//! β-handoffs re-placed, resident segments finished, then the GPU-second
+//! meter freezes). The run summary carries fleet GPU-seconds and
+//! goodput-per-GPU-second so elastic runs are scoreable.
 //!
 //! Hot-path contract (DESIGN.md §Perf, "Simulator hot path"): the default
 //! arrival path feeds the policy O(1) [`LoadDigest`]s maintained
@@ -21,9 +33,12 @@ use std::time::Instant;
 
 use crate::coordinator::local::BatchPlan;
 use crate::coordinator::{LoadDigest, LocalConfig, LocalScheduler, ProfileTable};
-use crate::core::Request;
+use crate::core::{InstanceId, Request};
 use crate::costmodel::InstanceSpec;
 use crate::exec::clock::{Clock, VirtualClock};
+use crate::exec::cluster::{
+    Autoscaler, Cluster, MemberState, ScaleAction, ScaleDirective, ScaleEvent,
+};
 use crate::exec::policy::Policy;
 use crate::exec::runtime::{InstanceRuntime, SegmentDisposition, SeqKey};
 use crate::exec::submit::{make_segment, plan_submission};
@@ -32,16 +47,65 @@ use crate::kv::LinkSpec;
 use crate::metrics::{Collector, SloConfig, Summary};
 use crate::util::stats::Samples;
 
+/// Invalid executor configuration, rejected at construction by
+/// [`ExecConfigBuilder::build`] — before `serve()`/`run()` can trip over
+/// it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ConfigError {
+    /// The bootstrap fleet must have at least one instance.
+    NoInstances,
+    /// The instance spec leaves zero KV capacity (weights exceed HBM):
+    /// no segment could ever be admitted.
+    ZeroKvCapacity,
+    /// Warm-up must be a finite non-negative number of seconds.
+    InvalidWarmup(f64),
+    /// The simulation horizon must be positive.
+    InvalidHorizon(f64),
+    /// The autoscaler tick interval must be positive.
+    InvalidAutoscaleInterval(f64),
+    /// The provisioning cap cannot be below the bootstrap fleet size.
+    MaxBelowInitial { max: usize, initial: usize },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::NoInstances => write!(f, "need at least one instance"),
+            ConfigError::ZeroKvCapacity => {
+                write!(f, "instance spec has zero KV capacity (weights exceed HBM)")
+            }
+            ConfigError::InvalidWarmup(w) => {
+                write!(f, "warm-up must be finite and >= 0 (got {w})")
+            }
+            ConfigError::InvalidHorizon(h) => write!(f, "horizon must be positive (got {h})"),
+            ConfigError::InvalidAutoscaleInterval(i) => {
+                write!(f, "autoscale interval must be positive (got {i})")
+            }
+            ConfigError::MaxBelowInitial { max, initial } => write!(
+                f,
+                "max_instances ({max}) is below the bootstrap fleet size ({initial})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
 /// Configuration of a virtual-time executor (re-exported as
-/// `sim::SimConfig`).
+/// `sim::SimConfig`). Built — and validated — by [`ExecConfig::builder`];
+/// the fields stay public for post-build tweaking by harnesses that swap
+/// scheduler knobs between otherwise-identical runs.
 #[derive(Debug, Clone)]
 pub struct ExecConfig {
     pub spec: InstanceSpec,
+    /// Bootstrap fleet size (instances active at t = 0; scale events and
+    /// the autoscaler change membership from there).
     pub n_instances: usize,
     /// Local scheduler config for all instances…
     pub local: LocalConfig,
-    /// …with per-instance overrides (e.g. disagg prefill pool uses a fixed
-    /// chunk budget, decode pool decodes only).
+    /// …with per-instance overrides keyed by *bootstrap index* (e.g. the
+    /// disagg prefill pool uses a fixed chunk budget). Instances added by
+    /// scale events use the base `local` config.
     pub local_overrides: Vec<(usize, LocalConfig)>,
     pub slo: SloConfig,
     pub link: LinkSpec,
@@ -54,31 +118,147 @@ pub struct ExecConfig {
     pub exact_snapshots: bool,
     /// Safety cap on simulated seconds.
     pub horizon: f64,
+    /// Modeled bring-up delay for instances added after bootstrap: they
+    /// accrue GPU-seconds immediately but become placeable only after
+    /// this many seconds.
+    pub warmup: f64,
+    /// Autoscaler cadence in virtual seconds (only ticks when an
+    /// autoscaler is installed).
+    pub autoscale_interval: f64,
+    /// Hard cap on provisioned instances (guards runaway autoscalers).
+    pub max_instances: usize,
 }
 
 impl ExecConfig {
-    pub fn new(spec: InstanceSpec, n_instances: usize) -> Self {
-        ExecConfig {
-            spec,
-            n_instances,
-            local: LocalConfig::default(),
-            local_overrides: vec![],
-            slo: SloConfig::default(),
-            link: LinkSpec::default(),
-            transfer_chunk_tokens: 512,
-            chunked_transfer: true,
-            exact_snapshots: false,
-            horizon: 100_000.0,
+    /// Start building a validated config for a bootstrap fleet of
+    /// `n_instances` copies of `spec`.
+    pub fn builder(spec: InstanceSpec, n_instances: usize) -> ExecConfigBuilder {
+        ExecConfigBuilder {
+            cfg: ExecConfig {
+                spec,
+                n_instances,
+                local: LocalConfig::default(),
+                local_overrides: vec![],
+                slo: SloConfig::default(),
+                link: LinkSpec::default(),
+                transfer_chunk_tokens: 512,
+                chunked_transfer: true,
+                exact_snapshots: false,
+                horizon: 100_000.0,
+                warmup: 2.0,
+                autoscale_interval: 1.0,
+                max_instances: 64,
+            },
         }
+    }
+}
+
+/// Builder for [`ExecConfig`]; [`build`](ExecConfigBuilder::build)
+/// validates and returns `Err(`[`ConfigError`]`)` for configs that could
+/// only fail later inside `run()`/`serve()` (zero instances,
+/// zero-capacity KV, negative warm-up, …).
+#[derive(Debug, Clone)]
+pub struct ExecConfigBuilder {
+    cfg: ExecConfig,
+}
+
+impl ExecConfigBuilder {
+    pub fn local(mut self, local: LocalConfig) -> Self {
+        self.cfg.local = local;
+        self
+    }
+
+    /// Override the local scheduler config of one bootstrap instance.
+    pub fn local_override(mut self, bootstrap_index: usize, local: LocalConfig) -> Self {
+        self.cfg.local_overrides.push((bootstrap_index, local));
+        self
+    }
+
+    pub fn slo(mut self, slo: SloConfig) -> Self {
+        self.cfg.slo = slo;
+        self
+    }
+
+    pub fn link(mut self, link: LinkSpec) -> Self {
+        self.cfg.link = link;
+        self
+    }
+
+    pub fn transfer_chunk_tokens(mut self, tokens: usize) -> Self {
+        self.cfg.transfer_chunk_tokens = tokens;
+        self
+    }
+
+    pub fn chunked_transfer(mut self, chunked: bool) -> Self {
+        self.cfg.chunked_transfer = chunked;
+        self
+    }
+
+    pub fn exact_snapshots(mut self, exact: bool) -> Self {
+        self.cfg.exact_snapshots = exact;
+        self
+    }
+
+    pub fn horizon(mut self, seconds: f64) -> Self {
+        self.cfg.horizon = seconds;
+        self
+    }
+
+    pub fn warmup(mut self, seconds: f64) -> Self {
+        self.cfg.warmup = seconds;
+        self
+    }
+
+    pub fn autoscale_interval(mut self, seconds: f64) -> Self {
+        self.cfg.autoscale_interval = seconds;
+        self
+    }
+
+    pub fn max_instances(mut self, max: usize) -> Self {
+        self.cfg.max_instances = max;
+        self
+    }
+
+    pub fn build(self) -> Result<ExecConfig, ConfigError> {
+        let c = &self.cfg;
+        if c.n_instances == 0 {
+            return Err(ConfigError::NoInstances);
+        }
+        if c.spec.kv_capacity_tokens() == 0 {
+            return Err(ConfigError::ZeroKvCapacity);
+        }
+        if !c.warmup.is_finite() || c.warmup < 0.0 {
+            return Err(ConfigError::InvalidWarmup(c.warmup));
+        }
+        if !c.horizon.is_finite() || c.horizon <= 0.0 {
+            return Err(ConfigError::InvalidHorizon(c.horizon));
+        }
+        if !c.autoscale_interval.is_finite() || c.autoscale_interval <= 0.0 {
+            return Err(ConfigError::InvalidAutoscaleInterval(c.autoscale_interval));
+        }
+        if c.max_instances < c.n_instances {
+            return Err(ConfigError::MaxBelowInitial {
+                max: c.max_instances,
+                initial: c.n_instances,
+            });
+        }
+        Ok(self.cfg)
     }
 }
 
 #[derive(Debug)]
 enum EventKind {
     Arrival(Request),
-    IterDone { instance: usize, plan: BatchPlan, latency: f64 },
-    SeqReady { instance: usize, key: SeqKey },
-    AlphaEvict { instance: usize, key: SeqKey },
+    IterDone { instance: InstanceId, plan: BatchPlan, latency: f64 },
+    SeqReady { instance: InstanceId, key: SeqKey },
+    AlphaEvict { instance: InstanceId, key: SeqKey },
+    /// Deferred first kick of a warming instance (fires at its warm-up
+    /// deadline).
+    Kick { instance: InstanceId },
+    /// Scheduled scenario scale event.
+    Scale(ScaleAction),
+    /// Periodic autoscaler evaluation.
+    AutoscaleTick,
 }
 
 struct Event {
@@ -112,7 +292,9 @@ impl Ord for Event {
 /// The discrete-event executor (re-exported as `sim::Simulator`).
 pub struct VirtualExecutor {
     pub cfg: ExecConfig,
-    pub instances: Vec<InstanceRuntime>,
+    /// The elastic membership registry (instances, states, GPU-seconds,
+    /// fleet timeline).
+    pub cluster: Cluster,
     policy: Box<dyn Policy>,
     profile: ProfileTable,
     pub collector: Collector,
@@ -128,6 +310,17 @@ pub struct VirtualExecutor {
     /// queued (resident segments are then a truncation artifact, not a
     /// scheduling deadlock).
     truncated: bool,
+    /// Installed by [`Self::set_autoscaler`]; evaluated every
+    /// `cfg.autoscale_interval` virtual seconds while work remains.
+    autoscaler: Option<Box<dyn Autoscaler>>,
+    /// Scenario scale events queued for the next `run`.
+    pending_scale_events: Vec<ScaleEvent>,
+    /// Time of the last *lifecycle* event (arrival/iteration/transfer) —
+    /// the serving end the summary is scored over. Bookkeeping events
+    /// (autoscaler ticks, warm-up kicks, late scale events) advance the
+    /// clock but not this, so an autoscaled run is not charged phantom
+    /// duration/GPU-seconds for its final idle tick.
+    work_end: f64,
     /// Reusable digest buffer (keeps the arrival path allocation-free).
     loads: Vec<LoadDigest>,
     /// Reusable completed-segment buffer for iteration application.
@@ -137,18 +330,21 @@ pub struct VirtualExecutor {
 impl VirtualExecutor {
     pub fn new(cfg: ExecConfig, policy: Box<dyn Policy>) -> Self {
         let profile = ProfileTable::seeded(&cfg.spec);
-        let instances = (0..cfg.n_instances)
-            .map(|id| {
-                let mut lc = cfg.local;
-                for (i, o) in &cfg.local_overrides {
-                    if *i == id {
-                        lc = *o;
-                    }
+        let mut cluster = Cluster::new(cfg.spec.tp as f64);
+        for i in 0..cfg.n_instances {
+            let mut lc = cfg.local;
+            for (j, o) in &cfg.local_overrides {
+                if *j == i {
+                    lc = *o;
                 }
-                lc.slo = cfg.slo.tbt;
-                InstanceRuntime::new(id, cfg.spec.clone(), LocalScheduler::new(lc, profile.clone()))
-            })
-            .collect();
+            }
+            lc.slo = cfg.slo.tbt;
+            let (spec, prof) = (cfg.spec.clone(), profile.clone());
+            // the bootstrap fleet is active at t = 0 (no warm-up)
+            cluster.add_instance(0.0, 0.0, |id| {
+                InstanceRuntime::new(id, spec, LocalScheduler::new(lc, prof))
+            });
+        }
         let transport = ModeledTransport::new(
             cfg.link,
             cfg.transfer_chunk_tokens,
@@ -158,7 +354,7 @@ impl VirtualExecutor {
         VirtualExecutor {
             collector: Collector::new(cfg.slo),
             cfg,
-            instances,
+            cluster,
             policy,
             profile,
             events: BinaryHeap::new(),
@@ -167,6 +363,9 @@ impl VirtualExecutor {
             sched_overhead: Samples::new(),
             clock: VirtualClock::new(),
             truncated: false,
+            autoscaler: None,
+            pending_scale_events: Vec::new(),
+            work_end: 0.0,
             loads: Vec::new(),
             completed_buf: Vec::new(),
         }
@@ -182,18 +381,55 @@ impl VirtualExecutor {
         self.clock.now()
     }
 
-    /// Run to completion over `requests`; returns the serving summary.
+    /// Instance runtimes in id order, retired members included — the
+    /// utilization-stats view the experiment harnesses iterate.
+    pub fn instances(&self) -> impl Iterator<Item = &InstanceRuntime> {
+        self.cluster.runtimes()
+    }
+
+    /// Install an autoscaler, evaluated every `cfg.autoscale_interval`
+    /// virtual seconds over the placeable digest view while work remains.
+    pub fn set_autoscaler(&mut self, scaler: Box<dyn Autoscaler>) {
+        self.autoscaler = Some(scaler);
+    }
+
+    /// Queue deterministic scale events for the next [`Self::run`] (e.g.
+    /// a scenario's `scale_events`).
+    pub fn push_scale_events(&mut self, events: &[ScaleEvent]) {
+        self.pending_scale_events.extend_from_slice(events);
+    }
+
+    /// Run to completion over `requests`; returns the serving summary
+    /// (including fleet GPU-seconds and goodput-per-GPU-second).
     pub fn run(&mut self, requests: Vec<Request>) -> Summary {
         for r in requests {
             self.push(r.arrival, EventKind::Arrival(r));
         }
+        for ev in std::mem::take(&mut self.pending_scale_events) {
+            self.push(ev.at, EventKind::Scale(ev.action));
+        }
+        if self.autoscaler.is_some() {
+            let t = self.now() + self.cfg.autoscale_interval;
+            self.push(t, EventKind::AutoscaleTick);
+        }
         self.truncated = false;
+        self.work_end = self.now();
         while let Some(ev) = self.events.pop() {
             if ev.time > self.cfg.horizon {
                 self.truncated = true;
                 break;
             }
             self.clock.set(ev.time);
+            let now = ev.time;
+            if matches!(
+                ev.kind,
+                EventKind::Arrival(_)
+                    | EventKind::IterDone { .. }
+                    | EventKind::SeqReady { .. }
+                    | EventKind::AlphaEvict { .. }
+            ) {
+                self.work_end = now;
+            }
             match ev.kind {
                 EventKind::Arrival(req) => self.on_arrival(req),
                 EventKind::IterDone { instance, plan, latency } => {
@@ -201,27 +437,52 @@ impl VirtualExecutor {
                 }
                 EventKind::SeqReady { instance, key } => {
                     // the arena holds the segment whether it is admitted or
-                    // still in the KV-backpressure queue
-                    self.instances[instance].mark_ready(key);
+                    // still in the KV-backpressure queue; stale keys (a β
+                    // re-placed away by a drain) are tolerated
+                    if let Some(rt) = self.cluster.runtime_mut(instance, now) {
+                        rt.mark_ready(key);
+                    }
                     self.kick(instance);
                 }
                 EventKind::AlphaEvict { instance, key } => {
-                    self.instances[instance].evict(key);
+                    if let Some(rt) = self.cluster.runtime_mut(instance, now) {
+                        rt.evict(key);
+                    }
                     self.kick(instance);
                 }
+                EventKind::Kick { instance } => self.kick(instance),
+                EventKind::Scale(action) => self.apply_scale_action(action),
+                EventKind::AutoscaleTick => self.on_autoscale_tick(),
             }
         }
         debug_assert!(
             self.truncated || self.stuck_requests() == 0,
             "executor drained its events with segments still resident"
         );
-        self.collector.summarize(self.now().max(1e-9))
+        let end = self.work_end;
+        self.collector
+            .summarize(end.max(1e-9))
+            .with_fleet(self.cluster.gpu_seconds(end))
     }
 
     /// Segments that never completed (should be 0 — any residue indicates
     /// a scheduling deadlock, unless the run was [`Self::truncated`]).
     pub fn stuck_requests(&self) -> usize {
-        self.instances.iter().map(|i| i.len()).sum()
+        self.cluster.members().iter().map(|m| m.runtime.len()).sum()
+    }
+
+    /// Per-instance residue: `(id, resident segments, KV-admission
+    /// waiting depth)` for every member still holding segments — the
+    /// drilled-down view [`crate::experiments::runners::warn_if_stuck`]
+    /// prints (a wedged drain shows up here as one draining member that
+    /// never empties).
+    pub fn stuck_by_instance(&self) -> Vec<(InstanceId, usize, usize)> {
+        self.cluster
+            .members()
+            .iter()
+            .filter(|m| !m.runtime.is_empty())
+            .map(|m| (m.id, m.runtime.len(), m.runtime.digest().waiting))
+            .collect()
     }
 
     /// Whether the last `run` stopped at the `cfg.horizon` cap with events
@@ -231,25 +492,186 @@ impl VirtualExecutor {
         self.truncated
     }
 
+    /// Provision one instance (bounded by `cfg.max_instances`); it warms
+    /// up for `cfg.warmup` virtual seconds before taking placements.
+    pub fn add_instance(&mut self) -> Option<InstanceId> {
+        if self.cluster.provisioned_count() >= self.cfg.max_instances {
+            return None;
+        }
+        let now = self.now();
+        let mut lc = self.cfg.local;
+        lc.slo = self.cfg.slo.tbt;
+        let (spec, prof) = (self.cfg.spec.clone(), self.profile.clone());
+        let id = self.cluster.add_instance(now, self.cfg.warmup, |id| {
+            InstanceRuntime::new(id, spec, LocalScheduler::new(lc, prof))
+        });
+        Some(id)
+    }
+
+    /// Begin draining `id` (see DESIGN.md §Elastic): the instance stops
+    /// taking placements; gated β segments whose KV transfer has not
+    /// started are re-placed onto the least-loaded placeable peer (their
+    /// α's handoff address is retargeted); resident segments finish, and
+    /// the member retires — freezing its GPU-second meter — once empty.
+    /// Returns false when the cluster refuses (unknown id, already
+    /// draining, or last placeable member).
+    pub fn drain(&mut self, id: InstanceId) -> bool {
+        let now = self.now();
+        if !self.cluster.drain(id, now) {
+            return false;
+        }
+        let replaceable =
+            self.cluster.runtime(id).map(|r| r.replaceable_gated_keys()).unwrap_or_default();
+        for old_key in replaceable {
+            self.cluster.placeable_digests_into(now, &mut self.loads);
+            // least pending work, ties to the lowest id — deterministic
+            let target = self
+                .loads
+                .iter()
+                .min_by(|a, b| {
+                    (a.pending_prefill + a.pending_decode)
+                        .cmp(&(b.pending_prefill + b.pending_decode))
+                        .then(a.id.cmp(&b.id))
+                })
+                .map(|d| d.id);
+            // no placeable target (lone warming peer): β finishes in place
+            let Some(target) = target else { break };
+            let Some(mut seg) = self.cluster.runtime_mut(id, now).and_then(|r| r.evict(old_key))
+            else {
+                continue;
+            };
+            seg.admitted = false;
+            let new_key = self
+                .cluster
+                .runtime_mut(target, now)
+                .expect("placeable member is live")
+                .accept(seg);
+            // retarget the α's handoff address, wherever the α lives
+            let source = self
+                .cluster
+                .members()
+                .iter()
+                .find_map(|m| m.runtime.find_handoff_source((id, old_key)).map(|k| (m.id, k)));
+            let retargeted = source.is_some_and(|(a_inst, a_key)| {
+                self.cluster
+                    .runtime_mut(a_inst, now)
+                    .and_then(|r| r.get_mut(a_key))
+                    .map(|a| a.beta_dest = Some((target, new_key)))
+                    .is_some()
+            });
+            debug_assert!(retargeted, "re-placed β had no α handoff pointing at it");
+        }
+        // may already be empty (or emptied by the re-placements): the kick
+        // retires it; otherwise it keeps iterating until drained
+        self.kick(id);
+        true
+    }
+
+    /// The one place scaling directives are applied — scenario events and
+    /// autoscaler decisions both funnel through here.
+    fn apply_directive(&mut self, d: ScaleDirective) {
+        match d {
+            ScaleDirective::Add { count } => {
+                for _ in 0..count {
+                    if self.add_instance().is_none() {
+                        break;
+                    }
+                }
+            }
+            ScaleDirective::Drain { id } => {
+                self.drain(id);
+            }
+        }
+    }
+
+    fn apply_scale_action(&mut self, action: ScaleAction) {
+        match action {
+            ScaleAction::Add { count } => self.apply_directive(ScaleDirective::Add { count }),
+            ScaleAction::DrainNewest { count } => {
+                for _ in 0..count {
+                    match self.cluster.newest_active() {
+                        Some(id) => {
+                            if !self.drain(id) {
+                                break;
+                            }
+                        }
+                        None => break,
+                    }
+                }
+            }
+        }
+    }
+
+    fn on_autoscale_tick(&mut self) {
+        let now = self.now();
+        if self.autoscaler.is_none() {
+            return;
+        }
+        self.cluster.placeable_digests_into(now, &mut self.loads);
+        let directives = self.autoscaler.as_mut().unwrap().decide(now, &self.loads);
+        for d in directives {
+            self.apply_directive(d);
+        }
+        // Keep ticking only while other events are queued. Resident
+        // segments with an empty event heap are a scheduling deadlock
+        // the autoscaler cannot unwedge — rescheduling ticks for them
+        // would spin the clock to the horizon and misreport the deadlock
+        // as a truncated run (warn_if_stuck would then blame
+        // `cfg.horizon` instead of the scheduler).
+        if !self.events.is_empty() {
+            self.push(now + self.cfg.autoscale_interval, EventKind::AutoscaleTick);
+        }
+    }
+
     fn on_arrival(&mut self, req: Request) {
+        let now = self.now();
         // register class + per-request SLO targets before tokens stream in
         self.collector.on_request(&req);
         let placement = if self.cfg.exact_snapshots {
-            let snapshots: Vec<_> = self.instances.iter().map(|i| i.snapshot()).collect();
+            self.cluster.promote_warm(now);
+            let mut snapshots: Vec<_> = self
+                .cluster
+                .members()
+                .iter()
+                .filter(|m| m.placeable())
+                .map(|m| m.runtime.snapshot())
+                .collect();
+            if snapshots.is_empty() {
+                // same all-warming fallback as the digest path below
+                snapshots.extend(
+                    self.cluster
+                        .members()
+                        .iter()
+                        .filter(|m| matches!(m.state, MemberState::Warming { .. }))
+                        .map(|m| m.runtime.snapshot()),
+                );
+            }
             let t0 = Instant::now();
             let p = self.policy.place_exact(&req, &snapshots, &self.profile);
             self.sched_overhead.push(t0.elapsed().as_secs_f64());
             p
         } else {
-            self.loads.clear();
-            self.loads.extend(self.instances.iter().map(|i| i.digest()));
+            self.cluster.placeable_digests_into(now, &mut self.loads);
+            if self.loads.is_empty() {
+                // degenerate: no member is active — place on the warming
+                // fleet so the request is not lost (its work starts when
+                // the warm-up elapses; draining members stay excluded)
+                self.loads.extend(
+                    self.cluster
+                        .members()
+                        .iter()
+                        .filter(|m| matches!(m.state, MemberState::Warming { .. }))
+                        .map(|m| m.runtime.digest()),
+                );
+            }
             #[cfg(debug_assertions)]
-            for (inst, d) in self.instances.iter().zip(self.loads.iter()) {
+            for d in self.loads.iter() {
+                let m = self.cluster.member(d.id).expect("digest of a live member");
                 debug_assert_eq!(
-                    &LoadDigest::from_snapshot(&inst.snapshot()),
+                    &LoadDigest::from_snapshot(&m.runtime.snapshot()),
                     d,
                     "incremental digest drifted from the snapshot reduction on instance {}",
-                    inst.id
+                    m.id
                 );
             }
             let t0 = Instant::now();
@@ -261,16 +683,19 @@ impl VirtualExecutor {
         // One clamping path for both executors (exec::submit).
         let plan = plan_submission(&placement, &req);
         let a_inst = plan.alpha.instance;
-        let a_key = self.instances[a_inst].accept(make_segment(
-            &req,
-            &plan.alpha,
-            false,
-            plan.beta.is_some(),
-        ));
+        let a_key = self
+            .cluster
+            .runtime_mut(a_inst, now)
+            .expect("placement targets a live instance")
+            .accept(make_segment(&req, &plan.alpha, false, plan.beta.is_some()));
         if let Some(bp) = &plan.beta {
             // β is gated on its KV transfer; α carries the handoff address
-            let b_key = self.instances[bp.instance].accept(make_segment(&req, bp, true, false));
-            if let Some(a) = self.instances[a_inst].get_mut(a_key) {
+            let b_key = self
+                .cluster
+                .runtime_mut(bp.instance, now)
+                .expect("placement targets a live instance")
+                .accept(make_segment(&req, bp, true, false));
+            if let Some(a) = self.cluster.runtime_mut(a_inst, now).and_then(|r| r.get_mut(a_key)) {
                 a.beta_dest = Some((bp.instance, b_key));
             }
         }
@@ -279,24 +704,56 @@ impl VirtualExecutor {
     }
 
     /// Start an iteration if the instance is idle and has ready work.
-    fn kick(&mut self, i: usize) {
-        if self.instances[i].busy {
-            return;
+    /// Every membership-sensitive transition funnels through here: a
+    /// warming member defers its first kick to the warm-up deadline, and
+    /// a draining member that has emptied retires (freezing its
+    /// GPU-second meter).
+    fn kick(&mut self, i: InstanceId) {
+        let now = self.now();
+        let state = match self.cluster.member(i) {
+            Some(m) => m.state,
+            None => return,
+        };
+        match state {
+            MemberState::Retired => return,
+            MemberState::Warming { until } if now < until => {
+                // modeled bring-up: work waits for the warm-up deadline
+                self.push(until, EventKind::Kick { instance: i });
+                return;
+            }
+            MemberState::Warming { .. } => self.cluster.promote_warm(now),
+            MemberState::Draining
+                if self.cluster.runtime(i).map(|r| r.is_empty()).unwrap_or(true) =>
+            {
+                self.cluster.retire(i, now);
+                return;
+            }
+            _ => {}
         }
-        let plan = self.instances[i].plan_batch();
-        if plan.is_empty() {
-            return;
-        }
-        let latency = self.instances[i].plan_latency(&plan);
-        self.instances[i].busy = true;
-        self.push(self.now() + latency, EventKind::IterDone { instance: i, plan, latency });
+        let (plan, latency) = {
+            let rt = self.cluster.runtime_mut(i, now).expect("live member");
+            if rt.busy {
+                return;
+            }
+            let plan = rt.plan_batch();
+            if plan.is_empty() {
+                return;
+            }
+            let latency = rt.plan_latency(&plan);
+            rt.busy = true;
+            (plan, latency)
+        };
+        self.push(now + latency, EventKind::IterDone { instance: i, plan, latency });
     }
 
-    fn on_iter_done(&mut self, i: usize, plan: BatchPlan, latency: f64) {
+    fn on_iter_done(&mut self, i: InstanceId, plan: BatchPlan, latency: f64) {
         let now = self.now();
         // RECORD into the instance's own profile (under the plan's query
         // key) and the pool-wide table the policy probes read.
-        self.instances[i].record_iteration(&plan, latency);
+        self.cluster
+            .runtime_mut(i, now)
+            .expect("iterating member is live")
+            .record_iteration(&plan, latency);
         self.profile
             .record(plan.shape.prefill_tokens, plan.query_ctx, plan.shape.decode_reqs, latency);
 
@@ -304,7 +761,8 @@ impl VirtualExecutor {
         completed.clear();
         // apply prefill chunks
         for &(key, chunk) in &plan.prefill {
-            let Some(out) = self.instances[i].apply_prefill(key, chunk, now) else { continue };
+            let rt = self.cluster.runtime_mut(i, now).expect("iterating member is live");
+            let Some(out) = rt.apply_prefill(key, chunk, now) else { continue };
             if let Some((req, arr)) = out.emit {
                 self.collector.on_token(req, arr, now);
             }
@@ -314,7 +772,8 @@ impl VirtualExecutor {
         }
         // apply decode steps
         for &key in &plan.decodes {
-            let Some(out) = self.instances[i].apply_decode(key, now) else { continue };
+            let rt = self.cluster.runtime_mut(i, now).expect("iterating member is live");
+            let Some(out) = rt.apply_decode(key, now) else { continue };
             if let Some((req, arr)) = out.emit {
                 self.collector.on_token(req, arr, now);
             }
@@ -323,22 +782,32 @@ impl VirtualExecutor {
             }
         }
         for key in completed.drain(..) {
-            let disposition =
-                self.instances[i].complete_segment(key, now, &mut self.collector, &mut self.transport);
+            let disposition = {
+                let rt = self.cluster.runtime_mut(i, now).expect("iterating member is live");
+                rt.complete_segment(key, now, &mut self.collector, &mut self.transport)
+            };
             match disposition {
                 // nothing to schedule: the instance is still mid-iteration
                 // (busy), and the unconditional kick below restarts it
                 SegmentDisposition::Finished => {}
                 SegmentDisposition::Handoff { dest, ready_at } => {
                     // β wakes when its context lands; α's KV stays pinned
-                    // until the transfer drains.
+                    // until the transfer drains. From here the β can no
+                    // longer be re-placed by a drain.
+                    if let Some(b) =
+                        self.cluster.runtime_mut(dest.0, now).and_then(|r| r.get_mut(dest.1))
+                    {
+                        b.transfer_started = true;
+                    }
                     self.push(ready_at, EventKind::SeqReady { instance: dest.0, key: dest.1 });
                     self.push(ready_at, EventKind::AlphaEvict { instance: i, key });
                 }
             }
         }
         self.completed_buf = completed;
-        self.instances[i].busy = false;
+        if let Some(rt) = self.cluster.runtime_mut(i, now) {
+            rt.busy = false;
+        }
         self.kick(i);
     }
 
@@ -349,5 +818,105 @@ impl VirtualExecutor {
     /// Mean per-request scheduling overhead in seconds (Table 3).
     pub fn mean_sched_overhead(&mut self) -> f64 {
         self.sched_overhead.mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::{GpuSpec, LlmSpec};
+    use crate::exec::cluster::{BandAutoscaler, BandConfig};
+    use crate::exec::policy::DynaServePolicy;
+    use crate::coordinator::GlobalConfig;
+
+    fn spec() -> InstanceSpec {
+        InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1)
+    }
+
+    fn dynaserve(cfg: ExecConfig) -> VirtualExecutor {
+        VirtualExecutor::new(cfg, Box::new(DynaServePolicy::new(GlobalConfig::default())))
+    }
+
+    #[test]
+    fn builder_validates_at_construction() {
+        assert_eq!(
+            ExecConfig::builder(spec(), 0).build().unwrap_err(),
+            ConfigError::NoInstances
+        );
+        assert!(matches!(
+            ExecConfig::builder(spec(), 2).warmup(-1.0).build().unwrap_err(),
+            ConfigError::InvalidWarmup(_)
+        ));
+        assert!(matches!(
+            ExecConfig::builder(spec(), 2).horizon(0.0).build().unwrap_err(),
+            ConfigError::InvalidHorizon(_)
+        ));
+        assert!(matches!(
+            ExecConfig::builder(spec(), 2).autoscale_interval(-3.0).build().unwrap_err(),
+            ConfigError::InvalidAutoscaleInterval(_)
+        ));
+        assert_eq!(
+            ExecConfig::builder(spec(), 4).max_instances(2).build().unwrap_err(),
+            ConfigError::MaxBelowInitial { max: 2, initial: 4 }
+        );
+        // a GPU too small to hold the weights leaves zero KV capacity
+        let tiny = InstanceSpec::new(
+            GpuSpec { hbm_capacity: 1e9, ..GpuSpec::a100() },
+            LlmSpec::qwen25_14b(),
+            1,
+        );
+        assert_eq!(
+            ExecConfig::builder(tiny, 2).build().unwrap_err(),
+            ConfigError::ZeroKvCapacity
+        );
+        assert!(ExecConfig::builder(spec(), 2).build().is_ok());
+    }
+
+    #[test]
+    fn scale_event_run_completes_and_accounts_gpu_seconds() {
+        use crate::workload::{poisson_workload, TraceKind};
+        let cfg = ExecConfig::builder(spec(), 2).warmup(0.5).build().unwrap();
+        let reqs = poisson_workload(TraceKind::BurstGpt, 2.0, 20.0, 11);
+        let n = reqs.len();
+        let mut ex = dynaserve(cfg);
+        ex.push_scale_events(&[
+            ScaleEvent { at: 5.0, action: ScaleAction::Add { count: 1 } },
+            ScaleEvent { at: 15.0, action: ScaleAction::DrainNewest { count: 1 } },
+        ]);
+        let s = ex.run(reqs);
+        assert_eq!(s.completed, n);
+        assert_eq!(ex.stuck_requests(), 0);
+        // three members ever provisioned, one retired
+        assert_eq!(ex.cluster.members().len(), 3);
+        let retired = ex
+            .cluster
+            .members()
+            .iter()
+            .find(|m| m.removed_at.is_some())
+            .expect("drained member retired");
+        assert!(retired.added_at >= 5.0 && retired.removed_at.unwrap() >= 15.0);
+        // GPU-seconds: two full-duration members plus the elastic one
+        assert!(s.gpu_seconds > 2.0 * s.duration);
+        assert!(s.gpu_seconds < 3.0 * s.duration);
+        assert!(s.goodput_per_gpu_s > 0.0);
+    }
+
+    #[test]
+    fn autoscaled_run_is_deterministic() {
+        use crate::workload::Scenario;
+        let sc = Scenario::by_name("hybrid").unwrap().smoke();
+        let run = || {
+            let cfg = ExecConfig::builder(spec(), 2).warmup(0.5).build().unwrap();
+            let mut ex = dynaserve(cfg);
+            ex.set_autoscaler(Box::new(BandAutoscaler::new(BandConfig {
+                min_instances: 2,
+                max_instances: 4,
+                cooldown: 1.0,
+                ..Default::default()
+            })));
+            let s = ex.run(sc.generate(7));
+            format!("{s:?} {:?}", ex.cluster.size_timeline())
+        };
+        assert_eq!(run(), run(), "same-seed autoscaled runs must be bit-identical");
     }
 }

@@ -23,6 +23,11 @@
 //!   payloads through `forward_kv` and signals readiness out-of-band.
 //! * [`policy`] — the [`Policy`](policy::Policy) trait (how arrivals
 //!   become placed segments) and DynaServe's APS implementation.
+//! * [`cluster`] — the elastic control plane: the [`Cluster`] membership
+//!   registry (stable [`InstanceId`](crate::core::InstanceId)s, warm-up /
+//!   drain / retire lifecycle, fleet GPU-second accounting), scenario
+//!   [`ScaleEvent`]s, and the [`Autoscaler`] seam with its
+//!   utilization-band default.
 //! * [`host`] — [`VirtualExecutor`]: the discrete-event host that drives
 //!   the lifecycle in virtual time. `sim::Simulator` *is* this type; the
 //!   live server instantiates the same [`InstanceRuntime`] per PJRT
@@ -36,6 +41,7 @@
 //! [`LocalScheduler`]: crate::coordinator::LocalScheduler
 
 pub mod clock;
+pub mod cluster;
 pub mod host;
 pub mod policy;
 pub mod runtime;
@@ -43,7 +49,11 @@ pub mod submit;
 pub mod transport;
 
 pub use clock::{Clock, VirtualClock, WallClock};
-pub use host::{ExecConfig, VirtualExecutor};
+pub use cluster::{
+    Autoscaler, BandAutoscaler, BandConfig, Cluster, FleetChange, FleetEvent, Member,
+    MemberState, ScaleAction, ScaleDirective, ScaleEvent,
+};
+pub use host::{ConfigError, ExecConfig, ExecConfigBuilder, VirtualExecutor};
 pub use runtime::{EventSink, InstanceRuntime, Segment, SegmentDisposition, SeqKey, StepOutcome};
 pub use submit::{make_segment, plan_submission, SegmentPlan, SubmitPlan};
 pub use transport::{

@@ -104,6 +104,7 @@ impl Policy for DynaServePolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::InstanceId;
     use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
 
     #[test]
@@ -111,7 +112,7 @@ mod tests {
         let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
         let profile = ProfileTable::seeded(&spec);
         let mut p = DynaServePolicy::new(GlobalConfig::default());
-        let loads: Vec<LoadDigest> = (0..2).map(LoadDigest::idle).collect();
+        let loads: Vec<LoadDigest> = (0..2).map(|i| LoadDigest::idle(InstanceId(i))).collect();
         let req = Request::new(1, 0.0, 1024, 512);
         let pl = p.place(&req, &loads, &profile);
         let total = pl.alpha.len() + pl.beta.as_ref().map(|b| b.len()).unwrap_or(0);
@@ -128,7 +129,7 @@ mod tests {
         let profile = ProfileTable::seeded(&spec);
         let mut p = DynaServePolicy::new(GlobalConfig::default());
         let snaps: Vec<InstanceSnapshot> =
-            (0..2).map(|id| InstanceSnapshot { id, ..Default::default() }).collect();
+            (0..2).map(|id| InstanceSnapshot { id: InstanceId::bootstrap(id), ..Default::default() }).collect();
         let req = Request::new(1, 0.0, 1024, 512);
         let pl = p.place_exact(&req, &snaps, &profile);
         let total = pl.alpha.len() + pl.beta.as_ref().map(|b| b.len()).unwrap_or(0);

@@ -47,7 +47,7 @@ use std::collections::VecDeque;
 
 use crate::coordinator::local::{BatchPlan, DecodeEntry, PrefillEntry};
 use crate::coordinator::{InstanceSnapshot, LoadDigest, LocalScheduler};
-use crate::core::RequestId;
+use crate::core::{InstanceId, RequestId};
 use crate::costmodel::InstanceSpec;
 use crate::exec::transport::{Handoff, HandoffDisposition, Transport};
 use crate::metrics::Collector;
@@ -117,7 +117,11 @@ pub struct Segment {
     /// α only: the waiting β's `(instance, key)` — keys are
     /// executor-scoped (arena keys in virtual time, leader-assigned ids
     /// on the live path). Drives the handoff at completion.
-    pub beta_dest: Option<(usize, u64)>,
+    pub beta_dest: Option<(InstanceId, u64)>,
+    /// β only: set by the host once its α→β KV transfer is scheduled —
+    /// from that point the segment can no longer be re-placed by a drain
+    /// (the in-flight transfer targets this instance).
+    pub transfer_started: bool,
     /// α-side KV production history for the transfer timeline; run-length
     /// coalesced, tracked only when a β segment waits on this one.
     pub kv_history: Vec<KvSpan>,
@@ -154,6 +158,7 @@ impl Segment {
             last_segment,
             admitted: false,
             beta_dest: None,
+            transfer_started: false,
             kv_history: Vec::new(),
             track_kv_history: false,
             arrival,
@@ -201,7 +206,7 @@ pub enum SegmentDisposition {
     Finished,
     /// α completed with a modeled transfer scheduled: the host must wake
     /// β (`dest`) at `ready_at` and evict the still-pinned α there.
-    Handoff { dest: (usize, u64), ready_at: f64 },
+    Handoff { dest: (InstanceId, u64), ready_at: f64 },
 }
 
 /// Generation-tagged slab of resident segments.
@@ -275,6 +280,14 @@ impl SeqArena {
     pub fn iter(&self) -> impl Iterator<Item = &Segment> {
         self.slots.iter().filter_map(|s| s.seq.as_ref())
     }
+
+    /// Live `(key, segment)` pairs in deterministic slot order.
+    pub fn iter_keys(&self) -> impl Iterator<Item = (SeqKey, &Segment)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.seq.as_ref().map(|seq| (key_of(i as u32, s.gen), seq)))
+    }
 }
 
 /// O(1) KV-capacity meter (the block-level allocator in `kv/block.rs`
@@ -336,7 +349,7 @@ pub struct InstanceStats {
 
 /// The per-instance lifecycle state machine (see module docs).
 pub struct InstanceRuntime {
-    pub id: usize,
+    pub id: InstanceId,
     pub spec: InstanceSpec,
     pub local: LocalScheduler,
     arena: SeqArena,
@@ -355,7 +368,7 @@ pub struct InstanceRuntime {
 }
 
 impl InstanceRuntime {
-    pub fn new(id: usize, spec: InstanceSpec, local: LocalScheduler) -> Self {
+    pub fn new(id: InstanceId, spec: InstanceSpec, local: LocalScheduler) -> Self {
         let kv = KvMeter::new(spec.kv_capacity_tokens());
         InstanceRuntime {
             id,
@@ -486,6 +499,27 @@ impl InstanceRuntime {
         if let Some(s) = self.arena.get_mut(key) {
             s.ready = true;
         }
+    }
+
+    /// Keys of gated β segments whose context transfer has not started —
+    /// the segments a drain can still re-place onto another instance
+    /// (once `transfer_started` the KV is en route here and the segment
+    /// must finish where it is).
+    pub fn replaceable_gated_keys(&self) -> Vec<SeqKey> {
+        self.arena
+            .iter_keys()
+            .filter(|(_, s)| !s.ready && !s.transfer_started && !s.finished())
+            .map(|(k, _)| k)
+            .collect()
+    }
+
+    /// The resident α segment whose handoff targets `dest`, if any —
+    /// lets a drain retarget the α's `beta_dest` after re-placing its β.
+    pub fn find_handoff_source(&self, dest: (InstanceId, u64)) -> Option<SeqKey> {
+        self.arena
+            .iter_keys()
+            .find(|(_, s)| s.beta_dest == Some(dest))
+            .map(|(k, _)| k)
     }
 
     /// Resident segments (admitted + waiting, incl. finished-but-pinned).
@@ -692,7 +726,7 @@ mod tests {
     fn inst() -> InstanceRuntime {
         let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
         let local = LocalScheduler::new(LocalConfig::default(), ProfileTable::seeded(&spec));
-        InstanceRuntime::new(0, spec, local)
+        InstanceRuntime::new(InstanceId(0), spec, local)
     }
 
     fn seq(req: u64, start: usize, end: usize, p: usize) -> Segment {
@@ -891,14 +925,14 @@ mod tests {
         // α with β, modeled transport → Handoff, α stays pinned
         let mut a = seq(8, 0, 100, 90);
         a.last_segment = false;
-        a.beta_dest = Some((1, 42));
+        a.beta_dest = Some((InstanceId(1), 42));
         a.track_kv_history = true;
         a.work = WorkItem { prefill_remaining: 0, context: 100, decode_remaining: 0 };
         a.kv_history = vec![KvSpan { t0: 0.5, t1: 0.5, tokens: 100, decode_run: false }];
         let k = i.accept(a);
         match i.complete_segment(k, 1.0, &mut sink, &mut modeled) {
             SegmentDisposition::Handoff { dest, ready_at } => {
-                assert_eq!(dest, (1, 42));
+                assert_eq!(dest, (InstanceId(1), 42));
                 assert!(ready_at >= 1.0);
             }
             d => panic!("modeled handoff expected: {d:?}"),
@@ -910,7 +944,7 @@ mod tests {
         // α with β, detached transport → Finished, evicted immediately
         let mut a = seq(9, 0, 100, 90);
         a.last_segment = false;
-        a.beta_dest = Some((1, 43));
+        a.beta_dest = Some((InstanceId(1), 43));
         a.work = WorkItem { prefill_remaining: 0, context: 100, decode_remaining: 0 };
         let k = i.accept(a);
         match i.complete_segment(k, 1.0, &mut sink, &mut detached) {

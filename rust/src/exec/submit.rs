@@ -14,14 +14,14 @@
 //! emits position `p+1` — `D` output tokens in total, however the request
 //! is split into segments.
 
-use crate::core::Request;
+use crate::core::{InstanceId, Request};
 use crate::exec::policy::Placement;
 use crate::exec::runtime::Segment;
 
 /// One clamped segment, ready to materialize on its instance.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SegmentPlan {
-    pub instance: usize,
+    pub instance: InstanceId,
     /// Span [start, end) in input-token positions, clamped by the true
     /// processing length.
     pub start: usize,
@@ -56,7 +56,7 @@ pub struct SubmitPlan {
 }
 
 fn span_plan(
-    instance: usize,
+    instance: InstanceId,
     start: usize,
     end: usize,
     prompt_len: usize,
@@ -131,7 +131,7 @@ mod tests {
                 start: 0,
                 end: alpha_end,
                 prompt_len: p,
-                instance: 0,
+                instance: InstanceId(0),
                 arrival: 0.0,
             },
             beta: beta_start.map(|s| MicroRequest {
@@ -140,7 +140,7 @@ mod tests {
                 start: s,
                 end: l_hat,
                 prompt_len: p,
-                instance: 1,
+                instance: InstanceId(1),
                 arrival: 0.0,
             }),
             probes: 3,
@@ -153,7 +153,7 @@ mod tests {
         let plan = plan_submission(&placement(150, None, 150, 100), &req);
         assert!(plan.beta.is_none());
         assert_eq!(plan.alpha, SegmentPlan {
-            instance: 0,
+            instance: InstanceId(0),
             start: 0,
             end: 149, // L_proc = P + D - 1
             prefill: 100,
@@ -197,7 +197,7 @@ mod tests {
     fn prompt_range_is_always_in_bounds() {
         let p = 100usize;
         for (start, end) in [(0usize, 60usize), (60, 149), (100, 149), (120, 149)] {
-            let sp = span_plan(0, start, end, p, true);
+            let sp = span_plan(InstanceId(0), start, end, p, true);
             let r = sp.prompt_range(p);
             assert!(r.start <= r.end && r.end <= p, "range {r:?} for span {start}..{end}");
             assert_eq!(r.len(), sp.prefill, "range length must equal prefill work");

@@ -18,7 +18,7 @@
 //!
 //! [`InstanceRuntime::complete_segment`]: super::InstanceRuntime::complete_segment
 
-use crate::core::RequestId;
+use crate::core::{InstanceId, RequestId};
 use crate::exec::runtime::{KvSpan, SeqKey};
 use crate::kv::{chunked_timeline, monolithic_timeline, LinkSpec};
 
@@ -31,7 +31,7 @@ pub struct Handoff {
     pub source: SeqKey,
     /// Destination `(instance, key)` — keys are executor-scoped (arena
     /// keys in virtual time, leader-assigned ids on the live path).
-    pub dest: (usize, u64),
+    pub dest: (InstanceId, u64),
     /// α-side KV production history (run-length coalesced); empty on the
     /// live path, where the real payload is shipped instead.
     pub history: Vec<KvSpan>,
@@ -176,7 +176,7 @@ mod tests {
         let h = Handoff {
             request: 1,
             source: 0,
-            dest: (1, 0),
+            dest: (InstanceId(1), 0),
             history: vec![chunk(0.1, 512)],
         };
         // handoff observed long after the history was produced: the β

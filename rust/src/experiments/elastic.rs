@@ -1,0 +1,227 @@
+//! Elastic fleet evaluation: fixed vs scheduled vs autoscaled instance
+//! counts on a diurnal workload — the paper's *elastic* claim (§6) made
+//! scoreable by goodput-per-GPU-second.
+//!
+//! Three fleets serve the identical request stream
+//! ([`Scenario::elastic_diurnal`]):
+//!
+//! * **fixed-4** — provisioned for the crest the whole run (the paper's
+//!   static-deployment baseline);
+//! * **scheduled** — 2 bootstrap instances plus the scenario's
+//!   deterministic [`ScaleEvent`]s (scale up ahead of each crest, drain
+//!   on the descent);
+//! * **autoscaled** — 2 bootstrap instances plus the utilization-band
+//!   [`BandAutoscaler`] reacting to the live digests.
+//!
+//! The elastic fleets should reach the fixed fleet's goodput at a
+//! fraction of its GPU-seconds — the `results/elastic.json` artifact
+//! records each system's summary plus its fleet-size timeline so the
+//! trade-off is inspectable point by point.
+//!
+//! Usage:
+//!   experiments elastic [--smoke] [--seed N] [--duration S] [--warmup S]
+//!
+//! [`ScaleEvent`]: crate::exec::cluster::ScaleEvent
+
+use crate::coordinator::predictor::PredictorConfig;
+use crate::coordinator::GlobalConfig;
+use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+use crate::exec::cluster::{BandAutoscaler, BandConfig};
+use crate::exec::policy::DynaServePolicy;
+use crate::exec::{ExecConfig, VirtualExecutor};
+use crate::experiments::runners::{run_cells, sweep_threads, warn_if_stuck};
+use crate::experiments::write_results;
+use crate::metrics::{SloConfig, Summary};
+use crate::util::cli::{pct, Args, Table};
+use crate::util::json::{obj, Json};
+use crate::workload::{ArrivalShape, Scenario};
+
+/// How one compared fleet manages its membership.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FleetMode {
+    /// Peak-provisioned static fleet.
+    Fixed,
+    /// Scenario [`crate::exec::cluster::ScaleEvent`]s (deterministic).
+    Scheduled,
+    /// [`BandAutoscaler`] over the live digests.
+    Autoscaled,
+}
+
+impl FleetMode {
+    fn name(&self) -> &'static str {
+        match self {
+            FleetMode::Fixed => "fixed-4",
+            FleetMode::Scheduled => "scheduled",
+            FleetMode::Autoscaled => "autoscaled",
+        }
+    }
+}
+
+const MIN_FLEET: usize = 2;
+const MAX_FLEET: usize = 4;
+
+struct FleetResult {
+    mode: FleetMode,
+    summary: Summary,
+    stuck: usize,
+    /// (time, provisioned instances) step function.
+    fleet: Vec<(f64, usize)>,
+}
+
+fn run_fleet(
+    mode: FleetMode,
+    sc: &Scenario,
+    requests: &[crate::core::Request],
+    warmup: f64,
+    period: f64,
+) -> anyhow::Result<FleetResult> {
+    let llm = LlmSpec::qwen25_14b();
+    let slo = SloConfig::default();
+    let spec = InstanceSpec::new(GpuSpec::a100(), llm.clone(), 1);
+    let bootstrap = if mode == FleetMode::Fixed { MAX_FLEET } else { MIN_FLEET };
+    let cfg = ExecConfig::builder(spec, bootstrap)
+        .slo(slo)
+        .warmup(warmup)
+        .autoscale_interval((period / 60.0).clamp(0.05, 1.0))
+        .max_instances(MAX_FLEET)
+        .build()?;
+    let gcfg = GlobalConfig {
+        kv_bytes_per_token: llm.kv_bytes_per_token(),
+        predictor: PredictorConfig { slo: slo.tbt, ..Default::default() },
+        ..Default::default()
+    };
+    let mut ex = VirtualExecutor::new(cfg, Box::new(DynaServePolicy::new(gcfg)));
+    match mode {
+        FleetMode::Fixed => {}
+        FleetMode::Scheduled => ex.push_scale_events(&sc.scale_events),
+        FleetMode::Autoscaled => ex.set_autoscaler(Box::new(BandAutoscaler::new(BandConfig {
+            high: 0.55,
+            low: 0.15,
+            min_instances: MIN_FLEET,
+            max_instances: MAX_FLEET,
+            // cover the warm-up, or the scaler re-adds while one warms
+            cooldown: (2.0 * warmup).max(period / 12.0),
+            prefill_backlog_budget: 16_384,
+        }))),
+    }
+    let summary = ex.run(requests.to_vec());
+    let stuck = warn_if_stuck(&format!("elastic/{}", mode.name()), &ex);
+    Ok(FleetResult { mode, summary, stuck, fleet: ex.cluster.size_timeline() })
+}
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let seed = args.u64_or("seed", 42);
+    let mut sc = Scenario::elastic_diurnal();
+    if args.bool("smoke") {
+        sc = sc.smoke();
+    }
+    if let Some(d) = args.get("duration").and_then(|s| s.parse::<f64>().ok()) {
+        sc = sc.with_duration(d);
+    }
+    let period = match sc.shape {
+        ArrivalShape::Diurnal { period, .. } => period,
+        _ => sc.duration,
+    };
+    // modeled instance bring-up: a twentieth of the cycle, capped at 2 s
+    let warmup = args.f64_or("warmup", (0.05 * period).clamp(0.05, 2.0));
+    let requests = sc.generate(seed);
+    println!(
+        "Elastic fleets on '{}' — {} requests over {:.0}s (period {:.0}s, warm-up {:.2}s, \
+         seed {seed})\n",
+        sc.name,
+        requests.len(),
+        sc.duration,
+        period,
+        warmup
+    );
+
+    let modes = [FleetMode::Fixed, FleetMode::Scheduled, FleetMode::Autoscaled];
+    let results: Vec<FleetResult> = run_cells(&modes, sweep_threads(), |&mode| {
+        run_fleet(mode, &sc, &requests, warmup, period)
+    })
+    .into_iter()
+    .collect::<anyhow::Result<_>>()?;
+
+    let mut t = Table::new([
+        "fleet", "goodput tok/s", "goodput/GPU-s", "GPU-s", "attain %", "peak", "mean", "p99 TBT ms",
+    ]);
+    let mut sys_objs = Vec::new();
+    for r in &results {
+        let s = &r.summary;
+        let peak = r.fleet.iter().map(|&(_, n)| n).max().unwrap_or(0);
+        let mean_fleet = if s.duration > 0.0 { s.gpu_seconds / s.duration } else { 0.0 };
+        t.row([
+            r.mode.name().to_string(),
+            format!("{:.1}", s.goodput_tok_s),
+            format!("{:.2}", s.goodput_per_gpu_s),
+            format!("{:.1}", s.gpu_seconds),
+            pct(s.attainment),
+            peak.to_string(),
+            format!("{mean_fleet:.2}"),
+            format!("{:.1}", s.p99_tbt * 1e3),
+        ]);
+        sys_objs.push(obj([
+            ("system", Json::from(r.mode.name())),
+            (
+                "summary",
+                obj([
+                    ("completed", Json::from(s.completed)),
+                    ("total_tokens", Json::from(s.total_tokens)),
+                    ("good_tokens", Json::from(s.good_tokens)),
+                    ("goodput_tok_s", Json::from(s.goodput_tok_s)),
+                    ("goodput_per_gpu_s", Json::from(s.goodput_per_gpu_s)),
+                    ("gpu_seconds", Json::from(s.gpu_seconds)),
+                    ("attainment", Json::from(s.attainment)),
+                    ("req_slo_frac", Json::from(s.req_slo_frac)),
+                    ("p99_tbt", Json::from(s.p99_tbt)),
+                    ("p99_ttft", Json::from(s.p99_ttft)),
+                    ("duration", Json::from(s.duration)),
+                ]),
+            ),
+            ("stuck_requests", Json::from(r.stuck)),
+            (
+                "fleet",
+                Json::Arr(
+                    r.fleet
+                        .iter()
+                        .map(|&(at, n)| {
+                            obj([("t", Json::from(at)), ("instances", Json::from(n))])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    t.print();
+
+    let fixed = results.iter().find(|r| r.mode == FleetMode::Fixed).expect("fixed row");
+    for r in results.iter().filter(|r| r.mode != FleetMode::Fixed) {
+        let gpu_frac = r.summary.gpu_seconds / fixed.summary.gpu_seconds.max(1e-9);
+        let good_frac = r.summary.goodput_tok_s / fixed.summary.goodput_tok_s.max(1e-9);
+        println!(
+            "\n{}: {:.0}% of the fixed fleet's GPU-seconds at {:.0}% of its goodput ({})",
+            r.mode.name(),
+            gpu_frac * 100.0,
+            good_frac * 100.0,
+            if gpu_frac < 1.0 && good_frac >= 0.95 {
+                "elastic win: equal-or-better goodput on fewer GPU-seconds"
+            } else {
+                "inspect results/elastic.json"
+            }
+        );
+    }
+
+    let artifact = obj([
+        ("scenario", Json::from(sc.name)),
+        ("seed", Json::from(seed as usize)),
+        ("duration_s", Json::from(sc.duration)),
+        ("period_s", Json::from(period)),
+        ("warmup_s", Json::from(warmup)),
+        ("requests", Json::from(requests.len())),
+        ("min_fleet", Json::from(MIN_FLEET)),
+        ("max_fleet", Json::from(MAX_FLEET)),
+        ("systems", Json::Arr(sys_objs)),
+    ]);
+    write_results("elastic", &artifact);
+    Ok(())
+}

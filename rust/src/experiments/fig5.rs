@@ -6,7 +6,7 @@
 //! balance execution time across GPUs.
 
 use crate::coordinator::{LoadDigest, ProfileTable};
-use crate::core::{MicroRequest, Request, Role};
+use crate::core::{InstanceId, MicroRequest, Request, Role};
 use crate::costmodel::LlmSpec;
 use crate::experiments::runners::build_sim;
 use crate::experiments::write_results;
@@ -41,7 +41,7 @@ impl Policy for FixedSplitPolicy {
             start: 0,
             end: s.max(1),
             prompt_len: req.prompt_len,
-            instance: 0,
+            instance: InstanceId(0),
             arrival: req.arrival,
         };
         let beta = (s < l).then(|| MicroRequest {
@@ -50,7 +50,7 @@ impl Policy for FixedSplitPolicy {
             start: s.max(1),
             end: l,
             prompt_len: req.prompt_len,
-            instance: 1,
+            instance: InstanceId(1),
             arrival: req.arrival,
         });
         Placement { alpha, beta, probes: 0 }

@@ -7,6 +7,7 @@
 //! roughly what factor, where crossovers fall) are the reproduction target,
 //! not the authors' testbed-exact values.
 
+pub mod elastic;
 pub mod fig1;
 pub mod fig3;
 pub mod fig5;
@@ -47,6 +48,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
             "scenarios",
             "mixed-SLO scenario suite (hybrid/burst/diurnal/ramp/multi-turn), per-class goodput",
             scenarios::run,
+        ),
+        (
+            "elastic",
+            "fixed vs scheduled vs autoscaled fleets on the diurnal scenario, goodput/GPU-s",
+            elastic::run,
         ),
     ]
 }

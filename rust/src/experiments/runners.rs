@@ -91,9 +91,11 @@ impl ExecutorKind {
 /// construction path shared by both executor facades.
 fn sim_parts(system: System, llm: &LlmSpec, slo: SloConfig) -> (SimConfig, Box<dyn Policy>) {
     let spec = InstanceSpec::new(GpuSpec::a100(), llm.clone(), tp_for(llm));
-    let mut cfg = SimConfig::new(spec.clone(), 2);
-    cfg.slo = slo;
-    cfg.link = LinkSpec::default();
+    let mut cfg = SimConfig::builder(spec.clone(), 2)
+        .slo(slo)
+        .link(LinkSpec::default())
+        .build()
+        .expect("static experiment config is valid");
 
     let policy: Box<dyn Policy> = match system {
         System::DynaServe => {
@@ -147,8 +149,11 @@ pub fn build_executor(
 /// Warn (to stderr) when a finished run left segments resident — a
 /// scheduling deadlock that would otherwise masquerade as low goodput
 /// (or, for a horizon-truncated run, an under-sized `ExecConfig::horizon`).
-/// Returns the stuck-segment count so harnesses can record it in their
-/// JSON artifacts.
+/// The residue is broken down **per instance** (id, resident segments,
+/// KV-admission waiting depth from its digest) — a drain that wedges
+/// shows up as one draining member that never empties, which a global
+/// total cannot localize. Returns the stuck-segment count so harnesses
+/// can record it in their JSON artifacts.
 pub fn warn_if_stuck(context: &str, sim: &Simulator) -> usize {
     let stuck = sim.stuck_requests();
     if stuck > 0 {
@@ -163,6 +168,12 @@ pub fn warn_if_stuck(context: &str, sim: &Simulator) -> usize {
             eprintln!(
                 "warning: {context}: run ended with {stuck} stuck segment(s) — scheduling \
                  deadlock; goodput/attainment figures for this cell are invalid"
+            );
+        }
+        for (id, resident, waiting) in sim.stuck_by_instance() {
+            eprintln!(
+                "warning: {context}:   instance {id}: {resident} resident segment(s), \
+                 {waiting} waiting on KV admission"
             );
         }
     }

@@ -36,7 +36,7 @@ use crate::workload::Scenario;
 pub fn run(args: &Args) -> anyhow::Result<()> {
     if args.bool("list") {
         println!("named scenarios (experiments -- scenarios --name <id>):");
-        for s in Scenario::suite() {
+        for s in Scenario::all() {
             println!("  {:<12} {}", s.name, s.description);
         }
         return Ok(());
@@ -51,7 +51,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     };
     let scenarios: Vec<Scenario> = match args.get("name") {
         Some(name) => vec![Scenario::by_name(name).ok_or_else(|| {
-            let known: Vec<_> = Scenario::suite().iter().map(|s| s.name).collect();
+            let known: Vec<_> = Scenario::all().iter().map(|s| s.name).collect();
             anyhow::anyhow!("unknown scenario '{name}' (known: {})", known.join(", "))
         })?],
         None => Scenario::suite(),
@@ -85,6 +85,13 @@ fn run_scenario(sc: &Scenario, seed: u64, executor: ExecutorKind) -> anyhow::Res
     let results: Vec<(Summary, Vec<ClassSummary>, usize)> =
         run_cells(&systems, sweep_threads(), |&sys| {
             let mut sim = build_executor(executor, sys, &llm, slo);
+            // scenario-attached fleet scale events run on every executor —
+            // except the disagg baseline, whose positional prefill/decode
+            // pools model a statically-partitioned deployment and panic
+            // if the fleet shrinks under them (DESIGN.md §Elastic)
+            if !matches!(sys, System::Disagg) {
+                sim.push_scale_events(&sc.scale_events);
+            }
             let summary = sim.run(requests.clone());
             let classes = sim.collector.class_summaries(summary.duration);
             let stuck = crate::experiments::runners::warn_if_stuck(

@@ -49,7 +49,8 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         for sys in [System::Disagg, System::Coloc { chunk: 2048 }] {
             let q = saturate(sys, &llm, kind, duration, seed);
             let (s, sim) = run_once(sys, &llm, kind, q, duration, seed, slo);
-            let (g1, g2) = (&sim.instances[0], &sim.instances[1]);
+            let mut insts = sim.instances();
+            let (g1, g2) = (insts.next().expect("g1"), insts.next().expect("g2"));
             t.row([
                 format!("P-{p}, D-{d}"),
                 sys.name().to_string(),

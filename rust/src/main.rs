@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
         Some("calibrate") => calibrate(&args),
         _ => {
             eprintln!("usage: dynaserve <serve|simulate|calibrate> [flags]");
-            eprintln!("  serve     --requests N --qps Q --artifacts DIR [--instances 2] [--workload NAME]   (needs --features pjrt)");
+            eprintln!("  serve     --requests N --qps Q --artifacts DIR [--instances 2] [--workload NAME] [--autoscale]   (needs --features pjrt)");
             eprintln!("  simulate  --system <dynaserve|coloc|disagg> --workload NAME --qps Q [--duration S] [--model 14b]");
             eprintln!("  calibrate --artifacts DIR   (needs --features pjrt)");
             Ok(())
@@ -48,6 +48,13 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             .unwrap_or(TraceKind::Fixed { prompt: 48, decode: 24 }),
         seed: args.u64_or("seed", 42),
         slo: SloConfig { tbt: args.f64_or("slo-ms", 250.0) / 1e3, ttft: None },
+        // --autoscale installs the utilization-band autoscaler on the
+        // leader (min = 1, max = 2x the bootstrap fleet)
+        autoscale: args.bool("autoscale").then(|| dynaserve::exec::BandConfig {
+            min_instances: 1,
+            max_instances: args.usize_or("instances", 2) * 2,
+            ..Default::default()
+        }),
     };
     let report = dynaserve::server::serve(cfg)?;
     report.print();
@@ -87,7 +94,7 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         s.p99_ttft * 1e3
     );
     println!("req_max_tbt_p99 = {:.1} ms   duration = {:.1}s", s.req_max_tbt_p99 * 1e3, s.duration);
-    for inst in &sim.instances {
+    for inst in sim.instances() {
         println!(
             "  instance {}: iters={} MFU={:.1}% HBM={:.1}% busy={:.1}s",
             inst.id,

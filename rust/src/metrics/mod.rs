@@ -269,6 +269,10 @@ impl Collector {
                 self.completed.iter().filter(|r| r.meets_slo_p99()).count() as f64
                     / self.completed.len() as f64
             },
+            // fleet accounting is the executor's, not the collector's:
+            // the host overwrites these from its cluster registry
+            gpu_seconds: 0.0,
+            goodput_per_gpu_s: 0.0,
         }
     }
 
@@ -369,9 +373,30 @@ pub struct Summary {
     pub req_max_tbt_p99: f64,
     /// Fraction of completed requests meeting the per-request p99 SLO.
     pub req_slo_frac: f64,
+    /// Fleet GPU-seconds consumed by the run: Σ over instances of
+    /// (removal | end) − provisioning, × GPUs per instance. Filled by the
+    /// executor from its cluster registry (0.0 when no executor annotated
+    /// the summary); varies within a run once the fleet is elastic.
+    pub gpu_seconds: f64,
+    /// `good_tokens / gpu_seconds` — goodput normalized by what the fleet
+    /// actually cost, the metric that makes a 2-instance trough fleet and
+    /// a 4-instance peak fleet comparable (DistServe goodput per
+    /// GPU-second; see EXPERIMENTS.md §Elastic).
+    pub goodput_per_gpu_s: f64,
 }
 
 impl Summary {
+    /// Annotate with the fleet's GPU-second accounting — the single place
+    /// `goodput_per_gpu_s` is derived, used by both executors (the
+    /// virtual host's `run` and the live `serve`), so the two can never
+    /// diverge on the definition.
+    pub fn with_fleet(mut self, gpu_seconds: f64) -> Summary {
+        self.gpu_seconds = gpu_seconds;
+        self.goodput_per_gpu_s =
+            if gpu_seconds > 0.0 { self.good_tokens as f64 / gpu_seconds } else { 0.0 };
+        self
+    }
+
     /// The serving-capacity criterion (§6.3): p99 TBT within the bound,
     /// i.e. at most 1% of tokens violate the SLO.
     pub fn meets_capacity_slo(&self, slo: &SloConfig) -> bool {
@@ -598,6 +623,8 @@ mod tests {
             p99_ttft: 0.2,
             req_max_tbt_p99: 0.05,
             req_slo_frac: 1.0,
+            gpu_seconds: 2.0,
+            goodput_per_gpu_s: 50.0,
         };
         let (cap, _) = capacity_search(&slo, 1.0, 0.5, 2.0, 0.05, run);
         assert!((cap - 5.0).abs() < 0.1, "cap={cap}");
@@ -621,6 +648,8 @@ mod tests {
             p99_ttft: 1.0,
             req_max_tbt_p99: 1.0,
             req_slo_frac: 0.0,
+            gpu_seconds: 2.0,
+            goodput_per_gpu_s: 0.0,
         };
         let (cap, _) = capacity_search(&slo, 1.0, 0.5, 2.0, 0.05, run);
         assert_eq!(cap, 0.0);

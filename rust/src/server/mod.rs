@@ -14,11 +14,24 @@
 //! [`TransferEngine`] (§4.3) instead of the modeled timelines. Python is
 //! nowhere on this path.
 //!
+//! Elastic membership (DESIGN.md §Elastic): the leader owns a
+//! [`LiveCluster`] directory mirroring the virtual executor's
+//! `exec::Cluster`. [`LiveCluster::add_instance`] spawns a new instance
+//! thread (its *real* engine bring-up is the warm-up: the member is not
+//! placeable until the thread publishes readiness, but its GPU-seconds
+//! accrue from spawn); [`LiveCluster::drain`] stops placements and sends
+//! [`InstMsg::Drain`] — the thread finishes every resident segment
+//! (gated βs included: live drains do not re-place in-flight KV, unlike
+//! the virtual executor's pre-transfer re-placement) and then retires,
+//! stamping its removal time so its GPU-second meter freezes. An optional
+//! utilization-band autoscaler ([`ServeConfig::autoscale`]) drives
+//! add/drain from the same digests the scheduler reads.
+//!
 //! [`virtual_executor`] is the same wiring with the engine stubbed out:
 //! the server facade's deterministic virtual-time executor, pinned
 //! bit-identical to the simulator facade by `rust/tests/parity.rs`.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
@@ -28,9 +41,10 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::predictor::PredictorConfig;
 use crate::coordinator::{GlobalConfig, LoadDigest, LocalConfig, LocalScheduler, ProfileTable};
-use crate::core::{Request, RequestId};
+use crate::core::{InstanceId, Request, RequestId};
 use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
 use crate::exec::clock::{Clock, WallClock};
+use crate::exec::cluster::{Autoscaler, BandAutoscaler, BandConfig, ScaleDirective};
 use crate::exec::policy::{DynaServePolicy, Policy};
 use crate::exec::runtime::{EventSink, InstanceRuntime, Segment, SeqKey};
 use crate::exec::submit::{plan_submission, SegmentPlan};
@@ -45,12 +59,16 @@ use crate::workload::{PoissonArrivals, TraceKind, TraceSampler, WorkloadGen};
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub artifacts: String,
+    /// Bootstrap fleet size (the autoscaler can grow/shrink from here).
     pub n_instances: usize,
     pub requests: usize,
     pub qps: f64,
     pub workload: TraceKind,
     pub seed: u64,
     pub slo: SloConfig,
+    /// Install a utilization-band autoscaler on the leader: evaluated on
+    /// the live digests before each placement; `None` = fixed fleet.
+    pub autoscale: Option<BandConfig>,
 }
 
 /// One placed segment, as sent to an instance thread. Field meanings
@@ -70,8 +88,8 @@ struct SegmentSpec {
     decode_budget: usize,
     emits_first: bool,
     last_segment: bool,
-    /// Forward KV + generation state here when done (β instance index, β key).
-    beta_dest: Option<(usize, u64)>,
+    /// Forward KV + generation state here when done (β instance id, β key).
+    beta_dest: Option<(InstanceId, u64)>,
     /// β only: waits for KV; activated by the final chunk.
     gated: bool,
 }
@@ -84,7 +102,7 @@ impl SegmentSpec {
         arrival: f64,
         prompt: &[i32],
         sp: &SegmentPlan,
-        beta_dest: Option<(usize, u64)>,
+        beta_dest: Option<(InstanceId, u64)>,
         gated: bool,
     ) -> SegmentSpec {
         SegmentSpec {
@@ -127,13 +145,162 @@ enum InstMsg {
     Segment(SegmentSpec),
     /// KV chunk for a gated β segment (payload = k||v for the token range).
     Kv { key: u64, job: TransferJob, next_token: Option<i32> },
+    /// Begin draining: finish every resident segment, take no new ones
+    /// (the leader already stopped placing here), then retire.
+    Drain,
     Shutdown,
 }
 
 enum UpMsg {
     Token { request: RequestId, arrival: f64, at: f64 },
     Done { request: RequestId },
-    IterStats { instance: usize, latency: f64 },
+    IterStats { instance: InstanceId, latency: f64 },
+}
+
+/// State the instance threads publish and the leader (plus peer threads)
+/// read — the live analogue of the cluster registry's shared view.
+#[derive(Default)]
+struct FleetShared {
+    /// Latest per-instance load digest (BTreeMap: the leader's digest
+    /// view is always in id order, like the virtual executor's).
+    digests: Mutex<BTreeMap<InstanceId, LoadDigest>>,
+    /// Instances whose engine finished loading + calibration — the live
+    /// warm-up gate (the virtual executor models this as `cfg.warmup`).
+    ready: Mutex<HashSet<InstanceId>>,
+    /// Retirement stamps of drained instances (freezes their GPU-second
+    /// meters).
+    removed: Mutex<HashMap<InstanceId, f64>>,
+    /// Peer senders for α→β KV forwarding.
+    peers: Mutex<HashMap<InstanceId, mpsc::Sender<InstMsg>>>,
+}
+
+/// Everything needed to spawn one more instance thread mid-run.
+#[derive(Clone)]
+struct SpawnCtx {
+    artifacts: String,
+    slo: SloConfig,
+    clock: WallClock,
+    stop: Arc<AtomicBool>,
+    calib: Arc<Mutex<Option<ProfileTable>>>,
+    transfer: Arc<TransferEngine>,
+    up: mpsc::Sender<UpMsg>,
+    shared: Arc<FleetShared>,
+}
+
+/// Leader-side membership entry for one live instance.
+struct LiveMember {
+    id: InstanceId,
+    tx: mpsc::Sender<InstMsg>,
+    join: thread::JoinHandle<()>,
+    draining: bool,
+    /// Wall seconds (serving clock) when the thread was spawned —
+    /// GPU-seconds accrue from here, engine bring-up included.
+    added_at: f64,
+}
+
+/// The live fleet directory: the leader's mirror of `exec::Cluster` —
+/// stable ids, spawn (add) / drain / retire lifecycle, GPU-second
+/// accounting. See the module docs for the drain semantics difference
+/// from the virtual executor.
+struct LiveCluster {
+    members: Vec<LiveMember>,
+    next_id: u32,
+    shared: Arc<FleetShared>,
+}
+
+impl LiveCluster {
+    fn new(shared: Arc<FleetShared>) -> LiveCluster {
+        LiveCluster { members: Vec::new(), next_id: 0, shared }
+    }
+
+    /// Spawn one instance thread; placeable once it publishes readiness
+    /// (engine loaded + calibrated).
+    fn add_instance(&mut self, ctx: &SpawnCtx) -> Result<InstanceId> {
+        let id = InstanceId(self.next_id);
+        self.next_id += 1;
+        let (tx, rx) = mpsc::channel::<InstMsg>();
+        self.shared.peers.lock().unwrap().insert(id, tx.clone());
+        let c = ctx.clone();
+        let join = thread::Builder::new()
+            .name(format!("instance-{id}"))
+            .spawn(move || {
+                if let Err(e) = instance_loop(id, rx, &c) {
+                    eprintln!("instance {id} failed: {e:#}");
+                    // crash cleanup: instance_loop's own cleanup only runs
+                    // on clean exits — pull the corpse out of the shared
+                    // fleet view and stamp removal so the leader stops
+                    // routing here, its GPU-second meter freezes, and the
+                    // autoscaler's provisioning count frees up for a
+                    // replacement (segments already routed here are lost;
+                    // serve()'s recv timeout surfaces that as an error)
+                    c.shared.digests.lock().unwrap().remove(&id);
+                    c.shared.ready.lock().unwrap().remove(&id);
+                    c.shared.peers.lock().unwrap().remove(&id);
+                    c.shared.removed.lock().unwrap().insert(id, c.clock.now());
+                }
+            })
+            .context("spawn instance")?;
+        self.members.push(LiveMember { id, tx, join, draining: false, added_at: ctx.clock.now() });
+        Ok(id)
+    }
+
+    /// Stop placing on `id` and tell its thread to finish + retire.
+    /// Refused when the member is unknown/draining or no *other*
+    /// non-draining member is still alive (a crashed instance thread
+    /// must not count as a survivor, or draining the last healthy one
+    /// would leave the fleet unplaceable).
+    fn drain(&mut self, id: InstanceId) -> bool {
+        let survivors = self
+            .members
+            .iter()
+            .filter(|m| m.id != id && !m.draining && !m.join.is_finished())
+            .count();
+        let Some(m) = self.members.iter_mut().find(|m| m.id == id) else { return false };
+        if m.draining || survivors == 0 {
+            return false;
+        }
+        m.draining = true;
+        m.tx.send(InstMsg::Drain).ok();
+        true
+    }
+
+    /// Digest view for placement: ready, not draining, not retired — in
+    /// id order (same dynamic view the virtual executor feeds policies).
+    fn placeable_digests(&self) -> Vec<LoadDigest> {
+        let ready = self.shared.ready.lock().unwrap();
+        let removed = self.shared.removed.lock().unwrap();
+        let digests = self.shared.digests.lock().unwrap();
+        self.members
+            .iter()
+            .filter(|m| !m.draining && ready.contains(&m.id) && !removed.contains_key(&m.id))
+            .filter_map(|m| digests.get(&m.id).copied())
+            .collect()
+    }
+
+    fn send(&self, id: InstanceId, msg: InstMsg) {
+        if let Some(m) = self.members.iter().find(|m| m.id == id) {
+            m.tx.send(msg).ok();
+        }
+    }
+
+    /// Fleet GPU-seconds by `now` (1 GPU per TinyQwen instance): drained
+    /// members stop at their retirement stamp.
+    fn gpu_seconds(&self, now: f64) -> f64 {
+        let removed = self.shared.removed.lock().unwrap();
+        self.members
+            .iter()
+            .map(|m| (removed.get(&m.id).copied().unwrap_or(now) - m.added_at).max(0.0))
+            .sum()
+    }
+
+    fn shutdown(self) {
+        for m in &self.members {
+            m.tx.send(InstMsg::Shutdown).ok();
+        }
+        for m in self.members {
+            m.join.join().ok();
+        }
+    }
 }
 
 /// Engine-side state of one live segment (the lifecycle state lives in
@@ -194,7 +361,8 @@ impl Transport for LiveTransport {
 /// Serving report printed by `dynaserve serve`.
 pub struct ServeReport {
     pub summary: Summary,
-    pub iterations: Vec<u64>,
+    /// Per-instance iteration counts, id order.
+    pub iterations: Vec<(InstanceId, u64)>,
     pub mean_iter_latency: f64,
     pub transfer_chunks: u64,
     pub transfer_bytes: u64,
@@ -214,6 +382,10 @@ impl ServeReport {
             s.throughput_tok_s, s.goodput_tok_s, s.rps
         );
         println!(
+            "fleet: {:.1} GPU-seconds   goodput/GPU-s: {:.2}",
+            s.gpu_seconds, s.goodput_per_gpu_s
+        );
+        println!(
             "TBT p50/p99: {:.1}/{:.1} ms   TTFT p50/p99: {:.0}/{:.0} ms   attainment: {:.1}%",
             s.p50_tbt * 1e3,
             s.p99_tbt * 1e3,
@@ -221,8 +393,8 @@ impl ServeReport {
             s.p99_ttft * 1e3,
             s.attainment * 100.0
         );
-        for (i, n) in self.iterations.iter().enumerate() {
-            println!("instance {i}: {n} iterations");
+        for (id, n) in &self.iterations {
+            println!("instance {id}: {n} iterations");
         }
         println!(
             "kv transfer: {} chunks, {:.2} MB   mean iter latency: {:.2} ms",
@@ -238,10 +410,11 @@ impl ServeReport {
 /// modeled transport — deterministic, and bit-identical to the simulator
 /// facade for the same config/policy. `rust/tests/parity.rs` pins this
 /// facade (it must stay a thin instantiation of the one core — any
-/// server-side lifecycle fork breaks the bit-identity there); the real
-/// thread wiring in [`serve`]/`instance_loop` is pinned to the shared
-/// submission path by the marshalling round-trip unit test below and
-/// executes only with `--features pjrt`.
+/// server-side lifecycle fork breaks the bit-identity there, scale
+/// events and autoscaling included); the real thread wiring in
+/// [`serve`]/`instance_loop` is pinned to the shared submission path by
+/// the marshalling round-trip unit test below and executes only with
+/// `--features pjrt`.
 /// `experiments -- scenarios --executor live` routes through here.
 pub fn virtual_executor(cfg: ExecConfig, policy: Box<dyn Policy>) -> VirtualExecutor {
     VirtualExecutor::new(cfg, policy)
@@ -291,51 +464,30 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         r.predicted_decode = d;
     }
 
-    // ── instances ───────────────────────────────────────────────────────
+    // ── fleet bootstrap ─────────────────────────────────────────────────
     // Threads publish O(1) digests straight from their runtime — the same
-    // load representation the simulator's arrival path feeds the policy.
-    let digests: Arc<Mutex<Vec<LoadDigest>>> = Arc::new(Mutex::new(
-        (0..cfg.n_instances).map(LoadDigest::idle).collect(),
-    ));
+    // load representation the simulator's arrival path feeds the policy —
+    // into the shared fleet view, keyed by stable instance id.
+    let shared = Arc::new(FleetShared::default());
     let transfer = Arc::new(TransferEngine::new(LinkSpec { bandwidth: 2e9, latency: 20e-6 }));
     let (up_tx, up_rx) = mpsc::channel::<UpMsg>();
     let stop = Arc::new(AtomicBool::new(false));
-
-    let mut inst_txs = Vec::new();
-    let mut joins = Vec::new();
-    // calibration profile shared by leader + instances (built by instance 0)
+    // calibration profile shared by leader + instances (built by the
+    // first instance to come up)
     let calib: Arc<Mutex<Option<ProfileTable>>> = Arc::new(Mutex::new(None));
-
-    for id in 0..cfg.n_instances {
-        let (tx, rx) = mpsc::channel::<InstMsg>();
-        inst_txs.push(tx);
-        let up = up_tx.clone();
-        let digests = digests.clone();
-        let dir = cfg.artifacts.clone();
-        let slo = cfg.slo;
-        let stop = stop.clone();
-        let calib = calib.clone();
-        let transfer = transfer.clone();
-        let inst_txs_for_fw: Arc<Mutex<Vec<mpsc::Sender<InstMsg>>>> =
-            Arc::new(Mutex::new(Vec::new()));
-        joins.push((
-            inst_txs_for_fw.clone(),
-            thread::Builder::new()
-                .name(format!("instance-{id}"))
-                .spawn(move || {
-                    if let Err(e) = instance_loop(
-                        id, &dir, rx, up, digests, slo, clock, stop, calib, transfer,
-                        inst_txs_for_fw,
-                    ) {
-                        eprintln!("instance {id} failed: {e:#}");
-                    }
-                })
-                .context("spawn instance")?,
-        ));
-    }
-    // give every instance a way to forward KV to its peers
-    for (fw, _) in &joins {
-        *fw.lock().unwrap() = inst_txs.clone();
+    let spawn_ctx = SpawnCtx {
+        artifacts: cfg.artifacts.clone(),
+        slo: cfg.slo,
+        clock,
+        stop: stop.clone(),
+        calib: calib.clone(),
+        transfer: transfer.clone(),
+        up: up_tx.clone(),
+        shared: shared.clone(),
+    };
+    let mut fleet = LiveCluster::new(shared.clone());
+    for _ in 0..cfg.n_instances {
+        fleet.add_instance(&spawn_ctx)?;
     }
 
     // ── leader: wait for calibration, then schedule arrivals ───────────
@@ -349,7 +501,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         // A healthy instance thread never exits before calibration, so any
         // finished handle here means its engine failed to come up.
         anyhow::ensure!(
-            !joins.iter().any(|(_, j)| j.is_finished()),
+            !fleet.members.iter().any(|m| m.join.is_finished()),
             "an instance failed before calibration (artifacts missing or engine \
              failed; see per-instance errors above)"
         );
@@ -368,6 +520,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         min_span: 8,
         ..Default::default()
     });
+    let mut autoscaler = cfg.autoscale.map(BandAutoscaler::new);
 
     let mut key_alloc = 0u64;
     let mut rng = Rng::with_stream(cfg.seed, 0x70cc);
@@ -384,9 +537,59 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         if target > now {
             thread::sleep(std::time::Duration::from_secs_f64(target - now));
         }
-        // the threads publish O(1) digests — same hot path as the
-        // simulator, and no per-request snapshot clone
-        let loads: Vec<LoadDigest> = digests.lock().unwrap().clone();
+        // the threads publish O(1) digests — the same dynamic membership
+        // view is used for autoscaling and for placement (recomputed only
+        // when a directive changed the fleet)
+        let mut loads = fleet.placeable_digests();
+        // autoscale from the digest view — the live analogue of the
+        // virtual executor's AutoscaleTick
+        if let Some(scaler) = autoscaler.as_mut() {
+            // hard cap mirroring the virtual executor's cfg.max_instances:
+            // the scaler only sees placeable members, so without this an
+            // engine bring-up slower than its cooldown could spawn
+            // threads without bound
+            let max_provisioned = scaler.cfg.max_instances;
+            let directives = scaler.decide(clock.now(), &loads);
+            let fleet_changed = !directives.is_empty();
+            for d in directives {
+                match d {
+                    ScaleDirective::Add { count } => {
+                        for _ in 0..count {
+                            let provisioned = {
+                                let removed = shared.removed.lock().unwrap();
+                                fleet
+                                    .members
+                                    .iter()
+                                    .filter(|m| !removed.contains_key(&m.id))
+                                    .count()
+                            };
+                            if provisioned >= max_provisioned {
+                                break;
+                            }
+                            let _ = fleet.add_instance(&spawn_ctx);
+                        }
+                    }
+                    ScaleDirective::Drain { id } => {
+                        fleet.drain(id);
+                    }
+                }
+            }
+            if fleet_changed {
+                loads = fleet.placeable_digests();
+            }
+        }
+        // Bounded wait for readiness: right after calibration the first
+        // thread may not have published its digest yet, and a freshly
+        // scaled-up fleet may be all-warming for a moment.
+        let ready_deadline = Instant::now() + std::time::Duration::from_secs(60);
+        while loads.is_empty() {
+            anyhow::ensure!(
+                Instant::now() < ready_deadline,
+                "no placeable instance within 60s (fleet warming or fully draining)"
+            );
+            thread::sleep(std::time::Duration::from_millis(5));
+            loads = fleet.placeable_digests();
+        }
         let placement = policy.place(req, &loads, &profile);
         // …and the same span clamping / flag derivation (exec::submit)
         let plan = plan_submission(&placement, req);
@@ -404,16 +607,16 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         collector.on_request(&Request { arrival, ..req.clone() });
         let alpha_spec =
             SegmentSpec::from_plan(alpha_key, req, arrival, &prompt, &plan.alpha, beta_info, false);
-        inst_txs[plan.alpha.instance].send(InstMsg::Segment(alpha_spec)).ok();
+        fleet.send(plan.alpha.instance, InstMsg::Segment(alpha_spec));
         if let (Some(bp), Some((b_inst, b_key))) = (plan.beta, beta_info) {
             let beta_spec = SegmentSpec::from_plan(b_key, req, arrival, &prompt, &bp, None, true);
-            inst_txs[b_inst].send(InstMsg::Segment(beta_spec)).ok();
+            fleet.send(b_inst, InstMsg::Segment(beta_spec));
         }
     }
 
     // ── collect until all requests complete ─────────────────────────────
     let mut done = 0usize;
-    let mut iter_counts = vec![0u64; cfg.n_instances];
+    let mut iter_counts: BTreeMap<InstanceId, u64> = BTreeMap::new();
     let mut iter_lat_sum = 0.0;
     let mut iter_lat_n = 0u64;
     while done < n_requests {
@@ -424,7 +627,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
                 done += 1;
             }
             Ok(UpMsg::IterStats { instance, latency }) => {
-                iter_counts[instance] += 1;
+                *iter_counts.entry(instance).or_default() += 1;
                 iter_lat_sum += latency;
                 iter_lat_n += 1;
             }
@@ -432,17 +635,16 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         }
     }
     stop.store(true, Ordering::SeqCst);
-    for tx in &inst_txs {
-        tx.send(InstMsg::Shutdown).ok();
-    }
-    for (_, j) in joins {
-        j.join().ok();
-    }
-    let wall = clock.now() - serve_start;
+    let end = clock.now();
+    // GPU-second accounting before shutdown: drained members froze at
+    // their retirement stamps, the rest are charged to end-of-run
+    let gpu_seconds = fleet.gpu_seconds(end);
+    fleet.shutdown();
+    let wall = end - serve_start;
     let stats = transfer.stats();
     Ok(ServeReport {
-        summary: collector.summarize(wall),
-        iterations: iter_counts,
+        summary: collector.summarize(wall).with_fleet(gpu_seconds),
+        iterations: iter_counts.into_iter().collect(),
         mean_iter_latency: if iter_lat_n == 0 { 0.0 } else { iter_lat_sum / iter_lat_n as f64 },
         transfer_chunks: stats.chunks.load(Ordering::Relaxed),
         transfer_bytes: stats.bytes.load(Ordering::Relaxed),
@@ -450,27 +652,15 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     })
 }
 
-#[allow(clippy::too_many_arguments)]
-fn instance_loop(
-    id: usize,
-    artifacts: &str,
-    rx: mpsc::Receiver<InstMsg>,
-    up: mpsc::Sender<UpMsg>,
-    digests: Arc<Mutex<Vec<LoadDigest>>>,
-    slo: SloConfig,
-    clock: WallClock,
-    stop: Arc<AtomicBool>,
-    calib: Arc<Mutex<Option<ProfileTable>>>,
-    transfer: Arc<TransferEngine>,
-    peer_txs: Arc<Mutex<Vec<mpsc::Sender<InstMsg>>>>,
-) -> Result<()> {
-    let engine = Engine::load(artifacts)?;
+fn instance_loop(id: InstanceId, rx: mpsc::Receiver<InstMsg>, ctx: &SpawnCtx) -> Result<()> {
+    let engine = Engine::load(&ctx.artifacts)?;
     let spec = InstanceSpec::new(GpuSpec::cpu_pjrt(), LlmSpec::tinyqwen(), 1);
+    let clock = ctx.clock;
 
-    // ── calibration: instance 0 seeds the shared profile table ──────────
+    // ── calibration: the first instance up seeds the shared profile ─────
     let mut profile = ProfileTable::seeded(&spec);
     {
-        let mut guard = calib.lock().unwrap();
+        let mut guard = ctx.calib.lock().unwrap();
         if guard.is_none() {
             for (name, lat) in engine.calibrate(2)? {
                 let b = engine.buckets().iter().find(|b| b.name == name).unwrap();
@@ -487,7 +677,7 @@ fn instance_loop(
 
     let local = LocalScheduler::new(
         LocalConfig {
-            slo: slo.tbt,
+            slo: ctx.slo.tbt,
             max_decodes: engine.manifest.max_decode_batch(1).max(1),
             min_chunk: 8,
             max_prefill_tokens: 128,
@@ -502,8 +692,26 @@ fn instance_loop(
     let mut runtime = InstanceRuntime::new(id, spec, local);
     let mut live: HashMap<SeqKey, LiveState> = HashMap::new();
     let mut by_leader: HashMap<u64, SeqKey> = HashMap::new();
-    let mut sink = ChannelSink { up: up.clone() };
+    let mut sink = ChannelSink { up: ctx.up.clone() };
     let mut transport = LiveTransport::default();
+    let mut draining = false;
+
+    // engine is up: publish readiness + an initial digest — the live
+    // warm-up gate the leader's placeable view checks
+    ctx.shared.digests.lock().unwrap().insert(id, runtime.digest());
+    ctx.shared.ready.lock().unwrap().insert(id);
+
+    // removes this instance from the shared fleet view on any exit path;
+    // `retired = true` additionally freezes its GPU-second meter (drain
+    // completion, not fleet-wide shutdown)
+    let cleanup = |retired: bool| {
+        ctx.shared.digests.lock().unwrap().remove(&id);
+        ctx.shared.ready.lock().unwrap().remove(&id);
+        ctx.shared.peers.lock().unwrap().remove(&id);
+        if retired {
+            ctx.shared.removed.lock().unwrap().insert(id, clock.now());
+        }
+    };
 
     loop {
         // drain control + transfer channels
@@ -538,12 +746,26 @@ fn instance_loop(
                         inject_chunk(&engine, &mut runtime, &mut live, k, job, next_token);
                     }
                 }
-                Ok(InstMsg::Shutdown) => return Ok(()),
+                Ok(InstMsg::Drain) => draining = true,
+                Ok(InstMsg::Shutdown) => {
+                    cleanup(false);
+                    return Ok(());
+                }
                 Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => return Ok(()),
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    cleanup(false);
+                    return Ok(());
+                }
             }
         }
-        if stop.load(Ordering::SeqCst) {
+        if ctx.stop.load(Ordering::SeqCst) {
+            cleanup(false);
+            return Ok(());
+        }
+        // drain complete: every resident segment (gated βs included —
+        // their KV chunks kept arriving above) has finished and shipped
+        if draining && runtime.is_empty() {
+            cleanup(true);
             return Ok(());
         }
         // publish accepted-but-not-yet-executed load immediately: a gated
@@ -552,7 +774,7 @@ fn instance_loop(
         // for the whole transfer — the sim's arrival path reads digests
         // that include such segments, so the live leader must too
         if accepted {
-            digests.lock().unwrap()[id] = runtime.digest();
+            ctx.shared.digests.lock().unwrap().insert(id, runtime.digest());
         }
 
         // ── compose the next batch through the shared lifecycle
@@ -657,7 +879,7 @@ fn instance_loop(
         // RECORD into the shared profile under the plan's own query key,
         // exactly like the virtual executor
         runtime.record_iteration(&plan, iter_latency);
-        up.send(UpMsg::IterStats { instance: id, latency: iter_latency }).ok();
+        ctx.up.send(UpMsg::IterStats { instance: id, latency: iter_latency }).ok();
 
         // completions through the shared lifecycle: final segments report
         // Done, α segments with a waiting β queue a live handoff
@@ -685,16 +907,16 @@ fn instance_loop(
                 engine.manifest.model.n_kv_heads,
                 engine.manifest.model.head_dim,
             );
-            let transfer = transfer.clone();
-            let peers = peer_txs.clone();
+            let transfer = ctx.transfer.clone();
+            let shared = ctx.shared.clone();
             let (b_inst, b_key) = h.dest;
             thread::spawn(move || {
-                forward_kv(meta, &transfer, &peers, &st.kv, st.next_token, h.request, b_inst, b_key);
+                forward_kv(meta, &transfer, &shared, &st.kv, st.next_token, h.request, b_inst, b_key);
             });
         }
 
         // publish the O(1) load digest for the global scheduler
-        digests.lock().unwrap()[id] = runtime.digest();
+        ctx.shared.digests.lock().unwrap().insert(id, runtime.digest());
     }
 }
 
@@ -706,18 +928,18 @@ fn instance_loop(
 fn forward_kv(
     (l, h, d): (usize, usize, usize),
     transfer: &TransferEngine,
-    peers: &Arc<Mutex<Vec<mpsc::Sender<InstMsg>>>>,
+    shared: &Arc<FleetShared>,
     kv: &KvState,
     next_token: Option<i32>,
     request: RequestId,
-    b_inst: usize,
+    b_inst: InstanceId,
     b_key: u64,
 ) {
     let chunk_tokens = 64;
     let total = kv.len;
     let dest = {
-        let peers = peers.lock().unwrap();
-        match peers.get(b_inst) {
+        let peers = shared.peers.lock().unwrap();
+        match peers.get(&b_inst) {
             Some(d) => d.clone(),
             None => return,
         }
@@ -830,7 +1052,7 @@ mod tests {
         let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
         let profile = ProfileTable::seeded(&spec);
         let mut policy = DynaServePolicy::new(GlobalConfig::default());
-        let loads: Vec<LoadDigest> = (0..2).map(LoadDigest::idle).collect();
+        let loads: Vec<LoadDigest> = (0..2).map(|i| LoadDigest::idle(InstanceId(i))).collect();
         let cases = vec![
             Request::new(1, 0.0, 100, 50),
             Request::new(2, 0.5, 2000, 400),
@@ -879,5 +1101,34 @@ mod tests {
                 assert!(!beta_spec.to_segment().ready);
             }
         }
+    }
+
+    /// The live drain guard mirrors the virtual cluster's: the directory
+    /// refuses to drain its last non-draining member, and GPU-seconds
+    /// freeze at the retirement stamp a drained thread publishes.
+    #[test]
+    fn live_cluster_drain_guard_and_gpu_seconds() {
+        let shared = Arc::new(FleetShared::default());
+        let mut fleet = LiveCluster::new(shared.clone());
+        // stub members: channels with no thread behind them
+        for i in 0..2u32 {
+            let (tx, rx) = mpsc::channel::<InstMsg>();
+            std::mem::forget(rx); // keep the channel open without a thread
+            let join = thread::Builder::new().spawn(|| {}).unwrap();
+            fleet.members.push(LiveMember {
+                id: InstanceId(i),
+                tx,
+                join,
+                draining: false,
+                added_at: 1.0,
+            });
+            fleet.next_id = i + 1;
+        }
+        assert!(fleet.drain(InstanceId(1)));
+        assert!(!fleet.drain(InstanceId(1)), "already draining");
+        assert!(!fleet.drain(InstanceId(0)), "last non-draining member");
+        // a drained thread stamps its retirement; the meter freezes there
+        shared.removed.lock().unwrap().insert(InstanceId(1), 5.0);
+        assert!((fleet.gpu_seconds(11.0) - (10.0 + 4.0)).abs() < 1e-9);
     }
 }

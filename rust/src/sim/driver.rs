@@ -31,7 +31,7 @@ mod tests {
     }
 
     fn run_policy(policy: Box<dyn Policy>, reqs: Vec<Request>) -> (Summary, Simulator) {
-        let cfg = SimConfig::new(spec(), 2);
+        let cfg = SimConfig::builder(spec(), 2).build().expect("valid test config");
         let mut sim = Simulator::new(cfg, policy);
         let s = sim.run(reqs);
         (s, sim)
@@ -92,7 +92,7 @@ mod tests {
     fn utilization_stats_populated() {
         let reqs = poisson_workload(TraceKind::AzureCode, 1.0, 30.0, 9);
         let (_, sim) = run_policy(Box::new(ColocPolicy::new()), reqs);
-        for inst in &sim.instances {
+        for inst in sim.instances() {
             assert!(inst.stats.iterations > 0);
             assert!(inst.mfu() > 0.0 && inst.mfu() < 1.0);
             assert!(inst.hbm_usage() > 0.0 && inst.hbm_usage() <= 1.0);
@@ -138,7 +138,7 @@ mod tests {
         // Coloc/Disagg decisions read only digest-representable load, so
         // the exact and digest paths must produce identical summaries.
         let mk = |exact: bool, policy: Box<dyn Policy>| {
-            let mut cfg = SimConfig::new(spec(), 2);
+            let mut cfg = SimConfig::builder(spec(), 2).build().expect("valid test config");
             cfg.exact_snapshots = exact;
             let reqs = poisson_workload(TraceKind::BurstGpt, 2.0, 25.0, 29);
             let mut sim = Simulator::new(cfg, policy);
@@ -158,7 +158,7 @@ mod tests {
     fn exact_snapshot_path_completes_dynaserve() {
         // DynaServe's exact path probes per-item state — decisions may
         // differ from the digest path, but conservation must hold.
-        let mut cfg = SimConfig::new(spec(), 2);
+        let mut cfg = SimConfig::builder(spec(), 2).build().expect("valid test config");
         cfg.exact_snapshots = true;
         let reqs = poisson_workload(TraceKind::MiniReasoning, 1.5, 25.0, 31);
         let n = reqs.len();

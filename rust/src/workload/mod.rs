@@ -26,7 +26,9 @@ pub mod scenario;
 pub mod traces;
 
 pub use arrival::{ArrivalProcess, PoissonArrivals, ReplayArrivals};
-pub use scenario::{ArrivalShape, LengthModel, MultiTurnConfig, Scenario, TrafficClass};
+pub use scenario::{
+    ArrivalShape, LengthModel, MultiTurnConfig, ScaleAction, ScaleEvent, Scenario, TrafficClass,
+};
 pub use traces::{TraceKind, TraceSampler};
 
 use crate::core::Request;

@@ -19,6 +19,7 @@
 //! `experiments -- scenarios` (see EXPERIMENTS.md §Scenarios).
 
 use crate::core::{Request, SloTarget};
+pub use crate::exec::cluster::{ScaleAction, ScaleEvent};
 use crate::util::rng::{lognormal_params, Rng};
 use crate::workload::arrival::{ArrivalProcess, PoissonArrivals, ReplayArrivals};
 use crate::workload::traces::LenDist;
@@ -254,7 +255,10 @@ pub fn multiturn_chat(weight: f64) -> TrafficClass {
     }
 }
 
-/// A named workload scenario: shape × classes × horizon.
+/// A named workload scenario: shape × classes × horizon, plus optional
+/// deterministic fleet [`ScaleEvent`]s so shaped loads (diurnal/burst)
+/// can exercise scale-up/scale-down reproducibly — the executor enqueues
+/// them alongside the arrivals (`VirtualExecutor::push_scale_events`).
 #[derive(Debug, Clone)]
 pub struct Scenario {
     pub name: &'static str,
@@ -263,6 +267,8 @@ pub struct Scenario {
     pub classes: Vec<TrafficClass>,
     /// Arrival-window length in simulated seconds.
     pub duration: f64,
+    /// Scheduled fleet scaling actions (empty = fixed fleet).
+    pub scale_events: Vec<ScaleEvent>,
 }
 
 /// Expand one conversation: the opening turn plus follow-up turns whose
@@ -315,6 +321,7 @@ impl Scenario {
                     longcontext_rag(0.3),
                 ],
                 duration: 90.0,
+                scale_events: vec![],
             },
             Scenario {
                 name: "burst",
@@ -327,6 +334,7 @@ impl Scenario {
                 },
                 classes: vec![interactive_chat(0.7), longcontext_rag(0.3)],
                 duration: 90.0,
+                scale_events: vec![],
             },
             Scenario {
                 name: "diurnal",
@@ -334,6 +342,7 @@ impl Scenario {
                 shape: ArrivalShape::Diurnal { base_qps: 1.5, amplitude: 0.6, period: 60.0 },
                 classes: vec![interactive_chat(0.5), batch_summarization(0.5)],
                 duration: 120.0,
+                scale_events: vec![],
             },
             Scenario {
                 name: "ramp",
@@ -341,6 +350,7 @@ impl Scenario {
                 shape: ArrivalShape::Ramp { start_qps: 0.5, end_qps: 3.0 },
                 classes: vec![interactive_chat(0.6), batch_summarization(0.4)],
                 duration: 90.0,
+                scale_events: vec![],
             },
             Scenario {
                 name: "multi-turn",
@@ -348,12 +358,55 @@ impl Scenario {
                 shape: ArrivalShape::Steady { qps: 1.2 },
                 classes: vec![multiturn_chat(0.8), interactive_chat(0.2)],
                 duration: 90.0,
+                scale_events: vec![],
             },
         ]
     }
 
+    /// Every named scenario: the suite plus the elastic-evaluation one
+    /// (what `scenarios --list` enumerates and `by_name` resolves over).
+    pub fn all() -> Vec<Scenario> {
+        let mut v = Self::suite();
+        v.push(Self::elastic_diurnal());
+        v
+    }
+
     pub fn by_name(name: &str) -> Option<Scenario> {
-        Self::suite().into_iter().find(|s| s.name == name)
+        Self::all().into_iter().find(|s| s.name == name)
+    }
+
+    /// The elastic-evaluation scenario (`experiments elastic`): a diurnal
+    /// sinusoid whose peak needs more instances than its trough, plus
+    /// deterministic [`ScaleEvent`]s timed against the cycle — scale up
+    /// one instance as the load climbs toward each crest, drain it on the
+    /// descent. A fixed fleet must provision for the crest the whole run;
+    /// an elastic one pays GPU-seconds only where the load is.
+    pub fn elastic_diurnal() -> Scenario {
+        let period = 60.0;
+        let duration = 120.0;
+        let mut scale_events = Vec::new();
+        let mut t = 0.0;
+        while t < duration {
+            // the sinusoid crests at t = P/4 within each cycle: provision
+            // ahead of it, drain once the descent is underway
+            scale_events.push(ScaleEvent {
+                at: t + 0.10 * period,
+                action: ScaleAction::Add { count: 1 },
+            });
+            scale_events.push(ScaleEvent {
+                at: t + 0.55 * period,
+                action: ScaleAction::DrainNewest { count: 1 },
+            });
+            t += period;
+        }
+        Scenario {
+            name: "elastic-diurnal",
+            description: "day/night sinusoid with scheduled scale-up at each crest",
+            shape: ArrivalShape::Diurnal { base_qps: 2.0, amplitude: 0.8, period },
+            classes: vec![interactive_chat(0.6), batch_summarization(0.4)],
+            duration,
+            scale_events,
+        }
     }
 
     /// Retarget the scenario to a new horizon, rescaling the shape's time
@@ -373,6 +426,11 @@ impl Scenario {
             }
             other => other,
         };
+        // scale events ride the same time structure (a drain scheduled
+        // past the new horizon would silently turn elastic into fixed)
+        for ev in &mut self.scale_events {
+            ev.at *= f;
+        }
         self.duration = new_duration;
         self
     }
@@ -597,6 +655,26 @@ mod tests {
             // 120 s horizon with a 60 s period → rescaled to two 15 s cycles
             ArrivalShape::Diurnal { period, .. } => assert!((period - 15.0).abs() < 1e-9),
             other => panic!("diurnal scenario lost its shape: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn elastic_scenario_events_rescale_with_duration() {
+        let sc = Scenario::by_name("elastic-diurnal").expect("elastic scenario resolves");
+        assert!(!sc.scale_events.is_empty());
+        assert!(sc.scale_events.iter().any(|e| matches!(e.action, ScaleAction::Add { .. })));
+        assert!(
+            sc.scale_events.iter().any(|e| matches!(e.action, ScaleAction::DrainNewest { .. }))
+        );
+        assert!(sc.scale_events.iter().all(|e| e.at < sc.duration));
+        // shrinking the horizon must keep every event inside it, in order
+        let small = sc.clone().smoke();
+        assert_eq!(small.scale_events.len(), sc.scale_events.len());
+        assert!(small.scale_events.iter().all(|e| e.at < small.duration));
+        let f = small.duration / sc.duration;
+        for (a, b) in sc.scale_events.iter().zip(&small.scale_events) {
+            assert!((b.at - a.at * f).abs() < 1e-9);
+            assert_eq!(a.action, b.action);
         }
     }
 

@@ -33,7 +33,7 @@ fn token_conservation_across_policies() {
         let expect: usize = reqs.iter().map(|r| r.decode_len).sum();
         for policy in policies() {
             let name = policy.name();
-            let mut sim = Simulator::new(SimConfig::new(spec14(), 2), policy);
+            let mut sim = Simulator::new(SimConfig::builder(spec14(), 2).build().expect("valid test config"), policy);
             let s = sim.run(reqs.clone());
             assert_eq!(s.completed, reqs.len(), "{name}/{kind:?} completions");
             assert_eq!(s.total_tokens, expect, "{name}/{kind:?} tokens");
@@ -51,7 +51,7 @@ fn sim_terminates_and_metrics_sane() {
         let reqs = poisson_workload(TraceKind::BurstGpt, qps, 15.0, seed);
         let n = reqs.len();
         let mut sim = Simulator::new(
-            SimConfig::new(spec14(), 2),
+            SimConfig::builder(spec14(), 2).build().expect("valid test config"),
             Box::new(DynaServePolicy::new(GlobalConfig::default())),
         );
         let s = sim.run(reqs);
@@ -115,7 +115,7 @@ fn dynaserve_goodput_wins_under_pressure() {
 fn chunked_transfer_reduces_exposed_time() {
     let reqs = poisson_workload(TraceKind::MiniReasoning, 2.0, 60.0, 23);
     let mut sim = Simulator::new(
-        SimConfig::new(spec14(), 2),
+        SimConfig::builder(spec14(), 2).build().expect("valid test config"),
         Box::new(DynaServePolicy::new(GlobalConfig::default())),
     );
     sim.run(reqs);
@@ -140,7 +140,7 @@ fn slo_aware_batching_beats_fixed_budget() {
     let mut aware = build_sim(System::DynaServe, &llm, slo);
     let s_aware = aware.run(reqs.clone());
 
-    let mut cfg = SimConfig::new(spec14(), 2);
+    let mut cfg = SimConfig::builder(spec14(), 2).build().expect("valid test config");
     cfg.local = LocalConfig { fixed_budget: Some(2048), ..LocalConfig::default() };
     let mut fixed = Simulator::new(cfg, Box::new(DynaServePolicy::new(GlobalConfig::default())));
     let s_fixed = fixed.run(reqs);
@@ -171,7 +171,7 @@ fn prediction_error_token_conservation() {
         }
         let expect: usize = reqs.iter().map(|r| r.decode_len).sum();
         let mut sim = Simulator::new(
-            SimConfig::new(spec14(), 2),
+            SimConfig::builder(spec14(), 2).build().expect("valid test config"),
             Box::new(DynaServePolicy::new(GlobalConfig::default())),
         );
         let s = sim.run(reqs);
@@ -207,14 +207,14 @@ fn four_instance_pool() {
     let expect: usize = reqs.iter().map(|r| r.decode_len).sum();
     let n = reqs.len();
     let mut sim = Simulator::new(
-        SimConfig::new(spec14(), 4),
+        SimConfig::builder(spec14(), 4).build().expect("valid test config"),
         Box::new(DynaServePolicy::new(GlobalConfig::default())),
     );
     let s = sim.run(reqs);
     assert_eq!(s.completed, n);
     assert_eq!(s.total_tokens, expect);
     // all four instances did work
-    for inst in &sim.instances {
+    for inst in sim.instances() {
         assert!(inst.stats.iterations > 0, "instance {} idle", inst.id);
     }
 }

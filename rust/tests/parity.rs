@@ -77,3 +77,39 @@ fn handoff_heavy_trace_is_bit_identical_across_executors() {
     assert_eq!(sum_sim, sum_live);
     assert_eq!(cls_sim, cls_live);
 }
+
+/// Elastic parity: the same scenario trace *with scale events enabled*
+/// (membership changes, warm-up gating, drain + β re-placement, fleet
+/// GPU-second accounting) through both facades stays bit-identical —
+/// the control plane is part of the shared lifecycle, not a facade
+/// detail. Disagg is excluded: its positional prefill/decode pools
+/// assume a fixed fleet (see `baselines::disagg`).
+#[test]
+fn scale_event_trace_is_bit_identical_across_executors() {
+    let sc = Scenario::by_name("elastic-diurnal").expect("elastic scenario exists").smoke();
+    let requests = sc.generate(7);
+    assert!(!requests.is_empty());
+    assert!(!sc.scale_events.is_empty(), "the elastic scenario must carry scale events");
+    let llm = LlmSpec::qwen25_14b();
+    for sys in [System::DynaServe, System::Coloc { chunk: 1024 }] {
+        let run = |kind: ExecutorKind| {
+            let mut ex = build_executor(kind, sys, &llm, SloConfig::default());
+            ex.push_scale_events(&sc.scale_events);
+            let summary = ex.run(requests.clone());
+            let classes = ex.collector.class_summaries(summary.duration);
+            let fleet = ex.cluster.size_timeline();
+            (format!("{summary:?} fleet={fleet:?}"), format!("{classes:?}"), ex.stuck_requests())
+        };
+        let (sum_sim, cls_sim, stuck_sim) = run(ExecutorKind::Sim);
+        let (sum_live, cls_live, stuck_live) = run(ExecutorKind::LiveVirtual);
+        assert_eq!(
+            sum_sim,
+            sum_live,
+            "{}: elastic summaries/fleet timelines diverged between executors",
+            sys.name()
+        );
+        assert_eq!(cls_sim, cls_live, "{}: per-class rows diverged", sys.name());
+        assert_eq!(stuck_sim, 0, "{}: sim executor left stuck segments", sys.name());
+        assert_eq!(stuck_live, 0, "{}: live executor left stuck segments", sys.name());
+    }
+}
