@@ -4,7 +4,7 @@
 ARTIFACTS ?= artifacts
 PYTHON    ?= python3
 
-.PHONY: artifacts build test bench experiments parity elastic clean
+.PHONY: artifacts build test bench bench-1m experiments parity elastic clean
 
 # Lower the TinyQwen step function to HLO text + params + manifest, and
 # snapshot the simulator bench rows to BENCH_sim.json so every artifact
@@ -38,6 +38,16 @@ bench:
 	cargo bench --bench bench_schedulers
 	cargo bench --bench bench_sim
 	cargo bench --bench bench_kv
+
+# Memory-scale bench: one million requests through the executor, sketch
+# metrics + streamed arrivals vs the exact materialized path — wall-clock
+# and peak RSS per variant, merged into BENCH_sim.json alongside the
+# bench_sim rows (EXPERIMENTS.md §Perf). Knobs:
+# DYNASERVE_BENCH_1M_REQUESTS (count), DYNASERVE_BENCH_1M_EXACT=0 (skip
+# the O(n)-memory baseline variant on constrained hosts).
+bench-1m:
+	DYNASERVE_BENCH_JSON=$(abspath $(ARTIFACTS))/BENCH_sim.json \
+		cargo bench --bench bench_1m
 
 experiments:
 	cargo run --release --bin experiments -- all

@@ -1,0 +1,190 @@
+//! Memory-scale bench: one million requests through the virtual executor
+//! (`make bench-1m`), sketch+streamed vs exact+materialized — the PR-6
+//! bounded-memory claim measured, not asserted (EXPERIMENTS.md §Perf).
+//!
+//! Each variant runs ONCE (this is a minutes-long end-to-end run, not a
+//! microbench) and records wall-clock plus the process peak RSS (`VmHWM`
+//! from /proc/self/status). VmHWM is monotonic over the process lifetime,
+//! so the bounded-memory sketch+streamed variant runs FIRST — its peak is
+//! uncontaminated; the exact+materialized peak then subsumes it, which is
+//! the right direction for the before/after comparison (the "after" row
+//! must not be able to hide behind the "before" row's allocations).
+//!
+//! Environment knobs:
+//! * `DYNASERVE_BENCH_1M_REQUESTS` — target request count (default
+//!   1_000_000; CI's bench-smoke sets a small value so the harness is
+//!   exercised without the full run).
+//! * `DYNASERVE_BENCH_1M_EXACT=0` — skip the exact+materialized variant
+//!   (e.g. on memory-constrained hosts; the sketch row still lands).
+//! * `DYNASERVE_BENCH_JSON` — append rows to this report file (merged
+//!   with any existing rows, e.g. bench_sim's, rather than overwritten).
+
+use std::time::Instant;
+
+use dynaserve::coordinator::predictor::PredictorConfig;
+use dynaserve::coordinator::GlobalConfig;
+use dynaserve::core::SloTarget;
+use dynaserve::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+use dynaserve::exec::policy::DynaServePolicy;
+use dynaserve::exec::{ExecConfig, VirtualExecutor};
+use dynaserve::metrics::{SloConfig, Summary};
+use dynaserve::util::json::{obj, Json};
+use dynaserve::workload::{ArrivalShape, LengthModel, Scenario, TrafficClass};
+
+const SEED: u64 = 42;
+const QPS: f64 = 50.0;
+const FLEET: usize = 4;
+
+/// A light single-class diurnal scenario sized to `n` expected requests:
+/// short prompts/decodes keep the fleet ahead of the offered load, so the
+/// in-flight set — and with it the streamed variant's peak memory — stays
+/// O(fleet), independent of `n`.
+fn diurnal(n: usize) -> Scenario {
+    let duration = (n as f64 / QPS).max(60.0);
+    Scenario {
+        name: "bench-1m-diurnal",
+        description: "light diurnal stream for the memory-scale bench",
+        shape: ArrivalShape::Diurnal {
+            base_qps: QPS,
+            amplitude: 0.5,
+            period: duration / 4.0,
+        },
+        classes: vec![TrafficClass {
+            name: "light-chat",
+            weight: 1.0,
+            lengths: LengthModel::fit(48.0, 64.0, (8, 256), 12.0, 16.0, (2, 64)),
+            slo: SloTarget { tbt: 0.100, ttft: Some(1.0) },
+            multi_turn: None,
+        }],
+        duration,
+        scale_events: vec![],
+    }
+}
+
+fn executor(sc: &Scenario, exact: bool) -> VirtualExecutor {
+    let llm = LlmSpec::qwen25_14b();
+    let spec = InstanceSpec::new(GpuSpec::a100(), llm.clone(), 1);
+    let cfg = ExecConfig::builder(spec, FLEET)
+        .slo(SloConfig::default())
+        .horizon(2.0 * sc.duration)
+        .exact_metrics(exact)
+        .build()
+        .expect("static bench config is valid");
+    let gcfg = GlobalConfig {
+        kv_bytes_per_token: llm.kv_bytes_per_token(),
+        predictor: PredictorConfig { slo: SloConfig::default().tbt, ..Default::default() },
+        ..Default::default()
+    };
+    VirtualExecutor::new(cfg, Box::new(DynaServePolicy::new(gcfg)))
+}
+
+/// Peak resident set (`VmHWM`) in kB — Linux only, `None` elsewhere.
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+struct Row {
+    name: &'static str,
+    wall_s: f64,
+    peak_rss_kb: Option<u64>,
+    summary: Summary,
+}
+
+fn report(n: usize, rows: &[Row]) {
+    println!("\nbench-1m: {n} target requests, {QPS} qps diurnal, fleet of {FLEET}");
+    for r in rows {
+        let rss = r
+            .peak_rss_kb
+            .map(|kb| format!("{:.0} MB", kb as f64 / 1024.0))
+            .unwrap_or_else(|| "n/a".to_string());
+        println!(
+            "  {:<24} wall {:>8.2} s   peak RSS {:>10}   completed {:>8}   tokens {:>10}",
+            r.name, r.wall_s, rss, r.summary.completed, r.summary.total_tokens
+        );
+    }
+
+    // merge-append into $DYNASERVE_BENCH_JSON so these rows coexist with
+    // bench_sim's in the same BENCH_sim.json artifact
+    let Ok(path) = std::env::var("DYNASERVE_BENCH_JSON") else { return };
+    let mut arr = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| j.as_arr().map(|a| a.to_vec()))
+        .unwrap_or_default();
+    // replace any rows from a previous bench-1m run instead of stacking
+    arr.retain(|j| {
+        j.get("name")
+            .and_then(|n| n.as_str())
+            .map(|n| !n.starts_with("bench-1m"))
+            .unwrap_or(true)
+    });
+    for r in rows {
+        arr.push(obj([
+            ("name", Json::from(r.name)),
+            ("requests", Json::from(n)),
+            ("wall_s", Json::from(r.wall_s)),
+            (
+                "peak_rss_mb",
+                r.peak_rss_kb
+                    .map(|kb| Json::from(kb as f64 / 1024.0))
+                    .unwrap_or(Json::Null),
+            ),
+            ("completed", Json::from(r.summary.completed)),
+            ("total_tokens", Json::from(r.summary.total_tokens)),
+            ("good_tokens", Json::from(r.summary.good_tokens)),
+        ]));
+    }
+    if let Some(dir) = std::path::Path::new(&path).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    match std::fs::write(&path, Json::Arr(arr).dump_pretty()) {
+        Ok(()) => println!("[bench json -> {path}]"),
+        Err(e) => eprintln!("warn: could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let n: usize = std::env::var("DYNASERVE_BENCH_1M_REQUESTS")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(1_000_000);
+    let run_exact = std::env::var("DYNASERVE_BENCH_1M_EXACT").as_deref() != Ok("0");
+    let sc = diurnal(n);
+    let mut rows = Vec::new();
+
+    // "after": sketch metrics, streamed arrivals — bounded memory
+    let mut ex = executor(&sc, false);
+    let t0 = Instant::now();
+    let streamed = ex.run_stream(sc.stream(SEED));
+    rows.push(Row {
+        name: "bench-1m sketch+stream",
+        wall_s: t0.elapsed().as_secs_f64(),
+        peak_rss_kb: peak_rss_kb(),
+        summary: streamed,
+    });
+    drop(ex);
+
+    // "before": exact metrics, materialized trace — O(n) memory
+    if run_exact {
+        let mut ex = executor(&sc, true);
+        let t0 = Instant::now();
+        let requests = sc.generate(SEED);
+        let exact = ex.run(requests);
+        rows.push(Row {
+            name: "bench-1m exact+materialized",
+            wall_s: t0.elapsed().as_secs_f64(),
+            peak_rss_kb: peak_rss_kb(),
+            summary: exact,
+        });
+        // counters are exact in both collector modes and the streamed
+        // path is pinned bit-identical to the materialized one, so any
+        // divergence here is a real lifecycle bug
+        assert_eq!(rows[0].summary.completed, exact.completed);
+        assert_eq!(rows[0].summary.total_tokens, exact.total_tokens);
+        assert_eq!(rows[0].summary.good_tokens, exact.good_tokens);
+    }
+
+    report(n, &rows);
+}

@@ -44,7 +44,7 @@ use crate::exec::runtime::{InstanceRuntime, SegmentDisposition, SeqKey};
 use crate::exec::submit::{make_segment, plan_submission};
 use crate::exec::transport::ModeledTransport;
 use crate::kv::LinkSpec;
-use crate::metrics::{Collector, SloConfig, Summary};
+use crate::metrics::{Collector, MetricsMode, SloConfig, Summary};
 use crate::util::stats::Samples;
 
 /// Invalid executor configuration, rejected at construction by
@@ -116,6 +116,13 @@ pub struct ExecConfig {
     /// Feed policies full `InstanceSnapshot`s instead of load digests —
     /// the exact reference path (slower; for equivalence tests/debugging).
     pub exact_snapshots: bool,
+    /// Collect metrics with exact per-sample buffers instead of the
+    /// default bounded-memory sketches ([`crate::metrics::MetricsMode`]).
+    /// The exact path is bit-identical to the pre-sketch collector and is
+    /// what the parity suite pins; the sketch default keeps a
+    /// million-request run in O(fleet + in-flight) memory (DESIGN.md
+    /// §Metrics).
+    pub exact_metrics: bool,
     /// Safety cap on simulated seconds.
     pub horizon: f64,
     /// Modeled bring-up delay for instances added after bootstrap: they
@@ -144,6 +151,7 @@ impl ExecConfig {
                 transfer_chunk_tokens: 512,
                 chunked_transfer: true,
                 exact_snapshots: false,
+                exact_metrics: false,
                 horizon: 100_000.0,
                 warmup: 2.0,
                 autoscale_interval: 1.0,
@@ -199,6 +207,13 @@ impl ExecConfigBuilder {
         self
     }
 
+    /// Exact per-sample metrics instead of the default streaming sketches
+    /// (see [`ExecConfig::exact_metrics`]).
+    pub fn exact_metrics(mut self, exact: bool) -> Self {
+        self.cfg.exact_metrics = exact;
+        self
+    }
+
     pub fn horizon(mut self, seconds: f64) -> Self {
         self.cfg.horizon = seconds;
         self
@@ -248,7 +263,6 @@ impl ExecConfigBuilder {
 
 #[derive(Debug)]
 enum EventKind {
-    Arrival(Request),
     IterDone { instance: InstanceId, plan: BatchPlan, latency: f64 },
     SeqReady { instance: InstanceId, key: SeqKey },
     AlphaEvict { instance: InstanceId, key: SeqKey },
@@ -351,8 +365,10 @@ impl VirtualExecutor {
             cfg.chunked_transfer,
             cfg.spec.llm.kv_bytes_per_token(),
         );
+        let mode =
+            if cfg.exact_metrics { MetricsMode::Exact } else { MetricsMode::Sketch };
         VirtualExecutor {
-            collector: Collector::new(cfg.slo),
+            collector: Collector::with_mode(cfg.slo, mode),
             cfg,
             cluster,
             policy,
@@ -401,10 +417,28 @@ impl VirtualExecutor {
 
     /// Run to completion over `requests`; returns the serving summary
     /// (including fleet GPU-seconds and goodput-per-GPU-second).
+    ///
+    /// Thin wrapper over [`Self::run_stream`] — a materialized trace is
+    /// just an arrival iterator that happens to be fully in memory. The
+    /// two paths are bit-identical on the same input (pinned by
+    /// `tests/parity.rs`).
     pub fn run(&mut self, requests: Vec<Request>) -> Summary {
-        for r in requests {
-            self.push(r.arrival, EventKind::Arrival(r));
-        }
+        self.run_stream(requests)
+    }
+
+    /// Run to completion, pulling arrivals lazily from `arrivals` (e.g.
+    /// [`crate::workload::Scenario::stream`]). Arrivals must be
+    /// non-decreasing in time. Only the runtime event heap — O(fleet +
+    /// in-flight segments) — is ever resident, so a million-request run
+    /// never materializes its trace (DESIGN.md §Metrics).
+    ///
+    /// Tie rule: an arrival at time t runs before any queued event at the
+    /// same t. This reproduces the materialized path exactly, where
+    /// arrivals are pushed before anything else and therefore hold the
+    /// lowest sequence numbers at any tied timestamp.
+    pub fn run_stream(&mut self, arrivals: impl IntoIterator<Item = Request>) -> Summary {
+        let mut arrivals = arrivals.into_iter();
+        let mut next_arrival = arrivals.next();
         for ev in std::mem::take(&mut self.pending_scale_events) {
             self.push(ev.at, EventKind::Scale(ev.action));
         }
@@ -414,7 +448,26 @@ impl VirtualExecutor {
         }
         self.truncated = false;
         self.work_end = self.now();
-        while let Some(ev) = self.events.pop() {
+        loop {
+            let take_arrival = match (&next_arrival, self.events.peek()) {
+                (Some(r), Some(ev)) => r.arrival <= ev.time,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            if take_arrival {
+                let req = next_arrival.take().expect("guarded by take_arrival");
+                if req.arrival > self.cfg.horizon {
+                    self.truncated = true;
+                    break;
+                }
+                self.clock.set(req.arrival);
+                self.work_end = req.arrival;
+                self.on_arrival(req);
+                next_arrival = arrivals.next();
+                continue;
+            }
+            let ev = self.events.pop().expect("guarded by take_arrival");
             if ev.time > self.cfg.horizon {
                 self.truncated = true;
                 break;
@@ -423,15 +476,13 @@ impl VirtualExecutor {
             let now = ev.time;
             if matches!(
                 ev.kind,
-                EventKind::Arrival(_)
-                    | EventKind::IterDone { .. }
+                EventKind::IterDone { .. }
                     | EventKind::SeqReady { .. }
                     | EventKind::AlphaEvict { .. }
             ) {
                 self.work_end = now;
             }
             match ev.kind {
-                EventKind::Arrival(req) => self.on_arrival(req),
                 EventKind::IterDone { instance, plan, latency } => {
                     self.on_iter_done(instance, plan, latency)
                 }

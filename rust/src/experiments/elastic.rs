@@ -20,6 +20,14 @@
 //!
 //! Usage:
 //!   experiments elastic [--smoke] [--seed N] [--duration S] [--warmup S]
+//!                       [--seeds N] [--exact-metrics]
+//!
+//! `--seeds N` reruns every fleet on seeds base..base+N-1 (deterministic
+//! per seed, cells fan out across the worker pool) and adds an "mc"
+//! block — mean + 95% CI for the goodput/P99 columns — to each system's
+//! entry in `results/elastic.json`. `--exact-metrics` selects the exact
+//! per-sample collector instead of the default bounded-memory quantile
+//! sketch (DESIGN.md §Metrics).
 //!
 //! [`ScaleEvent`]: crate::exec::cluster::ScaleEvent
 
@@ -29,8 +37,8 @@ use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
 use crate::exec::cluster::{BandAutoscaler, BandConfig};
 use crate::exec::policy::DynaServePolicy;
 use crate::exec::{ExecConfig, VirtualExecutor};
-use crate::experiments::runners::{run_cells, sweep_threads, warn_if_stuck};
-use crate::experiments::write_results;
+use crate::experiments::runners::{mc_seeds, mean_ci95, run_cells, sweep_threads, warn_if_stuck};
+use crate::experiments::{mc_json, write_results};
 use crate::metrics::{SloConfig, Summary};
 use crate::util::cli::{pct, Args, Table};
 use crate::util::json::{obj, Json};
@@ -71,7 +79,8 @@ struct FleetResult {
 fn run_fleet(
     mode: FleetMode,
     sc: &Scenario,
-    requests: &[crate::core::Request],
+    seed: u64,
+    exact: bool,
     warmup: f64,
     period: f64,
 ) -> anyhow::Result<FleetResult> {
@@ -84,6 +93,7 @@ fn run_fleet(
         .warmup(warmup)
         .autoscale_interval((period / 60.0).clamp(0.05, 1.0))
         .max_instances(MAX_FLEET)
+        .exact_metrics(exact)
         .build()?;
     let gcfg = GlobalConfig {
         kv_bytes_per_token: llm.kv_bytes_per_token(),
@@ -104,13 +114,16 @@ fn run_fleet(
             prefill_backlog_budget: 16_384,
         }))),
     }
-    let summary = ex.run(requests.to_vec());
-    let stuck = warn_if_stuck(&format!("elastic/{}", mode.name()), &ex);
+    // lazy arrivals: peak memory stays O(fleet + in-flight)
+    let summary = ex.run_stream(sc.stream(seed));
+    let stuck = warn_if_stuck(&format!("elastic/{} seed {seed}", mode.name()), &ex);
     Ok(FleetResult { mode, summary, stuck, fleet: ex.cluster.size_timeline() })
 }
 
 pub fn run(args: &Args) -> anyhow::Result<()> {
     let seed = args.u64_or("seed", 42);
+    let seeds_n = (args.u64_or("seeds", 1).max(1)) as usize;
+    let exact = args.bool("exact-metrics");
     let mut sc = Scenario::elastic_diurnal();
     if args.bool("smoke") {
         sc = sc.smoke();
@@ -124,29 +137,41 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     };
     // modeled instance bring-up: a twentieth of the cycle, capped at 2 s
     let warmup = args.f64_or("warmup", (0.05 * period).clamp(0.05, 2.0));
-    let requests = sc.generate(seed);
+    // count without materializing — arrivals stream into each fleet below
+    let n_requests = sc.stream(seed).count();
     println!(
         "Elastic fleets on '{}' — {} requests over {:.0}s (period {:.0}s, warm-up {:.2}s, \
-         seed {seed})\n",
+         seed {seed}, {seeds_n} seed(s))\n",
         sc.name,
-        requests.len(),
+        n_requests,
         sc.duration,
         period,
         warmup
     );
 
     let modes = [FleetMode::Fixed, FleetMode::Scheduled, FleetMode::Autoscaled];
-    let results: Vec<FleetResult> = run_cells(&modes, sweep_threads(), |&mode| {
-        run_fleet(mode, &sc, &requests, warmup, period)
-    })
-    .into_iter()
-    .collect::<anyhow::Result<_>>()?;
+    let seeds = mc_seeds(seed, seeds_n);
+    // (fleet × seed) cells fan out together; seed-0 feeds the table and the
+    // fleet-size timeline exactly as a single-seed run would
+    let cells: Vec<(FleetMode, u64)> = modes
+        .iter()
+        .flat_map(|&mode| seeds.iter().map(move |&s| (mode, s)))
+        .collect();
+    let all_results: Vec<FleetResult> =
+        run_cells(&cells, sweep_threads(), |&(mode, cell_seed)| {
+            run_fleet(mode, &sc, cell_seed, exact, warmup, period)
+        })
+        .into_iter()
+        .collect::<anyhow::Result<_>>()?;
+    let results: Vec<&FleetResult> =
+        (0..modes.len()).map(|i| &all_results[i * seeds_n]).collect();
 
     let mut t = Table::new([
         "fleet", "goodput tok/s", "goodput/GPU-s", "GPU-s", "attain %", "peak", "mean", "p99 TBT ms",
     ]);
     let mut sys_objs = Vec::new();
-    for r in &results {
+    for (mode_i, r) in results.iter().enumerate() {
+        let per_seed = &all_results[mode_i * seeds_n..(mode_i + 1) * seeds_n];
         let s = &r.summary;
         let peak = r.fleet.iter().map(|&(_, n)| n).max().unwrap_or(0);
         let mean_fleet = if s.duration > 0.0 { s.gpu_seconds / s.duration } else { 0.0 };
@@ -179,6 +204,25 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
                 ]),
             ),
             ("stuck_requests", Json::from(r.stuck)),
+            // Monte Carlo across the seed list: mean + 95% CI per headline
+            // column (n = seeds with a finite value; 1 seed → zero-width CI)
+            (
+                "mc",
+                obj([
+                    (
+                        "goodput_tok_s",
+                        mc_json(&fleet_col(per_seed, |s| s.goodput_tok_s)),
+                    ),
+                    (
+                        "goodput_per_gpu_s",
+                        mc_json(&fleet_col(per_seed, |s| s.goodput_per_gpu_s)),
+                    ),
+                    ("gpu_seconds", mc_json(&fleet_col(per_seed, |s| s.gpu_seconds))),
+                    ("attainment", mc_json(&fleet_col(per_seed, |s| s.attainment))),
+                    ("p99_tbt", mc_json(&fleet_col(per_seed, |s| s.p99_tbt))),
+                    ("p99_ttft", mc_json(&fleet_col(per_seed, |s| s.p99_ttft))),
+                ]),
+            ),
             (
                 "fleet",
                 Json::Arr(
@@ -193,6 +237,22 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         ]));
     }
     t.print();
+    if seeds_n > 1 {
+        println!("\nMonte Carlo over {seeds_n} seeds (mean ± 95% CI):");
+        for (mode_i, r) in results.iter().enumerate() {
+            let per_seed = &all_results[mode_i * seeds_n..(mode_i + 1) * seeds_n];
+            let good = mean_ci95(&fleet_col(per_seed, |s| s.goodput_tok_s));
+            let per_gpu = mean_ci95(&fleet_col(per_seed, |s| s.goodput_per_gpu_s));
+            println!(
+                "  {:<12} goodput {:.1} ± {:.1} tok/s, goodput/GPU-s {:.2} ± {:.2}",
+                r.mode.name(),
+                good.mean,
+                good.ci95,
+                per_gpu.mean,
+                per_gpu.ci95
+            );
+        }
+    }
 
     let fixed = results.iter().find(|r| r.mode == FleetMode::Fixed).expect("fixed row");
     for r in results.iter().filter(|r| r.mode != FleetMode::Fixed) {
@@ -214,14 +274,21 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     let artifact = obj([
         ("scenario", Json::from(sc.name)),
         ("seed", Json::from(seed as usize)),
+        ("seeds", Json::from(seeds_n)),
+        ("exact_metrics", Json::from(exact)),
         ("duration_s", Json::from(sc.duration)),
         ("period_s", Json::from(period)),
         ("warmup_s", Json::from(warmup)),
-        ("requests", Json::from(requests.len())),
+        ("requests", Json::from(n_requests)),
         ("min_fleet", Json::from(MIN_FLEET)),
         ("max_fleet", Json::from(MAX_FLEET)),
         ("systems", Json::Arr(sys_objs)),
     ]);
     write_results("elastic", &artifact);
     Ok(())
+}
+
+/// One headline column across a fleet's per-seed results, in seed order.
+fn fleet_col(per_seed: &[FleetResult], f: impl Fn(&Summary) -> f64) -> Vec<f64> {
+    per_seed.iter().map(|r| f(&r.summary)).collect()
 }

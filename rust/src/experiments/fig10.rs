@@ -5,7 +5,7 @@
 //! throughout.
 
 use crate::costmodel::LlmSpec;
-use crate::experiments::runners::{build_sim, System};
+use crate::experiments::runners::{build_sim_exact, System};
 use crate::experiments::write_results;
 use crate::metrics::SloConfig;
 use crate::util::cli::{Args, Table};
@@ -47,7 +47,9 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     let windows = (duration / window).ceil() as usize;
     let mut per_system: Vec<(String, Vec<f64>)> = Vec::new();
     for sys in System::all_default() {
-        let mut sim = build_sim(sys, &llm, slo);
+        // exact metrics: the window breakdown reads per-request records,
+        // which the default sketch collector deliberately doesn't keep
+        let mut sim = build_sim_exact(sys, &llm, slo);
         sim.run(reqs.clone());
         crate::experiments::runners::warn_if_stuck(&format!("fig10 {}", sys.name()), &sim);
         // window goodput from completed-request records

@@ -5,7 +5,7 @@
 
 use crate::coordinator::LocalConfig;
 use crate::costmodel::LlmSpec;
-use crate::experiments::runners::{build_sim, System};
+use crate::experiments::runners::{build_sim_exact, System};
 use crate::experiments::write_results;
 use crate::metrics::SloConfig;
 use crate::util::cli::{Args, Table};
@@ -28,7 +28,9 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     let mut tables = Vec::new();
     for (label, slo_aware) in [("with SLO-aware batching", true), ("without (fixed 2048 chunks)", false)] {
         let reqs = poisson_workload(kind, qps, duration, seed);
-        let mut sim = build_sim(System::DynaServe, &llm, slo);
+        // exact metrics: the CDF dump reads the raw TBT sample buffer,
+        // which the default sketch collector deliberately doesn't keep
+        let mut sim = build_sim_exact(System::DynaServe, &llm, slo);
         if !slo_aware {
             let mut cfg = sim.cfg.clone();
             cfg.local = LocalConfig { fixed_budget: Some(2048), ..LocalConfig::default() };
@@ -43,7 +45,11 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         }
         let s = sim.run(reqs);
         crate::experiments::runners::warn_if_stuck(&format!("fig11 {label}"), &sim);
-        let cdf = sim.collector.tbt_samples().cdf(12);
+        let cdf = sim
+            .collector
+            .tbt_samples()
+            .expect("exact-mode collector keeps the TBT sample buffer")
+            .cdf(12);
         println!("--- {label}: attainment {:.1}%, p99 {:.1} ms ---", s.attainment * 100.0, s.p99_tbt * 1e3);
         let mut t = Table::new(["TBT ms", "CDF"]);
         for (v, f) in &cdf {

@@ -57,6 +57,17 @@ pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
     ]
 }
 
+/// JSON for one Monte Carlo column: mean + 95% CI over per-seed values
+/// ([`runners::mean_ci95`]). Non-finite aggregates — e.g. the percentile
+/// column of seeds that completed nothing — serialize as `null`, since
+/// the minimal writer has no NaN representation.
+pub fn mc_json(values: &[f64]) -> crate::util::json::Json {
+    use crate::util::json::{obj, Json};
+    let c = runners::mean_ci95(values);
+    let num = |v: f64| if v.is_finite() { Json::from(v) } else { Json::Null };
+    obj([("mean", num(c.mean)), ("ci95", num(c.ci95)), ("n", Json::from(c.n))])
+}
+
 /// Write a results JSON artifact (best-effort; failures are warnings).
 pub fn write_results(name: &str, json: &crate::util::json::Json) {
     let dir = std::path::Path::new("results");

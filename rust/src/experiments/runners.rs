@@ -88,12 +88,21 @@ impl ExecutorKind {
 }
 
 /// The (config, policy) pair every experiment cell is built from — one
-/// construction path shared by both executor facades.
-fn sim_parts(system: System, llm: &LlmSpec, slo: SloConfig) -> (SimConfig, Box<dyn Policy>) {
+/// construction path shared by both executor facades. `exact_metrics`
+/// selects the collector mode: sketch (the default, bounded memory) or
+/// the bit-identical exact path (`--exact-metrics`, parity tests, and
+/// consumers that need per-sample data such as the Fig. 10/11 dumps).
+fn sim_parts(
+    system: System,
+    llm: &LlmSpec,
+    slo: SloConfig,
+    exact_metrics: bool,
+) -> (SimConfig, Box<dyn Policy>) {
     let spec = InstanceSpec::new(GpuSpec::a100(), llm.clone(), tp_for(llm));
     let mut cfg = SimConfig::builder(spec.clone(), 2)
         .slo(slo)
         .link(LinkSpec::default())
+        .exact_metrics(exact_metrics)
         .build()
         .expect("static experiment config is valid");
 
@@ -125,21 +134,42 @@ fn sim_parts(system: System, llm: &LlmSpec, slo: SloConfig) -> (SimConfig, Box<d
     (cfg, policy)
 }
 
-/// Build a simulator for `system` over two instances of `llm`.
+/// Build a simulator for `system` over two instances of `llm`
+/// (sketch-mode metrics — the experiment default).
 pub fn build_sim(system: System, llm: &LlmSpec, slo: SloConfig) -> Simulator {
-    let (cfg, policy) = sim_parts(system, llm, slo);
+    let (cfg, policy) = sim_parts(system, llm, slo, false);
+    Simulator::new(cfg, policy)
+}
+
+/// [`build_sim`] with exact per-sample metrics — for consumers that read
+/// the collector's sample buffers or per-request records (Fig. 10/11) or
+/// pin bit-identical summaries (`--exact-metrics`).
+pub fn build_sim_exact(system: System, llm: &LlmSpec, slo: SloConfig) -> Simulator {
+    let (cfg, policy) = sim_parts(system, llm, slo, true);
     Simulator::new(cfg, policy)
 }
 
 /// Build an executor for `system` through the chosen facade (see
-/// [`ExecutorKind`]).
+/// [`ExecutorKind`]), sketch-mode metrics.
 pub fn build_executor(
     kind: ExecutorKind,
     system: System,
     llm: &LlmSpec,
     slo: SloConfig,
 ) -> Simulator {
-    let (cfg, policy) = sim_parts(system, llm, slo);
+    build_executor_exact(kind, system, llm, slo, false)
+}
+
+/// [`build_executor`] with an explicit metrics mode — the parity suite
+/// drives both facades through here on the exact path.
+pub fn build_executor_exact(
+    kind: ExecutorKind,
+    system: System,
+    llm: &LlmSpec,
+    slo: SloConfig,
+    exact_metrics: bool,
+) -> Simulator {
+    let (cfg, policy) = sim_parts(system, llm, slo, exact_metrics);
     match kind {
         ExecutorKind::Sim => Simulator::new(cfg, policy),
         ExecutorKind::LiveVirtual => crate::server::virtual_executor(cfg, policy),
@@ -284,6 +314,41 @@ pub fn qps_sweep_with_threads(
     qps_points.iter().copied().zip(summaries).collect()
 }
 
+/// The `n` deterministic seeds of a Monte Carlo sweep: `base`, `base+1`,
+/// … (wrapping). Every system runs the same seed list, so per-seed
+/// comparisons stay paired and each seed's cell is independently
+/// reproducible (`--seed base --seeds n`).
+pub fn mc_seeds(base: u64, n: usize) -> Vec<u64> {
+    (0..n as u64).map(|i| base.wrapping_add(i)).collect()
+}
+
+/// Mean and 95 % confidence interval over Monte Carlo repetitions — what
+/// the scenario/elastic JSON artifacts report per goodput/P99 column.
+#[derive(Debug, Clone, Copy)]
+pub struct MeanCi {
+    pub mean: f64,
+    /// Half-width of the normal-approximation 95 % CI: 1.96·s/√n
+    /// (0 when fewer than two finite repetitions).
+    pub ci95: f64,
+    /// Repetitions actually aggregated (NaN repetitions — e.g. the
+    /// percentile of an empty class — are excluded).
+    pub n: usize,
+}
+
+pub fn mean_ci95(values: &[f64]) -> MeanCi {
+    let vals: Vec<f64> = values.iter().copied().filter(|v| v.is_finite()).collect();
+    let n = vals.len();
+    if n == 0 {
+        return MeanCi { mean: f64::NAN, ci95: f64::NAN, n: 0 };
+    }
+    let mean = vals.iter().sum::<f64>() / n as f64;
+    if n < 2 {
+        return MeanCi { mean, ci95: 0.0, n };
+    }
+    let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / (n - 1) as f64;
+    MeanCi { mean, ci95: 1.96 * (var / n as f64).sqrt(), n }
+}
+
 /// Default per-workload chunk size for the colocation baseline (the paper
 /// tunes 256–2048 per workload).
 pub fn coloc_chunk_for(kind: TraceKind) -> usize {
@@ -332,6 +397,31 @@ mod tests {
         let parallel = run_cells(&cells, 8, |&i| i * 3 + 1);
         assert_eq!(serial, (0..37).map(|i| i * 3 + 1).collect::<Vec<_>>());
         assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn mc_seed_list_is_deterministic_and_distinct() {
+        let a = mc_seeds(40, 5);
+        assert_eq!(a, vec![40, 41, 42, 43, 44]);
+        assert_eq!(a, mc_seeds(40, 5));
+        // wrap-around stays well-defined
+        assert_eq!(mc_seeds(u64::MAX, 2), vec![u64::MAX, 0]);
+    }
+
+    #[test]
+    fn mean_ci95_matches_hand_computation() {
+        let c = mean_ci95(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert_eq!(c.n, 8);
+        assert!((c.mean - 5.0).abs() < 1e-12);
+        // s² = 32/7; ci = 1.96·√(s²/8)
+        assert!((c.ci95 - 1.96 * (32.0 / 7.0 / 8.0).sqrt()).abs() < 1e-12);
+        // constants have zero width; NaNs are excluded not propagated
+        assert_eq!(mean_ci95(&[3.0, 3.0, 3.0]).ci95, 0.0);
+        let with_nan = mean_ci95(&[1.0, f64::NAN, 3.0]);
+        assert_eq!(with_nan.n, 2);
+        assert!((with_nan.mean - 2.0).abs() < 1e-12);
+        assert!(mean_ci95(&[]).mean.is_nan());
+        assert_eq!(mean_ci95(&[7.0]).ci95, 0.0);
     }
 
     #[test]

@@ -13,6 +13,16 @@
 //!                                              executor (bit-identical
 //!                                              to --executor sim; the
 //!                                              parity test pins it)
+//!   experiments -- scenarios --seeds 5         Monte Carlo: rerun every
+//!                                              system on seeds base..base+4
+//!                                              (deterministic per seed) and
+//!                                              add an "mc" block — mean +
+//!                                              95% CI for goodput/P99 — to
+//!                                              each system's JSON entry
+//!   experiments -- scenarios --exact-metrics   exact per-sample collector
+//!                                              instead of the default
+//!                                              bounded-memory quantile
+//!                                              sketch (DESIGN.md §Metrics)
 //!
 //! Each scenario runs DynaServe and both baselines over the *same*
 //! generated request stream (cells fan out via `runners::run_cells`) and
@@ -25,9 +35,9 @@
 
 use crate::costmodel::LlmSpec;
 use crate::experiments::runners::{
-    build_executor, run_cells, sweep_threads, ExecutorKind, System,
+    build_executor_exact, mc_seeds, run_cells, sweep_threads, ExecutorKind, System,
 };
-use crate::experiments::write_results;
+use crate::experiments::{mc_json, write_results};
 use crate::metrics::{ClassSummary, SloConfig, Summary};
 use crate::util::cli::{ms, pct, Args, Table};
 use crate::util::json::{obj, Json};
@@ -42,6 +52,8 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         return Ok(());
     }
     let seed = args.u64_or("seed", 42);
+    let seeds_n = (args.u64_or("seeds", 1).max(1)) as usize;
+    let exact = args.bool("exact-metrics");
     let smoke = args.bool("smoke");
     let executor = match args.get("executor") {
         Some(name) => ExecutorKind::by_name(name).ok_or_else(|| {
@@ -63,28 +75,43 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             // burst/diurnal scenario keeps its defining feature
             sc = sc.with_duration(d);
         }
-        run_scenario(&sc, seed, executor)?;
+        run_scenario(&sc, seed, seeds_n, exact, executor)?;
     }
     Ok(())
 }
 
-fn run_scenario(sc: &Scenario, seed: u64, executor: ExecutorKind) -> anyhow::Result<()> {
+fn run_scenario(
+    sc: &Scenario,
+    seed: u64,
+    seeds_n: usize,
+    exact: bool,
+    executor: ExecutorKind,
+) -> anyhow::Result<()> {
     let llm = LlmSpec::qwen25_14b();
     let slo = SloConfig::default();
-    let requests = sc.generate(seed);
+    // count without materializing — arrivals stream into the executor below
+    let n_requests = sc.stream(seed).count();
     println!(
-        "\nscenario '{}' — {} ({} requests over {:.0}s, seed {seed}, executor {})",
+        "\nscenario '{}' — {} ({} requests over {:.0}s, seed {seed}, {seeds_n} seed(s), \
+         executor {})",
         sc.name,
         sc.description,
-        requests.len(),
+        n_requests,
         sc.duration,
         executor.name()
     );
 
     let systems = System::all_default();
+    let seeds = mc_seeds(seed, seeds_n);
+    // (system × seed) cells fan out together; seed-0 results feed the table
+    // and per-class JSON exactly as a single-seed run would
+    let cells: Vec<(System, u64)> = systems
+        .iter()
+        .flat_map(|&sys| seeds.iter().map(move |&s| (sys, s)))
+        .collect();
     let results: Vec<(Summary, Vec<ClassSummary>, usize)> =
-        run_cells(&systems, sweep_threads(), |&sys| {
-            let mut sim = build_executor(executor, sys, &llm, slo);
+        run_cells(&cells, sweep_threads(), |&(sys, cell_seed)| {
+            let mut sim = build_executor_exact(executor, sys, &llm, slo, exact);
             // scenario-attached fleet scale events run on every executor —
             // except the disagg baseline, whose positional prefill/decode
             // pools model a statically-partitioned deployment and panic
@@ -92,10 +119,11 @@ fn run_scenario(sc: &Scenario, seed: u64, executor: ExecutorKind) -> anyhow::Res
             if !matches!(sys, System::Disagg) {
                 sim.push_scale_events(&sc.scale_events);
             }
-            let summary = sim.run(requests.clone());
+            // lazy arrivals: peak memory stays O(fleet + in-flight)
+            let summary = sim.run_stream(sc.stream(cell_seed));
             let classes = sim.collector.class_summaries(summary.duration);
             let stuck = crate::experiments::runners::warn_if_stuck(
-                &format!("scenario '{}' / {}", sc.name, sys.name()),
+                &format!("scenario '{}' / {} seed {cell_seed}", sc.name, sys.name()),
                 &sim,
             );
             (summary, classes, stuck)
@@ -108,7 +136,11 @@ fn run_scenario(sc: &Scenario, seed: u64, executor: ExecutorKind) -> anyhow::Res
     let mut sys_objs = Vec::new();
     // (stuck-run stderr warnings were already emitted by warn_if_stuck
     // inside each run cell; `stuck` lands in the JSON artifact below)
-    for (sys, (summary, classes, stuck)) in systems.iter().zip(&results) {
+    for (sys_i, sys) in systems.iter().enumerate() {
+        let per_seed = &results[sys_i * seeds_n..(sys_i + 1) * seeds_n];
+        // the table and per-class JSON report the base seed's run — with
+        // --seeds 1 that is bit-identical to a plain single-seed invocation
+        let (summary, classes, stuck) = &per_seed[0];
         t.row([
             sys.name().to_string(),
             "(all)".to_string(),
@@ -168,21 +200,64 @@ fn run_scenario(sc: &Scenario, seed: u64, executor: ExecutorKind) -> anyhow::Res
             ),
             // nonzero = scheduling deadlock; see the stderr warning
             ("stuck_requests", Json::from(*stuck)),
+            // Monte Carlo across the seed list: mean + 95% CI per headline
+            // column (n = seeds with a finite value; 1 seed → zero-width CI)
+            (
+                "mc",
+                obj([
+                    (
+                        "goodput_tok_s",
+                        mc_json(&col(per_seed, |s| s.goodput_tok_s)),
+                    ),
+                    ("attainment", mc_json(&col(per_seed, |s| s.attainment))),
+                    ("req_slo_frac", mc_json(&col(per_seed, |s| s.req_slo_frac))),
+                    ("p99_tbt", mc_json(&col(per_seed, |s| s.p99_tbt))),
+                    ("p99_ttft", mc_json(&col(per_seed, |s| s.p99_ttft))),
+                ]),
+            ),
             ("classes", Json::Arr(class_objs)),
         ]));
     }
     t.print();
+    if seeds_n > 1 {
+        println!("\nMonte Carlo over {seeds_n} seeds (mean ± 95% CI):");
+        for (sys_i, sys) in systems.iter().enumerate() {
+            let per_seed = &results[sys_i * seeds_n..(sys_i + 1) * seeds_n];
+            let good = crate::experiments::runners::mean_ci95(&col(per_seed, |s| {
+                s.goodput_tok_s
+            }));
+            let p99 = crate::experiments::runners::mean_ci95(&col(per_seed, |s| s.p99_tbt));
+            println!(
+                "  {:<12} goodput {:.1} ± {:.1} tok/s, p99 TBT {:.1} ± {:.1} ms",
+                sys.name(),
+                good.mean,
+                good.ci95,
+                p99.mean * 1e3,
+                p99.ci95 * 1e3
+            );
+        }
+    }
 
     let artifact = obj([
         ("scenario", Json::from(sc.name)),
         ("description", Json::from(sc.description)),
         ("seed", Json::from(seed as usize)),
+        ("seeds", Json::from(seeds_n)),
+        ("exact_metrics", Json::from(exact)),
         ("executor", Json::from(executor.name())),
         ("duration_s", Json::from(sc.duration)),
         ("shape", Json::from(format!("{:?}", sc.shape))),
-        ("requests", Json::from(requests.len())),
+        ("requests", Json::from(n_requests)),
         ("systems", Json::Arr(sys_objs)),
     ]);
     write_results(&format!("scenario_{}", sc.name), &artifact);
     Ok(())
+}
+
+/// One headline column across a system's per-seed results, in seed order.
+fn col(
+    per_seed: &[(Summary, Vec<ClassSummary>, usize)],
+    f: impl Fn(&Summary) -> f64,
+) -> Vec<f64> {
+    per_seed.iter().map(|(s, _, _)| f(s)).collect()
 }

@@ -15,7 +15,35 @@
 use std::collections::{BTreeMap, HashMap};
 
 use crate::core::{ClassId, Request, RequestId, SloTarget};
-use crate::util::stats::Samples;
+use crate::util::stats::{GkSketch, Samples, TailStats};
+
+/// How the collector stores tail-latency observations.
+///
+/// * [`MetricsMode::Exact`] — per-sample `Vec`s and per-request records:
+///   authoritative, bit-identical to the pre-sketch collector, O(total
+///   tokens) memory. The default for `Collector::new` so unit tests and
+///   the parity suite pin exact numbers.
+/// * [`MetricsMode::Sketch`] — GK quantile sketches plus O(1) attainment
+///   counters: bounded memory for million-request runs, percentiles
+///   within the documented rank-error bound (see
+///   [`crate::util::stats::GkSketch`]). Attainment, goodput, and all
+///   counter-derived figures stay *exact* — only p50/p99 columns are
+///   sketched. The default for experiment executors
+///   (`ExecConfig::exact_metrics(true)` opts back out). See DESIGN.md
+///   §Metrics for the full contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MetricsMode {
+    #[default]
+    Exact,
+    Sketch,
+}
+
+fn tail_for(mode: MetricsMode) -> TailStats {
+    match mode {
+        MetricsMode::Exact => TailStats::exact(),
+        MetricsMode::Sketch => TailStats::sketch(),
+    }
+}
 
 /// Pool-wide latency objectives — the fallback for requests that carry no
 /// [`SloTarget`] of their own. The paper enforces a uniform 100 ms P99 TBT
@@ -87,13 +115,23 @@ impl RequestRecord {
 #[derive(Debug, Default)]
 struct ClassAgg {
     slo: SloConfig,
-    tbt: Samples,
-    ttft: Samples,
+    tbt: TailStats,
+    ttft: TailStats,
     good_tokens: usize,
     total_tokens: usize,
     completed: usize,
     req_slo_met: usize,
     ttft_ok: usize,
+    /// Inter-token gaps within this class's own TBT bound — the sketch-mode
+    /// attainment numerator (exact under the one-SLO-per-class invariant
+    /// documented on [`Collector::on_request`]).
+    gaps_within_slo: usize,
+}
+
+impl ClassAgg {
+    fn new(mode: MetricsMode, slo: SloConfig) -> Self {
+        ClassAgg { slo, tbt: tail_for(mode), ttft: tail_for(mode), ..Default::default() }
+    }
 }
 
 /// Single initialization site for per-request scoring state — both the
@@ -124,22 +162,41 @@ fn ensure_state(
 #[derive(Debug, Default)]
 pub struct Collector {
     slo: SloConfig,
+    mode: MetricsMode,
     active: HashMap<RequestId, ReqState>,
+    /// Per-request records — populated in exact mode only; sketch mode
+    /// keeps the counters below instead (O(1) per completion).
     pub completed: Vec<RequestRecord>,
-    tbt: Samples,
-    ttft: Samples,
+    tbt: TailStats,
+    ttft: TailStats,
     good_tokens: usize,
     total_tokens: usize,
     /// Inter-token gaps that met their own request's TBT bound (the
     /// numerator of the global attainment figure).
     gaps_within_slo: usize,
+    /// Completions / per-request-SLO passes — the sketch-mode replacement
+    /// for scanning `completed` (maintained in both modes).
+    completed_n: usize,
+    req_slo_met_n: usize,
+    /// Sketch of each completed request's worst inter-token gap (tokens >
+    /// 1), feeding `req_max_tbt_p99` in sketch mode.
+    req_max_tbt: GkSketch,
     /// BTreeMap for deterministic class iteration order.
     classes: BTreeMap<ClassId, ClassAgg>,
 }
 
 impl Collector {
+    /// Exact-mode collector — bit-identical to the pre-sketch collector.
     pub fn new(slo: SloConfig) -> Self {
-        Collector { slo, ..Default::default() }
+        Self::with_mode(slo, MetricsMode::Exact)
+    }
+
+    pub fn with_mode(slo: SloConfig, mode: MetricsMode) -> Self {
+        Collector { slo, mode, tbt: tail_for(mode), ttft: tail_for(mode), ..Default::default() }
+    }
+
+    pub fn mode(&self) -> MetricsMode {
+        self.mode
     }
 
     pub fn slo(&self) -> SloConfig {
@@ -158,21 +215,23 @@ impl Collector {
     /// bound per class, last registration winning.
     pub fn on_request(&mut self, req: &Request) {
         let slo = req.slo.map(SloConfig::from).unwrap_or(self.slo);
+        let mode = self.mode;
         ensure_state(&mut self.active, req.id, req.arrival, req.class, slo);
         // remember the class targets even if the request never completes
-        let agg = self.classes.entry(req.class).or_default();
+        let agg = self.classes.entry(req.class).or_insert_with(|| ClassAgg::new(mode, slo));
         agg.slo = slo;
     }
 
     /// Record one emitted output token for `id` at time `t`.
     pub fn on_token(&mut self, id: RequestId, arrival: f64, t: f64) {
         let default_slo = self.slo;
+        let mode = self.mode;
         let st = ensure_state(&mut self.active, id, arrival, 0, default_slo);
         let (st_class, st_slo) = (st.class, st.slo);
         let agg = self
             .classes
             .entry(st_class)
-            .or_insert_with(|| ClassAgg { slo: st_slo, ..Default::default() });
+            .or_insert_with(|| ClassAgg::new(mode, st_slo));
         self.total_tokens += 1;
         agg.total_tokens += 1;
         match st.first_token {
@@ -198,6 +257,7 @@ impl Collector {
                     self.good_tokens += 1;
                     self.gaps_within_slo += 1;
                     agg.good_tokens += 1;
+                    agg.gaps_within_slo += 1;
                 } else {
                     st.tbt_violations += 1;
                 }
@@ -220,12 +280,29 @@ impl Collector {
                 max_tbt: st.max_tbt,
                 class: st.class,
             };
-            let agg = self.classes.entry(st.class).or_default();
+            let mode = self.mode;
+            // legacy or_default semantics: a class first seen at completion
+            // is scored at the pool-default targets, matching the exact path
+            let agg = self
+                .classes
+                .entry(st.class)
+                .or_insert_with(|| ClassAgg::new(mode, SloConfig::default()));
             agg.completed += 1;
             if rec.meets_slo_p99() {
                 agg.req_slo_met += 1;
             }
-            self.completed.push(rec);
+            self.completed_n += 1;
+            if rec.meets_slo_p99() {
+                self.req_slo_met_n += 1;
+            }
+            match self.mode {
+                MetricsMode::Exact => self.completed.push(rec),
+                MetricsMode::Sketch => {
+                    if rec.tokens > 1 {
+                        self.req_max_tbt.push(rec.max_tbt);
+                    }
+                }
+            }
         }
     }
 
@@ -234,14 +311,23 @@ impl Collector {
     }
 
     pub fn summarize(&mut self, duration: f64) -> Summary {
+        // counter-derived figures are exact in BOTH modes; only the
+        // percentile columns go through the sketch. The exact arm keeps
+        // the legacy record-scanning expressions verbatim so the
+        // `--exact-metrics` path stays bit-identical to the pre-sketch
+        // collector (pinned by tests/parity.rs).
+        let completed = match self.mode {
+            MetricsMode::Exact => self.completed.len(),
+            MetricsMode::Sketch => self.completed_n,
+        };
         Summary {
             duration,
-            completed: self.completed.len(),
+            completed,
             total_tokens: self.total_tokens,
             good_tokens: self.good_tokens,
             goodput_tok_s: self.good_tokens as f64 / duration,
             throughput_tok_s: self.total_tokens as f64 / duration,
-            rps: self.completed.len() as f64 / duration,
+            rps: completed as f64 / duration,
             // each gap scored against its own request's TBT, consistent
             // with good_tokens (identical to fraction_leq(pool slo) when
             // no request carries its own target)
@@ -254,20 +340,40 @@ impl Collector {
             p99_tbt: self.tbt.p99(),
             p50_ttft: self.ttft.p50(),
             p99_ttft: self.ttft.p99(),
-            req_max_tbt_p99: {
-                let mut m = Samples::new();
-                for r in &self.completed {
-                    if r.tokens > 1 {
-                        m.push(r.max_tbt);
+            req_max_tbt_p99: match self.mode {
+                MetricsMode::Exact => {
+                    let mut m = Samples::new();
+                    for r in &self.completed {
+                        if r.tokens > 1 {
+                            m.push(r.max_tbt);
+                        }
+                    }
+                    if m.is_empty() { f64::NAN } else { m.p99() }
+                }
+                MetricsMode::Sketch => {
+                    if self.req_max_tbt.is_empty() {
+                        f64::NAN
+                    } else {
+                        self.req_max_tbt.p99()
                     }
                 }
-                if m.is_empty() { f64::NAN } else { m.p99() }
             },
-            req_slo_frac: if self.completed.is_empty() {
-                1.0
-            } else {
-                self.completed.iter().filter(|r| r.meets_slo_p99()).count() as f64
-                    / self.completed.len() as f64
+            req_slo_frac: match self.mode {
+                MetricsMode::Exact => {
+                    if self.completed.is_empty() {
+                        1.0
+                    } else {
+                        self.completed.iter().filter(|r| r.meets_slo_p99()).count() as f64
+                            / self.completed.len() as f64
+                    }
+                }
+                MetricsMode::Sketch => {
+                    if self.completed_n == 0 {
+                        1.0
+                    } else {
+                        self.req_slo_met_n as f64 / self.completed_n as f64
+                    }
+                }
             },
             // fleet accounting is the executor's, not the collector's:
             // the host overwrites these from its cluster registry
@@ -276,8 +382,10 @@ impl Collector {
         }
     }
 
-    pub fn tbt_samples(&mut self) -> &mut Samples {
-        &mut self.tbt
+    /// The exact-mode TBT sample buffer (None in sketch mode) — for
+    /// consumers like the Fig. 11 CDF dump that need every sample.
+    pub fn tbt_samples(&mut self) -> Option<&mut Samples> {
+        self.tbt.as_samples_mut()
     }
 
     /// Per-class attainment rows, ordered by class id. Counter fields
@@ -286,6 +394,7 @@ impl Collector {
     /// global figures (asserted in tests — the scenario reconciliation
     /// invariant).
     pub fn class_summaries(&mut self, duration: f64) -> Vec<ClassSummary> {
+        let mode = self.mode;
         let mut out = Vec::with_capacity(self.classes.len());
         for (&class, agg) in self.classes.iter_mut() {
             out.push(ClassSummary {
@@ -296,10 +405,18 @@ impl Collector {
                 total_tokens: agg.total_tokens,
                 good_tokens: agg.good_tokens,
                 goodput_tok_s: agg.good_tokens as f64 / duration,
+                // sketch mode counts gaps against each request's own
+                // bound; identical to the exact fraction_leq under the
+                // one-SLO-per-class invariant (see on_request)
                 attainment: if agg.tbt.is_empty() {
                     1.0
                 } else {
-                    agg.tbt.fraction_leq(agg.slo.tbt)
+                    match mode {
+                        MetricsMode::Exact => agg.tbt.fraction_leq(agg.slo.tbt),
+                        MetricsMode::Sketch => {
+                            agg.gaps_within_slo as f64 / agg.tbt.len() as f64
+                        }
+                    }
                 },
                 ttft_attainment: if agg.ttft.is_empty() {
                     1.0
@@ -516,6 +633,62 @@ mod tests {
         assert_eq!(s.total_tokens, 100);
         // 9 late gaps among 99 gaps, first token free
         assert_eq!(s.good_tokens, 100 - 9);
+    }
+
+    #[test]
+    fn sketch_mode_counters_match_exact() {
+        // identical event stream through both modes: every counter-derived
+        // figure must agree exactly; percentiles within the rank bound
+        let feed = |c: &mut Collector| {
+            let mut t = 0.0;
+            for id in 0..20u64 {
+                for i in 0..50 {
+                    t += if (id + i) % 7 == 0 { 0.25 } else { 0.04 };
+                    c.on_token(id, id as f64 * 0.1, t);
+                }
+                c.on_complete(id);
+            }
+            t
+        };
+        let mut exact = Collector::new(SloConfig::default());
+        let mut sketch = Collector::with_mode(SloConfig::default(), MetricsMode::Sketch);
+        let t = feed(&mut exact);
+        feed(&mut sketch);
+        let se = exact.summarize(t);
+        let sk = sketch.summarize(t);
+        assert_eq!(se.completed, sk.completed);
+        assert_eq!(se.total_tokens, sk.total_tokens);
+        assert_eq!(se.good_tokens, sk.good_tokens);
+        assert_eq!(se.attainment, sk.attainment);
+        assert_eq!(se.req_slo_frac, sk.req_slo_frac);
+        assert!(sketch.completed.is_empty(), "sketch mode keeps no records");
+        assert!(sketch.tbt_samples().is_none());
+        assert!(exact.tbt_samples().is_some());
+        // per-class rows: counters identical, attainment identical
+        let ce = exact.class_summaries(t);
+        let ck = sketch.class_summaries(t);
+        assert_eq!(ce.len(), ck.len());
+        for (a, b) in ce.iter().zip(&ck) {
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.good_tokens, b.good_tokens);
+            assert_eq!(a.attainment, b.attainment);
+            assert_eq!(a.req_slo_frac, b.req_slo_frac);
+        }
+    }
+
+    #[test]
+    fn percentile_nan_safety_on_empty_collector() {
+        for mode in [MetricsMode::Exact, MetricsMode::Sketch] {
+            let mut c = Collector::with_mode(SloConfig::default(), mode);
+            let s = c.summarize(1.0);
+            assert_eq!(s.completed, 0);
+            assert!(s.p50_tbt.is_nan() && s.p99_tbt.is_nan());
+            assert!(s.p50_ttft.is_nan() && s.p99_ttft.is_nan());
+            assert!(s.req_max_tbt_p99.is_nan());
+            assert_eq!(s.attainment, 1.0);
+            assert_eq!(s.req_slo_frac, 1.0);
+            assert!(c.class_summaries(1.0).is_empty());
+        }
     }
 
     #[test]

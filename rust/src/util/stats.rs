@@ -1,9 +1,13 @@
-//! Statistics primitives: streaming percentile reservoirs, fixed-bucket
-//! latency histograms, and small helpers the metrics layer builds on.
+//! Statistics primitives: exact percentile buffers, a deterministic
+//! streaming quantile sketch, and small helpers the metrics layer builds
+//! on. [`Samples`] is the exact path (authoritative, O(n) memory);
+//! [`GkSketch`] is the bounded-memory path for million-request runs, with
+//! a pinned rank-error contract; [`TailStats`] unifies the two behind one
+//! API so the collector can switch modes without forking its logic.
 
-/// Exact-percentile sample buffer. For the experiment scales in this repo
-/// (<= a few million samples) exact sorting is cheap and avoids the error
-/// analysis a sketch would need.
+/// Exact-percentile sample buffer. Authoritative for parity tests and
+/// small runs; at million-request scale the collector switches to
+/// [`GkSketch`] (see DESIGN.md §Metrics for the contract).
 #[derive(Debug, Clone, Default)]
 pub struct Samples {
     values: Vec<f64>,
@@ -97,14 +101,18 @@ impl Samples {
     }
 
     /// (value, cumulative fraction) points of the empirical CDF, at most
-    /// `points` entries — the Fig. 11 output format.
+    /// `points` entries — the Fig. 11 output format. Fractions are strictly
+    /// increasing and the final entry is exactly 1.0. `points == 0` yields
+    /// an empty vector.
     pub fn cdf(&mut self, points: usize) -> Vec<(f64, f64)> {
-        if self.values.is_empty() {
+        if self.values.is_empty() || points == 0 {
             return vec![];
         }
         self.ensure_sorted();
         let n = self.values.len();
-        let step = (n.max(points) / points).max(1);
+        // ceil division: step=1 would emit n entries whenever
+        // points < n < 2*points, breaking the "at most `points`" contract
+        let step = n.div_ceil(points).max(1);
         let mut out = Vec::new();
         let mut i = step - 1;
         while i < n {
@@ -115,6 +123,315 @@ impl Samples {
             out.push((self.values[n - 1], 1.0));
         }
         out
+    }
+}
+
+/// Default rank-error parameter for [`GkSketch`]: quantile queries land
+/// within ±0.5 % of n ranks of the target, tight enough that a P99 over a
+/// 1M-sample stream resolves to ±5 000 ranks.
+pub const DEFAULT_SKETCH_EPS: f64 = 0.005;
+
+/// One Greenwald–Khanna tuple: `v` a retained sample, `g` the gap in
+/// minimum rank to the previous tuple, `delta` the rank uncertainty.
+#[derive(Debug, Clone, Copy)]
+struct GkEntry {
+    v: f64,
+    g: u64,
+    delta: u64,
+}
+
+/// Deterministic Greenwald–Khanna streaming quantile sketch (GK01).
+///
+/// Bounded-memory companion to [`Samples`]: retains O((1/ε)·log(εn))
+/// tuples instead of every sample, so the metrics collector survives
+/// million-request runs. The sketch uses no randomness — the same push
+/// sequence yields the same state — so seeded runs stay bit-identical.
+///
+/// **Error contract** (pinned by `tests/metrics_scale.rs`): the invariant
+/// `g + delta <= ⌊2εn⌋` is maintained for every tuple, so a
+/// [`GkSketch::percentile`] query returns a retained sample whose rank in
+/// the full stream is within ⌈εn⌉ of the target rank ⌈p/100·n⌉. While the
+/// stream is short enough that no tuple has been compressed away, queries
+/// return the exact order statistic. `min`, `max`, `mean`, and `len` are
+/// always exact.
+#[derive(Debug, Clone)]
+pub struct GkSketch {
+    eps: f64,
+    /// Retained tuples, sorted by `v`.
+    entries: Vec<GkEntry>,
+    /// Insertion buffer: batched sorted-merge keeps flushes O(s + b log b)
+    /// instead of a per-push binary search + shift.
+    buffer: Vec<f64>,
+    buffer_cap: usize,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for GkSketch {
+    fn default() -> Self {
+        Self::new(DEFAULT_SKETCH_EPS)
+    }
+}
+
+impl GkSketch {
+    pub fn new(eps: f64) -> Self {
+        let eps = eps.clamp(1e-6, 0.5);
+        GkSketch {
+            eps,
+            entries: Vec::new(),
+            buffer: Vec::new(),
+            buffer_cap: ((1.0 / eps) as usize).clamp(64, 8192),
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn eps(&self) -> f64 {
+        self.eps
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.n += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+        self.buffer.push(v);
+        if self.buffer.len() >= self.buffer_cap {
+            self.flush();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Retained tuples + buffered samples — the memory figure the 1M
+    /// bench pins (stays O((1/ε)·log(εn)), never O(n)).
+    pub fn tuples(&self) -> usize {
+        self.entries.len() + self.buffer.len()
+    }
+
+    /// The documented rank-error bound ⌈εn⌉ at the current stream length.
+    pub fn rank_error_bound(&self) -> u64 {
+        (self.eps * self.n as f64).ceil() as u64
+    }
+
+    /// Merge the insertion buffer into the tuple list, then compress.
+    fn flush(&mut self) {
+        if self.buffer.is_empty() {
+            return;
+        }
+        let mut buf = std::mem::take(&mut self.buffer);
+        buf.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        // delta for mid-stream inserts is computed against the stream
+        // length *before* this batch: n only grows, so the invariant
+        // g + delta <= ⌊2εn⌋ holds now and at every later query
+        let n_before = self.n - buf.len() as u64;
+        let mid_delta = ((2.0 * self.eps * n_before as f64).floor() as u64).saturating_sub(1);
+        let old = std::mem::take(&mut self.entries);
+        let mut merged = Vec::with_capacity(old.len() + buf.len());
+        let mut ei = 0;
+        for v in buf {
+            while ei < old.len() && old[ei].v < v {
+                merged.push(old[ei]);
+                ei += 1;
+            }
+            // new global extremes are known exactly (delta = 0)
+            let delta = if merged.is_empty() || ei == old.len() { 0 } else { mid_delta };
+            merged.push(GkEntry { v, g: 1, delta });
+        }
+        merged.extend_from_slice(&old[ei..]);
+        self.entries = merged;
+        self.compress();
+    }
+
+    /// GK compress: fold a tuple into its successor whenever the merged
+    /// tuple still satisfies `g + delta <= ⌊2εn⌋`. The global min and max
+    /// tuples are never folded away.
+    fn compress(&mut self) {
+        if self.entries.len() < 3 {
+            return;
+        }
+        let cap = (2.0 * self.eps * self.n as f64).floor() as u64;
+        let mut out: Vec<GkEntry> = Vec::with_capacity(self.entries.len());
+        out.push(self.entries[0]);
+        let mut pending_g: u64 = 0;
+        let mut i = 1;
+        while i < self.entries.len() {
+            let e = self.entries[i];
+            if i + 1 < self.entries.len() {
+                let nxt = self.entries[i + 1];
+                if pending_g + e.g + nxt.g + nxt.delta <= cap {
+                    pending_g += e.g;
+                    i += 1;
+                    continue;
+                }
+            }
+            out.push(GkEntry { g: e.g + pending_g, ..e });
+            pending_g = 0;
+            i += 1;
+        }
+        self.entries = out;
+    }
+
+    /// Quantile query, `p` in [0, 100]. Returns a retained sample whose
+    /// rank is within ⌈εn⌉ of ⌈p/100·n⌉ (exact while uncompressed);
+    /// `p <= 0` / `p >= 100` return the exact min / max; empty → NaN.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        self.flush();
+        if self.entries.is_empty() {
+            return f64::NAN;
+        }
+        if p <= 0.0 {
+            return self.min;
+        }
+        if p >= 100.0 {
+            return self.max;
+        }
+        let n = self.n as f64;
+        let r = ((p / 100.0) * n).ceil().max(1.0);
+        // f64 slack (not ceiled): in the uncompressed regime this returns
+        // exactly the rank-r order statistic instead of rank r + ⌈εn⌉
+        let slack = self.eps * n;
+        let mut rmin: u64 = 0;
+        let mut prev = self.entries[0].v;
+        for e in &self.entries {
+            rmin += e.g;
+            if (rmin + e.delta) as f64 > r + slack {
+                return prev;
+            }
+            prev = e.v;
+        }
+        prev
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Tail-statistics accumulator: an exact sample buffer or a GK sketch
+/// behind one push/percentile API, so [`crate::metrics::Collector`] can
+/// switch between the bit-identical exact path and the bounded-memory
+/// sketch path without forking its recording logic (DESIGN.md §Metrics).
+#[derive(Debug, Clone)]
+pub enum TailStats {
+    Exact(Samples),
+    Sketch(GkSketch),
+}
+
+impl Default for TailStats {
+    fn default() -> Self {
+        TailStats::Exact(Samples::new())
+    }
+}
+
+impl TailStats {
+    pub fn exact() -> Self {
+        TailStats::Exact(Samples::new())
+    }
+
+    pub fn sketch() -> Self {
+        TailStats::Sketch(GkSketch::default())
+    }
+
+    pub fn push(&mut self, v: f64) {
+        match self {
+            TailStats::Exact(s) => s.push(v),
+            TailStats::Sketch(s) => s.push(v),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TailStats::Exact(s) => s.len(),
+            TailStats::Sketch(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        match self {
+            TailStats::Exact(s) => s.percentile(p),
+            TailStats::Sketch(s) => s.percentile(p),
+        }
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        match self {
+            TailStats::Exact(s) => s.mean(),
+            TailStats::Sketch(s) => s.mean(),
+        }
+    }
+
+    /// Exact-arm attainment. The sketch arm returns NaN on purpose: in
+    /// sketch mode attainment comes from the collector's O(1) counters,
+    /// and a loud NaN beats a silently-approximate fraction.
+    pub fn fraction_leq(&self, threshold: f64) -> f64 {
+        match self {
+            TailStats::Exact(s) => s.fraction_leq(threshold),
+            TailStats::Sketch(_) => f64::NAN,
+        }
+    }
+
+    /// The exact arm's sample buffer (None in sketch mode) — for consumers
+    /// like the Fig. 11 CDF dump that genuinely need every sample.
+    pub fn as_samples_mut(&mut self) -> Option<&mut Samples> {
+        match self {
+            TailStats::Exact(s) => Some(s),
+            TailStats::Sketch(_) => None,
+        }
     }
 }
 
@@ -228,6 +545,127 @@ mod tests {
         let cdf = s.cdf(20);
         assert!(cdf.windows(2).all(|w| w[0].1 <= w[1].1 && w[0].0 <= w[1].0));
         assert_eq!(cdf.last().unwrap().1, 1.0);
+    }
+
+    #[test]
+    fn cdf_edge_cases() {
+        // n = 1: single entry, fraction exactly 1.0
+        let mut s = Samples::new();
+        s.push(3.0);
+        assert_eq!(s.cdf(12), vec![(3.0, 1.0)]);
+        // points = 0: defined as empty, not a divide-by-zero panic
+        assert!(s.cdf(0).is_empty());
+        for n in [3usize, 4, 5, 7, 8, 9] {
+            // n = points±1 straddles the old floor-division bug (for
+            // points < n < 2*points it emitted n entries, not <= points)
+            for points in [n - 1, n, n + 1, 4] {
+                let mut s = Samples::new();
+                for i in 0..n {
+                    s.push(i as f64);
+                }
+                let cdf = s.cdf(points);
+                assert!(
+                    cdf.len() <= points,
+                    "n={n} points={points}: {} entries exceed the cap",
+                    cdf.len()
+                );
+                assert!(
+                    cdf.windows(2).all(|w| w[0].1 < w[1].1 && w[0].0 <= w[1].0),
+                    "n={n} points={points}: fractions must be strictly increasing"
+                );
+                assert_eq!(cdf.last().unwrap().1, 1.0, "n={n} points={points}");
+                assert_eq!(cdf.last().unwrap().0, (n - 1) as f64);
+            }
+        }
+        // duplicate values: still monotone, single terminal point
+        let mut s = Samples::new();
+        for _ in 0..10 {
+            s.push(5.0);
+        }
+        let cdf = s.cdf(4);
+        assert!(cdf.len() <= 4);
+        assert!(cdf.windows(2).all(|w| w[0].1 < w[1].1));
+        assert_eq!(cdf.last().unwrap(), &(5.0, 1.0));
+        assert_eq!(cdf.iter().filter(|(_, f)| *f == 1.0).count(), 1);
+    }
+
+    #[test]
+    fn gk_exact_while_uncompressed() {
+        // below the buffer cap nothing is compressed: queries must return
+        // the exact order statistic ⌈p/100·n⌉
+        let mut g = GkSketch::default();
+        for i in 1..=100 {
+            g.push(i as f64);
+        }
+        assert_eq!(g.p99(), 99.0);
+        assert_eq!(g.p50(), 50.0);
+        assert_eq!(g.percentile(0.0), 1.0);
+        assert_eq!(g.percentile(100.0), 100.0);
+        assert_eq!(g.len(), 100);
+        assert!((g.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gk_empty_single_and_pair() {
+        let mut g = GkSketch::default();
+        assert!(g.p50().is_nan());
+        assert!(g.mean().is_nan());
+        assert!(g.min().is_nan() && g.max().is_nan());
+        assert!(g.is_empty());
+        g.push(7.0);
+        assert_eq!(g.p50(), 7.0);
+        assert_eq!(g.p99(), 7.0);
+        assert_eq!(g.mean(), 7.0);
+        g.push(3.0);
+        assert_eq!(g.p50(), 3.0, "rank ⌈0.5·2⌉ = 1 → the low median");
+        assert_eq!(g.p99(), 7.0);
+        assert_eq!(g.min(), 3.0);
+        assert_eq!(g.max(), 7.0);
+    }
+
+    #[test]
+    fn gk_rank_error_within_bound_at_scale() {
+        // 100k adversarially-ordered values (reverse-sorted): the rank of
+        // the sketch answer must stay within ⌈εn⌉ of the target rank
+        let n = 100_000usize;
+        let mut g = GkSketch::default();
+        for i in (0..n).rev() {
+            g.push(i as f64);
+        }
+        let bound = g.rank_error_bound() as f64;
+        assert!(bound <= (DEFAULT_SKETCH_EPS * n as f64).ceil());
+        for p in [50.0, 90.0, 99.0, 99.9] {
+            let est = g.percentile(p);
+            // values are 0..n, so rank(v) = v + 1
+            let rank = est + 1.0;
+            let target = (p / 100.0 * n as f64).ceil();
+            assert!(
+                (rank - target).abs() <= bound,
+                "p{p}: rank {rank} vs target {target} (bound {bound})"
+            );
+        }
+        // memory stays sketch-sized, nowhere near n
+        assert!(g.tuples() < 10_000, "retained {} tuples", g.tuples());
+    }
+
+    #[test]
+    fn tail_stats_arms_agree_and_expose_samples() {
+        let mut e = TailStats::exact();
+        let mut k = TailStats::sketch();
+        for i in 0..1000 {
+            let v = (i % 97) as f64;
+            e.push(v);
+            k.push(v);
+        }
+        assert_eq!(e.len(), k.len());
+        // identical data, modest n: sketch p99 within the rank bound of
+        // exact (coarse check here; the proptest pins the precise bound)
+        assert!((e.p99() - k.p99()).abs() <= 2.0);
+        assert!((e.mean() - k.mean()).abs() < 1e-9);
+        assert!(e.as_samples_mut().is_some());
+        assert!(k.as_samples_mut().is_none());
+        assert!(k.fraction_leq(50.0).is_nan());
+        assert!((e.fraction_leq(48.0) - e.as_samples_mut().unwrap().fraction_leq(48.0)).abs() < 1e-12);
     }
 
     #[test]

@@ -27,7 +27,8 @@ pub mod traces;
 
 pub use arrival::{ArrivalProcess, PoissonArrivals, ReplayArrivals};
 pub use scenario::{
-    ArrivalShape, LengthModel, MultiTurnConfig, ScaleAction, ScaleEvent, Scenario, TrafficClass,
+    ArrivalShape, LengthModel, MultiTurnConfig, ScaleAction, ScaleEvent, Scenario, ScenarioStream,
+    TrafficClass,
 };
 pub use traces::{TraceKind, TraceSampler};
 
@@ -68,6 +69,24 @@ impl WorkloadGen {
         }
         out
     }
+
+    /// Streaming counterpart of [`WorkloadGen::generate`]: yields the
+    /// identical request sequence lazily (single-class workloads have no
+    /// reordering to buffer), so `VirtualExecutor::run_stream` can pull a
+    /// million-request trace in O(1) generator memory.
+    pub fn stream(mut self, duration: f64) -> impl Iterator<Item = Request> {
+        let mut t = 0.0;
+        std::iter::from_fn(move || {
+            t = match self.arrivals.next_after(t, &mut self.rng) {
+                Some(next) if next < duration => next,
+                _ => return None,
+            };
+            let (p, d) = self.sampler.sample(t, &mut self.rng);
+            let id = self.next_id;
+            self.next_id += 1;
+            Some(Request::new(id, t, p, d))
+        })
+    }
 }
 
 /// Convenience: `n`-requests-per-second Poisson stream of a named trace.
@@ -106,5 +125,19 @@ mod tests {
         let a = poisson_workload(TraceKind::MiniReasoning, 3.0, 30.0, 42);
         let b = poisson_workload(TraceKind::MiniReasoning, 3.0, 30.0, 42);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stream_matches_generate() {
+        let mk = || {
+            WorkloadGen::new(
+                TraceSampler::new(TraceKind::Hybrid, 9),
+                Box::new(PoissonArrivals::new(4.0)),
+                9,
+            )
+        };
+        let materialized = mk().generate(30.0);
+        let streamed: Vec<_> = mk().stream(30.0).collect();
+        assert_eq!(materialized, streamed);
     }
 }

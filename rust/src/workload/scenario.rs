@@ -18,6 +18,9 @@
 //! named suite ([`Scenario::suite`]) is driven by
 //! `experiments -- scenarios` (see EXPERIMENTS.md §Scenarios).
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
 use crate::core::{Request, SloTarget};
 pub use crate::exec::cluster::{ScaleAction, ScaleEvent};
 use crate::util::rng::{lognormal_params, Rng};
@@ -486,6 +489,149 @@ impl Scenario {
             })
             .collect()
     }
+
+    /// Streaming counterpart of [`Scenario::generate`]: an iterator that
+    /// yields the identical request sequence (same arrivals, ids, classes
+    /// — bit-for-bit, pinned under test) while holding only the
+    /// not-yet-emittable turns of open conversations, O(in-flight
+    /// conversations) instead of O(total requests). Feed it to
+    /// [`crate::exec::host::VirtualExecutor::run_stream`] and a
+    /// million-request scenario never materializes its trace.
+    pub fn stream(&self, seed: u64) -> ScenarioStream {
+        assert!(!self.classes.is_empty(), "scenario needs at least one class");
+        ScenarioStream {
+            arrivals: self.shape.process(self.duration),
+            arrival_rng: Rng::with_stream(seed, 0x5c3a),
+            sample_rng: Rng::with_stream(seed, 0xc1a5),
+            weights: self.classes.iter().map(|c| c.weight).collect(),
+            classes: self.classes.clone(),
+            duration: self.duration,
+            pending: BinaryHeap::new(),
+            t: 0.0,
+            exhausted: false,
+            next_id: 0,
+            gen_seq: 0,
+        }
+    }
+}
+
+/// A turn generated but not yet safe to emit, ordered by (arrival,
+/// generation sequence) — exactly the key `Scenario::generate`'s stable
+/// sort orders by, so the stream reproduces the materialized order.
+#[derive(Debug, Clone, Copy)]
+struct PendingTurn {
+    arrival: f64,
+    seq: u64,
+    class: usize,
+    prompt: usize,
+    decode: usize,
+}
+
+impl PartialEq for PendingTurn {
+    fn eq(&self, other: &Self) -> bool {
+        self.arrival == other.arrival && self.seq == other.seq
+    }
+}
+impl Eq for PendingTurn {}
+impl PartialOrd for PendingTurn {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for PendingTurn {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.arrival
+            .partial_cmp(&other.arrival)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Lazy request generator built by [`Scenario::stream`]. RNG consumption
+/// order is identical to `generate` (arrival thinning on one stream,
+/// class/length sampling on the other), and the pending heap releases a
+/// turn only once no later-generated turn can precede it: every future
+/// turn arrives at or after the newest base arrival `t` (follow-ups add
+/// strictly positive think time) and carries a larger generation seq, so
+/// any pending turn with `arrival <= t` is safe to emit.
+pub struct ScenarioStream {
+    arrivals: Box<dyn ArrivalProcess>,
+    arrival_rng: Rng,
+    sample_rng: Rng,
+    weights: Vec<f64>,
+    classes: Vec<TrafficClass>,
+    duration: f64,
+    /// Turns awaiting emission — bounded by the open conversations' spans
+    /// (max_followups × think times), never by the trace length.
+    pending: BinaryHeap<Reverse<PendingTurn>>,
+    /// Newest base arrival handed out by the arrival process.
+    t: f64,
+    exhausted: bool,
+    next_id: u64,
+    gen_seq: u64,
+}
+
+impl ScenarioStream {
+    fn push_pending(&mut self, arrival: f64, class: usize, prompt: usize, decode: usize) {
+        let seq = self.gen_seq;
+        self.gen_seq += 1;
+        self.pending.push(Reverse(PendingTurn { arrival, seq, class, prompt, decode }));
+    }
+
+    /// Turns currently buffered — the O(in-flight) figure the scale tests
+    /// pin (a streamed 1M run must never buffer anything trace-sized).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+impl Iterator for ScenarioStream {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        loop {
+            if let Some(Reverse(p)) = self.pending.peek() {
+                if self.exhausted || p.arrival <= self.t {
+                    let Reverse(p) = self.pending.pop().expect("peeked entry exists");
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    return Some(
+                        Request::new(id, p.arrival, p.prompt, p.decode)
+                            .with_class(p.class, self.classes[p.class].slo),
+                    );
+                }
+            } else if self.exhausted {
+                return None;
+            }
+            match self.arrivals.next_after(self.t, &mut self.arrival_rng) {
+                Some(next) if next < self.duration => {
+                    self.t = next;
+                    let ci = self.sample_rng.categorical(&self.weights);
+                    let class = &self.classes[ci];
+                    match class.multi_turn {
+                        Some(mt) => {
+                            let turns = conversation_turns(
+                                self.t,
+                                class,
+                                &mt,
+                                self.duration,
+                                &mut self.sample_rng,
+                            );
+                            for (at, p, d) in turns {
+                                self.push_pending(at, ci, p, d);
+                            }
+                        }
+                        None => {
+                            let (p, d) = class.lengths.sample(&mut self.sample_rng);
+                            let t = self.t;
+                            self.push_pending(t, ci, p, d);
+                        }
+                    }
+                }
+                _ => self.exhausted = true,
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -530,6 +676,42 @@ mod tests {
             let c = sc.generate(43);
             assert_ne!(a, c, "{}: different seeds must differ", sc.name);
         }
+    }
+
+    #[test]
+    fn stream_matches_generate_bit_for_bit() {
+        // every named scenario, two seeds: the lazy path must reproduce
+        // the materialized trace exactly — arrivals, ids, classes, SLOs
+        for sc in Scenario::all() {
+            for seed in [7u64, 42] {
+                let materialized = sc.generate(seed);
+                let streamed: Vec<_> = sc.stream(seed).collect();
+                assert_eq!(
+                    materialized, streamed,
+                    "{} seed {}: streamed trace diverged",
+                    sc.name, seed
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stream_pending_stays_conversation_bounded() {
+        // the multi-turn scenario buffers open conversations only: the
+        // pending heap must stay orders of magnitude below the trace size
+        let sc = Scenario::by_name("multi-turn").unwrap();
+        let mut stream = sc.stream(42);
+        let mut peak_pending = 0usize;
+        let mut n = 0usize;
+        while stream.next().is_some() {
+            peak_pending = peak_pending.max(stream.pending_len());
+            n += 1;
+        }
+        assert!(n > 50, "scenario too small to exercise buffering: {n}");
+        assert!(
+            peak_pending < n / 2,
+            "pending peaked at {peak_pending} of {n} requests — buffering the trace"
+        );
     }
 
     #[test]

@@ -1,0 +1,344 @@
+//! Bounded-memory metrics at scale: the PR-6 sketch/streaming contract.
+//!
+//! Four guarantees are pinned here (DESIGN.md §Metrics):
+//!
+//! 1. [`GkSketch`] P50/P99 stay within the documented rank-error bound
+//!    ⌈εn⌉ of the exact order statistic across adversarial input families
+//!    (constant, bimodal, heavy-tail lognormal, sorted, reverse-sorted)
+//!    and sizes from n = 1 to 10⁵.
+//! 2. Sketch-mode `Collector` counters — attainment, goodput, per-request
+//!    SLO fraction, per-class partition — match the exact mode **exactly**
+//!    under random interleavings of on_request/on_token/on_complete; only
+//!    percentile columns are approximate.
+//! 3. The same holds end-to-end on every named scenario: counters
+//!    identical, sketched TBT percentiles within the rank bound of the
+//!    exact run's sample buffer.
+//! 4. Multi-seed Monte Carlo runs (`mc_seeds`) are deterministic per seed
+//!    through the streaming path.
+
+use dynaserve::core::{Request, SloTarget};
+use dynaserve::costmodel::LlmSpec;
+use dynaserve::experiments::runners::{
+    build_executor_exact, mc_seeds, ExecutorKind, System,
+};
+use dynaserve::metrics::{Collector, MetricsMode, SloConfig};
+use dynaserve::util::proptest_lite::check;
+use dynaserve::util::rng::Rng;
+use dynaserve::util::stats::{GkSketch, Samples, DEFAULT_SKETCH_EPS};
+use dynaserve::workload::Scenario;
+
+/// Assert `est` (a sketch percentile answer) sits within ⌈εn⌉ ranks of the
+/// target rank ⌈p/100·n⌉ in `sorted` (ascending, the full value stream).
+/// The sketch always answers with a retained sample, so `est` must occur
+/// in the stream; its occupied rank interval must intersect
+/// [target − bound, target + bound].
+fn assert_rank_within_bound(sorted: &[f64], est: f64, p: f64, bound: f64, ctx: &str) {
+    let n = sorted.len();
+    assert!(n > 0, "{ctx}: rank check on empty stream");
+    let lo = sorted.partition_point(|&x| x < est) + 1; // first 1-based rank
+    let hi = sorted.partition_point(|&x| x <= est); // last 1-based rank
+    assert!(
+        lo <= hi,
+        "{ctx}: p{p} answer {est} is not a value from the stream"
+    );
+    let target = ((p / 100.0) * n as f64).ceil().max(1.0);
+    assert!(
+        lo as f64 <= target + bound && hi as f64 >= target - bound,
+        "{ctx}: p{p} answer {est} occupies ranks [{lo}, {hi}], \
+         outside target {target} ± {bound} (n = {n})"
+    );
+}
+
+fn family_values(family: usize, n: usize, rng: &mut Rng) -> Vec<f64> {
+    match family {
+        0 => vec![7.25; n],                                   // constant
+        1 => (0..n)                                           // bimodal
+            .map(|_| if rng.bool(0.5) { 0.001 } else { 10.0 })
+            .collect(),
+        2 => (0..n).map(|_| rng.lognormal(0.0, 2.0)).collect(), // heavy tail
+        3 => (0..n).map(|i| i as f64).collect(),              // sorted
+        _ => (0..n).rev().map(|i| i as f64).collect(),        // reverse-sorted
+    }
+}
+
+/// Guarantee 1: the sketch honors its rank-error contract on adversarial
+/// inputs. Each proptest case replays all (family × size) combinations
+/// with fresh randomness for the stochastic families.
+#[test]
+fn sketch_percentiles_within_rank_bound_adversarial() {
+    check("GK sketch rank-error bound", 3, |rng| {
+        for &n in &[1usize, 2, 10, 100_000] {
+            for family in 0..5 {
+                let values = family_values(family, n, rng);
+                let mut sketch = GkSketch::default();
+                for &v in &values {
+                    sketch.push(v);
+                }
+                let mut sorted = values.clone();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let bound = sketch.rank_error_bound() as f64;
+                for p in [50.0, 99.0] {
+                    let est = sketch.percentile(p);
+                    assert_rank_within_bound(
+                        &sorted,
+                        est,
+                        p,
+                        bound,
+                        &format!("family {family} n {n}"),
+                    );
+                }
+                // exact side-figures regardless of compression
+                assert_eq!(sketch.len(), n);
+                assert_eq!(sketch.min(), sorted[0]);
+                assert_eq!(sketch.max(), sorted[n - 1]);
+            }
+        }
+    });
+}
+
+/// Drive the identical event sequence into an exact- and a sketch-mode
+/// collector and return both plus the test's own per-request bookkeeping.
+struct Driven {
+    exact: Collector,
+    sketch: Collector,
+    completed: usize,
+    slo_met: usize,
+}
+
+fn drive_random_interleaving(rng: &mut Rng) -> Driven {
+    let pool = SloConfig::default();
+    let mut exact = Collector::with_mode(pool, MetricsMode::Exact);
+    let mut sketch = Collector::with_mode(pool, MetricsMode::Sketch);
+    let n_req = rng.range_usize(1, 12);
+
+    // one SLO per class — the invariant Collector::on_request documents
+    let class_slo = |c: usize| SloTarget { tbt: 0.05 + 0.05 * c as f64, ttft: Some(0.8) };
+
+    // per-request scripts: Request (register), token times, completion flag
+    struct Script {
+        req: Request,
+        times: Vec<f64>,
+        complete: bool,
+    }
+    let mut scripts = Vec::new();
+    for id in 0..n_req {
+        let class = rng.range_usize(0, 3);
+        let arrival = id as f64 * 0.2;
+        let req = Request::new(id as u64, arrival, 64, 8)
+            .with_class(class, class_slo(class));
+        let tokens = rng.range_usize(0, 8); // 0 = registered but never ran
+        let mut t = arrival;
+        let times = (0..tokens)
+            .map(|_| {
+                t += rng.f64() * 0.15; // gaps straddle every class bound
+                t
+            })
+            .collect();
+        // some requests stay in flight at summary time
+        let complete = rng.bool(0.8);
+        scripts.push(Script { req, times, complete });
+    }
+
+    // interleave: per-request order preserved, cross-request order random
+    enum Ev {
+        Register,
+        Token(f64),
+        Complete,
+    }
+    let mut queues: Vec<std::collections::VecDeque<Ev>> = scripts
+        .iter()
+        .map(|s| {
+            let mut q = std::collections::VecDeque::new();
+            q.push_back(Ev::Register);
+            for &t in &s.times {
+                q.push_back(Ev::Token(t));
+            }
+            if s.complete {
+                q.push_back(Ev::Complete);
+            }
+            q
+        })
+        .collect();
+    let (mut completed, mut slo_met) = (0, 0);
+    loop {
+        let live: Vec<usize> =
+            (0..queues.len()).filter(|&i| !queues[i].is_empty()).collect();
+        if live.is_empty() {
+            break;
+        }
+        let i = live[rng.range_usize(0, live.len())];
+        let s = &scripts[i];
+        match queues[i].pop_front().unwrap() {
+            Ev::Register => {
+                exact.on_request(&s.req);
+                sketch.on_request(&s.req);
+            }
+            Ev::Token(t) => {
+                exact.on_token(s.req.id, s.req.arrival, t);
+                sketch.on_token(s.req.id, s.req.arrival, t);
+            }
+            Ev::Complete => {
+                exact.on_complete(s.req.id);
+                sketch.on_complete(s.req.id);
+                completed += 1;
+                // mirror meets_slo_p99: ≤ 1% of the request's tokens late
+                let bound = s.req.slo.expect("scripted requests carry SLOs").tbt;
+                let late = s
+                    .times
+                    .windows(2)
+                    .filter(|w| w[1] - w[0] > bound)
+                    .count();
+                if late * 100 <= s.times.len() {
+                    slo_met += 1;
+                }
+            }
+        }
+    }
+    Driven { exact, sketch, completed, slo_met }
+}
+
+/// Guarantees 2 (exact↔sketch counter equality) and the collector
+/// invariants: class rows partition the global summary, attainment-style
+/// figures stay in [0, 1], percentiles are NaN exactly when their stream
+/// is empty, and req_slo_frac agrees with per-request meets_slo_p99.
+#[test]
+fn collector_invariants_under_random_interleavings() {
+    check("collector invariants under interleavings", 60, |rng| {
+        let mut d = drive_random_interleaving(rng);
+        let duration = 10.0;
+        let se = d.exact.summarize(duration);
+        let sk = d.sketch.summarize(duration);
+
+        // counter-derived figures are exact in BOTH modes → bit-equal
+        assert_eq!(se.completed, sk.completed);
+        assert_eq!(se.total_tokens, sk.total_tokens);
+        assert_eq!(se.good_tokens, sk.good_tokens);
+        assert_eq!(se.attainment.to_bits(), sk.attainment.to_bits());
+        assert_eq!(se.req_slo_frac.to_bits(), sk.req_slo_frac.to_bits());
+        assert_eq!(se.goodput_tok_s.to_bits(), sk.goodput_tok_s.to_bits());
+
+        // agreement with the test's own meets_slo_p99 bookkeeping
+        assert_eq!(se.completed, d.completed);
+        let want = if d.completed == 0 {
+            1.0
+        } else {
+            d.slo_met as f64 / d.completed as f64
+        };
+        assert_eq!(se.req_slo_frac, want, "req_slo_frac vs per-request records");
+
+        for s in [&se, &sk] {
+            assert!((0.0..=1.0).contains(&s.attainment));
+            assert!((0.0..=1.0).contains(&s.req_slo_frac));
+        }
+        // both modes see the same event stream, so a percentile is NaN in
+        // one mode exactly when it is NaN (empty stream) in the other
+        assert_eq!(se.p99_tbt.is_nan(), sk.p99_tbt.is_nan());
+        assert_eq!(se.p99_ttft.is_nan(), sk.p99_ttft.is_nan());
+
+        // class rows partition the global summary — in both modes
+        for (label, c, s) in [("exact", &mut d.exact, &se), ("sketch", &mut d.sketch, &sk)] {
+            let rows = c.class_summaries(duration);
+            let completed: usize = rows.iter().map(|r| r.completed).sum();
+            let total: usize = rows.iter().map(|r| r.total_tokens).sum();
+            let good: usize = rows.iter().map(|r| r.good_tokens).sum();
+            assert_eq!(completed, s.completed, "{label}: completions partition");
+            assert_eq!(total, s.total_tokens, "{label}: tokens partition");
+            assert_eq!(good, s.good_tokens, "{label}: good tokens partition");
+            for r in &rows {
+                assert!((0.0..=1.0).contains(&r.attainment), "{label}");
+                assert!((0.0..=1.0).contains(&r.ttft_attainment), "{label}");
+                assert!((0.0..=1.0).contains(&r.req_slo_frac), "{label}");
+            }
+        }
+        // per-class attainment: counter path == fraction_leq path, exactly
+        // (one SLO per class, so the numerators count the same gaps)
+        let re = d.exact.class_summaries(duration);
+        let rk = d.sketch.class_summaries(duration);
+        assert_eq!(re.len(), rk.len());
+        for (a, b) in re.iter().zip(&rk) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.attainment.to_bits(), b.attainment.to_bits());
+            assert_eq!(a.ttft_attainment.to_bits(), b.ttft_attainment.to_bits());
+        }
+    });
+}
+
+/// Guarantee 3: end-to-end on every named scenario, the sketch-mode run
+/// reproduces the exact run's counters verbatim and its TBT percentile
+/// columns stay within ⌈εn⌉ ranks of the exact sample buffer.
+#[test]
+fn sketch_within_rank_bound_on_every_scenario() {
+    let llm = LlmSpec::qwen25_14b();
+    let slo = SloConfig::default();
+    for sc in Scenario::all() {
+        let sc = sc.smoke();
+        let reqs = sc.generate(11);
+        let run = |exact: bool| {
+            let mut ex =
+                build_executor_exact(ExecutorKind::Sim, System::DynaServe, &llm, slo, exact);
+            ex.push_scale_events(&sc.scale_events);
+            let s = ex.run(reqs.clone());
+            (s, ex)
+        };
+        let (se, mut ex) = run(true);
+        let (sk, _) = run(false);
+
+        assert_eq!(se.completed, sk.completed, "{}", sc.name);
+        assert_eq!(se.total_tokens, sk.total_tokens, "{}", sc.name);
+        assert_eq!(se.good_tokens, sk.good_tokens, "{}", sc.name);
+        assert_eq!(se.attainment.to_bits(), sk.attainment.to_bits(), "{}", sc.name);
+        assert_eq!(se.req_slo_frac.to_bits(), sk.req_slo_frac.to_bits(), "{}", sc.name);
+
+        let samples = ex
+            .collector
+            .tbt_samples()
+            .expect("exact run keeps the TBT sample buffer");
+        let mut sorted = samples.values().to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let bound = (DEFAULT_SKETCH_EPS * sorted.len() as f64).ceil();
+        assert_rank_within_bound(&sorted, sk.p50_tbt, 50.0, bound, sc.name);
+        assert_rank_within_bound(&sorted, sk.p99_tbt, 99.0, bound, sc.name);
+    }
+}
+
+/// Guarantee 2, stats-level: the counter-based attainment equals the exact
+/// `Samples::fraction_leq` for arbitrary thresholds — the sketch mode's
+/// O(1) replacement loses nothing.
+#[test]
+fn attainment_counters_match_fraction_leq() {
+    check("counter attainment == fraction_leq", 40, |rng| {
+        let n = rng.range_usize(1, 500);
+        let threshold = rng.f64() * 0.2;
+        let mut samples = Samples::new();
+        let mut within = 0usize;
+        for _ in 0..n {
+            let v = rng.f64() * 0.25;
+            samples.push(v);
+            if v <= threshold {
+                within += 1; // the collector's gaps_within_slo counter
+            }
+        }
+        let counter = within as f64 / n as f64;
+        assert_eq!(counter.to_bits(), samples.fraction_leq(threshold).to_bits());
+    });
+}
+
+/// Guarantee 4: Monte Carlo seeds are deterministic per seed through the
+/// streaming arrival path — rerunning any (scenario, seed) cell reproduces
+/// its Summary bit-for-bit, so per-seed artifacts are replayable.
+#[test]
+fn multi_seed_monte_carlo_deterministic_per_seed() {
+    let llm = LlmSpec::qwen25_14b();
+    let slo = SloConfig::default();
+    let sc = Scenario::by_name("hybrid").expect("hybrid scenario exists").smoke();
+    for seed in mc_seeds(42, 3) {
+        let run = || {
+            let mut ex =
+                build_executor_exact(ExecutorKind::Sim, System::DynaServe, &llm, slo, false);
+            ex.push_scale_events(&sc.scale_events);
+            format!("{:?}", ex.run_stream(sc.stream(seed)))
+        };
+        assert_eq!(run(), run(), "seed {seed}: Monte Carlo cell must be replayable");
+    }
+}

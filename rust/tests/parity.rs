@@ -21,7 +21,9 @@
 //! reappear. (`make parity` runs this file on its own.)
 
 use dynaserve::costmodel::LlmSpec;
-use dynaserve::experiments::runners::{build_executor, ExecutorKind, System};
+use dynaserve::experiments::runners::{
+    build_executor, build_executor_exact, ExecutorKind, System,
+};
 use dynaserve::metrics::SloConfig;
 use dynaserve::workload::{poisson_workload, Scenario, TraceKind};
 
@@ -64,6 +66,52 @@ fn scenario_trace_is_bit_identical_across_executors() {
         );
         assert_eq!(stuck_sim, 0, "{}: sim executor left stuck segments", sys.name());
         assert_eq!(stuck_live, 0, "{}: live executor left stuck segments", sys.name());
+    }
+}
+
+/// Streaming parity (PR 6): pulling arrivals lazily from the scenario
+/// generator must be bit-identical to materializing the trace first —
+/// same Summary, same per-class rows — through BOTH executor facades, on
+/// the exact metrics path (`--exact-metrics` pins the legacy numbers).
+/// This is the guarantee that lets million-request runs stream in
+/// O(fleet + in-flight) memory without changing a single figure.
+#[test]
+fn streamed_arrivals_bit_identical_to_materialized() {
+    let sc = Scenario::by_name("hybrid").expect("hybrid scenario exists").smoke();
+    let llm = LlmSpec::qwen25_14b();
+    let seed = 7;
+    for kind in [ExecutorKind::Sim, ExecutorKind::LiveVirtual] {
+        for sys in System::all_default() {
+            let score = |ex: &mut dynaserve::sim::Simulator,
+                         summary: dynaserve::metrics::Summary| {
+                let classes = ex.collector.class_summaries(summary.duration);
+                (format!("{summary:?}"), format!("{classes:?}"))
+            };
+            let materialized = {
+                let mut ex = build_executor_exact(kind, sys, &llm, SloConfig::default(), true);
+                let s = ex.run(sc.generate(seed));
+                score(&mut ex, s)
+            };
+            let streamed = {
+                let mut ex = build_executor_exact(kind, sys, &llm, SloConfig::default(), true);
+                let s = ex.run_stream(sc.stream(seed));
+                score(&mut ex, s)
+            };
+            assert_eq!(
+                materialized.0,
+                streamed.0,
+                "{}/{}: streamed vs materialized summaries diverged",
+                kind.name(),
+                sys.name()
+            );
+            assert_eq!(
+                materialized.1,
+                streamed.1,
+                "{}/{}: streamed vs materialized class rows diverged",
+                kind.name(),
+                sys.name()
+            );
+        }
     }
 }
 
