@@ -4,7 +4,7 @@
 ARTIFACTS ?= artifacts
 PYTHON    ?= python3
 
-.PHONY: artifacts build test bench bench-1m experiments parity elastic clean
+.PHONY: artifacts build test bench bench-1m experiments parity elastic faults clean
 
 # Lower the TinyQwen step function to HLO text + params + manifest, and
 # snapshot the simulator bench rows to BENCH_sim.json so every artifact
@@ -33,6 +33,12 @@ parity:
 # (EXPERIMENTS.md §Elastic). Emits results/elastic.json.
 elastic:
 	cargo run --release --bin experiments -- elastic
+
+# Fault-tolerance evaluation: seeded crash-rate sweep on the faulty
+# diurnal scenario, recovery on vs off, scored by goodput and the
+# recovery ledger (EXPERIMENTS.md §Faults). Emits results/faults.json.
+faults:
+	cargo run --release --bin experiments -- faults
 
 bench:
 	cargo bench --bench bench_schedulers

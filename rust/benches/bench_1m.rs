@@ -58,6 +58,7 @@ fn diurnal(n: usize) -> Scenario {
         }],
         duration,
         scale_events: vec![],
+        faults: vec![],
     }
 }
 

@@ -26,6 +26,11 @@
 //! * **Retired** — empty and removed: `removed_at` freezes its
 //!   GPU-second meter. The member stays in the registry so utilization
 //!   stats and the fleet timeline survive the instance.
+//! * **Failed** — crashed without draining ([`Cluster::fail`], fault
+//!   injection / dead-thread detection): leaves the fleet immediately
+//!   with segments still resident; the host re-places or sheds the
+//!   orphans (`exec/host.rs` crash recovery, DESIGN.md §Fault
+//!   tolerance). GPU-seconds freeze at the crash instant.
 //!
 //! Scaling decisions come from two seams: deterministic [`ScaleEvent`]s
 //! attached to a scenario (`crate::workload::scenario`), and the
@@ -48,7 +53,41 @@ pub enum MemberState {
     Draining,
     /// Removed from the fleet; GPU-second meter frozen at `removed_at`.
     Retired,
+    /// Crashed without warning ([`Cluster::fail`]): resident KV lost,
+    /// GPU-second meter frozen at the crash instant. Unlike `Retired`,
+    /// the runtime was *not* empty — the host decides what happens to
+    /// the orphaned segments (re-place or shed).
+    Failed,
 }
+
+/// Why a [`Cluster::drain`] or [`Cluster::fail`] was refused.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DrainError {
+    /// No member with this id was ever provisioned.
+    UnknownInstance(InstanceId),
+    /// The member exists but its state does not admit the transition
+    /// (already draining, retired, or failed).
+    WrongState(InstanceId),
+    /// Removing this member would leave no active-or-warming instance —
+    /// a fleet must keep at least one member that can take placements.
+    LastPlaceable(InstanceId),
+}
+
+impl std::fmt::Display for DrainError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DrainError::UnknownInstance(id) => write!(f, "unknown instance {id}"),
+            DrainError::WrongState(id) => {
+                write!(f, "instance {id} is not in a drainable state")
+            }
+            DrainError::LastPlaceable(id) => {
+                write!(f, "instance {id} is the last placeable member of the fleet")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DrainError {}
 
 /// One provisioned instance: its runtime plus membership bookkeeping.
 pub struct Member {
@@ -72,7 +111,7 @@ impl Member {
 
     /// Still part of the fleet (accruing GPU-seconds)?
     pub fn provisioned(&self) -> bool {
-        !matches!(self.state, MemberState::Retired)
+        !matches!(self.state, MemberState::Retired | MemberState::Failed)
     }
 
     /// GPU-seconds this member has accrued by `now` (per GPU of the
@@ -93,6 +132,8 @@ pub enum FleetChange {
     Warmed,
     DrainStarted,
     Removed,
+    /// Crashed ([`Cluster::fail`]): left the fleet without draining.
+    Failed,
 }
 
 /// Timestamped membership transition.
@@ -176,26 +217,60 @@ impl Cluster {
         }
     }
 
-    /// Begin draining `id`: it refuses new placements from here on.
-    /// Refused (returns false) for unknown / already draining / retired
-    /// members, and when no *other* member is active or warming — a fleet
-    /// must keep at least one instance that can take placements.
-    pub fn drain(&mut self, id: InstanceId, now: f64) -> bool {
-        let survivors = self
-            .members
+    /// How many *other* members could still take placements (active or
+    /// warming) if `id` left the fleet.
+    fn survivors_excluding(&self, id: InstanceId) -> usize {
+        self.members
             .iter()
             .filter(|m| {
                 m.id != id && matches!(m.state, MemberState::Active | MemberState::Warming { .. })
             })
-            .count();
-        let Some(i) = self.idx(id) else { return false };
+            .count()
+    }
+
+    /// Begin draining `id`: it refuses new placements from here on.
+    /// Refused — with the reason named — for unknown ids, members whose
+    /// state does not admit draining (already draining / retired /
+    /// failed), and when no *other* member is active or warming: a fleet
+    /// must keep at least one instance that can take placements.
+    pub fn drain(&mut self, id: InstanceId, now: f64) -> Result<(), DrainError> {
+        let survivors = self.survivors_excluding(id);
+        let Some(i) = self.idx(id) else { return Err(DrainError::UnknownInstance(id)) };
         let m = &mut self.members[i];
-        if !matches!(m.state, MemberState::Active | MemberState::Warming { .. }) || survivors == 0 {
-            return false;
+        if !matches!(m.state, MemberState::Active | MemberState::Warming { .. }) {
+            return Err(DrainError::WrongState(id));
+        }
+        if survivors == 0 {
+            return Err(DrainError::LastPlaceable(id));
         }
         m.state = MemberState::Draining;
         self.timeline.push(FleetEvent { at: now, id, change: FleetChange::DrainStarted });
-        true
+        Ok(())
+    }
+
+    /// Crash `id`: the member leaves the fleet *now*, resident segments
+    /// and all — the host is responsible for re-placing or shedding its
+    /// orphans. Accepted from `Active`, `Warming`, or `Draining` (a
+    /// draining instance can still die); refused for unknown ids, members
+    /// already out of the fleet, and — like [`Cluster::drain`] — when no
+    /// other active-or-warming member survives: the harness models a
+    /// fleet with at least one survivor so the no-lost-request invariant
+    /// stays testable (a total-fleet loss sheds everything trivially).
+    /// Freezes the GPU-second meter at the crash instant.
+    pub fn fail(&mut self, id: InstanceId, now: f64) -> Result<(), DrainError> {
+        let survivors = self.survivors_excluding(id);
+        let Some(i) = self.idx(id) else { return Err(DrainError::UnknownInstance(id)) };
+        let m = &mut self.members[i];
+        if matches!(m.state, MemberState::Retired | MemberState::Failed) {
+            return Err(DrainError::WrongState(id));
+        }
+        if survivors == 0 {
+            return Err(DrainError::LastPlaceable(id));
+        }
+        m.state = MemberState::Failed;
+        m.removed_at = Some(now);
+        self.timeline.push(FleetEvent { at: now, id, change: FleetChange::Failed });
+        Ok(())
     }
 
     /// Retire a drained member whose runtime has emptied: freezes its
@@ -240,13 +315,14 @@ impl Cluster {
     }
 
     /// The member's runtime, stamping `last_activity` — the host routes
-    /// every event application through here. Retired members still
-    /// resolve (their empty runtime no-ops on stale keys) but are not
-    /// stamped: nothing real can happen to an instance after removal,
-    /// and the drain tests pin `last_activity <= removed_at`.
+    /// every event application through here. Retired and failed members
+    /// still resolve (recovery reads the dead runtime's orphans; retired
+    /// runtimes no-op on stale keys) but are not stamped: nothing real
+    /// can happen to an instance after removal, and the drain tests pin
+    /// `last_activity <= removed_at`.
     pub fn runtime_mut(&mut self, id: InstanceId, now: f64) -> Option<&mut InstanceRuntime> {
         let m = self.member_mut(id)?;
-        if !matches!(m.state, MemberState::Retired) {
+        if !matches!(m.state, MemberState::Retired | MemberState::Failed) {
             m.last_activity = m.last_activity.max(now);
         }
         Some(&mut m.runtime)
@@ -316,7 +392,12 @@ impl Cluster {
         let mut events: Vec<FleetEvent> = self
             .timeline
             .iter()
-            .filter(|e| matches!(e.change, FleetChange::Added | FleetChange::Removed))
+            .filter(|e| {
+                matches!(
+                    e.change,
+                    FleetChange::Added | FleetChange::Removed | FleetChange::Failed
+                )
+            })
             .copied()
             .collect();
         events.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap_or(std::cmp::Ordering::Equal));
@@ -325,7 +406,7 @@ impl Cluster {
         for e in events {
             match e.change {
                 FleetChange::Added => n += 1,
-                FleetChange::Removed => n -= 1,
+                FleetChange::Removed | FleetChange::Failed => n -= 1,
                 _ => {}
             }
             match out.last_mut() {
@@ -522,7 +603,7 @@ mod tests {
         let mut c = cluster_with(2);
         let a = add(&mut c, 1.0, 0.0);
         assert_eq!(a, InstanceId(2));
-        assert!(c.drain(a, 2.0));
+        assert!(c.drain(a, 2.0).is_ok());
         c.retire(a, 2.0);
         let b = add(&mut c, 3.0, 0.0);
         assert_eq!(b, InstanceId(3), "retired ids must not be recycled");
@@ -554,17 +635,69 @@ mod tests {
     #[test]
     fn drain_refuses_last_placeable_member() {
         let mut c = cluster_with(2);
-        assert!(c.drain(InstanceId(1), 1.0));
-        assert!(!c.drain(InstanceId(0), 1.0), "must keep one placeable member");
-        assert!(!c.drain(InstanceId(1), 1.0), "already draining");
-        assert!(!c.drain(InstanceId(9), 1.0), "unknown id");
+        assert_eq!(c.drain(InstanceId(1), 1.0), Ok(()));
+        assert_eq!(
+            c.drain(InstanceId(0), 1.0),
+            Err(DrainError::LastPlaceable(InstanceId(0))),
+            "must keep one placeable member"
+        );
+        assert_eq!(
+            c.drain(InstanceId(1), 1.0),
+            Err(DrainError::WrongState(InstanceId(1))),
+            "already draining"
+        );
+        assert_eq!(
+            c.drain(InstanceId(9), 1.0),
+            Err(DrainError::UnknownInstance(InstanceId(9))),
+            "unknown id"
+        );
         assert_eq!(c.placeable_count(), 1);
+    }
+
+    #[test]
+    fn fail_removes_member_and_freezes_gpu_seconds() {
+        let mut c = cluster_with(3);
+        assert_eq!(c.fail(InstanceId(1), 4.0), Ok(()));
+        let m = c.member(InstanceId(1)).unwrap();
+        assert_eq!(m.state, MemberState::Failed);
+        assert_eq!(m.removed_at, Some(4.0));
+        assert!(!m.placeable());
+        assert!(!m.provisioned());
+        assert_eq!(c.placeable_count(), 2);
+        // 2 survivors run to 10.0, the failed member stopped at 4.0
+        assert!((c.gpu_seconds(10.0) - 24.0).abs() < 1e-9);
+        // double-fail and post-mortem drain are refused with the reason
+        assert_eq!(c.fail(InstanceId(1), 5.0), Err(DrainError::WrongState(InstanceId(1))));
+        assert_eq!(c.drain(InstanceId(1), 5.0), Err(DrainError::WrongState(InstanceId(1))));
+        // the timeline records the crash and the size step function drops
+        assert!(c
+            .timeline()
+            .iter()
+            .any(|e| e.id == InstanceId(1) && e.change == FleetChange::Failed && e.at == 4.0));
+        assert_eq!(c.size_timeline(), vec![(0.0, 3), (4.0, 2)]);
+    }
+
+    #[test]
+    fn fail_refuses_last_placeable_and_unknown() {
+        let mut c = cluster_with(2);
+        assert_eq!(c.fail(InstanceId(7), 1.0), Err(DrainError::UnknownInstance(InstanceId(7))));
+        assert_eq!(c.fail(InstanceId(0), 1.0), Ok(()));
+        assert_eq!(
+            c.fail(InstanceId(1), 2.0),
+            Err(DrainError::LastPlaceable(InstanceId(1))),
+            "the harness models at least one survivor"
+        );
+        // a draining member can still die
+        let mut d = cluster_with(3);
+        assert_eq!(d.drain(InstanceId(2), 1.0), Ok(()));
+        assert_eq!(d.fail(InstanceId(2), 2.0), Ok(()));
+        assert_eq!(d.member(InstanceId(2)).unwrap().state, MemberState::Failed);
     }
 
     #[test]
     fn retire_freezes_gpu_seconds() {
         let mut c = cluster_with(2);
-        assert!(c.drain(InstanceId(1), 4.0));
+        assert!(c.drain(InstanceId(1), 4.0).is_ok());
         c.retire(InstanceId(1), 6.0);
         let m = c.member(InstanceId(1)).unwrap();
         assert_eq!(m.removed_at, Some(6.0));
@@ -578,7 +711,7 @@ mod tests {
     fn size_timeline_steps_through_membership() {
         let mut c = cluster_with(2);
         let a = add(&mut c, 5.0, 1.0);
-        assert!(c.drain(a, 8.0));
+        assert!(c.drain(a, 8.0).is_ok());
         c.retire(a, 9.0);
         assert_eq!(c.size_timeline(), vec![(0.0, 2), (5.0, 3), (9.0, 2)]);
     }
@@ -587,7 +720,7 @@ mod tests {
     fn newest_active_is_the_scale_down_victim() {
         let mut c = cluster_with(3);
         assert_eq!(c.newest_active(), Some(InstanceId(2)));
-        assert!(c.drain(InstanceId(2), 1.0));
+        assert!(c.drain(InstanceId(2), 1.0).is_ok());
         assert_eq!(c.newest_active(), Some(InstanceId(1)));
     }
 
@@ -598,7 +731,7 @@ mod tests {
         let mut c = cluster_with(2);
         let warming = add(&mut c, 10.0, 5.0);
         assert_eq!(c.newest_active(), Some(warming));
-        assert!(c.drain(warming, 12.0), "a warming member is drainable");
+        assert!(c.drain(warming, 12.0).is_ok(), "a warming member is drainable");
         assert_eq!(c.newest_active(), Some(InstanceId(1)));
     }
 

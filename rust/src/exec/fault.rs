@@ -1,0 +1,178 @@
+//! Deterministic fault injection for the elastic fleet (ROADMAP item 5).
+//!
+//! Production clusters lose instances without warning, see GPUs silently
+//! degrade, and hit stalls on the α→β KV-transfer path that the
+//! micro-request split makes load-bearing. This module is the shared
+//! vocabulary both executors speak:
+//!
+//! * [`FaultEvent`] / [`FaultKind`] — scheduled faults attachable to a
+//!   `Scenario` (like `ScaleEvent`s): an instance crash at time t, a
+//!   persistent slow-GPU multiplier on an instance's step times, or a
+//!   budget of injected α→β handoff failures on the modeled transport.
+//! * [`RetryPolicy`] — bounded retries with exponential backoff and a
+//!   wall deadline for failed handoff transfers. One policy object is
+//!   shared by the virtual executor and the live server so "how hard do
+//!   we try before shedding" is configured in exactly one place.
+//! * [`fault_schedule`] — the seeded crash-plan generator the
+//!   `experiments faults` harness sweeps: `crash_rate` crashes per
+//!   virtual second, jittered deterministically, each victim paired by
+//!   the caller with a replacement `ScaleAction::Add` so the degradation
+//!   curve measures *recovery cost*, not shrinking capacity.
+//!
+//! Faults are plain data (no RNG draws at execution time): the same
+//! schedule pushed into both executor facades produces bit-identical
+//! summaries, which `tests/parity.rs` pins.
+
+use crate::core::InstanceId;
+use crate::util::rng::Rng;
+
+/// What goes wrong.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Instance `id` dies instantly: resident KV is lost, every resident
+    /// segment must be re-placed (recovery on) or shed (recovery off).
+    Crash { id: InstanceId },
+    /// Instance `id`'s step times are multiplied by `factor` (> 1 =
+    /// degradation) from here on — a silently slow GPU.
+    SlowGpu { id: InstanceId, factor: f64 },
+    /// The next `failures` α→β handoff transfers fail at dispatch and
+    /// enter the [`RetryPolicy`] loop.
+    LinkFault { failures: u32 },
+}
+
+/// A scheduled fault, attachable to a `Scenario` alongside its
+/// `ScaleEvent`s. Plain data — deterministic by construction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual seconds from scenario start.
+    pub at: f64,
+    pub kind: FaultKind,
+}
+
+/// Bounded-retry + exponential-backoff policy for failed α→β handoff
+/// transfers. Owned here so the virtual executor and the live server
+/// share one definition of "how hard to try before shedding".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total dispatch attempts (first try included). 1 = no retries.
+    pub max_attempts: u32,
+    /// Backoff before the first retry (seconds).
+    pub base_backoff: f64,
+    /// Backoff growth per retry (2.0 = doubling).
+    pub multiplier: f64,
+    /// Per-retry backoff ceiling (seconds).
+    pub max_backoff: f64,
+    /// Give up once this many seconds have passed since the first
+    /// failure, attempts remaining or not.
+    pub deadline: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff: 0.05,
+            multiplier: 2.0,
+            max_backoff: 1.0,
+            deadline: 10.0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `failures` (1-based: the delay after
+    /// the `failures`-th failed attempt): base · multiplier^(failures−1),
+    /// capped at `max_backoff`.
+    pub fn backoff(&self, failures: u32) -> f64 {
+        let exp = failures.saturating_sub(1).min(63);
+        (self.base_backoff * self.multiplier.powi(exp as i32)).min(self.max_backoff)
+    }
+
+    /// May we dispatch another attempt after `failures` failed ones,
+    /// `elapsed` seconds past the first failure?
+    pub fn allows(&self, failures: u32, elapsed: f64) -> bool {
+        failures < self.max_attempts && elapsed <= self.deadline
+    }
+}
+
+/// RNG stream tag for crash-time jitter (decorrelated from the request
+/// streams `0x5c3a`/`0xc1a5` so attaching faults never perturbs the
+/// generated trace).
+const FAULT_STREAM: u64 = 0xfa17;
+
+/// Seeded crash plan for the `experiments faults` sweep: ⌈`crash_rate` ×
+/// `duration`⌉ crashes (at least one whenever the rate is nonzero),
+/// evenly spaced over the middle of the run with deterministic jitter.
+///
+/// Victim selection exploits monotonic id allocation: crash `k` kills
+/// `InstanceId(k)`. The harness pairs every crash with a replacement
+/// `ScaleAction::Add` just after it, so after `k` crash/add pairs the
+/// live fleet is exactly `{k, …, fleet+k−1}` — the victim of the next
+/// crash is always the oldest live member, with no runtime lookups that
+/// could diverge between executors.
+pub fn fault_schedule(seed: u64, duration: f64, crash_rate: f64, fleet: usize) -> Vec<FaultEvent> {
+    if crash_rate <= 0.0 || duration <= 0.0 || fleet == 0 {
+        return Vec::new();
+    }
+    let n = (crash_rate * duration).ceil().max(1.0) as usize;
+    let mut rng = Rng::with_stream(seed, FAULT_STREAM);
+    let mut out = Vec::with_capacity(n);
+    // crashes inside [10%, 90%] of the run: early enough to matter,
+    // late enough that the fleet has work resident when they land
+    let lo = 0.10 * duration;
+    let span = 0.80 * duration;
+    let slot = span / n as f64;
+    for k in 0..n {
+        let jitter = (rng.f64() - 0.5) * 0.5 * slot;
+        let at = (lo + (k as f64 + 0.5) * slot + jitter).clamp(lo, lo + span);
+        out.push(FaultEvent { at, kind: FaultKind::Crash { id: InstanceId(k as u32) } });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let p = RetryPolicy::default();
+        assert!((p.backoff(1) - 0.05).abs() < 1e-12);
+        assert!((p.backoff(2) - 0.10).abs() < 1e-12);
+        assert!((p.backoff(3) - 0.20).abs() < 1e-12);
+        // cap: 0.05 · 2^9 = 25.6 → clamped to 1.0
+        assert!((p.backoff(10) - 1.0).abs() < 1e-12);
+        // degenerate huge failure counts must not overflow powi
+        assert!(p.backoff(u32::MAX).is_finite());
+    }
+
+    #[test]
+    fn allows_respects_attempts_and_deadline() {
+        let p = RetryPolicy { max_attempts: 3, deadline: 5.0, ..Default::default() };
+        assert!(p.allows(1, 0.1));
+        assert!(p.allows(2, 4.9));
+        assert!(!p.allows(3, 0.1), "attempts exhausted");
+        assert!(!p.allows(1, 5.1), "deadline exceeded");
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_ordered() {
+        let a = fault_schedule(42, 100.0, 0.05, 4);
+        let b = fault_schedule(42, 100.0, 0.05, 4);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5, "ceil(0.05 × 100)");
+        assert!(a.windows(2).all(|w| w[0].at <= w[1].at));
+        for (k, ev) in a.iter().enumerate() {
+            assert!(ev.at >= 10.0 && ev.at <= 90.0, "inside the middle 80%");
+            assert_eq!(ev.kind, FaultKind::Crash { id: InstanceId(k as u32) });
+        }
+        assert_ne!(fault_schedule(43, 100.0, 0.05, 4), a, "seed matters");
+    }
+
+    #[test]
+    fn schedule_nonzero_rate_always_crashes_at_least_once() {
+        assert_eq!(fault_schedule(1, 30.0, 0.001, 2).len(), 1);
+        assert!(fault_schedule(1, 30.0, 0.0, 2).is_empty());
+        assert!(fault_schedule(1, 0.0, 1.0, 2).is_empty());
+    }
+}

@@ -28,23 +28,24 @@
 //! [`ExecConfig::exact_snapshots`], and debug builds assert on every
 //! arrival that the incremental digests equal the snapshot reduction.
 
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 use std::time::Instant;
 
 use crate::coordinator::local::BatchPlan;
 use crate::coordinator::{LoadDigest, LocalConfig, LocalScheduler, ProfileTable};
-use crate::core::{InstanceId, Request};
+use crate::core::{InstanceId, Request, RequestId};
 use crate::costmodel::InstanceSpec;
 use crate::exec::clock::{Clock, VirtualClock};
 use crate::exec::cluster::{
-    Autoscaler, Cluster, MemberState, ScaleAction, ScaleDirective, ScaleEvent,
+    Autoscaler, Cluster, DrainError, MemberState, ScaleAction, ScaleDirective, ScaleEvent,
 };
+use crate::exec::fault::{FaultEvent, FaultKind, RetryPolicy};
 use crate::exec::policy::Policy;
-use crate::exec::runtime::{InstanceRuntime, SegmentDisposition, SeqKey};
+use crate::exec::runtime::{InstanceRuntime, KvSpan, Segment, SegmentDisposition, SeqKey};
 use crate::exec::submit::{make_segment, plan_submission};
-use crate::exec::transport::ModeledTransport;
+use crate::exec::transport::{Handoff, HandoffDisposition, ModeledTransport, Transport};
 use crate::kv::LinkSpec;
-use crate::metrics::{Collector, MetricsMode, SloConfig, Summary};
+use crate::metrics::{Collector, MetricsMode, RecoveryStats, SloConfig, Summary};
 use crate::util::stats::Samples;
 
 /// Invalid executor configuration, rejected at construction by
@@ -134,6 +135,14 @@ pub struct ExecConfig {
     pub autoscale_interval: f64,
     /// Hard cap on provisioned instances (guards runaway autoscalers).
     pub max_instances: usize,
+    /// Crash recovery: true (default) re-places a dead instance's
+    /// segments from their last durable point; false sheds them — the
+    /// ablation baseline of the `experiments faults` degradation curve.
+    pub recovery: bool,
+    /// Bounded retries with exponential backoff for failed α→β handoff
+    /// transfers (shared with the live server; DESIGN.md §Fault
+    /// tolerance). Ignored — one attempt only — when `recovery` is off.
+    pub retry: RetryPolicy,
 }
 
 impl ExecConfig {
@@ -156,6 +165,8 @@ impl ExecConfig {
                 warmup: 2.0,
                 autoscale_interval: 1.0,
                 max_instances: 64,
+                recovery: true,
+                retry: RetryPolicy::default(),
             },
         }
     }
@@ -234,6 +245,18 @@ impl ExecConfigBuilder {
         self
     }
 
+    /// Enable/disable crash recovery (see [`ExecConfig::recovery`]).
+    pub fn recovery(mut self, on: bool) -> Self {
+        self.cfg.recovery = on;
+        self
+    }
+
+    /// Retry policy for failed handoff transfers.
+    pub fn retry(mut self, retry: RetryPolicy) -> Self {
+        self.cfg.retry = retry;
+        self
+    }
+
     pub fn build(self) -> Result<ExecConfig, ConfigError> {
         let c = &self.cfg;
         if c.n_instances == 0 {
@@ -273,6 +296,12 @@ enum EventKind {
     Scale(ScaleAction),
     /// Periodic autoscaler evaluation.
     AutoscaleTick,
+    /// Scheduled scenario fault event (crash / slow GPU / link fault).
+    Fault(FaultKind),
+    /// Retry a failed α→β handoff after its backoff: `instance` is the
+    /// pinned α's home, `failures` counts failed attempts so far, and
+    /// `first_at` anchors the retry deadline.
+    RetryHandoff { instance: InstanceId, handoff: Handoff, failures: u32, first_at: f64 },
 }
 
 struct Event {
@@ -329,6 +358,19 @@ pub struct VirtualExecutor {
     autoscaler: Option<Box<dyn Autoscaler>>,
     /// Scenario scale events queued for the next `run`.
     pending_scale_events: Vec<ScaleEvent>,
+    /// Scenario fault events queued for the next `run`.
+    pending_fault_events: Vec<FaultEvent>,
+    /// Recovery counters (requests re-placed/shed, work re-done) —
+    /// threaded into the summary via `Summary::with_recovery`.
+    recovery: RecoveryStats,
+    /// Requests re-placed by crash recovery that have not finished yet:
+    /// request → time of the crash that displaced it. Keyed lookups
+    /// only (never iterated), so the map stays deterministic.
+    recovering: HashMap<RequestId, f64>,
+    /// Gated β segments left to finish in place by [`Self::drain`]
+    /// (transfer already started, or no placeable target to move to) —
+    /// the drain/stuck diagnostics report this alongside the residue.
+    drain_gated_in_place: u64,
     /// Time of the last *lifecycle* event (arrival/iteration/transfer) —
     /// the serving end the summary is scored over. Bookkeeping events
     /// (autoscaler ticks, warm-up kicks, late scale events) advance the
@@ -381,6 +423,10 @@ impl VirtualExecutor {
             truncated: false,
             autoscaler: None,
             pending_scale_events: Vec::new(),
+            pending_fault_events: Vec::new(),
+            recovery: RecoveryStats::default(),
+            recovering: HashMap::new(),
+            drain_gated_in_place: 0,
             work_end: 0.0,
             loads: Vec::new(),
             completed_buf: Vec::new(),
@@ -415,6 +461,18 @@ impl VirtualExecutor {
         self.pending_scale_events.extend_from_slice(events);
     }
 
+    /// Queue deterministic fault events for the next [`Self::run`] (e.g.
+    /// a scenario's `faults` or a [`crate::exec::fault::fault_schedule`]).
+    pub fn push_fault_events(&mut self, events: &[FaultEvent]) {
+        self.pending_fault_events.extend_from_slice(events);
+    }
+
+    /// Recovery counters accumulated by fault handling in the last run
+    /// (also threaded into the summary via [`Summary::with_recovery`]).
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        self.recovery
+    }
+
     /// Run to completion over `requests`; returns the serving summary
     /// (including fleet GPU-seconds and goodput-per-GPU-second).
     ///
@@ -441,6 +499,9 @@ impl VirtualExecutor {
         let mut next_arrival = arrivals.next();
         for ev in std::mem::take(&mut self.pending_scale_events) {
             self.push(ev.at, EventKind::Scale(ev.action));
+        }
+        for ev in std::mem::take(&mut self.pending_fault_events) {
+            self.push(ev.at, EventKind::Fault(ev.kind));
         }
         if self.autoscaler.is_some() {
             let t = self.now() + self.cfg.autoscale_interval;
@@ -504,6 +565,10 @@ impl VirtualExecutor {
                 EventKind::Kick { instance } => self.kick(instance),
                 EventKind::Scale(action) => self.apply_scale_action(action),
                 EventKind::AutoscaleTick => self.on_autoscale_tick(),
+                EventKind::Fault(kind) => self.apply_fault(kind),
+                EventKind::RetryHandoff { instance, handoff, failures, first_at } => {
+                    self.on_retry_handoff(instance, handoff, failures, first_at)
+                }
             }
         }
         debug_assert!(
@@ -514,6 +579,7 @@ impl VirtualExecutor {
         self.collector
             .summarize(end.max(1e-9))
             .with_fleet(self.cluster.gpu_seconds(end))
+            .with_recovery(self.recovery)
     }
 
     /// Segments that never completed (should be 0 — any residue indicates
@@ -564,15 +630,15 @@ impl VirtualExecutor {
     /// started are re-placed onto the least-loaded placeable peer (their
     /// α's handoff address is retargeted); resident segments finish, and
     /// the member retires — freezing its GPU-second meter — once empty.
-    /// Returns false when the cluster refuses (unknown id, already
-    /// draining, or last placeable member).
-    pub fn drain(&mut self, id: InstanceId) -> bool {
+    /// Refusals name their reason ([`DrainError`]): unknown id, wrong
+    /// state (already draining/retired/failed), or last placeable member.
+    pub fn drain(&mut self, id: InstanceId) -> Result<(), DrainError> {
         let now = self.now();
-        if !self.cluster.drain(id, now) {
-            return false;
-        }
+        self.cluster.drain(id, now)?;
+        let gated_total = self.cluster.runtime(id).map(|r| r.gated_count()).unwrap_or(0);
         let replaceable =
             self.cluster.runtime(id).map(|r| r.replaceable_gated_keys()).unwrap_or_default();
+        let mut moved = 0usize;
         for old_key in replaceable {
             self.cluster.placeable_digests_into(now, &mut self.loads);
             // least pending work, ties to the lowest id — deterministic
@@ -611,11 +677,21 @@ impl VirtualExecutor {
                     .is_some()
             });
             debug_assert!(retargeted, "re-placed β had no α handoff pointing at it");
+            moved += 1;
         }
+        // gated βs not moved (transfer already en route, or no placeable
+        // target) ride out the drain where they are
+        self.drain_gated_in_place += (gated_total - moved) as u64;
         // may already be empty (or emptied by the re-placements): the kick
         // retires it; otherwise it keeps iterating until drained
         self.kick(id);
-        true
+        Ok(())
+    }
+
+    /// Gated β segments that drains left to finish in place so far (see
+    /// [`Self::drain`]) — reported by the drain/stuck diagnostics.
+    pub fn drain_gated_in_place(&self) -> u64 {
+        self.drain_gated_in_place
     }
 
     /// The one place scaling directives are applied — scenario events and
@@ -630,7 +706,9 @@ impl VirtualExecutor {
                 }
             }
             ScaleDirective::Drain { id } => {
-                self.drain(id);
+                // a refused drain (e.g. last placeable member) is a normal
+                // autoscaler guard, not an error worth surfacing per tick
+                let _ = self.drain(id);
             }
         }
     }
@@ -642,7 +720,7 @@ impl VirtualExecutor {
                 for _ in 0..count {
                     match self.cluster.newest_active() {
                         Some(id) => {
-                            if !self.drain(id) {
+                            if self.drain(id).is_err() {
                                 break;
                             }
                         }
@@ -651,6 +729,403 @@ impl VirtualExecutor {
                 }
             }
         }
+    }
+
+    /// Dispatch one scheduled fault event.
+    fn apply_fault(&mut self, kind: FaultKind) {
+        let now = self.now();
+        match kind {
+            FaultKind::Crash { id } => {
+                if let Err(e) = self.fail(id) {
+                    eprintln!("warn: crash fault at t={now:.2} refused: {e}");
+                }
+            }
+            FaultKind::SlowGpu { id, factor } => {
+                if let Some(rt) = self.cluster.runtime_mut(id, now) {
+                    rt.set_perf_factor(factor);
+                }
+            }
+            FaultKind::LinkFault { failures } => self.transport.inject_failures(failures),
+        }
+    }
+
+    /// Crash `id` now: the member becomes [`MemberState::Failed`], its
+    /// resident KV is lost, and every orphaned segment is re-placed from
+    /// its last durable point (`cfg.recovery`, the default) or shed.
+    ///
+    /// Re-placement rules (DESIGN.md §Fault tolerance):
+    /// * α / ready work — re-prefill from token 0 on the least-loaded
+    ///   survivor: the only durable copy of lost KV is the prompt
+    ///   itself. Already-emitted tokens are never re-emitted.
+    /// * gated β, transfer not started — moved like a drain
+    ///   re-placement (its α's handoff address is retargeted); nothing
+    ///   is recomputed.
+    /// * gated β, transfer in flight — the KV was en route to a dead
+    ///   socket: the reservation moves and the context is re-shipped.
+    /// * pinned α whose transfer was committed — evicted; the modeled
+    ///   transfer already captured its payload at dispatch.
+    ///
+    /// With recovery off, each orphan *and its cross-instance partner*
+    /// is evicted and the request counted shed — never silently lost.
+    pub fn fail(&mut self, id: InstanceId) -> Result<(), DrainError> {
+        let now = self.now();
+        self.cluster.fail(id, now)?;
+        let orphans: Vec<SeqKey> = self
+            .cluster
+            .runtime(id)
+            .map(|r| r.iter_keys().map(|(k, _)| k).collect())
+            .unwrap_or_default();
+        // per-crash dedupe of the replaced-requests counter, and the
+        // survivors whose queues changed and need a restart kick
+        let mut counted: Vec<RequestId> = Vec::new();
+        let mut touched: Vec<InstanceId> = Vec::new();
+        for key in orphans {
+            let Some(seg) = self.cluster.runtime(id).and_then(|r| r.get(key)).cloned() else {
+                continue; // evicted as the partner of an earlier orphan
+            };
+            if seg.finished() {
+                self.recover_pinned_alpha(id, key, seg, now, &mut counted, &mut touched);
+            } else if !seg.ready {
+                self.recover_gated_beta(id, key, seg, now, &mut counted, &mut touched);
+            } else {
+                self.recover_ready_segment(id, key, seg, now, &mut counted, &mut touched);
+            }
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        for i in touched {
+            self.kick(i);
+        }
+        Ok(())
+    }
+
+    /// Crash recovery for a pinned-finished α on the dead instance.
+    fn recover_pinned_alpha(
+        &mut self,
+        dead: InstanceId,
+        key: SeqKey,
+        seg: Segment,
+        now: f64,
+        counted: &mut Vec<RequestId>,
+        touched: &mut Vec<InstanceId>,
+    ) {
+        // If the modeled transfer was committed (the β is marked
+        // in-flight) its payload was captured at dispatch — just release
+        // the pinned pages. Only an α whose handoff failed and awaits a
+        // retry leaves its β uncommitted.
+        let uncommitted = seg.beta_dest.and_then(|(bi, bk)| {
+            self.cluster
+                .runtime(bi)
+                .and_then(|r| r.get(bk))
+                .filter(|b| !b.transfer_started)
+                .map(|_| (bi, bk))
+        });
+        if let Some(rt) = self.cluster.runtime_mut(dead, now) {
+            rt.evict(key);
+        }
+        let Some((bi, bk)) = uncommitted else { return };
+        // the α's KV was the β's only context source and it is gone
+        if self.cfg.recovery {
+            if let Some(b) = self.cluster.runtime_mut(bi, now).and_then(|r| r.evict(bk)) {
+                touched.push(bi);
+                self.note_replaced(b.request, now, counted);
+                self.replace_from_scratch(b, now, touched);
+            }
+        } else {
+            if let Some(rt) = self.cluster.runtime_mut(bi, now) {
+                rt.evict(bk);
+            }
+            touched.push(bi);
+            self.shed(seg.request);
+        }
+    }
+
+    /// Crash recovery for a gated β on the dead instance.
+    fn recover_gated_beta(
+        &mut self,
+        dead: InstanceId,
+        key: SeqKey,
+        seg: Segment,
+        now: f64,
+        counted: &mut Vec<RequestId>,
+        touched: &mut Vec<InstanceId>,
+    ) {
+        // the α's home, wherever it lives (possibly this same dead
+        // instance — its own orphan pass re-places it consistently)
+        let source = self
+            .cluster
+            .members()
+            .iter()
+            .find_map(|m| m.runtime.find_handoff_source((dead, key)).map(|k| (m.id, k)));
+        if !self.cfg.recovery {
+            if let Some(rt) = self.cluster.runtime_mut(dead, now) {
+                rt.evict(key);
+            }
+            if let Some((ai, ak)) = source {
+                if let Some(rt) = self.cluster.runtime_mut(ai, now) {
+                    rt.evict(ak);
+                }
+                touched.push(ai);
+            }
+            self.shed(seg.request);
+            return;
+        }
+        let Some(target) = self.least_loaded_target(now) else {
+            if let Some(rt) = self.cluster.runtime_mut(dead, now) {
+                rt.evict(key);
+            }
+            self.shed(seg.request);
+            return;
+        };
+        let started = seg.transfer_started;
+        let Some(mut b) = self.cluster.runtime_mut(dead, now).and_then(|r| r.evict(key)) else {
+            return;
+        };
+        b.admitted = false;
+        b.transfer_started = false;
+        let tokens = b.start;
+        let request = b.request;
+        let new_key = self
+            .cluster
+            .runtime_mut(target, now)
+            .expect("recovery target is live")
+            .accept(b);
+        touched.push(target);
+        if let Some((ai, ak)) = source {
+            if let Some(a) = self.cluster.runtime_mut(ai, now).and_then(|r| r.get_mut(ak)) {
+                a.beta_dest = Some((target, new_key));
+            }
+        }
+        self.note_replaced(request, now, counted);
+        if started {
+            // The lost transfer targeted the dead instance. Re-ship the
+            // context from the durable α-side copy, priced as a fresh
+            // monolithic chunk (the per-chunk history was consumed by the
+            // original dispatch). The α's own deferred evict still fires
+            // at the original ready_at — stale by then, and tolerated.
+            let h = Handoff {
+                request,
+                source: source.map(|(_, k)| k).unwrap_or(key),
+                dest: (target, new_key),
+                history: vec![KvSpan { t0: now, t1: now, tokens, decode_run: false }],
+            };
+            self.recovery.retransferred_kv_bytes +=
+                tokens as f64 * self.transport.kv_bytes_per_token;
+            match self.transport.handoff(now, h) {
+                HandoffDisposition::Scheduled { ready_at } => {
+                    if let Some(b) =
+                        self.cluster.runtime_mut(target, now).and_then(|r| r.get_mut(new_key))
+                    {
+                        b.transfer_started = true;
+                    }
+                    self.push(ready_at, EventKind::SeqReady { instance: target, key: new_key });
+                }
+                HandoffDisposition::Detached => {
+                    if let Some(rt) = self.cluster.runtime_mut(target, now) {
+                        rt.mark_ready(new_key);
+                    }
+                }
+                HandoffDisposition::Failed { handoff } => {
+                    let src_inst = source.map(|(i, _)| i).unwrap_or(dead);
+                    self.on_handoff_failed(src_inst, handoff, 1, now);
+                }
+            }
+        }
+    }
+
+    /// Crash recovery for a ready segment (an α mid-prefill, a
+    /// post-transfer β mid-decode, or an unsplit colocated segment).
+    fn recover_ready_segment(
+        &mut self,
+        dead: InstanceId,
+        key: SeqKey,
+        seg: Segment,
+        now: f64,
+        counted: &mut Vec<RequestId>,
+        touched: &mut Vec<InstanceId>,
+    ) {
+        if let Some(rt) = self.cluster.runtime_mut(dead, now) {
+            rt.evict(key);
+        }
+        if !self.cfg.recovery {
+            if let Some((bi, bk)) = seg.beta_dest {
+                if let Some(rt) = self.cluster.runtime_mut(bi, now) {
+                    rt.evict(bk);
+                }
+                touched.push(bi);
+            }
+            self.shed(seg.request);
+            return;
+        }
+        self.note_replaced(seg.request, now, counted);
+        self.replace_from_scratch(seg, now, touched);
+    }
+
+    /// Re-place a lost segment from its last durable point — the
+    /// original prompt: a fresh *ready* segment that re-prefills the
+    /// whole lost context `[0, context + prefill_remaining)` and keeps
+    /// only the not-yet-emitted output work, so no token is ever emitted
+    /// twice. An α keeps its handoff address; a β rebuilt this way no
+    /// longer needs a transfer at all.
+    fn replace_from_scratch(&mut self, seg: Segment, now: f64, touched: &mut Vec<InstanceId>) {
+        let Some(target) = self.least_loaded_target(now) else {
+            // unreachable while the cluster guards at-least-one-survivor,
+            // but shedding beats losing the request silently
+            self.shed(seg.request);
+            return;
+        };
+        let mut fresh = Segment::from_parts(
+            seg.request,
+            seg.arrival,
+            0,
+            seg.work.context + seg.work.prefill_remaining,
+            seg.work.decode_remaining,
+            seg.emits_first_token && seg.work.prefill_remaining > 0,
+            seg.last_segment,
+            false,
+        );
+        fresh.beta_dest = seg.beta_dest;
+        fresh.track_kv_history = seg.track_kv_history;
+        self.recovery.recomputed_prefill_tokens += seg.work.context as u64;
+        self.cluster
+            .runtime_mut(target, now)
+            .expect("recovery target is live")
+            .accept(fresh);
+        touched.push(target);
+    }
+
+    /// Least pending work among placeable members, ties to the lowest id
+    /// (deterministic); falls back to the warming fleet when nothing is
+    /// active yet, mirroring `on_arrival`.
+    fn least_loaded_target(&mut self, now: f64) -> Option<InstanceId> {
+        self.cluster.placeable_digests_into(now, &mut self.loads);
+        if self.loads.is_empty() {
+            self.loads.extend(
+                self.cluster
+                    .members()
+                    .iter()
+                    .filter(|m| matches!(m.state, MemberState::Warming { .. }))
+                    .map(|m| m.runtime.digest()),
+            );
+        }
+        self.loads
+            .iter()
+            .min_by(|a, b| {
+                (a.pending_prefill + a.pending_decode)
+                    .cmp(&(b.pending_prefill + b.pending_decode))
+                    .then(a.id.cmp(&b.id))
+            })
+            .map(|d| d.id)
+    }
+
+    /// A handoff dispatch failed `failures` times (first at `first_at`):
+    /// schedule a backed-off retry while the policy allows, else shed
+    /// the request — releasing the pinned α and the gated β so the
+    /// fleet is never wedged on a dead link.
+    fn on_handoff_failed(
+        &mut self,
+        instance: InstanceId,
+        handoff: Handoff,
+        failures: u32,
+        first_at: f64,
+    ) {
+        let now = self.now();
+        // with recovery disabled there is exactly one attempt — the
+        // ablation baseline sheds on the first link fault
+        let attempts = if self.cfg.recovery { self.cfg.retry.max_attempts } else { 1 };
+        if failures < attempts && (now - first_at) <= self.cfg.retry.deadline {
+            self.recovery.handoff_retries += 1;
+            let at = now + self.cfg.retry.backoff(failures);
+            self.push(at, EventKind::RetryHandoff { instance, handoff, failures, first_at });
+            return;
+        }
+        let request = handoff.request;
+        // re-read the α's current handoff address — a drain or crash may
+        // have retargeted it since the first failure
+        let dest = self
+            .cluster
+            .runtime(instance)
+            .and_then(|r| r.get(handoff.source))
+            .and_then(|s| s.beta_dest)
+            .unwrap_or(handoff.dest);
+        if let Some(rt) = self.cluster.runtime_mut(instance, now) {
+            rt.evict(handoff.source);
+        }
+        if let Some(rt) = self.cluster.runtime_mut(dest.0, now) {
+            rt.evict(dest.1);
+        }
+        self.shed(request);
+        self.kick(instance);
+        self.kick(dest.0);
+    }
+
+    /// A scheduled handoff retry fires: re-dispatch against the α's
+    /// *current* state — both endpoints may have moved (or died) during
+    /// the backoff.
+    fn on_retry_handoff(
+        &mut self,
+        instance: InstanceId,
+        mut handoff: Handoff,
+        failures: u32,
+        first_at: f64,
+    ) {
+        let now = self.now();
+        let current = self
+            .cluster
+            .runtime(instance)
+            .and_then(|r| r.get(handoff.source))
+            .and_then(|s| s.beta_dest);
+        let dest = current.unwrap_or(handoff.dest);
+        let beta_alive = self.cluster.runtime(dest.0).and_then(|r| r.get(dest.1)).is_some();
+        if !beta_alive {
+            // the β was re-placed from scratch or shed by a crash during
+            // the backoff: the pinned α (if any) has no consumer left
+            if let Some(rt) = self.cluster.runtime_mut(instance, now) {
+                rt.evict(handoff.source);
+            }
+            self.kick(instance);
+            return;
+        }
+        handoff.dest = dest;
+        match self.transport.handoff(now, handoff.clone()) {
+            HandoffDisposition::Scheduled { ready_at } => {
+                if let Some(b) = self.cluster.runtime_mut(dest.0, now).and_then(|r| r.get_mut(dest.1))
+                {
+                    b.transfer_started = true;
+                }
+                self.push(ready_at, EventKind::SeqReady { instance: dest.0, key: dest.1 });
+                self.push(ready_at, EventKind::AlphaEvict { instance, key: handoff.source });
+            }
+            HandoffDisposition::Detached => {
+                if let Some(rt) = self.cluster.runtime_mut(instance, now) {
+                    rt.evict(handoff.source);
+                }
+                if let Some(rt) = self.cluster.runtime_mut(dest.0, now) {
+                    rt.mark_ready(dest.1);
+                }
+                self.kick(dest.0);
+            }
+            HandoffDisposition::Failed { handoff } => {
+                self.on_handoff_failed(instance, handoff, failures + 1, first_at)
+            }
+        }
+    }
+
+    /// Count a request displaced by a crash (once per crash) and start
+    /// its recovery-latency clock (once per lifetime).
+    fn note_replaced(&mut self, request: RequestId, now: f64, counted: &mut Vec<RequestId>) {
+        if !counted.contains(&request) {
+            counted.push(request);
+            self.recovery.replaced_requests += 1;
+        }
+        self.recovering.entry(request).or_insert(now);
+    }
+
+    /// Count a request as shed (evicted, will never complete) and close
+    /// any open recovery clock without recording a latency.
+    fn shed(&mut self, request: RequestId) {
+        self.recovering.remove(&request);
+        self.recovery.shed_requests += 1;
     }
 
     fn on_autoscale_tick(&mut self) {
@@ -766,7 +1241,7 @@ impl VirtualExecutor {
             None => return,
         };
         match state {
-            MemberState::Retired => return,
+            MemberState::Retired | MemberState::Failed => return,
             MemberState::Warming { until } if now < until => {
                 // modeled bring-up: work waits for the warm-up deadline
                 self.push(until, EventKind::Kick { instance: i });
@@ -799,6 +1274,12 @@ impl VirtualExecutor {
 
     fn on_iter_done(&mut self, i: InstanceId, plan: BatchPlan, latency: f64) {
         let now = self.now();
+        // An iteration completing on a member that crashed mid-flight is
+        // void — the GPU died with the work in it. `fail` already
+        // re-placed or shed every resident segment, so drop the event.
+        if matches!(self.cluster.member(i).map(|m| m.state), Some(MemberState::Failed)) {
+            return;
+        }
         // RECORD into the instance's own profile (under the plan's query
         // key) and the pool-wide table the policy probes read.
         self.cluster
@@ -833,6 +1314,9 @@ impl VirtualExecutor {
             }
         }
         for key in completed.drain(..) {
+            // capture before completion: a finishing last segment of a
+            // crash-recovered request closes its recovery-latency clock
+            let info = self.cluster.runtime(i).and_then(|r| r.get(key)).map(|s| (s.request, s.last_segment));
             let disposition = {
                 let rt = self.cluster.runtime_mut(i, now).expect("iterating member is live");
                 rt.complete_segment(key, now, &mut self.collector, &mut self.transport)
@@ -840,7 +1324,19 @@ impl VirtualExecutor {
             match disposition {
                 // nothing to schedule: the instance is still mid-iteration
                 // (busy), and the unconditional kick below restarts it
-                SegmentDisposition::Finished => {}
+                SegmentDisposition::Finished => {
+                    if let Some((req, true)) = info {
+                        if let Some(t0) = self.recovering.remove(&req) {
+                            self.recovery.recovered += 1;
+                            self.recovery.recovery_latency_sum += now - t0;
+                        }
+                    }
+                }
+                SegmentDisposition::HandoffFailed { handoff } => {
+                    // injected link fault: α stays pinned with its history
+                    // restored; retry (bounded backoff) or shed from here
+                    self.on_handoff_failed(i, handoff, 1, now);
+                }
                 SegmentDisposition::Handoff { dest, ready_at } => {
                     // β wakes when its context lands; α's KV stays pinned
                     // until the transfer drains. From here the β can no
@@ -969,5 +1465,91 @@ mod tests {
             format!("{s:?} {:?}", ex.cluster.size_timeline())
         };
         assert_eq!(run(), run(), "same-seed autoscaled runs must be bit-identical");
+    }
+
+    #[test]
+    fn crash_with_recovery_completes_every_request() {
+        use crate::workload::{poisson_workload, TraceKind};
+        let cfg = ExecConfig::builder(spec(), 3).build().unwrap();
+        let reqs = poisson_workload(TraceKind::BurstGpt, 3.0, 20.0, 13);
+        let n = reqs.len();
+        let mut ex = dynaserve(cfg);
+        ex.push_fault_events(&[FaultEvent { at: 5.0, kind: FaultKind::Crash { id: InstanceId(1) } }]);
+        let s = ex.run(reqs);
+        // nothing lost: every request completes despite the mid-run crash
+        assert_eq!(s.completed, n);
+        assert_eq!(s.shed_requests, 0);
+        assert_eq!(ex.stuck_requests(), 0);
+        let dead = ex.cluster.member(InstanceId(1)).unwrap();
+        assert!(matches!(dead.state, MemberState::Failed));
+        assert_eq!(dead.removed_at, Some(5.0));
+        // the crash displaced whatever was resident and re-did its work
+        assert!(s.replaced_requests > 0, "a loaded instance died with work resident");
+        assert!(s.recomputed_prefill_tokens > 0 || s.retransferred_kv_bytes > 0.0);
+        assert!(s.mean_recovery_s > 0.0);
+    }
+
+    #[test]
+    fn crash_without_recovery_sheds_but_accounts_every_request() {
+        use crate::workload::{poisson_workload, TraceKind};
+        let cfg = ExecConfig::builder(spec(), 3).recovery(false).build().unwrap();
+        let reqs = poisson_workload(TraceKind::BurstGpt, 3.0, 20.0, 13);
+        let n = reqs.len();
+        let mut ex = dynaserve(cfg);
+        ex.push_fault_events(&[FaultEvent { at: 5.0, kind: FaultKind::Crash { id: InstanceId(1) } }]);
+        let s = ex.run(reqs);
+        // the ablation baseline loses the displaced requests — but they
+        // are all accounted as shed, never silently dropped
+        assert!(s.shed_requests > 0);
+        assert_eq!(s.replaced_requests, 0);
+        assert_eq!(s.completed as u64 + s.shed_requests, n as u64);
+        assert_eq!(ex.stuck_requests(), 0);
+    }
+
+    #[test]
+    fn slow_gpu_fault_degrades_goodput_deterministically() {
+        use crate::workload::{poisson_workload, TraceKind};
+        let run = |faults: &[FaultEvent]| {
+            let cfg = ExecConfig::builder(spec(), 2).build().unwrap();
+            let mut ex = dynaserve(cfg);
+            ex.push_fault_events(faults);
+            let s = ex.run(poisson_workload(TraceKind::BurstGpt, 3.0, 20.0, 17));
+            format!("{s:?}")
+        };
+        let slow =
+            &[FaultEvent { at: 2.0, kind: FaultKind::SlowGpu { id: InstanceId(0), factor: 3.0 } }];
+        assert_eq!(run(slow), run(slow), "faulted runs must be bit-identical");
+        assert_ne!(run(slow), run(&[]), "a 3× slower GPU must change the summary");
+    }
+
+    #[test]
+    fn link_faults_retry_and_recover() {
+        use crate::workload::{poisson_workload, TraceKind};
+        let cfg = ExecConfig::builder(spec(), 2).build().unwrap();
+        let reqs = poisson_workload(TraceKind::BurstGpt, 3.0, 20.0, 19);
+        let n = reqs.len();
+        let mut ex = dynaserve(cfg);
+        ex.push_fault_events(&[FaultEvent { at: 1.0, kind: FaultKind::LinkFault { failures: 2 } }]);
+        let s = ex.run(reqs);
+        // within the retry budget every stalled handoff eventually ships
+        assert_eq!(s.completed, n);
+        assert_eq!(s.shed_requests, 0);
+        assert!(s.handoff_retries >= 2, "each injected failure costs at least one retry");
+        assert_eq!(ex.stuck_requests(), 0);
+    }
+
+    #[test]
+    fn link_faults_without_recovery_shed_on_first_failure() {
+        use crate::workload::{poisson_workload, TraceKind};
+        let cfg = ExecConfig::builder(spec(), 2).recovery(false).build().unwrap();
+        let reqs = poisson_workload(TraceKind::BurstGpt, 3.0, 20.0, 19);
+        let n = reqs.len();
+        let mut ex = dynaserve(cfg);
+        ex.push_fault_events(&[FaultEvent { at: 1.0, kind: FaultKind::LinkFault { failures: 2 } }]);
+        let s = ex.run(reqs);
+        assert_eq!(s.handoff_retries, 0, "one attempt only with recovery off");
+        assert!(s.shed_requests > 0);
+        assert_eq!(s.completed as u64 + s.shed_requests, n as u64);
+        assert_eq!(ex.stuck_requests(), 0);
     }
 }

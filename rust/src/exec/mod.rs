@@ -28,6 +28,10 @@
 //!   drain / retire lifecycle, fleet GPU-second accounting), scenario
 //!   [`ScaleEvent`]s, and the [`Autoscaler`] seam with its
 //!   utilization-band default.
+//! * [`fault`] — deterministic fault injection: scheduled crash /
+//!   slow-GPU / link faults ([`FaultEvent`]), the shared
+//!   [`RetryPolicy`] for failed handoff transfers, and the seeded
+//!   crash-plan generator behind `experiments faults`.
 //! * [`host`] — [`VirtualExecutor`]: the discrete-event host that drives
 //!   the lifecycle in virtual time. `sim::Simulator` *is* this type; the
 //!   live server instantiates the same [`InstanceRuntime`] per PJRT
@@ -42,6 +46,7 @@
 
 pub mod clock;
 pub mod cluster;
+pub mod fault;
 pub mod host;
 pub mod policy;
 pub mod runtime;
@@ -50,9 +55,10 @@ pub mod transport;
 
 pub use clock::{Clock, VirtualClock, WallClock};
 pub use cluster::{
-    Autoscaler, BandAutoscaler, BandConfig, Cluster, FleetChange, FleetEvent, Member,
-    MemberState, ScaleAction, ScaleDirective, ScaleEvent,
+    Autoscaler, BandAutoscaler, BandConfig, Cluster, DrainError, FleetChange, FleetEvent,
+    Member, MemberState, ScaleAction, ScaleDirective, ScaleEvent,
 };
+pub use fault::{fault_schedule, FaultEvent, FaultKind, RetryPolicy};
 pub use host::{ConfigError, ExecConfig, ExecConfigBuilder, VirtualExecutor};
 pub use runtime::{EventSink, InstanceRuntime, Segment, SegmentDisposition, SeqKey, StepOutcome};
 pub use submit::{make_segment, plan_submission, SegmentPlan, SubmitPlan};

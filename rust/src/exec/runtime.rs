@@ -199,7 +199,7 @@ impl EventSink for Collector {
 }
 
 /// How [`InstanceRuntime::complete_segment`] retired a segment.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub enum SegmentDisposition {
     /// Fully retired: evicted, KV freed (and the request reported done if
     /// this was its final segment).
@@ -207,6 +207,11 @@ pub enum SegmentDisposition {
     /// α completed with a modeled transfer scheduled: the host must wake
     /// β (`dest`) at `ready_at` and evict the still-pinned α there.
     Handoff { dest: (InstanceId, u64), ready_at: f64 },
+    /// α completed but the transport failed the transfer at dispatch
+    /// (injected link fault): α stays pinned with the handoff — KV
+    /// history included — returned to the host, which owns the retry
+    /// loop ([`crate::exec::fault::RetryPolicy`]).
+    HandoffFailed { handoff: Handoff },
 }
 
 /// Generation-tagged slab of resident segments.
@@ -363,6 +368,11 @@ pub struct InstanceRuntime {
     pub stats: InstanceStats,
     /// Incremental load counters; `id`/`kv_utilization` filled by digest().
     load: LoadDigest,
+    /// Step-time multiplier (1.0 = healthy). A slow-GPU fault raises it;
+    /// every modeled iteration latency is scaled by it in
+    /// [`plan_latency`](InstanceRuntime::plan_latency). Live instances
+    /// measure real step times, so the factor only drives virtual time.
+    perf_factor: f64,
     scratch_decodes: Vec<DecodeEntry>,
     scratch_prefills: Vec<PrefillEntry>,
 }
@@ -382,9 +392,23 @@ impl InstanceRuntime {
             busy: false,
             stats: InstanceStats::default(),
             load: LoadDigest::default(),
+            perf_factor: 1.0,
             scratch_decodes: Vec::new(),
             scratch_prefills: Vec::new(),
         }
+    }
+
+    /// Degrade (or restore) this instance's modeled step times: a
+    /// persistent multiplier applied to every subsequent
+    /// [`plan_latency`](InstanceRuntime::plan_latency) — the slow-GPU
+    /// fault (`FaultKind::SlowGpu`).
+    pub fn set_perf_factor(&mut self, factor: f64) {
+        debug_assert!(factor > 0.0, "perf factor must be positive");
+        self.perf_factor = factor;
+    }
+
+    pub fn perf_factor(&self) -> f64 {
+        self.perf_factor
     }
 
     /// Accept a segment: admit it if KV capacity permits, else queue it.
@@ -513,6 +537,14 @@ impl InstanceRuntime {
             .collect()
     }
 
+    /// Number of gated β segments resident right now, transfer started or
+    /// not — during a live drain every one of these finishes in place
+    /// (the server's drain log reports the count; the virtual executor
+    /// re-places the replaceable subset and counts the remainder).
+    pub fn gated_count(&self) -> usize {
+        self.arena.iter().filter(|s| !s.ready && !s.finished()).count()
+    }
+
     /// The resident α segment whose handoff targets `dest`, if any —
     /// lets a drain retarget the α's `beta_dest` after re-placing its β.
     pub fn find_handoff_source(&self, dest: (InstanceId, u64)) -> Option<SeqKey> {
@@ -603,9 +635,10 @@ impl InstanceRuntime {
         self.local.next_batch(&self.scratch_decodes, &self.scratch_prefills)
     }
 
-    /// Ground-truth latency of a plan from the cost model.
+    /// Ground-truth latency of a plan from the cost model, scaled by the
+    /// instance's health ([`set_perf_factor`](InstanceRuntime::set_perf_factor)).
     pub fn plan_latency(&self, plan: &BatchPlan) -> f64 {
-        self.spec.iteration_cost(&plan.shape).latency
+        self.spec.iteration_cost(&plan.shape).latency * self.perf_factor
     }
 
     /// RECORD an executed iteration: feed the measured (or modeled)
@@ -652,6 +685,16 @@ impl InstanceRuntime {
                 HandoffDisposition::Detached => {
                     self.evict(key);
                     SegmentDisposition::Finished
+                }
+                HandoffDisposition::Failed { handoff } => {
+                    // α stays pinned (its KV is the only copy); the host
+                    // retries or sheds per its RetryPolicy. Restore the
+                    // history so a later re-dispatch can rebuild it even
+                    // if the host drops the returned handoff.
+                    if let Some(s) = self.get_mut(key) {
+                        s.kv_history = handoff.history.clone();
+                    }
+                    SegmentDisposition::HandoffFailed { handoff }
                 }
             }
         } else {
@@ -955,6 +998,67 @@ mod tests {
         assert!(i.is_empty());
         // neither α reported done (not last segments)
         assert_eq!(sink.done, vec![7]);
+    }
+
+    #[test]
+    fn perf_factor_scales_plan_latency() {
+        let mut i = inst();
+        let kd = i.accept(seq(1, 0, 900, 800));
+        let _ = kd;
+        let plan = i.plan_batch();
+        let healthy = i.plan_latency(&plan);
+        assert!(healthy > 0.0);
+        i.set_perf_factor(1.5);
+        assert!((i.plan_latency(&plan) - 1.5 * healthy).abs() < 1e-12);
+        // restoring health restores the modeled latency exactly
+        i.set_perf_factor(1.0);
+        assert!((i.plan_latency(&plan) - healthy).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failed_handoff_keeps_alpha_pinned_with_history() {
+        use crate::exec::transport::ModeledTransport;
+        use crate::kv::LinkSpec;
+
+        #[derive(Default)]
+        struct NullSink;
+        impl EventSink for NullSink {
+            fn on_emit(&mut self, _r: RequestId, _a: f64, _t: f64) {}
+            fn on_done(&mut self, _r: RequestId) {}
+        }
+
+        let mut i = inst();
+        let mut tr = ModeledTransport::new(LinkSpec::default(), 256, true, 2.0);
+        tr.inject_failures(1);
+        let mut a = seq(5, 0, 100, 90);
+        a.last_segment = false;
+        a.beta_dest = Some((InstanceId(1), 11));
+        a.track_kv_history = true;
+        a.work = WorkItem { prefill_remaining: 0, context: 100, decode_remaining: 0 };
+        a.kv_history = vec![KvSpan { t0: 0.5, t1: 0.5, tokens: 100, decode_run: false }];
+        let k = i.accept(a);
+        match i.complete_segment(k, 1.0, &mut NullSink, &mut tr) {
+            SegmentDisposition::HandoffFailed { handoff } => {
+                assert_eq!(handoff.dest, (InstanceId(1), 11));
+                assert_eq!(handoff.history.len(), 1, "history travels with the retry");
+            }
+            d => panic!("expected HandoffFailed: {d:?}"),
+        }
+        assert_eq!(i.len(), 1, "α stays pinned across the failure");
+        assert_eq!(
+            i.get(k).unwrap().kv_history.len(),
+            1,
+            "history restored on the pinned α"
+        );
+        // the retry (budget exhausted) now schedules normally
+        let history = std::mem::take(&mut i.get_mut(k).unwrap().kv_history);
+        let d = tr.handoff(2.0, Handoff {
+            request: 5,
+            source: k,
+            dest: (InstanceId(1), 11),
+            history,
+        });
+        assert!(matches!(d, HandoffDisposition::Scheduled { .. }));
     }
 
     #[test]

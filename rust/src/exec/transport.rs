@@ -38,7 +38,7 @@ pub struct Handoff {
 }
 
 /// What the transport did with a handoff.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub enum HandoffDisposition {
     /// Modeled transfer: β's context is resident at `ready_at` (virtual
     /// seconds). The host wakes β and evicts the pinned α there.
@@ -46,6 +46,11 @@ pub enum HandoffDisposition {
     /// Real transfer dispatched out-of-band: evict α now; β readiness
     /// arrives with the final chunk.
     Detached,
+    /// The transfer failed at dispatch (injected link fault). The
+    /// handoff — α-side KV history included — comes back to the caller,
+    /// which owns the retry loop ([`crate::exec::fault::RetryPolicy`]):
+    /// α stays pinned, β stays gated, nothing was shipped or billed.
+    Failed { handoff: Handoff },
 }
 
 pub trait Transport {
@@ -75,6 +80,11 @@ pub struct ModeledTransport {
     /// KV bytes per token of the served model.
     pub kv_bytes_per_token: f64,
     pub report: TransferReport,
+    /// Injected link-fault budget: the next `fail_budget` handoffs fail
+    /// at dispatch (returned as [`HandoffDisposition::Failed`]) instead
+    /// of being scheduled. Armed by `FaultKind::LinkFault` events;
+    /// deterministic — a scalar countdown, no RNG.
+    pub fail_budget: u32,
 }
 
 impl ModeledTransport {
@@ -85,12 +95,22 @@ impl ModeledTransport {
             chunked,
             kv_bytes_per_token,
             report: TransferReport::default(),
+            fail_budget: 0,
         }
+    }
+
+    /// Arm `n` more dispatch failures (cumulative with any remaining).
+    pub fn inject_failures(&mut self, n: u32) {
+        self.fail_budget = self.fail_budget.saturating_add(n);
     }
 }
 
 impl Transport for ModeledTransport {
     fn handoff(&mut self, now: f64, h: Handoff) -> HandoffDisposition {
+        if self.fail_budget > 0 {
+            self.fail_budget -= 1;
+            return HandoffDisposition::Failed { handoff: h };
+        }
         let ready = group_chunks(&h.history, self.chunk_tokens, self.kv_bytes_per_token);
         let chunked = chunked_timeline(&ready, &self.link);
         let mono = monolithic_timeline(&ready, &self.link);
@@ -184,10 +204,39 @@ mod tests {
         let d = tr.handoff(50.0, h);
         match d {
             HandoffDisposition::Scheduled { ready_at } => assert!(ready_at >= 50.0),
-            HandoffDisposition::Detached => panic!("modeled transport must schedule"),
+            d => panic!("modeled transport must schedule, got {d:?}"),
         }
         assert_eq!(tr.report.transfers, 1);
         assert!(tr.report.bytes > 0.0);
         assert!(tr.report.chunked_exposed <= tr.report.mono_exposed);
+    }
+
+    #[test]
+    fn injected_failures_return_the_handoff_unbilled() {
+        let mut tr = ModeledTransport::new(LinkSpec::default(), 256, true, 2.0);
+        tr.inject_failures(2);
+        let h = Handoff {
+            request: 7,
+            source: 3,
+            dest: (InstanceId(1), 9),
+            history: vec![chunk(0.1, 512)],
+        };
+        // the armed budget fails dispatches one by one, handing the full
+        // handoff (history included) back for the host's retry loop…
+        for _ in 0..2 {
+            match tr.handoff(1.0, h.clone()) {
+                HandoffDisposition::Failed { handoff } => {
+                    assert_eq!(handoff.request, 7);
+                    assert_eq!(handoff.history.len(), 1, "history survives the failure");
+                }
+                d => panic!("expected Failed, got {d:?}"),
+            }
+        }
+        // …and nothing was billed to the transfer report
+        assert_eq!(tr.report.transfers, 0);
+        assert_eq!(tr.report.bytes, 0.0);
+        // budget spent: the next dispatch goes through and is billed
+        assert!(matches!(tr.handoff(1.0, h), HandoffDisposition::Scheduled { .. }));
+        assert_eq!(tr.report.transfers, 1);
     }
 }

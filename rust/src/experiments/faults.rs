@@ -1,0 +1,323 @@
+//! Fault-tolerance evaluation: crash-rate sweep with recovery on vs off
+//! — the robustness claim made scoreable (DESIGN.md §Fault tolerance).
+//!
+//! Every cell serves the identical [`Scenario::faulty_diurnal`] request
+//! stream while a seeded [`fault_schedule`] crash plan kills instances
+//! mid-run; each crash is paired with a replacement `ScaleAction::Add`
+//! just after it so the sweep measures *recovery cost*, not shrinking
+//! capacity. The scenario's scripted slow-GPU and link faults ride along
+//! in every cell; its scripted crash is replaced by the swept plan.
+//!
+//! Two systems (DynaServe split-placement, chunked-prefill colocation)
+//! × crash rates × recovery {on, off}. Recovery ON re-places a dead
+//! instance's work from the last durable point and retries failed
+//! handoffs under the shared [`RetryPolicy`]; recovery OFF sheds every
+//! affected request on first failure (the counters still account for
+//! each one — no request is silently lost either way). The acceptance
+//! shape: recovery-on goodput strictly dominates recovery-off at every
+//! nonzero crash rate, at a visible re-compute/re-transfer cost.
+//!
+//! Usage:
+//!   experiments faults [--smoke] [--seed N] [--seeds N] [--duration S]
+//!                      [--exact-metrics]
+//!
+//! Writes `results/faults.json`: per-cell summaries, recovery counters,
+//! and the dominance verdict per (system, crash rate).
+//!
+//! [`fault_schedule`]: crate::exec::fault::fault_schedule
+//! [`RetryPolicy`]: crate::exec::fault::RetryPolicy
+
+use crate::baselines::ColocPolicy;
+use crate::coordinator::predictor::PredictorConfig;
+use crate::coordinator::{GlobalConfig, LocalConfig};
+use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+use crate::exec::cluster::{ScaleAction, ScaleEvent};
+use crate::exec::fault::{fault_schedule, FaultKind};
+use crate::exec::policy::{DynaServePolicy, Policy};
+use crate::exec::{ExecConfig, VirtualExecutor};
+use crate::experiments::runners::{mc_seeds, run_cells, sweep_threads, warn_if_stuck};
+use crate::experiments::{mc_json, write_results};
+use crate::metrics::{SloConfig, Summary};
+use crate::util::cli::{pct, Args, Table};
+use crate::util::json::{obj, Json};
+use crate::workload::Scenario;
+
+/// Bootstrap fleet. Crash `k` kills `InstanceId(k)` (monotonic-id victim
+/// selection, see [`fault_schedule`]); the paired replacement Adds keep
+/// the live fleet at this size between crash and replacement warm-up.
+const FLEET: usize = 3;
+
+/// Replacement instance is requested this long after its crash.
+const REPLACE_AFTER: f64 = 0.05;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Sys {
+    DynaServe,
+    Coloc,
+}
+
+impl Sys {
+    fn name(&self) -> &'static str {
+        match self {
+            Sys::DynaServe => "DynaServe",
+            Sys::Coloc => "PD Coloc.",
+        }
+    }
+}
+
+struct CellResult {
+    sys: Sys,
+    rate: f64,
+    recovery: bool,
+    crashes: usize,
+    summary: Summary,
+    stuck: usize,
+}
+
+fn run_cell(
+    sys: Sys,
+    sc: &Scenario,
+    rate: f64,
+    recovery: bool,
+    seed: u64,
+    exact: bool,
+    warmup: f64,
+) -> anyhow::Result<CellResult> {
+    let crashes = fault_schedule(seed, sc.duration, rate, FLEET);
+    let mut faults = sc.faults.clone();
+    faults.extend(crashes.iter().copied());
+    // one replacement per crash: after k crash/add pairs the live fleet
+    // is {k, …, FLEET+k−1}, so crash k's victim InstanceId(k) is always
+    // the oldest live member — no runtime lookups needed
+    let adds: Vec<ScaleEvent> = crashes
+        .iter()
+        .map(|c| ScaleEvent {
+            at: c.at + REPLACE_AFTER,
+            action: ScaleAction::Add { count: 1 },
+        })
+        .collect();
+
+    let llm = LlmSpec::qwen25_14b();
+    let slo = SloConfig::default();
+    let spec = InstanceSpec::new(GpuSpec::a100(), llm.clone(), 1);
+    let mut cfg = ExecConfig::builder(spec, FLEET)
+        .slo(slo)
+        .warmup(warmup)
+        .max_instances(FLEET + crashes.len() + 1)
+        .exact_metrics(exact)
+        .recovery(recovery)
+        .build()?;
+    let policy: Box<dyn Policy> = match sys {
+        Sys::DynaServe => {
+            let gcfg = GlobalConfig {
+                kv_bytes_per_token: llm.kv_bytes_per_token(),
+                predictor: PredictorConfig { slo: slo.tbt, ..Default::default() },
+                ..Default::default()
+            };
+            Box::new(DynaServePolicy::new(gcfg))
+        }
+        Sys::Coloc => {
+            cfg.local = LocalConfig { fixed_budget: Some(2048), ..LocalConfig::default() };
+            Box::new(ColocPolicy::new())
+        }
+    };
+    let mut ex = VirtualExecutor::new(cfg, policy);
+    ex.push_scale_events(&adds);
+    ex.push_fault_events(&faults);
+    let summary = ex.run_stream(sc.stream(seed));
+    let stuck = warn_if_stuck(
+        &format!(
+            "faults/{} rate {rate} recovery {} seed {seed}",
+            sys.name(),
+            if recovery { "on" } else { "off" }
+        ),
+        &ex,
+    );
+    Ok(CellResult { sys, rate, recovery, crashes: crashes.len(), summary, stuck })
+}
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let seed = args.u64_or("seed", 42);
+    let seeds_n = (args.u64_or("seeds", 1).max(1)) as usize;
+    let exact = args.bool("exact-metrics");
+    let smoke = args.bool("smoke");
+    let mut sc = Scenario::faulty_diurnal();
+    if smoke {
+        sc = sc.smoke();
+    }
+    if let Some(d) = args.get("duration").and_then(|s| s.parse::<f64>().ok()) {
+        sc = sc.with_duration(d);
+    }
+    // the sweep owns the crash plan: keep the scenario's scripted
+    // slow-GPU and link faults (they stress recovery in every cell) but
+    // strip its scripted crash and the paired replacement Add
+    sc.faults.retain(|f| !matches!(f.kind, FaultKind::Crash { .. }));
+    sc.scale_events.clear();
+    // modeled replacement bring-up, as in `experiments elastic`
+    let warmup = args.f64_or("warmup", (0.05 * sc.duration / 2.0).clamp(0.05, 2.0));
+
+    let rates: &[f64] =
+        if smoke { &[0.0, 0.02] } else { &[0.0, 0.005, 0.01, 0.02, 0.04] };
+    let systems = [Sys::DynaServe, Sys::Coloc];
+    let n_requests = sc.stream(seed).count();
+    println!(
+        "Fault sweep on '{}' — {} requests over {:.0}s, fleet of {FLEET}, \
+         crash rates {rates:?}/s × recovery on/off (seed {seed}, {seeds_n} seed(s))\n",
+        sc.name, n_requests, sc.duration
+    );
+
+    let seeds = mc_seeds(seed, seeds_n);
+    let cells: Vec<(Sys, f64, bool, u64)> = systems
+        .iter()
+        .flat_map(|&sys| {
+            rates.iter().flat_map(move |&rate| {
+                [true, false]
+                    .iter()
+                    .flat_map(move |&rec| seeds.iter().map(move |&s| (sys, rate, rec, s)))
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    let all_results: Vec<CellResult> =
+        run_cells(&cells, sweep_threads(), |&(sys, rate, rec, cell_seed)| {
+            run_cell(sys, &sc, rate, rec, cell_seed, exact, warmup)
+        })
+        .into_iter()
+        .collect::<anyhow::Result<_>>()?;
+    // seed-0 result of each (system, rate, recovery) cell feeds the table
+    // and the dominance verdict, exactly as a single-seed run would
+    let head: Vec<&CellResult> =
+        (0..cells.len() / seeds_n).map(|i| &all_results[i * seeds_n]).collect();
+
+    let mut t = Table::new([
+        "system", "crash/s", "crashes", "recovery", "goodput tok/s", "goodput/GPU-s",
+        "attain %", "replaced", "shed", "re-prefill tok", "retries", "recov s", "stuck",
+    ]);
+    let mut cell_objs = Vec::new();
+    for (i, r) in head.iter().enumerate() {
+        let per_seed = &all_results[i * seeds_n..(i + 1) * seeds_n];
+        let s = &r.summary;
+        t.row([
+            r.sys.name().to_string(),
+            format!("{:.3}", r.rate),
+            r.crashes.to_string(),
+            if r.recovery { "on" } else { "off" }.to_string(),
+            format!("{:.1}", s.goodput_tok_s),
+            format!("{:.2}", s.goodput_per_gpu_s),
+            pct(s.attainment),
+            s.replaced_requests.to_string(),
+            s.shed_requests.to_string(),
+            s.recomputed_prefill_tokens.to_string(),
+            s.handoff_retries.to_string(),
+            format!("{:.3}", s.mean_recovery_s),
+            r.stuck.to_string(),
+        ]);
+        cell_objs.push(obj([
+            ("system", Json::from(r.sys.name())),
+            ("crash_rate", Json::from(r.rate)),
+            ("crashes", Json::from(r.crashes)),
+            ("recovery", Json::from(r.recovery)),
+            (
+                "summary",
+                obj([
+                    ("completed", Json::from(s.completed)),
+                    ("total_tokens", Json::from(s.total_tokens)),
+                    ("good_tokens", Json::from(s.good_tokens)),
+                    ("goodput_tok_s", Json::from(s.goodput_tok_s)),
+                    ("goodput_per_gpu_s", Json::from(s.goodput_per_gpu_s)),
+                    ("gpu_seconds", Json::from(s.gpu_seconds)),
+                    ("attainment", Json::from(s.attainment)),
+                    ("p99_tbt", Json::from(s.p99_tbt)),
+                    ("duration", Json::from(s.duration)),
+                ]),
+            ),
+            (
+                "recovery_counters",
+                obj([
+                    ("replaced_requests", Json::from(s.replaced_requests as usize)),
+                    ("shed_requests", Json::from(s.shed_requests as usize)),
+                    (
+                        "recomputed_prefill_tokens",
+                        Json::from(s.recomputed_prefill_tokens as usize),
+                    ),
+                    ("retransferred_kv_bytes", Json::from(s.retransferred_kv_bytes)),
+                    ("handoff_retries", Json::from(s.handoff_retries as usize)),
+                    ("mean_recovery_s", Json::from(s.mean_recovery_s)),
+                ]),
+            ),
+            ("stuck_requests", Json::from(r.stuck)),
+            (
+                "mc",
+                obj([
+                    ("goodput_tok_s", mc_json(&col(per_seed, |s| s.goodput_tok_s))),
+                    ("goodput_per_gpu_s", mc_json(&col(per_seed, |s| s.goodput_per_gpu_s))),
+                    ("attainment", mc_json(&col(per_seed, |s| s.attainment))),
+                ]),
+            ),
+        ]));
+    }
+    t.print();
+
+    // the acceptance shape: at every nonzero crash rate, recovery ON
+    // strictly beats recovery OFF on goodput (OFF sheds whole requests
+    // that ON re-places and finishes)
+    let mut verdicts = Vec::new();
+    let mut all_dominate = true;
+    for &sys in &systems {
+        for &rate in rates.iter().filter(|&&r| r > 0.0) {
+            let pick = |rec: bool| {
+                head.iter()
+                    .find(|r| r.sys == sys && r.rate == rate && r.recovery == rec)
+                    .expect("cell exists")
+            };
+            let (on, off) = (pick(true), pick(false));
+            let dominates = on.summary.goodput_tok_s > off.summary.goodput_tok_s;
+            all_dominate &= dominates;
+            println!(
+                "{} @ {:.3} crashes/s: recovery on {:.1} vs off {:.1} tok/s goodput — {}",
+                sys.name(),
+                rate,
+                on.summary.goodput_tok_s,
+                off.summary.goodput_tok_s,
+                if dominates { "recovery dominates" } else { "INVERSION (inspect)" }
+            );
+            verdicts.push(obj([
+                ("system", Json::from(sys.name())),
+                ("crash_rate", Json::from(rate)),
+                ("goodput_on", Json::from(on.summary.goodput_tok_s)),
+                ("goodput_off", Json::from(off.summary.goodput_tok_s)),
+                ("recovery_dominates", Json::from(dominates)),
+            ]));
+        }
+    }
+    println!(
+        "\n{}",
+        if all_dominate {
+            "recovery-enabled goodput dominates at every nonzero crash rate"
+        } else {
+            "WARNING: recovery-off beat recovery-on somewhere — inspect results/faults.json"
+        }
+    );
+
+    let artifact = obj([
+        ("scenario", Json::from(sc.name)),
+        ("seed", Json::from(seed as usize)),
+        ("seeds", Json::from(seeds_n)),
+        ("exact_metrics", Json::from(exact)),
+        ("duration_s", Json::from(sc.duration)),
+        ("warmup_s", Json::from(warmup)),
+        ("requests", Json::from(n_requests)),
+        ("fleet", Json::from(FLEET)),
+        ("crash_rates", Json::Arr(rates.iter().map(|&r| Json::from(r)).collect())),
+        ("cells", Json::Arr(cell_objs)),
+        ("dominance", Json::Arr(verdicts)),
+        ("recovery_dominates_everywhere", Json::from(all_dominate)),
+    ]);
+    write_results("faults", &artifact);
+    Ok(())
+}
+
+/// One summary column across a cell's per-seed results, in seed order.
+fn col(per_seed: &[CellResult], f: impl Fn(&Summary) -> f64) -> Vec<f64> {
+    per_seed.iter().map(|r| f(&r.summary)).collect()
+}

@@ -8,6 +8,7 @@
 //! not the authors' testbed-exact values.
 
 pub mod elastic;
+pub mod faults;
 pub mod fig1;
 pub mod fig3;
 pub mod fig5;
@@ -53,6 +54,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
             "elastic",
             "fixed vs scheduled vs autoscaled fleets on the diurnal scenario, goodput/GPU-s",
             elastic::run,
+        ),
+        (
+            "faults",
+            "crash-rate sweep on the faulty-diurnal scenario, recovery on vs off",
+            faults::run,
         ),
     ]
 }

@@ -206,6 +206,13 @@ pub fn warn_if_stuck(context: &str, sim: &Simulator) -> usize {
                  {waiting} waiting on KV admission"
             );
         }
+        let in_place = sim.drain_gated_in_place();
+        if in_place > 0 {
+            eprintln!(
+                "warning: {context}:   drains left {in_place} gated β segment(s) to finish \
+                 in place (KV en route or no placeable target)"
+            );
+        }
     }
     stuck
 }

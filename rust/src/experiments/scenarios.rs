@@ -118,6 +118,10 @@ fn run_scenario(
             // if the fleet shrinks under them (DESIGN.md §Elastic)
             if !matches!(sys, System::Disagg) {
                 sim.push_scale_events(&sc.scale_events);
+                // scenario-attached faults ride the same exclusion: a
+                // crash under the disagg baseline's positional pools
+                // would shrink a statically-partitioned fleet
+                sim.push_fault_events(&sc.faults);
             }
             // lazy arrivals: peak memory stays O(fleet + in-flight)
             let summary = sim.run_stream(sc.stream(cell_seed));

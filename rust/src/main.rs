@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
         Some("calibrate") => calibrate(&args),
         _ => {
             eprintln!("usage: dynaserve <serve|simulate|calibrate> [flags]");
-            eprintln!("  serve     --requests N --qps Q --artifacts DIR [--instances 2] [--workload NAME] [--autoscale]   (needs --features pjrt)");
+            eprintln!("  serve     --requests N --qps Q --artifacts DIR [--instances 2] [--workload NAME] [--autoscale] [--calibration-deadline S] [--ready-deadline S]   (needs --features pjrt)");
             eprintln!("  simulate  --system <dynaserve|coloc|disagg> --workload NAME --qps Q [--duration S] [--model 14b]");
             eprintln!("  calibrate --artifacts DIR   (needs --features pjrt)");
             Ok(())
@@ -55,6 +55,12 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             max_instances: args.usize_or("instances", 2) * 2,
             ..Default::default()
         }),
+        calibration_deadline_s: args.f64_or(
+            "calibration-deadline",
+            dynaserve::server::ServeConfig::DEFAULT_CALIBRATION_DEADLINE_S,
+        ),
+        ready_deadline_s: args
+            .f64_or("ready-deadline", dynaserve::server::ServeConfig::DEFAULT_READY_DEADLINE_S),
     };
     let report = dynaserve::server::serve(cfg)?;
     report.print();

@@ -379,6 +379,13 @@ impl Collector {
             // the host overwrites these from its cluster registry
             gpu_seconds: 0.0,
             goodput_per_gpu_s: 0.0,
+            // likewise the recovery counters (Summary::with_recovery)
+            replaced_requests: 0,
+            shed_requests: 0,
+            recomputed_prefill_tokens: 0,
+            retransferred_kv_bytes: 0.0,
+            handoff_retries: 0,
+            mean_recovery_s: 0.0,
         }
     }
 
@@ -500,6 +507,39 @@ pub struct Summary {
     /// a 4-instance peak fleet comparable (DistServe goodput per
     /// GPU-second; see EXPERIMENTS.md §Elastic).
     pub goodput_per_gpu_s: f64,
+    /// Requests displaced by an instance crash and re-placed from their
+    /// last durable point (annotated via [`Summary::with_recovery`];
+    /// 0 when no executor ran fault handling).
+    pub replaced_requests: u64,
+    /// Requests evicted by fault handling with recovery disabled (or
+    /// after handoff-retry exhaustion) — accounted, never silently lost.
+    pub shed_requests: u64,
+    /// Prefill tokens recomputed because their KV died with an instance.
+    pub recomputed_prefill_tokens: u64,
+    /// KV bytes re-shipped for β segments whose in-flight transfer
+    /// targeted a crashed instance.
+    pub retransferred_kv_bytes: f64,
+    /// Backed-off retry dispatches of failed α→β handoff transfers.
+    pub handoff_retries: u64,
+    /// Mean crash→completion latency over recovered requests (0 when
+    /// none) — the per-request recovery cost of the fault plan.
+    pub mean_recovery_s: f64,
+}
+
+/// Fault-handling counters accumulated by an executor and folded into
+/// its [`Summary`] via [`Summary::with_recovery`] — the recovery-cost
+/// ledger of DESIGN.md §Fault tolerance.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RecoveryStats {
+    pub replaced_requests: u64,
+    pub shed_requests: u64,
+    pub recomputed_prefill_tokens: u64,
+    pub retransferred_kv_bytes: f64,
+    pub handoff_retries: u64,
+    /// Σ (completion − crash) over recovered requests.
+    pub recovery_latency_sum: f64,
+    /// Re-placed requests that went on to complete.
+    pub recovered: u64,
 }
 
 impl Summary {
@@ -511,6 +551,20 @@ impl Summary {
         self.gpu_seconds = gpu_seconds;
         self.goodput_per_gpu_s =
             if gpu_seconds > 0.0 { self.good_tokens as f64 / gpu_seconds } else { 0.0 };
+        self
+    }
+
+    /// Annotate with an executor's fault-handling ledger — the single
+    /// place `mean_recovery_s` is derived, shared by both executors so
+    /// the recovery columns can never diverge between facades.
+    pub fn with_recovery(mut self, r: RecoveryStats) -> Summary {
+        self.replaced_requests = r.replaced_requests;
+        self.shed_requests = r.shed_requests;
+        self.recomputed_prefill_tokens = r.recomputed_prefill_tokens;
+        self.retransferred_kv_bytes = r.retransferred_kv_bytes;
+        self.handoff_retries = r.handoff_retries;
+        self.mean_recovery_s =
+            if r.recovered > 0 { r.recovery_latency_sum / r.recovered as f64 } else { 0.0 };
         self
     }
 
@@ -798,6 +852,12 @@ mod tests {
             req_slo_frac: 1.0,
             gpu_seconds: 2.0,
             goodput_per_gpu_s: 50.0,
+            replaced_requests: 0,
+            shed_requests: 0,
+            recomputed_prefill_tokens: 0,
+            retransferred_kv_bytes: 0.0,
+            handoff_retries: 0,
+            mean_recovery_s: 0.0,
         };
         let (cap, _) = capacity_search(&slo, 1.0, 0.5, 2.0, 0.05, run);
         assert!((cap - 5.0).abs() < 0.1, "cap={cap}");
@@ -823,6 +883,12 @@ mod tests {
             req_slo_frac: 0.0,
             gpu_seconds: 2.0,
             goodput_per_gpu_s: 0.0,
+            replaced_requests: 0,
+            shed_requests: 0,
+            recomputed_prefill_tokens: 0,
+            retransferred_kv_bytes: 0.0,
+            handoff_retries: 0,
+            mean_recovery_s: 0.0,
         };
         let (cap, _) = capacity_search(&slo, 1.0, 0.5, 2.0, 0.05, run);
         assert_eq!(cap, 0.0);

@@ -44,14 +44,14 @@ use crate::coordinator::{GlobalConfig, LoadDigest, LocalConfig, LocalScheduler, 
 use crate::core::{InstanceId, Request, RequestId};
 use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
 use crate::exec::clock::{Clock, WallClock};
-use crate::exec::cluster::{Autoscaler, BandAutoscaler, BandConfig, ScaleDirective};
+use crate::exec::cluster::{Autoscaler, BandAutoscaler, BandConfig, DrainError, ScaleDirective};
 use crate::exec::policy::{DynaServePolicy, Policy};
 use crate::exec::runtime::{EventSink, InstanceRuntime, Segment, SeqKey};
 use crate::exec::submit::{plan_submission, SegmentPlan};
 use crate::exec::transport::{Handoff, HandoffDisposition, Transport};
 use crate::exec::{ExecConfig, VirtualExecutor};
 use crate::kv::{LinkSpec, TransferEngine, TransferJob};
-use crate::metrics::{Collector, SloConfig, Summary};
+use crate::metrics::{Collector, RecoveryStats, SloConfig, Summary};
 use crate::runtime::{Engine, KvState};
 use crate::util::rng::Rng;
 use crate::workload::{PoissonArrivals, TraceKind, TraceSampler, WorkloadGen};
@@ -69,6 +69,18 @@ pub struct ServeConfig {
     /// Install a utilization-band autoscaler on the leader: evaluated on
     /// the live digests before each placement; `None` = fixed fleet.
     pub autoscale: Option<BandConfig>,
+    /// Bounded wait for engine load + calibration before the leader gives
+    /// up (seconds). The default matches the historical hardcoded 300 s.
+    pub calibration_deadline_s: f64,
+    /// Bounded wait for at least one placeable instance at each arrival
+    /// (seconds) — covers post-calibration digest publication and
+    /// all-warming moments after a scale-up. Default: the historical 60 s.
+    pub ready_deadline_s: f64,
+}
+
+impl ServeConfig {
+    pub const DEFAULT_CALIBRATION_DEADLINE_S: f64 = 300.0;
+    pub const DEFAULT_READY_DEADLINE_S: f64 = 60.0;
 }
 
 /// One placed segment, as sent to an instance thread. Field meanings
@@ -148,6 +160,9 @@ enum InstMsg {
     /// Begin draining: finish every resident segment, take no new ones
     /// (the leader already stopped placing here), then retire.
     Drain,
+    /// Leader-side crash recovery re-placed this segment's request
+    /// elsewhere: drop the orphan half (no-op if it already finished).
+    Cancel { key: u64 },
     Shutdown,
 }
 
@@ -155,6 +170,25 @@ enum UpMsg {
     Token { request: RequestId, arrival: f64, at: f64 },
     Done { request: RequestId },
     IterStats { instance: InstanceId, latency: f64 },
+    /// An instance thread died (engine failure): its resident segments
+    /// are lost and the leader must re-place their requests.
+    Crashed { instance: InstanceId },
+    /// A drained thread retired; `gated_in_place` counts the gated β
+    /// segments that were resident when the drain started and finished in
+    /// place (live drains do not re-place in-flight KV — module docs).
+    Drained { instance: InstanceId, gated_in_place: usize },
+}
+
+/// Leader-side record of one dispatched-but-incomplete request — enough
+/// to re-place it from scratch if an instance thread holding one of its
+/// segments crashes (prompt ids included: token re-generation would
+/// otherwise perturb the leader's RNG stream).
+#[derive(Clone)]
+struct Inflight {
+    req: Request,
+    prompt: Vec<i32>,
+    alpha: (InstanceId, u64),
+    beta: Option<(InstanceId, u64)>,
 }
 
 /// State the instance threads publish and the leader (plus peer threads)
@@ -231,12 +265,15 @@ impl LiveCluster {
                     // fleet view and stamp removal so the leader stops
                     // routing here, its GPU-second meter freezes, and the
                     // autoscaler's provisioning count frees up for a
-                    // replacement (segments already routed here are lost;
-                    // serve()'s recv timeout surfaces that as an error)
+                    // replacement; then tell the leader so it re-places
+                    // the corpse's registered-but-incomplete requests
+                    // (resident KV is lost — recovery restarts them from
+                    // token 0 on the survivors)
                     c.shared.digests.lock().unwrap().remove(&id);
                     c.shared.ready.lock().unwrap().remove(&id);
                     c.shared.peers.lock().unwrap().remove(&id);
                     c.shared.removed.lock().unwrap().insert(id, c.clock.now());
+                    c.up.send(UpMsg::Crashed { instance: id }).ok();
                 }
             })
             .context("spawn instance")?;
@@ -245,23 +282,29 @@ impl LiveCluster {
     }
 
     /// Stop placing on `id` and tell its thread to finish + retire.
-    /// Refused when the member is unknown/draining or no *other*
-    /// non-draining member is still alive (a crashed instance thread
-    /// must not count as a survivor, or draining the last healthy one
-    /// would leave the fleet unplaceable).
-    fn drain(&mut self, id: InstanceId) -> bool {
+    /// Refused — with the reason, mirroring `exec::Cluster::drain` — when
+    /// the member is unknown/draining or no *other* non-draining member
+    /// is still alive (a crashed instance thread must not count as a
+    /// survivor, or draining the last healthy one would leave the fleet
+    /// unplaceable).
+    fn drain(&mut self, id: InstanceId) -> Result<(), DrainError> {
         let survivors = self
             .members
             .iter()
             .filter(|m| m.id != id && !m.draining && !m.join.is_finished())
             .count();
-        let Some(m) = self.members.iter_mut().find(|m| m.id == id) else { return false };
-        if m.draining || survivors == 0 {
-            return false;
+        let Some(m) = self.members.iter_mut().find(|m| m.id == id) else {
+            return Err(DrainError::UnknownInstance(id));
+        };
+        if m.draining {
+            return Err(DrainError::WrongState(id));
+        }
+        if survivors == 0 {
+            return Err(DrainError::LastPlaceable(id));
         }
         m.draining = true;
         m.tx.send(InstMsg::Drain).ok();
-        true
+        Ok(())
     }
 
     /// Digest view for placement: ready, not draining, not retired — in
@@ -367,6 +410,11 @@ pub struct ServeReport {
     pub transfer_chunks: u64,
     pub transfer_bytes: u64,
     pub wall_time: f64,
+    /// Requests re-placed on survivors after an instance thread crashed.
+    pub replaced_requests: u64,
+    /// Gated β segments that finished in place during live drains (live
+    /// drains do not re-place in-flight KV — module docs).
+    pub drained_gated_in_place: u64,
 }
 
 impl ServeReport {
@@ -402,6 +450,13 @@ impl ServeReport {
             self.transfer_bytes as f64 / 1e6,
             self.mean_iter_latency * 1e3
         );
+        if self.replaced_requests > 0 || self.drained_gated_in_place > 0 {
+            println!(
+                "fleet events: {} request(s) re-placed after crashes, {} gated β segment(s) \
+                 finished in place during drains",
+                self.replaced_requests, self.drained_gated_in_place
+            );
+        }
     }
 }
 
@@ -439,6 +494,10 @@ fn scale_shape(kind: TraceKind, p: usize, d: usize, max_ctx: usize) -> (usize, u
 
 pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     anyhow::ensure!(cfg.n_instances > 0, "need at least one instance");
+    anyhow::ensure!(
+        cfg.calibration_deadline_s > 0.0 && cfg.ready_deadline_s > 0.0,
+        "calibration/ready deadlines must be positive"
+    );
     anyhow::ensure!(
         cfg!(feature = "pjrt"),
         "`serve` drives the live PJRT engine; rebuild with `cargo build --features pjrt` \
@@ -493,7 +552,8 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     // ── leader: wait for calibration, then schedule arrivals ───────────
     // Bounded wait: if every instance thread died (missing artifacts, engine
     // failure) the calibration slot never fills and we must error, not hang.
-    let calib_deadline = Instant::now() + std::time::Duration::from_secs(300);
+    let calib_deadline =
+        Instant::now() + std::time::Duration::from_secs_f64(cfg.calibration_deadline_s);
     let profile = loop {
         if let Some(p) = calib.lock().unwrap().clone() {
             break p;
@@ -507,7 +567,8 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         );
         anyhow::ensure!(
             Instant::now() < calib_deadline,
-            "instances never finished calibration within 300s"
+            "instances never finished calibration within {:.0}s",
+            cfg.calibration_deadline_s
         );
         thread::sleep(std::time::Duration::from_millis(20));
     };
@@ -525,6 +586,10 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     let mut key_alloc = 0u64;
     let mut rng = Rng::with_stream(cfg.seed, 0x70cc);
     let n_requests = requests.len();
+    // dispatched-but-incomplete requests, keyed for crash recovery: if an
+    // instance thread dies, every registered request with a segment on it
+    // is re-placed on the survivors (the collect loop below)
+    let mut inflight: HashMap<RequestId, Inflight> = HashMap::new();
     // metrics collector up front so each request's class / per-request SLO
     // targets register at submission — same scoring path as the simulator
     let mut collector = Collector::new(cfg.slo);
@@ -570,7 +635,12 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
                         }
                     }
                     ScaleDirective::Drain { id } => {
-                        fleet.drain(id);
+                        // surface the refusal reason: an autoscaler drain
+                        // bouncing off the last-placeable guard is normal,
+                        // but the operator should see why nothing shrank
+                        if let Err(e) = fleet.drain(id) {
+                            eprintln!("autoscale: drain refused: {e}");
+                        }
                     }
                 }
             }
@@ -581,11 +651,13 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         // Bounded wait for readiness: right after calibration the first
         // thread may not have published its digest yet, and a freshly
         // scaled-up fleet may be all-warming for a moment.
-        let ready_deadline = Instant::now() + std::time::Duration::from_secs(60);
+        let ready_deadline =
+            Instant::now() + std::time::Duration::from_secs_f64(cfg.ready_deadline_s);
         while loads.is_empty() {
             anyhow::ensure!(
                 Instant::now() < ready_deadline,
-                "no placeable instance within 60s (fleet warming or fully draining)"
+                "no placeable instance within {:.0}s (fleet warming or fully draining)",
+                cfg.ready_deadline_s
             );
             thread::sleep(std::time::Duration::from_millis(5));
             loads = fleet.placeable_digests();
@@ -608,10 +680,19 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         let alpha_spec =
             SegmentSpec::from_plan(alpha_key, req, arrival, &prompt, &plan.alpha, beta_info, false);
         fleet.send(plan.alpha.instance, InstMsg::Segment(alpha_spec));
-        if let (Some(bp), Some((b_inst, b_key))) = (plan.beta, beta_info) {
-            let beta_spec = SegmentSpec::from_plan(b_key, req, arrival, &prompt, &bp, None, true);
+        if let (Some(bp), Some((b_inst, b_key))) = (&plan.beta, beta_info) {
+            let beta_spec = SegmentSpec::from_plan(b_key, req, arrival, &prompt, bp, None, true);
             fleet.send(b_inst, InstMsg::Segment(beta_spec));
         }
+        inflight.insert(
+            req.id,
+            Inflight {
+                req: Request { arrival, ..req.clone() },
+                prompt,
+                alpha: (plan.alpha.instance, alpha_key),
+                beta: beta_info,
+            },
+        );
     }
 
     // ── collect until all requests complete ─────────────────────────────
@@ -619,17 +700,103 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     let mut iter_counts: BTreeMap<InstanceId, u64> = BTreeMap::new();
     let mut iter_lat_sum = 0.0;
     let mut iter_lat_n = 0u64;
+    let mut replaced_requests = 0u64;
+    let mut drained_gated_in_place = 0u64;
     while done < n_requests {
         match up_rx.recv_timeout(std::time::Duration::from_secs(120)) {
             Ok(UpMsg::Token { request, arrival, at }) => collector.on_token(request, arrival, at),
             Ok(UpMsg::Done { request }) => {
                 collector.on_complete(request);
+                inflight.remove(&request);
                 done += 1;
             }
             Ok(UpMsg::IterStats { instance, latency }) => {
                 *iter_counts.entry(instance).or_default() += 1;
                 iter_lat_sum += latency;
                 iter_lat_n += 1;
+            }
+            Ok(UpMsg::Drained { instance, gated_in_place }) => {
+                drained_gated_in_place += gated_in_place as u64;
+                eprintln!(
+                    "drain: instance {instance} retired; {gated_in_place} gated β segment(s) \
+                     finished in place"
+                );
+            }
+            Ok(UpMsg::Crashed { instance }) => {
+                // dead-thread recovery: the corpse's resident KV is gone.
+                // Cancel the surviving half of every affected request and
+                // re-place the whole request from scratch with fresh keys
+                // on the current placeable fleet. The rerun re-emits its
+                // tokens from token 0; the collector scores the longer
+                // token timeline — recovery latency shows up in the tail
+                // metrics rather than in a separate counter here.
+                let victims: Vec<RequestId> = inflight
+                    .iter()
+                    .filter(|(_, r)| {
+                        r.alpha.0 == instance || r.beta.map_or(false, |(b, _)| b == instance)
+                    })
+                    .map(|(&id, _)| id)
+                    .collect();
+                if !victims.is_empty() {
+                    eprintln!(
+                        "recovery: instance {instance} crashed with {} in-flight request(s); \
+                         re-placing on survivors",
+                        victims.len()
+                    );
+                }
+                for rid in victims {
+                    let rec = inflight.get(&rid).cloned().expect("victim registered");
+                    if rec.alpha.0 != instance {
+                        fleet.send(rec.alpha.0, InstMsg::Cancel { key: rec.alpha.1 });
+                    }
+                    if let Some((b_inst, b_key)) = rec.beta {
+                        if b_inst != instance {
+                            fleet.send(b_inst, InstMsg::Cancel { key: b_key });
+                        }
+                    }
+                    let loads = fleet.placeable_digests();
+                    if loads.is_empty() {
+                        // no survivor can take it — leave the request
+                        // registered; the recv timeout surfaces the loss
+                        eprintln!("recovery: no placeable instance for request {rid}");
+                        continue;
+                    }
+                    let placement = policy.place(&rec.req, &loads, &profile);
+                    let plan = plan_submission(&placement, &rec.req);
+                    key_alloc += 1;
+                    let alpha_key = key_alloc;
+                    let beta_info = plan.beta.as_ref().map(|bp| {
+                        key_alloc += 1;
+                        (bp.instance, key_alloc)
+                    });
+                    let alpha_spec = SegmentSpec::from_plan(
+                        alpha_key,
+                        &rec.req,
+                        rec.req.arrival,
+                        &rec.prompt,
+                        &plan.alpha,
+                        beta_info,
+                        false,
+                    );
+                    fleet.send(plan.alpha.instance, InstMsg::Segment(alpha_spec));
+                    if let (Some(bp), Some((b_inst, b_key))) = (&plan.beta, beta_info) {
+                        let beta_spec = SegmentSpec::from_plan(
+                            b_key,
+                            &rec.req,
+                            rec.req.arrival,
+                            &rec.prompt,
+                            bp,
+                            None,
+                            true,
+                        );
+                        fleet.send(b_inst, InstMsg::Segment(beta_spec));
+                    }
+                    replaced_requests += 1;
+                    if let Some(r) = inflight.get_mut(&rid) {
+                        r.alpha = (plan.alpha.instance, alpha_key);
+                        r.beta = beta_info;
+                    }
+                }
             }
             Err(_) => anyhow::bail!("serve timed out waiting for tokens ({done}/{n_requests})"),
         }
@@ -643,12 +810,16 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     let wall = end - serve_start;
     let stats = transfer.stats();
     Ok(ServeReport {
-        summary: collector.summarize(wall).with_fleet(gpu_seconds),
+        summary: collector.summarize(wall).with_fleet(gpu_seconds).with_recovery(
+            RecoveryStats { replaced_requests, ..Default::default() },
+        ),
         iterations: iter_counts.into_iter().collect(),
         mean_iter_latency: if iter_lat_n == 0 { 0.0 } else { iter_lat_sum / iter_lat_n as f64 },
         transfer_chunks: stats.chunks.load(Ordering::Relaxed),
         transfer_bytes: stats.bytes.load(Ordering::Relaxed),
         wall_time: wall,
+        replaced_requests,
+        drained_gated_in_place,
     })
 }
 
@@ -695,6 +866,11 @@ fn instance_loop(id: InstanceId, rx: mpsc::Receiver<InstMsg>, ctx: &SpawnCtx) ->
     let mut sink = ChannelSink { up: ctx.up.clone() };
     let mut transport = LiveTransport::default();
     let mut draining = false;
+    // gated β segments resident when the drain order arrived — they
+    // finish in place (their KV chunks keep arriving) and are reported
+    // on retirement (the live counterpart of the virtual executor's
+    // drain-time β re-placement diagnostics)
+    let mut drain_gated_in_place = 0usize;
 
     // engine is up: publish readiness + an initial digest — the live
     // warm-up gate the leader's placeable view checks
@@ -746,7 +922,21 @@ fn instance_loop(id: InstanceId, rx: mpsc::Receiver<InstMsg>, ctx: &SpawnCtx) ->
                         inject_chunk(&engine, &mut runtime, &mut live, k, job, next_token);
                     }
                 }
-                Ok(InstMsg::Drain) => draining = true,
+                Ok(InstMsg::Drain) => {
+                    if !draining {
+                        draining = true;
+                        drain_gated_in_place = runtime.gated_count();
+                    }
+                }
+                Ok(InstMsg::Cancel { key }) => {
+                    // leader-side crash recovery re-placed this request:
+                    // drop our orphan half (no-op if it already finished
+                    // or its handoff shipped)
+                    if let Some(k) = by_leader.remove(&key) {
+                        runtime.evict(k);
+                        live.remove(&k);
+                    }
+                }
                 Ok(InstMsg::Shutdown) => {
                     cleanup(false);
                     return Ok(());
@@ -765,6 +955,9 @@ fn instance_loop(id: InstanceId, rx: mpsc::Receiver<InstMsg>, ctx: &SpawnCtx) ->
         // drain complete: every resident segment (gated βs included —
         // their KV chunks kept arriving above) has finished and shipped
         if draining && runtime.is_empty() {
+            ctx.up
+                .send(UpMsg::Drained { instance: id, gated_in_place: drain_gated_in_place })
+                .ok();
             cleanup(true);
             return Ok(());
         }
@@ -1124,9 +1317,22 @@ mod tests {
             });
             fleet.next_id = i + 1;
         }
-        assert!(fleet.drain(InstanceId(1)));
-        assert!(!fleet.drain(InstanceId(1)), "already draining");
-        assert!(!fleet.drain(InstanceId(0)), "last non-draining member");
+        assert_eq!(fleet.drain(InstanceId(1)), Ok(()));
+        assert_eq!(
+            fleet.drain(InstanceId(1)),
+            Err(DrainError::WrongState(InstanceId(1))),
+            "already draining"
+        );
+        assert_eq!(
+            fleet.drain(InstanceId(0)),
+            Err(DrainError::LastPlaceable(InstanceId(0))),
+            "last non-draining member"
+        );
+        assert_eq!(
+            fleet.drain(InstanceId(9)),
+            Err(DrainError::UnknownInstance(InstanceId(9))),
+            "unknown id"
+        );
         // a drained thread stamps its retirement; the meter freezes there
         shared.removed.lock().unwrap().insert(InstanceId(1), 5.0);
         assert!((fleet.gpu_seconds(11.0) - (10.0 + 4.0)).abs() < 1e-9);

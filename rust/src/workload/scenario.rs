@@ -21,8 +21,9 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::core::{Request, SloTarget};
+use crate::core::{InstanceId, Request, SloTarget};
 pub use crate::exec::cluster::{ScaleAction, ScaleEvent};
+pub use crate::exec::fault::{FaultEvent, FaultKind};
 use crate::util::rng::{lognormal_params, Rng};
 use crate::workload::arrival::{ArrivalProcess, PoissonArrivals, ReplayArrivals};
 use crate::workload::traces::LenDist;
@@ -272,6 +273,11 @@ pub struct Scenario {
     pub duration: f64,
     /// Scheduled fleet scaling actions (empty = fixed fleet).
     pub scale_events: Vec<ScaleEvent>,
+    /// Scheduled fault injections (empty = healthy fleet). Plain static
+    /// data — never drawn from the request streams, so attaching faults
+    /// cannot perturb the generated trace
+    /// (`VirtualExecutor::push_fault_events`).
+    pub faults: Vec<FaultEvent>,
 }
 
 /// Expand one conversation: the opening turn plus follow-up turns whose
@@ -325,6 +331,7 @@ impl Scenario {
                 ],
                 duration: 90.0,
                 scale_events: vec![],
+                faults: vec![],
             },
             Scenario {
                 name: "burst",
@@ -338,6 +345,7 @@ impl Scenario {
                 classes: vec![interactive_chat(0.7), longcontext_rag(0.3)],
                 duration: 90.0,
                 scale_events: vec![],
+                faults: vec![],
             },
             Scenario {
                 name: "diurnal",
@@ -346,6 +354,7 @@ impl Scenario {
                 classes: vec![interactive_chat(0.5), batch_summarization(0.5)],
                 duration: 120.0,
                 scale_events: vec![],
+                faults: vec![],
             },
             Scenario {
                 name: "ramp",
@@ -354,6 +363,7 @@ impl Scenario {
                 classes: vec![interactive_chat(0.6), batch_summarization(0.4)],
                 duration: 90.0,
                 scale_events: vec![],
+                faults: vec![],
             },
             Scenario {
                 name: "multi-turn",
@@ -362,6 +372,7 @@ impl Scenario {
                 classes: vec![multiturn_chat(0.8), interactive_chat(0.2)],
                 duration: 90.0,
                 scale_events: vec![],
+                faults: vec![],
             },
         ]
     }
@@ -371,6 +382,7 @@ impl Scenario {
     pub fn all() -> Vec<Scenario> {
         let mut v = Self::suite();
         v.push(Self::elastic_diurnal());
+        v.push(Self::faulty_diurnal());
         v
     }
 
@@ -409,6 +421,39 @@ impl Scenario {
             classes: vec![interactive_chat(0.6), batch_summarization(0.4)],
             duration,
             scale_events,
+            faults: vec![],
+        }
+    }
+
+    /// The fault-evaluation scenario (`experiments faults`): the elastic
+    /// sinusoid with a deterministic fault plan layered on — a GPU goes
+    /// silently slow on the first climb, an instance crashes near the
+    /// first crest's descent (a replacement is provisioned just after),
+    /// and a burst of α→β handoff failures lands mid-run. Faults are
+    /// static data: attaching them never perturbs the generated trace.
+    pub fn faulty_diurnal() -> Scenario {
+        let period = 60.0;
+        let duration = 120.0;
+        Scenario {
+            name: "faulty-diurnal",
+            description: "diurnal load with a slow GPU, an instance crash, and link faults",
+            shape: ArrivalShape::Diurnal { base_qps: 2.0, amplitude: 0.8, period },
+            classes: vec![interactive_chat(0.6), batch_summarization(0.4)],
+            duration,
+            // the replacement for the crashed instance arrives shortly
+            // after the crash — the fleet recovers its capacity
+            scale_events: vec![ScaleEvent {
+                at: 0.45 * duration,
+                action: ScaleAction::Add { count: 1 },
+            }],
+            faults: vec![
+                FaultEvent {
+                    at: 0.25 * duration,
+                    kind: FaultKind::SlowGpu { id: InstanceId(0), factor: 1.5 },
+                },
+                FaultEvent { at: 0.40 * duration, kind: FaultKind::Crash { id: InstanceId(1) } },
+                FaultEvent { at: 0.50 * duration, kind: FaultKind::LinkFault { failures: 3 } },
+            ],
         }
     }
 
@@ -429,9 +474,13 @@ impl Scenario {
             }
             other => other,
         };
-        // scale events ride the same time structure (a drain scheduled
-        // past the new horizon would silently turn elastic into fixed)
+        // scale events and faults ride the same time structure (a drain
+        // or crash scheduled past the new horizon would silently turn an
+        // elastic/faulty scenario into a plain one)
         for ev in &mut self.scale_events {
+            ev.at *= f;
+        }
+        for ev in &mut self.faults {
             ev.at *= f;
         }
         self.duration = new_duration;
@@ -857,6 +906,33 @@ mod tests {
         for (a, b) in sc.scale_events.iter().zip(&small.scale_events) {
             assert!((b.at - a.at * f).abs() < 1e-9);
             assert_eq!(a.action, b.action);
+        }
+    }
+
+    #[test]
+    fn faulty_scenario_faults_rescale_with_duration() {
+        let sc = Scenario::by_name("faulty-diurnal").expect("faulty scenario resolves");
+        assert_eq!(sc.faults.len(), 3);
+        assert!(sc.faults.iter().any(|e| matches!(e.kind, FaultKind::Crash { .. })));
+        assert!(sc.faults.iter().any(|e| matches!(e.kind, FaultKind::SlowGpu { .. })));
+        assert!(sc.faults.iter().any(|e| matches!(e.kind, FaultKind::LinkFault { .. })));
+        assert!(sc.faults.iter().all(|e| e.at < sc.duration));
+        // the replacement instance arrives after the crash it covers
+        let crash_at = sc
+            .faults
+            .iter()
+            .find(|e| matches!(e.kind, FaultKind::Crash { .. }))
+            .unwrap()
+            .at;
+        assert!(sc.scale_events.iter().any(|e| e.at > crash_at));
+        // shrinking the horizon keeps every fault inside it, rescaled
+        let small = sc.clone().smoke();
+        assert_eq!(small.faults.len(), sc.faults.len());
+        assert!(small.faults.iter().all(|e| e.at < small.duration));
+        let f = small.duration / sc.duration;
+        for (a, b) in sc.faults.iter().zip(&small.faults) {
+            assert!((b.at - a.at * f).abs() < 1e-9);
+            assert_eq!(a.kind, b.kind);
         }
     }
 

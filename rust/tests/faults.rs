@@ -1,0 +1,222 @@
+//! Fault-injection and crash-recovery integration tests (DESIGN.md
+//! §Fault tolerance): the no-lost-request invariant under randomized
+//! crash/drain/add schedules, deterministic crash recovery end-to-end,
+//! the bounded-retry handoff loop, in-place drain accounting, and
+//! same-seed bit-identity with faults attached.
+
+use dynaserve::baselines::DisaggPolicy;
+use dynaserve::coordinator::GlobalConfig;
+use dynaserve::core::{InstanceId, Request};
+use dynaserve::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+use dynaserve::exec::cluster::{ScaleAction, ScaleEvent};
+use dynaserve::exec::{ExecConfig, FaultEvent, FaultKind, VirtualExecutor};
+use dynaserve::sim::{DynaServePolicy, Policy};
+use dynaserve::util::proptest_lite::check;
+use dynaserve::workload::{poisson_workload, Scenario, TraceKind};
+
+fn spec() -> InstanceSpec {
+    InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1)
+}
+
+fn dynaserve_policy() -> Box<dyn Policy> {
+    Box::new(DynaServePolicy::new(GlobalConfig::default()))
+}
+
+/// The issue's core safety property: no fault schedule may lose a
+/// request silently. Under random crash/drain/add/link-fault schedules,
+/// with recovery on or off, every request is either completed or
+/// visible in the shed counter, and no segment is left resident.
+#[test]
+fn no_request_silently_lost_under_random_fault_schedules() {
+    check("random crash/drain/add schedules conserve requests", 20, |rng| {
+        let duration = 12.0;
+        let fleet = 3usize;
+        let recovery = rng.bool(0.5);
+        let n_crashes = rng.range_usize(1, 4);
+        let with_drain = rng.bool(0.3);
+        let with_link = rng.bool(0.4);
+
+        let mut faults = Vec::new();
+        let mut scale_events = Vec::new();
+        for k in 0..n_crashes {
+            // jittered but ordered crash times inside the loaded middle
+            // of the run; victim k is the k-th oldest member (crash k
+            // kills InstanceId(k), each crash paired with a replacement
+            // Add — the fault_schedule victim-selection invariant)
+            let at = duration * (0.2 + 0.6 * (k as f64 + rng.f64()) / n_crashes as f64);
+            faults.push(FaultEvent { at, kind: FaultKind::Crash { id: InstanceId(k as u32) } });
+            scale_events
+                .push(ScaleEvent { at: at + 0.05, action: ScaleAction::Add { count: 1 } });
+        }
+        if with_link {
+            faults.push(FaultEvent {
+                at: duration * rng.f64(),
+                kind: FaultKind::LinkFault { failures: rng.range(1, 6) as u32 },
+            });
+        }
+        if with_drain {
+            scale_events.push(ScaleEvent {
+                at: duration * (0.3 + 0.4 * rng.f64()),
+                action: ScaleAction::DrainNewest { count: 1 },
+            });
+        }
+
+        let cfg = ExecConfig::builder(spec(), fleet)
+            .warmup(0.1)
+            .max_instances(fleet + n_crashes + 1)
+            .recovery(recovery)
+            .build()
+            .expect("valid config");
+        let mut ex = VirtualExecutor::new(cfg, dynaserve_policy());
+        ex.push_scale_events(&scale_events);
+        ex.push_fault_events(&faults);
+        let reqs = poisson_workload(TraceKind::BurstGpt, 2.5, duration, rng.next_u64());
+        let n = reqs.len();
+        let s = ex.run(reqs);
+        assert_eq!(ex.stuck_requests(), 0, "segments left resident after the run");
+        assert_eq!(
+            s.completed + s.shed_requests as usize,
+            n,
+            "request(s) lost: completed {} + shed {} != {n} (recovery={recovery})",
+            s.completed,
+            s.shed_requests
+        );
+        if recovery && !with_link {
+            // crashes alone never shed while recovery is on: the fleet
+            // guard keeps a survivor, so every orphan is re-placeable
+            assert_eq!(s.shed_requests, 0, "crash recovery must re-place, not shed");
+        }
+    });
+}
+
+/// Deterministic crash recovery end-to-end: a crash into a deep prefill
+/// backlog. With recovery on, every displaced request completes on the
+/// survivors with no token emitted twice; with recovery off, the same
+/// crash sheds resident work — accounted, strictly worse, never lost.
+#[test]
+fn crash_recovery_completes_every_request_and_beats_shedding() {
+    let reqs: Vec<Request> =
+        (0..30).map(|i| Request::new(i, 0.02 * i as f64, 4000, 48)).collect();
+    let run = |recovery: bool| {
+        let cfg = ExecConfig::builder(spec(), 3)
+            .warmup(0.0)
+            .max_instances(4)
+            .recovery(recovery)
+            .build()
+            .expect("valid config");
+        let mut ex = VirtualExecutor::new(cfg, dynaserve_policy());
+        ex.push_fault_events(&[FaultEvent {
+            at: 1.0,
+            kind: FaultKind::Crash { id: InstanceId(0) },
+        }]);
+        ex.push_scale_events(&[ScaleEvent { at: 1.05, action: ScaleAction::Add { count: 1 } }]);
+        let s = ex.run(reqs.clone());
+        assert_eq!(ex.stuck_requests(), 0);
+        s
+    };
+
+    let on = run(true);
+    assert_eq!(on.completed, 30, "recovery re-places every displaced request");
+    assert_eq!(on.shed_requests, 0);
+    assert!(on.replaced_requests >= 1, "the crash landed in resident work");
+    assert_eq!(on.total_tokens, 30 * 48, "no output token is ever emitted twice");
+    assert!(on.mean_recovery_s > 0.0, "recovered completions close the latency clock");
+
+    let off = run(false);
+    assert_eq!(
+        off.completed + off.shed_requests as usize,
+        30,
+        "with recovery off the crash sheds, it does not lose"
+    );
+    assert!(off.shed_requests >= 1, "recovery-off crash must shed resident work");
+    assert!(on.completed > off.completed, "recovery strictly dominates shedding");
+}
+
+/// The bounded-retry handoff loop on the α→β transfer path (Disagg
+/// splits every request, so the single request must cross the link):
+/// transient link faults are absorbed by backed-off retries; a fault
+/// burst outlasting `RetryPolicy::max_attempts` sheds — with the retry
+/// count on the meter either way. With recovery off there is exactly
+/// one attempt.
+#[test]
+fn link_faults_ride_the_retry_policy() {
+    let run = |failures: u32, recovery: bool| {
+        let cfg = ExecConfig::builder(spec(), 2)
+            .warmup(0.0)
+            .recovery(recovery)
+            .build()
+            .expect("valid config");
+        let mut ex = VirtualExecutor::new(cfg, Box::new(DisaggPolicy::new(1)));
+        ex.push_fault_events(&[FaultEvent { at: 0.1, kind: FaultKind::LinkFault { failures } }]);
+        let s = ex.run(vec![Request::new(0, 0.5, 2000, 50)]);
+        assert_eq!(ex.stuck_requests(), 0, "a failed handoff must never wedge the fleet");
+        s
+    };
+
+    // two transient failures: attempts 1 and 2 fail, attempt 3 lands
+    let transient = run(2, true);
+    assert_eq!(transient.completed, 1, "retries absorb a transient link fault");
+    assert_eq!(transient.shed_requests, 0);
+    assert_eq!(transient.handoff_retries, 2);
+
+    // a burst outlasting max_attempts (default 4): retried 3 times, shed
+    let persistent = run(10, true);
+    assert_eq!(persistent.completed, 0);
+    assert_eq!(persistent.shed_requests, 1, "retry exhaustion sheds — accounted, not lost");
+    assert_eq!(persistent.handoff_retries, 3);
+
+    // ablation baseline: recovery off means a single attempt, no retries
+    let ablated = run(10, false);
+    assert_eq!(ablated.completed, 0);
+    assert_eq!(ablated.shed_requests, 1);
+    assert_eq!(ablated.handoff_retries, 0);
+}
+
+/// Drain accounting (satellite): when a drain finds no placeable peer
+/// (the lone other member is still warming), the gated β is *not*
+/// re-placed — it finishes in place on the draining instance, the
+/// request still completes, and the in-place counter reports it.
+#[test]
+fn drain_without_placeable_target_finishes_gated_beta_in_place() {
+    // Disagg pins α on instance 0, β gated on instance 1; a 1-second
+    // warm-up keeps both members un-placeable when the drain lands
+    let cfg = ExecConfig::builder(spec(), 2).warmup(1.0).build().expect("valid config");
+    let mut ex = VirtualExecutor::new(cfg, Box::new(DisaggPolicy::new(1)));
+    ex.push_scale_events(&[ScaleEvent {
+        at: 0.001,
+        action: ScaleAction::DrainNewest { count: 1 },
+    }]);
+    let s = ex.run(vec![Request::new(0, 0.0, 2000, 50)]);
+    assert_eq!(s.completed, 1, "the gated β finished in place on the draining member");
+    assert_eq!(s.total_tokens, 50);
+    assert_eq!(ex.stuck_requests(), 0);
+    assert_eq!(ex.drain_gated_in_place(), 1, "the in-place segment is on the meter");
+
+    let drained = ex.cluster.member(InstanceId(1)).unwrap();
+    assert!(drained.removed_at.is_some(), "the drain still retired the member");
+    assert!(
+        drained.runtime.stats.decode_tokens > 0,
+        "the β decoded on the draining instance, not a peer"
+    );
+}
+
+/// Same-seed fault runs — crash, slow GPU, link faults, replacement
+/// scale-up and all — are bit-identical, recovery counters and fleet
+/// timeline included. Faults are plain data; nothing about handling
+/// them may introduce nondeterminism.
+#[test]
+fn same_seed_fault_runs_bit_identical() {
+    let sc = Scenario::faulty_diurnal().smoke();
+    assert!(!sc.faults.is_empty(), "the faulty scenario must carry fault events");
+    let reqs = sc.generate(42);
+    let run = || {
+        let cfg = ExecConfig::builder(spec(), 2).warmup(0.2).build().expect("valid config");
+        let mut ex = VirtualExecutor::new(cfg, dynaserve_policy());
+        ex.push_scale_events(&sc.scale_events);
+        ex.push_fault_events(&sc.faults);
+        let s = ex.run(reqs.clone());
+        assert_eq!(ex.stuck_requests(), 0);
+        format!("{s:?} fleet={:?}", ex.cluster.size_timeline())
+    };
+    assert_eq!(run(), run(), "same-seed fault runs must be bit-identical");
+}

@@ -161,3 +161,41 @@ fn scale_event_trace_is_bit_identical_across_executors() {
         assert_eq!(stuck_live, 0, "{}: live executor left stuck segments", sys.name());
     }
 }
+
+/// Fault parity: the same scenario trace *with fault events enabled* —
+/// an instance crash (recovery re-placement included), a slow-GPU
+/// multiplier, and injected handoff failures riding the retry loop —
+/// through both facades stays bit-identical, recovery counters and fleet
+/// timeline included. Fault injection and crash recovery live in the
+/// shared lifecycle, not in a facade. Disagg is excluded for the same
+/// fixed-fleet reason as the scale-event test.
+#[test]
+fn fault_trace_is_bit_identical_across_executors() {
+    let sc = Scenario::by_name("faulty-diurnal").expect("faulty scenario exists").smoke();
+    let requests = sc.generate(7);
+    assert!(!requests.is_empty());
+    assert!(!sc.faults.is_empty(), "the faulty scenario must carry fault events");
+    let llm = LlmSpec::qwen25_14b();
+    for sys in [System::DynaServe, System::Coloc { chunk: 1024 }] {
+        let run = |kind: ExecutorKind| {
+            let mut ex = build_executor(kind, sys, &llm, SloConfig::default());
+            ex.push_scale_events(&sc.scale_events);
+            ex.push_fault_events(&sc.faults);
+            let summary = ex.run(requests.clone());
+            let classes = ex.collector.class_summaries(summary.duration);
+            let fleet = ex.cluster.size_timeline();
+            (format!("{summary:?} fleet={fleet:?}"), format!("{classes:?}"), ex.stuck_requests())
+        };
+        let (sum_sim, cls_sim, stuck_sim) = run(ExecutorKind::Sim);
+        let (sum_live, cls_live, stuck_live) = run(ExecutorKind::LiveVirtual);
+        assert_eq!(
+            sum_sim,
+            sum_live,
+            "{}: fault summaries/fleet timelines diverged between executors",
+            sys.name()
+        );
+        assert_eq!(cls_sim, cls_live, "{}: per-class rows diverged", sys.name());
+        assert_eq!(stuck_sim, 0, "{}: sim executor left stuck segments", sys.name());
+        assert_eq!(stuck_live, 0, "{}: live executor left stuck segments", sys.name());
+    }
+}
