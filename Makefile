@@ -4,7 +4,7 @@
 ARTIFACTS ?= artifacts
 PYTHON    ?= python3
 
-.PHONY: artifacts build test bench bench-1m experiments parity elastic faults clean
+.PHONY: artifacts build test bench bench-1m experiments parity elastic faults overload clean
 
 # Lower the TinyQwen step function to HLO text + params + manifest, and
 # snapshot the simulator bench rows to BENCH_sim.json so every artifact
@@ -39,6 +39,13 @@ elastic:
 # recovery ledger (EXPERIMENTS.md §Faults). Emits results/faults.json.
 faults:
 	cargo run --release --bin experiments -- faults
+
+# Overload evaluation: offered-load multiplier sweep past fleet capacity,
+# overload defenses (SLO-aware admission + priority batching) on vs off,
+# scored by the graceful-degradation curve of interactive goodput
+# (EXPERIMENTS.md §Overload). Emits results/overload.json.
+overload:
+	cargo run --release --bin experiments -- overload
 
 bench:
 	cargo bench --bench bench_schedulers

@@ -94,6 +94,13 @@ pub struct LocalConfig {
     /// absorbs estimate noise so the realized p99 lands *under* the SLO
     /// rather than straddling it.
     pub slo_target: f64,
+    /// Priority-aware batch composition (overload survival, DESIGN.md
+    /// §Overload): interactive-class segments are offered to `next_batch`
+    /// ahead of batch-class ones, and batch-class prefills are
+    /// bucket-grouped by length. Candidate *ordering* only — KV admission
+    /// stays strictly FCFS. Default off: batching is bit-identical to the
+    /// pre-overload scheduler.
+    pub priority: bool,
 }
 
 impl Default for LocalConfig {
@@ -105,6 +112,7 @@ impl Default for LocalConfig {
             max_prefill_tokens: 8192,
             fixed_budget: None,
             slo_target: 0.85,
+            priority: false,
         }
     }
 }

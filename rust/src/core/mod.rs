@@ -105,6 +105,17 @@ impl Request {
     pub fn predicted_len(&self) -> usize {
         self.prompt_len + self.predicted_decode
     }
+
+    /// Interactive-class request: a user is waiting on its first token.
+    /// Defined by the request's own SLO carrying a tight (≤ 1 s) TTFT
+    /// bound — chat and multi-turn classes qualify; batch summarization
+    /// and long-RAG (loose or absent TTFT) do not, and neither do legacy
+    /// requests with no [`SloTarget`] at all. Admission control protects
+    /// this class under overload; priority batching lets it jump
+    /// batch-class work inside an instance.
+    pub fn interactive(&self) -> bool {
+        self.slo.and_then(|s| s.ttft).is_some_and(|t| t <= 1.0)
+    }
 }
 
 /// Which half of the split a micro-request is.

@@ -457,6 +457,12 @@ pub trait Autoscaler: Send {
     fn decide(&mut self, now: f64, digests: &[LoadDigest]) -> Vec<ScaleDirective>;
 }
 
+/// Default queued-prefill token budget equated to [`pressure`] 1.0 —
+/// shared by [`BandConfig`] and the admission gate
+/// ([`fleet_saturated`]) so "overloaded" means the same thing to the
+/// autoscaler and to admission control.
+pub const PREFILL_BACKLOG_BUDGET: usize = 16_384;
+
 /// Scalar load pressure of one instance in [0, ∞): the max of its KV
 /// occupancy, its queued-prefill backlog normalized by `prefill_budget`
 /// tokens, and a saturating 1.0 whenever KV admission is backed up
@@ -466,6 +472,21 @@ pub fn pressure(d: &LoadDigest, prefill_budget: usize) -> f64 {
     let backlog = d.pending_prefill as f64 / prefill_budget.max(1) as f64;
     let waiting = if d.waiting > 0 { 1.0 } else { 0.0 };
     d.kv_utilization.max(backlog).max(waiting)
+}
+
+/// Fleet-wide saturation signal for SLO-aware admission control
+/// (DESIGN.md §Overload): true when *every* placeable instance is at
+/// [`pressure`] ≥ 1.0 — each one either KV-full, carrying a prefill
+/// backlog past `prefill_budget` tokens, or backed up at KV admission.
+/// While any instance has headroom, placement can still route around the
+/// hot ones and nothing is rejected. An empty digest view (fleet still
+/// warming) counts as saturated: there is nowhere to put deferrable work.
+///
+/// Shared by the virtual host's arrival gate and the live server's
+/// mirror, so the two facades can never diverge on what "overloaded"
+/// means.
+pub fn fleet_saturated(digests: &[LoadDigest], prefill_budget: usize) -> bool {
+    digests.iter().all(|d| pressure(d, prefill_budget) >= 1.0)
 }
 
 /// Tuning for the [`BandAutoscaler`].
@@ -492,7 +513,7 @@ impl Default for BandConfig {
             min_instances: 1,
             max_instances: 8,
             cooldown: 5.0,
-            prefill_backlog_budget: 16_384,
+            prefill_backlog_budget: PREFILL_BACKLOG_BUDGET,
         }
     }
 }

@@ -37,7 +37,8 @@ use crate::core::{InstanceId, Request, RequestId};
 use crate::costmodel::InstanceSpec;
 use crate::exec::clock::{Clock, VirtualClock};
 use crate::exec::cluster::{
-    Autoscaler, Cluster, DrainError, MemberState, ScaleAction, ScaleDirective, ScaleEvent,
+    fleet_saturated, Autoscaler, Cluster, DrainError, MemberState, ScaleAction, ScaleDirective,
+    ScaleEvent, PREFILL_BACKLOG_BUDGET,
 };
 use crate::exec::fault::{FaultEvent, FaultKind, RetryPolicy};
 use crate::exec::policy::Policy;
@@ -135,6 +136,16 @@ pub struct ExecConfig {
     pub autoscale_interval: f64,
     /// Hard cap on provisioned instances (guards runaway autoscalers).
     pub max_instances: usize,
+    /// SLO-aware admission control (DESIGN.md §Overload): when every
+    /// placeable instance is saturated
+    /// ([`crate::exec::cluster::fleet_saturated`]), arriving batch-class
+    /// requests — those with an SLO but no tight TTFT bound
+    /// ([`Request::interactive`]) — are rejected up front and counted in
+    /// [`Summary::rejected_requests`], instead of queueing ahead of the
+    /// interactive traffic the fleet can still serve. Interactive and
+    /// legacy (no-SLO) requests are never rejected. Default off:
+    /// feasible-load runs are bit-identical with the gate absent.
+    pub admission: bool,
     /// Crash recovery: true (default) re-places a dead instance's
     /// segments from their last durable point; false sheds them — the
     /// ablation baseline of the `experiments faults` degradation curve.
@@ -165,6 +176,7 @@ impl ExecConfig {
                 warmup: 2.0,
                 autoscale_interval: 1.0,
                 max_instances: 64,
+                admission: false,
                 recovery: true,
                 retry: RetryPolicy::default(),
             },
@@ -242,6 +254,13 @@ impl ExecConfigBuilder {
 
     pub fn max_instances(mut self, max: usize) -> Self {
         self.cfg.max_instances = max;
+        self
+    }
+
+    /// Enable/disable SLO-aware admission control (see
+    /// [`ExecConfig::admission`]).
+    pub fn admission(mut self, on: bool) -> Self {
+        self.cfg.admission = on;
         self
     }
 
@@ -986,6 +1005,7 @@ impl VirtualExecutor {
         );
         fresh.beta_dest = seg.beta_dest;
         fresh.track_kv_history = seg.track_kv_history;
+        fresh.interactive = seg.interactive;
         self.recovery.recomputed_prefill_tokens += seg.work.context as u64;
         self.cluster
             .runtime_mut(target, now)
@@ -1151,6 +1171,19 @@ impl VirtualExecutor {
 
     fn on_arrival(&mut self, req: Request) {
         let now = self.now();
+        // SLO-aware admission gate (DESIGN.md §Overload): deferrable
+        // batch-class work is turned away while every placeable instance
+        // is saturated — before registration, so a rejected request never
+        // enters the collector's active set. Uses the same incremental
+        // digest view in both scheduling paths (the digests equal the
+        // snapshot reduction, debug-asserted below).
+        if self.cfg.admission && req.slo.is_some() && !req.interactive() {
+            self.cluster.placeable_digests_into(now, &mut self.loads);
+            if fleet_saturated(&self.loads, PREFILL_BACKLOG_BUDGET) {
+                self.collector.on_reject(&req);
+                return;
+            }
+        }
         // register class + per-request SLO targets before tokens stream in
         self.collector.on_request(&req);
         let placement = if self.cfg.exact_snapshots {

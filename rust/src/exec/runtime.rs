@@ -127,6 +127,12 @@ pub struct Segment {
     pub kv_history: Vec<KvSpan>,
     pub track_kv_history: bool,
     pub arrival: f64,
+    /// Interactive-class segment ([`crate::core::Request::interactive`]):
+    /// with [`crate::coordinator::LocalConfig::priority`] on, batch
+    /// composition lets these jump batch-class work (KV admission stays
+    /// strictly FCFS either way). Default false — legacy traces and
+    /// priority-off runs are bit-identical to the pre-overload scheduler.
+    pub interactive: bool,
 }
 
 impl Segment {
@@ -162,6 +168,7 @@ impl Segment {
             kv_history: Vec::new(),
             track_kv_history: false,
             arrival,
+            interactive: false,
         }
     }
 
@@ -614,23 +621,53 @@ impl InstanceRuntime {
     }
 
     /// Compose the next batch via the local scheduler (Algorithm 2).
+    ///
+    /// With [`crate::coordinator::LocalConfig::priority`] off (the
+    /// default) candidates are offered strictly in FCFS admission order —
+    /// bit-identical to the pre-overload scheduler. With it on,
+    /// interactive-class segments are offered ahead of batch-class ones
+    /// (FCFS preserved *within* each class), and batch-class prefills are
+    /// bucket-grouped by remaining length (BucketServe-style) so a
+    /// length-skewed backlog forms batches of like-sized work instead of
+    /// interleaving a 16k-token straggler with 200-token stubs. Only the
+    /// candidate ordering changes — KV admission stays strictly FCFS, so
+    /// no priority inversion can wedge a waiting segment.
     pub fn plan_batch(&mut self) -> BatchPlan {
         self.scratch_decodes.clear();
         self.scratch_prefills.clear();
-        for &key in &self.order {
-            let Some(s) = self.arena.get(key) else { continue };
-            if !s.ready || s.finished() {
-                continue;
+        let priority = self.local.cfg.priority;
+        let passes: &[Option<bool>] =
+            if priority { &[Some(true), Some(false)] } else { &[None] };
+        let mut batch_prefills_from = 0;
+        for &want_interactive in passes {
+            for &key in &self.order {
+                let Some(s) = self.arena.get(key) else { continue };
+                if !s.ready || s.finished() {
+                    continue;
+                }
+                if want_interactive.is_some_and(|w| s.interactive != w) {
+                    continue;
+                }
+                if s.work.in_decode_phase() {
+                    self.scratch_decodes.push(DecodeEntry { key, context: s.work.context });
+                } else if s.work.prefill_remaining > 0 {
+                    self.scratch_prefills.push(PrefillEntry {
+                        key,
+                        remaining: s.work.prefill_remaining,
+                        context: s.work.context,
+                    });
+                }
             }
-            if s.work.in_decode_phase() {
-                self.scratch_decodes.push(DecodeEntry { key, context: s.work.context });
-            } else if s.work.prefill_remaining > 0 {
-                self.scratch_prefills.push(PrefillEntry {
-                    key,
-                    remaining: s.work.prefill_remaining,
-                    context: s.work.context,
-                });
+            if want_interactive == Some(true) {
+                batch_prefills_from = self.scratch_prefills.len();
             }
+        }
+        if priority {
+            // bucket-form the batch-class prefill tail: stable sort by
+            // ⌈log2(remaining)⌉ keeps FCFS within a bucket and is fully
+            // deterministic (no tie depends on arrival interleaving)
+            self.scratch_prefills[batch_prefills_from..]
+                .sort_by_key(|p| usize::BITS - p.remaining.leading_zeros());
         }
         self.local.next_batch(&self.scratch_decodes, &self.scratch_prefills)
     }

@@ -115,6 +115,7 @@ pub fn make_segment(req: &Request, sp: &SegmentPlan, gated: bool, track_kv: bool
         gated,
     );
     seg.track_kv_history = track_kv;
+    seg.interactive = req.interactive();
     seg
 }
 

@@ -18,6 +18,7 @@ pub mod fig9;
 pub mod fig10;
 pub mod fig11;
 pub mod kvxfer;
+pub mod overload;
 pub mod runners;
 pub mod scenarios;
 pub mod table1;
@@ -59,6 +60,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
             "faults",
             "crash-rate sweep on the faulty-diurnal scenario, recovery on vs off",
             faults::run,
+        ),
+        (
+            "overload",
+            "graceful-degradation sweep: load multiplier x system x admission on/off",
+            overload::run,
         ),
     ]
 }

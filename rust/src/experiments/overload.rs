@@ -1,0 +1,349 @@
+//! Overload survival: the graceful-degradation sweep (DESIGN.md §Overload).
+//!
+//! Every cell serves one overload scenario ([`Scenario::overload_steady`]
+//! by default, `--scenario flash-crowd` for the burst variant) with its
+//! offered load scaled by a multiplier ([`Scenario::with_qps_scale`]),
+//! across two systems (DynaServe split-placement, chunked-prefill
+//! colocation) × survival knobs {on, off}. "Survival on" arms both
+//! overload defenses together ([`build_executor_overload`]): the host's
+//! SLO-aware admission gate (batch-class arrivals bounce while every
+//! placeable digest sits at saturation pressure) and priority-aware batch
+//! composition (interactive segments jump batch work in `plan_batch`,
+//! never in KV admission). "Survival off" is the PR-7 behaviour: admit
+//! everything, FCFS batching.
+//!
+//! The acceptance shape: past the capacity knee, survival-on keeps
+//! interactive-class goodput near its feasible-load value (the admission
+//! gate sacrifices deferrable summarization work instead) while
+//! survival-off drags every class down together; the per-system
+//! degradation curves written to `results/overload.json` must be monotone
+//! non-increasing past the knee. Request conservation holds in every
+//! cell: offered == completed + shed + rejected (+ stuck, which must be 0
+//! — rejected/shed work is accounted, never silently lost).
+//!
+//! Usage:
+//!   experiments overload [--smoke] [--seed N] [--seeds N] [--duration S]
+//!                        [--scenario NAME] [--exact-metrics]
+//!
+//! [`Scenario::overload_steady`]: crate::workload::Scenario::overload_steady
+//! [`Scenario::with_qps_scale`]: crate::workload::Scenario::with_qps_scale
+//! [`build_executor_overload`]: crate::experiments::runners::build_executor_overload
+
+use crate::costmodel::LlmSpec;
+use crate::experiments::runners::{
+    build_executor_overload, mc_seeds, run_cells, sweep_threads, warn_if_stuck, ExecutorKind,
+    System,
+};
+use crate::experiments::{mc_json, write_results};
+use crate::metrics::{ClassSummary, SloConfig, Summary};
+use crate::util::cli::{pct, Args, Table};
+use crate::util::json::{obj, Json};
+use crate::workload::Scenario;
+
+/// A class is interactive when it carries a tight TTFT bound — the same
+/// ≤ 1 s rule [`crate::core::Request::interactive`] applies per request.
+fn is_interactive(c: &ClassSummary) -> bool {
+    c.ttft_slo.is_some_and(|t| t <= 1.0)
+}
+
+struct CellResult {
+    sys: System,
+    scale: f64,
+    survival: bool,
+    offered: usize,
+    summary: Summary,
+    classes: Vec<ClassSummary>,
+    stuck: usize,
+}
+
+impl CellResult {
+    /// Goodput (tok/s) summed over the interactive classes — the figure
+    /// the degradation curves and the survival verdict are drawn from.
+    fn interactive_goodput(&self) -> f64 {
+        self.classes.iter().filter(|c| is_interactive(c)).map(|c| c.goodput_tok_s).sum()
+    }
+
+    fn interactive_p99_ttft(&self) -> f64 {
+        self.classes
+            .iter()
+            .filter(|c| is_interactive(c))
+            .map(|c| c.p99_ttft)
+            .fold(f64::NAN, f64::max)
+    }
+}
+
+fn run_cell(
+    sys: System,
+    base: &Scenario,
+    scale: f64,
+    survival: bool,
+    seed: u64,
+    exact: bool,
+) -> CellResult {
+    let sc = base.clone().with_qps_scale(scale);
+    let llm = LlmSpec::qwen25_14b();
+    let mut ex = build_executor_overload(
+        ExecutorKind::Sim,
+        sys,
+        &llm,
+        SloConfig::default(),
+        exact,
+        survival,
+        survival,
+    );
+    let offered = sc.stream(seed).count();
+    let summary = ex.run_stream(sc.stream(seed));
+    let classes = ex.collector.class_summaries(summary.duration);
+    let stuck = warn_if_stuck(
+        &format!(
+            "overload/{} x{scale} survival {} seed {seed}",
+            sys.name(),
+            if survival { "on" } else { "off" }
+        ),
+        &ex,
+    );
+    CellResult { sys, scale, survival, offered, summary, classes, stuck }
+}
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let seed = args.u64_or("seed", 42);
+    let seeds_n = (args.u64_or("seeds", 1).max(1)) as usize;
+    let exact = args.bool("exact-metrics");
+    let smoke = args.bool("smoke");
+    let name = args.get_or("scenario", "overload-steady");
+    let mut sc = Scenario::by_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown scenario '{name}'"))?;
+    if smoke {
+        sc = sc.smoke();
+    }
+    if let Some(d) = args.get("duration").and_then(|s| s.parse::<f64>().ok()) {
+        sc = sc.with_duration(d);
+    }
+
+    // offered-load multipliers over the scenario's (already-infeasible)
+    // base rate: 0.25x sits well under the 2-instance capacity knee,
+    // 1.0x is the certified overload point (the scenario's analytic
+    // capacity test), 1.25x probes deeper collapse
+    let scales: &[f64] = if smoke { &[0.25, 1.0] } else { &[0.25, 0.5, 0.75, 1.0, 1.25] };
+    let systems = [System::DynaServe, System::Coloc { chunk: 2048 }];
+    println!(
+        "Overload sweep on '{}' — load x{scales:?} over {:.0}s, 2-instance fleet, \
+         2 systems × survival on/off (seed {seed}, {seeds_n} seed(s))\n",
+        sc.name, sc.duration
+    );
+
+    let seeds = mc_seeds(seed, seeds_n);
+    let cells: Vec<(System, f64, bool, u64)> = systems
+        .iter()
+        .flat_map(|&sys| {
+            scales.iter().flat_map(move |&scale| {
+                [true, false]
+                    .iter()
+                    .flat_map(move |&on| seeds.iter().map(move |&s| (sys, scale, on, s)))
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    let all_results: Vec<CellResult> =
+        run_cells(&cells, sweep_threads(), |&(sys, scale, on, cell_seed)| {
+            run_cell(sys, &sc, scale, on, cell_seed, exact)
+        });
+    // seed-0 result per (system, scale, survival) feeds the table, the
+    // degradation curves, and the verdicts — as a single-seed run would
+    let head: Vec<&CellResult> =
+        (0..cells.len() / seeds_n).map(|i| &all_results[i * seeds_n]).collect();
+
+    let mut t = Table::new([
+        "system", "load x", "survival", "offered", "completed", "rejected", "shed",
+        "inter. goodput", "inter. p99 TTFT", "attain %", "stuck",
+    ]);
+    let mut cell_objs = Vec::new();
+    for (i, r) in head.iter().enumerate() {
+        let per_seed = &all_results[i * seeds_n..(i + 1) * seeds_n];
+        let s = &r.summary;
+        t.row([
+            r.sys.name().to_string(),
+            format!("{:.2}", r.scale),
+            if r.survival { "on" } else { "off" }.to_string(),
+            r.offered.to_string(),
+            s.completed.to_string(),
+            s.rejected_requests.to_string(),
+            s.shed_requests.to_string(),
+            format!("{:.1}", r.interactive_goodput()),
+            format!("{:.0} ms", r.interactive_p99_ttft() * 1e3),
+            pct(s.attainment),
+            r.stuck.to_string(),
+        ]);
+        cell_objs.push(obj([
+            ("system", Json::from(r.sys.name())),
+            ("qps_scale", Json::from(r.scale)),
+            ("survival", Json::from(r.survival)),
+            ("offered", Json::from(r.offered)),
+            (
+                "summary",
+                obj([
+                    ("completed", Json::from(s.completed)),
+                    ("rejected_requests", Json::from(s.rejected_requests as usize)),
+                    ("shed_requests", Json::from(s.shed_requests as usize)),
+                    ("total_tokens", Json::from(s.total_tokens)),
+                    ("good_tokens", Json::from(s.good_tokens)),
+                    ("goodput_tok_s", Json::from(s.goodput_tok_s)),
+                    ("attainment", Json::from(s.attainment)),
+                    ("p99_ttft", Json::from(s.p99_ttft)),
+                    ("duration", Json::from(s.duration)),
+                ]),
+            ),
+            (
+                "classes",
+                Json::Arr(
+                    r.classes
+                        .iter()
+                        .map(|c| {
+                            obj([
+                                ("class", Json::from(c.class)),
+                                ("interactive", Json::from(is_interactive(c))),
+                                ("completed", Json::from(c.completed)),
+                                ("rejected", Json::from(c.rejected)),
+                                ("goodput_tok_s", Json::from(c.goodput_tok_s)),
+                                ("p99_ttft", Json::from(c.p99_ttft)),
+                                ("ttft_attainment", Json::from(c.ttft_attainment)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("stuck_requests", Json::from(r.stuck)),
+            (
+                "mc",
+                obj([
+                    (
+                        "interactive_goodput",
+                        mc_json(
+                            &per_seed.iter().map(|r| r.interactive_goodput()).collect::<Vec<_>>(),
+                        ),
+                    ),
+                    (
+                        "goodput_tok_s",
+                        mc_json(
+                            &per_seed.iter().map(|r| r.summary.goodput_tok_s).collect::<Vec<_>>(),
+                        ),
+                    ),
+                    (
+                        "attainment",
+                        mc_json(&per_seed.iter().map(|r| r.summary.attainment).collect::<Vec<_>>()),
+                    ),
+                ]),
+            ),
+        ]));
+    }
+    t.print();
+
+    // ── degradation curves + verdicts ──────────────────────────────────
+    // Per (system, survival): interactive goodput vs load multiplier.
+    // Graceful degradation = monotone non-increasing past the knee (the
+    // argmax point), with a small tolerance for seed noise.
+    let curve = |sys: System, survival: bool| -> Vec<&&CellResult> {
+        head.iter().filter(|r| r.sys == sys && r.survival == survival).collect()
+    };
+    let monotone_past_knee = |pts: &[&&CellResult]| -> bool {
+        let knee = pts
+            .iter()
+            .enumerate()
+            .max_by(|a, b| {
+                a.1.interactive_goodput().total_cmp(&b.1.interactive_goodput())
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        pts.windows(2).skip(knee).all(|w| {
+            w[1].interactive_goodput() <= w[0].interactive_goodput() * 1.05 + 1e-9
+        })
+    };
+    let mut curves = Vec::new();
+    let mut all_monotone = true;
+    for &sys in &systems {
+        for survival in [true, false] {
+            let pts = curve(sys, survival);
+            let monotone = monotone_past_knee(&pts);
+            all_monotone &= monotone;
+            curves.push(obj([
+                ("system", Json::from(sys.name())),
+                ("survival", Json::from(survival)),
+                (
+                    "points",
+                    Json::Arr(
+                        pts.iter()
+                            .map(|r| {
+                                obj([
+                                    ("qps_scale", Json::from(r.scale)),
+                                    ("interactive_goodput", Json::from(r.interactive_goodput())),
+                                    ("rejected", Json::from(r.summary.rejected_requests as usize)),
+                                    ("shed", Json::from(r.summary.shed_requests as usize)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("monotone_past_knee", Json::from(monotone)),
+            ]));
+        }
+    }
+
+    // The survival verdict, per system: at the deep-overload point the
+    // survival-on run keeps interactive goodput within 20% of its own
+    // feasible-load (lowest-multiplier) value; survival-off does not.
+    let mut verdicts = Vec::new();
+    let mut dynaserve_survives = false;
+    for &sys in &systems {
+        let (on, off) = (curve(sys, true), curve(sys, false));
+        let feasible = on.first().map_or(0.0, |r| r.interactive_goodput());
+        let deep_on = on.last().map_or(0.0, |r| r.interactive_goodput());
+        let deep_off = off.last().map_or(0.0, |r| r.interactive_goodput());
+        let held = feasible > 0.0 && deep_on >= 0.8 * feasible;
+        let collapsed = deep_off < 0.8 * feasible;
+        if sys == System::DynaServe {
+            dynaserve_survives = held && collapsed;
+        }
+        println!(
+            "{}: interactive goodput feasible {:.1} -> deep overload: survival-on {:.1} \
+             ({}), survival-off {:.1} ({})",
+            sys.name(),
+            feasible,
+            deep_on,
+            if held { "held within 20%" } else { "DEGRADED past 20%" },
+            deep_off,
+            if collapsed { "collapsed" } else { "held" },
+        );
+        verdicts.push(obj([
+            ("system", Json::from(sys.name())),
+            ("feasible_interactive_goodput", Json::from(feasible)),
+            ("deep_overload_on", Json::from(deep_on)),
+            ("deep_overload_off", Json::from(deep_off)),
+            ("survival_on_holds_80pct", Json::from(held)),
+            ("survival_off_collapses", Json::from(collapsed)),
+        ]));
+    }
+    println!(
+        "\n{}",
+        if dynaserve_survives {
+            "DynaServe with admission+priority degrades gracefully; without them it collapses"
+        } else {
+            "WARNING: survival verdict did not hold — inspect results/overload.json"
+        }
+    );
+
+    let artifact = obj([
+        ("scenario", Json::from(sc.name)),
+        ("seed", Json::from(seed as usize)),
+        ("seeds", Json::from(seeds_n)),
+        ("exact_metrics", Json::from(exact)),
+        ("duration_s", Json::from(sc.duration)),
+        ("qps_scales", Json::Arr(scales.iter().map(|&s| Json::from(s)).collect())),
+        ("cells", Json::Arr(cell_objs)),
+        ("degradation_curves", Json::Arr(curves)),
+        ("curves_monotone_past_knee", Json::from(all_monotone)),
+        ("verdicts", Json::Arr(verdicts)),
+        ("dynaserve_survives", Json::from(dynaserve_survives)),
+    ]);
+    write_results("overload", &artifact);
+    Ok(())
+}

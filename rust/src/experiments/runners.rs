@@ -176,6 +176,37 @@ pub fn build_executor_exact(
     }
 }
 
+/// [`build_executor_exact`] with the overload-survival knobs: `admission`
+/// arms the host's SLO-aware gate (batch-class arrivals bounce while the
+/// whole placeable fleet is saturated) and `priority` turns on
+/// interactive-first batch composition plus bucketed prefill ordering in
+/// every instance runtime (`LocalConfig::priority`) — including the
+/// per-instance overrides a disaggregated deployment installs, which
+/// would otherwise silently keep the default-off value. The `experiments
+/// overload` harness and the overload test suites build every cell here
+/// so both facades get identical knob wiring.
+#[allow(clippy::too_many_arguments)]
+pub fn build_executor_overload(
+    kind: ExecutorKind,
+    system: System,
+    llm: &LlmSpec,
+    slo: SloConfig,
+    exact_metrics: bool,
+    admission: bool,
+    priority: bool,
+) -> Simulator {
+    let (mut cfg, policy) = sim_parts(system, llm, slo, exact_metrics);
+    cfg.admission = admission;
+    cfg.local.priority = priority;
+    for (_, lc) in cfg.local_overrides.iter_mut() {
+        lc.priority = priority;
+    }
+    match kind {
+        ExecutorKind::Sim => Simulator::new(cfg, policy),
+        ExecutorKind::LiveVirtual => crate::server::virtual_executor(cfg, policy),
+    }
+}
+
 /// Warn (to stderr) when a finished run left segments resident — a
 /// scheduling deadlock that would otherwise masquerade as low goodput
 /// (or, for a horizon-truncated run, an under-sized `ExecConfig::horizon`).
@@ -211,6 +242,17 @@ pub fn warn_if_stuck(context: &str, sim: &Simulator) -> usize {
             eprintln!(
                 "warning: {context}:   drains left {in_place} gated β segment(s) to finish \
                  in place (KV en route or no placeable target)"
+            );
+        }
+        // overload ledger context: a run that turned work away on purpose
+        // should be read against its rejections/sheds, not just the residue
+        // (conservation: offered == completed + shed + rejected + stuck)
+        let rejected = sim.collector.rejected_requests();
+        let shed = sim.recovery_stats().shed_requests;
+        if rejected > 0 || shed > 0 {
+            eprintln!(
+                "warning: {context}:   ledger: {rejected} request(s) rejected by admission, \
+                 {shed} shed by crash recovery"
             );
         }
     }

@@ -8,6 +8,9 @@
 //!   experiments -- scenarios --name hybrid     run one scenario
 //!   experiments -- scenarios                   run the whole suite
 //!   experiments -- scenarios --smoke           tiny CI variant per shape
+//!   experiments -- scenarios --qps-scale 1.5   multiply the shape's rate
+//!                                              knobs (offered-load axis;
+//!                                              time structure untouched)
 //!   experiments -- scenarios --executor live   run through the server
 //!                                              facade's stub-engine
 //!                                              executor (bit-identical
@@ -74,6 +77,12 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             // rescales the shape's time structure too, so a shortened
             // burst/diurnal scenario keeps its defining feature
             sc = sc.with_duration(d);
+        }
+        if let Some(q) = args.get("qps-scale").and_then(|s| s.parse::<f64>().ok()) {
+            // offered-load multiplier on the shape's rate knobs only —
+            // the ad-hoc counterpart of the `experiments overload` sweep
+            anyhow::ensure!(q > 0.0, "--qps-scale must be positive");
+            sc = sc.with_qps_scale(q);
         }
         run_scenario(&sc, seed, seeds_n, exact, executor)?;
     }

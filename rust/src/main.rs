@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
         Some("calibrate") => calibrate(&args),
         _ => {
             eprintln!("usage: dynaserve <serve|simulate|calibrate> [flags]");
-            eprintln!("  serve     --requests N --qps Q --artifacts DIR [--instances 2] [--workload NAME] [--autoscale] [--calibration-deadline S] [--ready-deadline S]   (needs --features pjrt)");
+            eprintln!("  serve     --requests N --qps Q --artifacts DIR [--instances 2] [--workload NAME] [--autoscale] [--admission] [--calibration-deadline S] [--ready-deadline S]   (needs --features pjrt)");
             eprintln!("  simulate  --system <dynaserve|coloc|disagg> --workload NAME --qps Q [--duration S] [--model 14b]");
             eprintln!("  calibrate --artifacts DIR   (needs --features pjrt)");
             Ok(())
@@ -61,6 +61,9 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         ),
         ready_deadline_s: args
             .f64_or("ready-deadline", dynaserve::server::ServeConfig::DEFAULT_READY_DEADLINE_S),
+        // --admission turns on the leader's SLO-aware gate: batch-class
+        // arrivals bounce while the whole placeable fleet is saturated
+        admission: args.bool("admission"),
     };
     let report = dynaserve::server::serve(cfg)?;
     report.print();

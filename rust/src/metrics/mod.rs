@@ -126,6 +126,9 @@ struct ClassAgg {
     /// attainment numerator (exact under the one-SLO-per-class invariant
     /// documented on [`Collector::on_request`]).
     gaps_within_slo: usize,
+    /// Requests of this class turned away by admission control before any
+    /// token was produced ([`Collector::on_reject`]).
+    rejected: usize,
 }
 
 impl ClassAgg {
@@ -181,6 +184,9 @@ pub struct Collector {
     /// Sketch of each completed request's worst inter-token gap (tokens >
     /// 1), feeding `req_max_tbt_p99` in sketch mode.
     req_max_tbt: GkSketch,
+    /// Requests turned away by admission control ([`Self::on_reject`]) —
+    /// a plain counter in both modes, disjoint from `active`/`completed`.
+    rejected_n: usize,
     /// BTreeMap for deterministic class iteration order.
     classes: BTreeMap<ClassId, ClassAgg>,
 }
@@ -220,6 +226,27 @@ impl Collector {
         // remember the class targets even if the request never completes
         let agg = self.classes.entry(req.class).or_insert_with(|| ClassAgg::new(mode, slo));
         agg.slo = slo;
+    }
+
+    /// Count a request turned away by admission control — *before* it was
+    /// registered, so it never enters `active` and never completes. The
+    /// rejection lands in the global and per-class ledgers
+    /// ([`Summary::rejected_requests`], [`ClassSummary::rejected`]) so the
+    /// conservation invariant `offered == completed + shed + rejected`
+    /// stays checkable: admission control degrades, it never loses.
+    pub fn on_reject(&mut self, req: &Request) {
+        let slo = req.slo.map(SloConfig::from).unwrap_or(self.slo);
+        let mode = self.mode;
+        self.rejected_n += 1;
+        let agg = self.classes.entry(req.class).or_insert_with(|| ClassAgg::new(mode, slo));
+        agg.slo = slo;
+        agg.rejected += 1;
+    }
+
+    /// Requests rejected by admission control so far (the
+    /// [`Self::on_reject`] counter) — read by the stuck-run diagnostics.
+    pub fn rejected_requests(&self) -> u64 {
+        self.rejected_n as u64
     }
 
     /// Record one emitted output token for `id` at time `t`.
@@ -375,6 +402,9 @@ impl Collector {
                     }
                 }
             },
+            // admission rejections are the collector's own ledger (unlike
+            // the recovery counters below, which the executor annotates)
+            rejected_requests: self.rejected_n as u64,
             // fleet accounting is the executor's, not the collector's:
             // the host overwrites these from its cluster registry
             gpu_seconds: 0.0,
@@ -409,6 +439,7 @@ impl Collector {
                 tbt_slo: agg.slo.tbt,
                 ttft_slo: agg.slo.ttft,
                 completed: agg.completed,
+                rejected: agg.rejected,
                 total_tokens: agg.total_tokens,
                 good_tokens: agg.good_tokens,
                 goodput_tok_s: agg.good_tokens as f64 / duration,
@@ -456,6 +487,9 @@ pub struct ClassSummary {
     /// The TTFT bound this class was scored against (None = unconstrained).
     pub ttft_slo: Option<f64>,
     pub completed: usize,
+    /// Requests of this class turned away by admission control — counted
+    /// here (and in [`Summary::rejected_requests`]), never silently lost.
+    pub rejected: usize,
     pub total_tokens: usize,
     /// Tokens that met this class's own SLO targets.
     pub good_tokens: usize,
@@ -514,6 +548,12 @@ pub struct Summary {
     /// Requests evicted by fault handling with recovery disabled (or
     /// after handoff-retry exhaustion) — accounted, never silently lost.
     pub shed_requests: u64,
+    /// Requests turned away by SLO-aware admission control before any
+    /// token was produced ([`Collector::on_reject`]) — the overload
+    /// ledger, disjoint from `shed_requests` (which counts work *lost
+    /// after admission* to faults). Conservation: offered == completed +
+    /// shed + rejected.
+    pub rejected_requests: u64,
     /// Prefill tokens recomputed because their KV died with an instance.
     pub recomputed_prefill_tokens: u64,
     /// KV bytes re-shipped for β segments whose in-flight transfer
@@ -854,6 +894,7 @@ mod tests {
             goodput_per_gpu_s: 50.0,
             replaced_requests: 0,
             shed_requests: 0,
+            rejected_requests: 0,
             recomputed_prefill_tokens: 0,
             retransferred_kv_bytes: 0.0,
             handoff_retries: 0,
@@ -885,6 +926,7 @@ mod tests {
             goodput_per_gpu_s: 0.0,
             replaced_requests: 0,
             shed_requests: 0,
+            rejected_requests: 0,
             recomputed_prefill_tokens: 0,
             retransferred_kv_bytes: 0.0,
             handoff_retries: 0,

@@ -44,7 +44,10 @@ use crate::coordinator::{GlobalConfig, LoadDigest, LocalConfig, LocalScheduler, 
 use crate::core::{InstanceId, Request, RequestId};
 use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
 use crate::exec::clock::{Clock, WallClock};
-use crate::exec::cluster::{Autoscaler, BandAutoscaler, BandConfig, DrainError, ScaleDirective};
+use crate::exec::cluster::{
+    fleet_saturated, Autoscaler, BandAutoscaler, BandConfig, DrainError, ScaleDirective,
+    PREFILL_BACKLOG_BUDGET,
+};
 use crate::exec::policy::{DynaServePolicy, Policy};
 use crate::exec::runtime::{EventSink, InstanceRuntime, Segment, SeqKey};
 use crate::exec::submit::{plan_submission, SegmentPlan};
@@ -76,6 +79,15 @@ pub struct ServeConfig {
     /// (seconds) — covers post-calibration digest publication and
     /// all-warming moments after a scale-up. Default: the historical 60 s.
     pub ready_deadline_s: f64,
+    /// SLO-aware admission control: when the whole placeable fleet is
+    /// saturated (every digest at pressure ≥ 1.0 — `exec::cluster::
+    /// fleet_saturated`, the same predicate the virtual executor's gate
+    /// evaluates), batch-class arrivals (per-request SLO present but not
+    /// [`Request::interactive`]) are rejected instead of placed. The
+    /// leader counts them via [`Collector::on_reject`] and stops waiting
+    /// for their completions. Default off — legacy serve runs admit
+    /// everything, DESIGN.md §Overload.
+    pub admission: bool,
 }
 
 impl ServeConfig {
@@ -104,6 +116,9 @@ struct SegmentSpec {
     beta_dest: Option<(InstanceId, u64)>,
     /// β only: waits for KV; activated by the final chunk.
     gated: bool,
+    /// Interactive-class request (tight TTFT SLO) — priority batching
+    /// input, derived leader-side from [`Request::interactive`].
+    interactive: bool,
 }
 
 impl SegmentSpec {
@@ -128,6 +143,7 @@ impl SegmentSpec {
             last_segment: sp.last_segment,
             beta_dest,
             gated,
+            interactive: req.interactive(),
         }
     }
 
@@ -149,6 +165,7 @@ impl SegmentSpec {
             self.gated,
         );
         seg.beta_dest = self.beta_dest;
+        seg.interactive = self.interactive;
         seg
     }
 }
@@ -593,6 +610,9 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     // metrics collector up front so each request's class / per-request SLO
     // targets register at submission — same scoring path as the simulator
     let mut collector = Collector::new(cfg.slo);
+    // admission rejections: never dispatched, so the collect loop below
+    // must not wait for their completions
+    let mut rejected = 0usize;
     // serving clock starts after engine compilation/calibration
     let serve_start = clock.now();
     for req in &requests {
@@ -662,6 +682,20 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
             thread::sleep(std::time::Duration::from_millis(5));
             loads = fleet.placeable_digests();
         }
+        // SLO-aware admission mirror of the virtual executor's gate
+        // (`exec::host::on_arrival`): same predicate, same digest view the
+        // policy is about to read — batch-class work bounces when every
+        // placeable instance is saturated, so interactive arrivals keep
+        // finding headroom instead of queueing behind a deferrable burst.
+        if cfg.admission
+            && req.slo.is_some()
+            && !req.interactive()
+            && fleet_saturated(&loads, PREFILL_BACKLOG_BUDGET)
+        {
+            collector.on_reject(req);
+            rejected += 1;
+            continue;
+        }
         let placement = policy.place(req, &loads, &profile);
         // …and the same span clamping / flag derivation (exec::submit)
         let plan = plan_submission(&placement, req);
@@ -702,7 +736,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     let mut iter_lat_n = 0u64;
     let mut replaced_requests = 0u64;
     let mut drained_gated_in_place = 0u64;
-    while done < n_requests {
+    while done < n_requests - rejected {
         match up_rx.recv_timeout(std::time::Duration::from_secs(120)) {
             Ok(UpMsg::Token { request, arrival, at }) => collector.on_token(request, arrival, at),
             Ok(UpMsg::Done { request }) => {
@@ -854,6 +888,7 @@ fn instance_loop(id: InstanceId, rx: mpsc::Receiver<InstMsg>, ctx: &SpawnCtx) ->
             max_prefill_tokens: 128,
             fixed_budget: None,
             slo_target: 0.85,
+            priority: false,
         },
         profile,
     );

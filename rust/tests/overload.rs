@@ -1,0 +1,192 @@
+//! Overload-survival integration tests (DESIGN.md §Overload): the
+//! conservation ledger under randomized overload schedules — every
+//! offered request is completed, shed, or rejected, never lost — the
+//! interactive P99-TTFT ordering that SLO-aware admission buys at every
+//! swept load point, the class selectivity of the gate (batch work is
+//! turned away, interactive work never is), and same-seed bit-identity
+//! of the Summary and per-class rejection counters.
+
+use dynaserve::costmodel::LlmSpec;
+use dynaserve::experiments::runners::{build_executor_overload, ExecutorKind, System};
+use dynaserve::metrics::{ClassSummary, SloConfig};
+use dynaserve::sim::Simulator;
+use dynaserve::util::proptest_lite::check;
+use dynaserve::workload::Scenario;
+
+/// One DynaServe overload cell on the exact-metrics path (bit-stable
+/// percentiles), with the two overload defenses armed independently.
+fn overload_cell(admission: bool, priority: bool) -> Simulator {
+    let llm = LlmSpec::qwen25_14b();
+    build_executor_overload(
+        ExecutorKind::Sim,
+        System::DynaServe,
+        &llm,
+        SloConfig::default(),
+        true,
+        admission,
+        priority,
+    )
+}
+
+/// The admission gate's class predicate, re-derived from the scored
+/// per-class rows: a latency class with a tight (≤ 1 s) TTFT target.
+fn interactive(c: &ClassSummary) -> bool {
+    c.ttft_slo.is_some_and(|t| t <= 1.0)
+}
+
+/// Worst interactive-class P99 TTFT of a finished run.
+fn interactive_p99_ttft(classes: &[ClassSummary]) -> f64 {
+    classes
+        .iter()
+        .filter(|c| interactive(c))
+        .map(|c| c.p99_ttft)
+        .fold(f64::NAN, f64::max)
+}
+
+/// The issue's core safety property: overload may degrade service, it
+/// may never lose a request silently. Under random load multipliers,
+/// window lengths, and defense settings, on both overload scenarios:
+/// offered == completed + shed + rejected, with nothing left resident,
+/// the collector's ledger in agreement with the Summary counter, and
+/// the per-class rejection counts partitioning the global one exactly.
+#[test]
+fn no_request_silently_lost_under_random_overload_schedules() {
+    check("random overload schedules conserve requests", 12, |rng| {
+        let base = if rng.bool(0.5) {
+            Scenario::overload_steady()
+        } else {
+            Scenario::flash_crowd()
+        };
+        // 0.5×–2× the scenario's (already past-capacity) offered load,
+        // over a shortened window so the suite stays CI-sized
+        let sc = base
+            .with_duration(10.0 + 10.0 * rng.f64())
+            .with_qps_scale(0.5 + 1.5 * rng.f64());
+        let admission = rng.bool(0.5);
+        let priority = rng.bool(0.5);
+        let seed = rng.next_u64();
+        let offered = sc.stream(seed).count();
+        assert!(offered > 0, "overload windows must offer work");
+
+        let mut ex = overload_cell(admission, priority);
+        let s = ex.run_stream(sc.stream(seed));
+        assert_eq!(ex.stuck_requests(), 0, "segments left resident after the run");
+        assert_eq!(
+            s.completed + s.shed_requests as usize + s.rejected_requests as usize,
+            offered,
+            "request(s) lost: completed {} + shed {} + rejected {} != {offered} \
+             (scenario {}, admission={admission}, priority={priority})",
+            s.completed,
+            s.shed_requests,
+            s.rejected_requests,
+            sc.name
+        );
+        if !admission {
+            assert_eq!(s.rejected_requests, 0, "the gate must be inert when disarmed");
+        }
+        assert_eq!(
+            s.rejected_requests,
+            ex.collector.rejected_requests(),
+            "Summary and collector disagree on the rejection ledger"
+        );
+
+        let classes = ex.collector.class_summaries(s.duration);
+        let by_class: usize = classes.iter().map(|c| c.rejected).sum();
+        assert_eq!(
+            by_class as u64, s.rejected_requests,
+            "per-class rejection counts must partition the global counter"
+        );
+        for c in &classes {
+            if interactive(c) {
+                assert_eq!(
+                    c.rejected, 0,
+                    "admission control must never turn away interactive work"
+                );
+            }
+        }
+    });
+}
+
+/// The graceful-degradation ordering the gate exists to buy, pinned at
+/// every swept load point: with priority batching held fixed, turning
+/// admission ON never worsens the interactive class's P99 TTFT. Below
+/// the knee the gate is silent and the runs coincide; past it, shedding
+/// batch-class prefill backlog strictly relieves the interactive queue.
+#[test]
+fn admission_never_worsens_interactive_p99_ttft_across_the_sweep() {
+    let base = Scenario::overload_steady().with_duration(30.0);
+    for &scale in &[0.25, 0.75, 1.25] {
+        let sc = base.clone().with_qps_scale(scale);
+        let p99 = |admission: bool| {
+            let mut ex = overload_cell(admission, true);
+            let s = ex.run_stream(sc.stream(42));
+            assert_eq!(ex.stuck_requests(), 0, "scale {scale}: stuck segments");
+            let classes = ex.collector.class_summaries(s.duration);
+            (interactive_p99_ttft(&classes), s.rejected_requests)
+        };
+        let (on, rejected_on) = p99(true);
+        let (off, rejected_off) = p99(false);
+        assert_eq!(rejected_off, 0, "scale {scale}: disarmed gate rejected work");
+        assert!(
+            on.is_finite() && off.is_finite(),
+            "scale {scale}: interactive class produced no TTFT samples"
+        );
+        assert!(
+            on <= off + 1e-9,
+            "scale {scale}: admission-on interactive P99 TTFT {on:.4}s worse than \
+             admission-off {off:.4}s ({rejected_on} rejected)"
+        );
+    }
+}
+
+/// Deep overload end-to-end: sustained arrivals at 1.5× the scenario's
+/// already past-capacity rate must trip the gate — rejections land on
+/// the batch class only, the ledger still balances, and the run drains.
+#[test]
+fn deep_overload_rejects_batch_work_but_never_interactive() {
+    let sc = Scenario::overload_steady().with_duration(40.0).with_qps_scale(1.5);
+    let offered = sc.stream(42).count();
+    let mut ex = overload_cell(true, true);
+    let s = ex.run_stream(sc.stream(42));
+    assert_eq!(ex.stuck_requests(), 0);
+    assert!(
+        s.rejected_requests > 0,
+        "a 40 s steady run past fleet capacity must trip the admission gate"
+    );
+    assert_eq!(
+        s.completed + s.shed_requests as usize + s.rejected_requests as usize,
+        offered
+    );
+    let classes = ex.collector.class_summaries(s.duration);
+    let batch_rejected: usize =
+        classes.iter().filter(|c| !interactive(c)).map(|c| c.rejected).sum();
+    assert_eq!(
+        batch_rejected as u64, s.rejected_requests,
+        "every rejection must land on a batch class"
+    );
+    for c in &classes {
+        if interactive(c) {
+            assert_eq!(c.rejected, 0, "interactive work was turned away");
+            assert!(c.completed > 0, "interactive class starved under overload");
+        }
+    }
+}
+
+/// Same-seed overload runs — admission gate and priority batching both
+/// armed — are bit-identical, Summary and per-class rejection counters
+/// included. The overload defenses are deterministic functions of the
+/// digest view; nothing about them may introduce nondeterminism.
+#[test]
+fn same_seed_overload_runs_bit_identical_counters_included() {
+    for name in ["overload-steady", "flash-crowd"] {
+        let sc = Scenario::by_name(name).expect("overload scenario exists").smoke();
+        let run = || {
+            let mut ex = overload_cell(true, true);
+            let s = ex.run_stream(sc.stream(42));
+            assert_eq!(ex.stuck_requests(), 0);
+            let classes = ex.collector.class_summaries(s.duration);
+            format!("{s:?} classes={classes:?} ledger={}", ex.collector.rejected_requests())
+        };
+        assert_eq!(run(), run(), "{name}: same-seed overload runs must be bit-identical");
+    }
+}

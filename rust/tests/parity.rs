@@ -22,7 +22,7 @@
 
 use dynaserve::costmodel::LlmSpec;
 use dynaserve::experiments::runners::{
-    build_executor, build_executor_exact, ExecutorKind, System,
+    build_executor, build_executor_exact, build_executor_overload, ExecutorKind, System,
 };
 use dynaserve::metrics::SloConfig;
 use dynaserve::workload::{poisson_workload, Scenario, TraceKind};
@@ -169,6 +169,45 @@ fn scale_event_trace_is_bit_identical_across_executors() {
 /// timeline included. Fault injection and crash recovery live in the
 /// shared lifecycle, not in a facade. Disagg is excluded for the same
 /// fixed-fleet reason as the scale-event test.
+/// Overload parity: an overload trace with the SLO-aware admission gate
+/// AND priority batching armed stays bit-identical through both facades
+/// — the rejection ledger (`Summary::rejected_requests`, per-class
+/// `rejected`) included. The gate runs at the placement seam of the
+/// shared host and the priority pass inside the shared runtime's
+/// `plan_batch`, so neither facade may see a different decision; a
+/// divergence here means one facade grew its own admission or batching
+/// path. Disagg is excluded for the usual fixed-fleet reason.
+#[test]
+fn overload_trace_is_bit_identical_across_executors() {
+    let sc = Scenario::by_name("overload-steady")
+        .expect("overload scenario exists")
+        .with_duration(20.0);
+    let requests = sc.generate(7);
+    assert!(!requests.is_empty());
+    let llm = LlmSpec::qwen25_14b();
+    for sys in [System::DynaServe, System::Coloc { chunk: 1024 }] {
+        let run = |kind: ExecutorKind| {
+            let mut ex =
+                build_executor_overload(kind, sys, &llm, SloConfig::default(), true, true, true);
+            let summary = ex.run(requests.clone());
+            let classes = ex.collector.class_summaries(summary.duration);
+            let rejected = ex.collector.rejected_requests();
+            (format!("{summary:?} ledger={rejected}"), format!("{classes:?}"), ex.stuck_requests())
+        };
+        let (sum_sim, cls_sim, stuck_sim) = run(ExecutorKind::Sim);
+        let (sum_live, cls_live, stuck_live) = run(ExecutorKind::LiveVirtual);
+        assert_eq!(
+            sum_sim,
+            sum_live,
+            "{}: overload summaries/rejection ledgers diverged between executors",
+            sys.name()
+        );
+        assert_eq!(cls_sim, cls_live, "{}: per-class rows diverged", sys.name());
+        assert_eq!(stuck_sim, 0, "{}: sim executor left stuck segments", sys.name());
+        assert_eq!(stuck_live, 0, "{}: live executor left stuck segments", sys.name());
+    }
+}
+
 #[test]
 fn fault_trace_is_bit_identical_across_executors() {
     let sc = Scenario::by_name("faulty-diurnal").expect("faulty scenario exists").smoke();
