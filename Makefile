@@ -4,7 +4,7 @@
 ARTIFACTS ?= artifacts
 PYTHON    ?= python3
 
-.PHONY: artifacts build test bench bench-1m experiments parity elastic faults overload clean
+.PHONY: artifacts build test bench bench-1m experiments parity elastic faults overload cache clean
 
 # Lower the TinyQwen step function to HLO text + params + manifest, and
 # snapshot the simulator bench rows to BENCH_sim.json so every artifact
@@ -46,6 +46,13 @@ faults:
 # (EXPERIMENTS.md §Overload). Emits results/overload.json.
 overload:
 	cargo run --release --bin experiments -- overload
+
+# Prefix-cache evaluation: cache on/off × multiturn/long-RAG scenarios ×
+# cache_weight, scored by hit rate, prefill tokens saved (priced in
+# GPU-seconds via the cost model), and interactive P99 TTFT vs the
+# cache-off twin (EXPERIMENTS.md §Cache). Emits results/cache.json.
+cache:
+	cargo run --release --bin experiments -- cache
 
 bench:
 	cargo bench --bench bench_schedulers

@@ -29,7 +29,7 @@ fn main() {
             id: InstanceId(id),
             work: work.clone(),
             kv_utilization: 0.4,
-            waiting: 0,
+            ..Default::default()
         })
         .collect();
     let loads: Vec<LoadDigest> = snaps.iter().map(LoadDigest::from_snapshot).collect();

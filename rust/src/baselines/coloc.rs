@@ -48,6 +48,7 @@ impl Policy for ColocPolicy {
             },
             beta: None,
             probes: 0,
+            cached: 0,
         }
     }
 }

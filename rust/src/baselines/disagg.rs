@@ -66,6 +66,7 @@ impl Policy for DisaggPolicy {
                 arrival: req.arrival,
             }),
             probes: 0,
+            cached: 0,
         }
     }
 }

@@ -14,7 +14,7 @@ use super::profile::ProfileTable;
 use super::router;
 use super::WorkItem;
 use crate::core::{Request, SplitDecision};
-use crate::kv::LinkSpec;
+use crate::kv::{LinkSpec, PREFIX_BLOCK};
 
 #[derive(Debug, Clone, Copy)]
 pub struct GlobalConfig {
@@ -33,6 +33,12 @@ pub struct GlobalConfig {
     /// Fraction of the transfer hidden behind compute by chunked KV
     /// transfer (§4.3); the residual is charged to β's probe.
     pub transfer_overlap: f64,
+    /// Cache-affinity weight for prefix-cache-aware placement
+    /// ([`GlobalScheduler::schedule_cached`]): candidate scores are base
+    /// drain time minus `cache_weight` × the profiled prefill time of the
+    /// candidate's matched prefix. 0 keeps placement purely load-based
+    /// even with the cache on (matched prefixes are still skipped).
+    pub cache_weight: f64,
 }
 
 impl Default for GlobalConfig {
@@ -45,6 +51,7 @@ impl Default for GlobalConfig {
             kv_bytes_per_token: 196_608.0, // qwen-14b
             link: LinkSpec::default(),
             transfer_overlap: 0.90,
+            cache_weight: 1.0,
         }
     }
 }
@@ -57,6 +64,9 @@ pub struct ScheduleOutcome {
     pub t_alpha: f64,
     pub t_beta: f64,
     pub probes: usize,
+    /// Matched cached-prefix tokens on the instance that executes the
+    /// request's head (block-aligned, < P); the submit path skips them.
+    pub cached: usize,
 }
 
 #[derive(Debug)]
@@ -65,11 +75,13 @@ pub struct GlobalScheduler {
     rr: usize,
     /// Reusable base-drain-time buffer (keeps `schedule` allocation-free).
     probe_buf: Vec<f64>,
+    /// Reuse-credited selection scores (base drain minus cache credit).
+    score_buf: Vec<f64>,
 }
 
 impl GlobalScheduler {
     pub fn new(cfg: GlobalConfig) -> Self {
-        GlobalScheduler { cfg, rr: 0, probe_buf: Vec::new() }
+        GlobalScheduler { cfg, rr: 0, probe_buf: Vec::new(), score_buf: Vec::new() }
     }
 
     fn transfer_penalty(&self, context_tokens: usize) -> f64 {
@@ -96,8 +108,32 @@ impl GlobalScheduler {
         loads: &[LoadDigest],
         profile: &ProfileTable,
     ) -> ScheduleOutcome {
+        // With no matches the credited scores equal the base drain times,
+        // so this is exactly the pre-cache decision (pinned by tests).
+        self.schedule_cached(req, loads, &[], profile)
+    }
+
+    /// Prefix-cache-aware Algorithm 1: identical to
+    /// [`schedule`](GlobalScheduler::schedule) except candidate selection
+    /// scores each instance by its base drain time *minus* the credited
+    /// reuse — `cache_weight` × the profiled prefill time of the
+    /// instance's matched prefix (per-token prefill cost from the
+    /// cost-model-seeded [`ProfileTable`]) — and the outcome reports the
+    /// matched prefix of the instance that executes the request's head,
+    /// for the submit path to skip. `matches[i]` is the matched-prefix
+    /// token count on `loads[i]` (missing entries read as 0); the drain
+    /// probes and the φ search are unchanged, so an all-zero `matches`
+    /// reproduces `schedule` bit for bit.
+    pub fn schedule_cached(
+        &mut self,
+        req: &Request,
+        loads: &[LoadDigest],
+        matches: &[usize],
+        profile: &ProfileTable,
+    ) -> ScheduleOutcome {
         assert!(!loads.is_empty());
         let l = req.predicted_len().max(1);
+        let match_of = |i: usize| matches.get(i).copied().unwrap_or(0);
         // Per-request SLO slack: a request carrying its own TBT target is
         // probed with that budget — a tighter target shrinks the virtual
         // per-pass prefill budget, lengthening predicted drain times under
@@ -119,14 +155,24 @@ impl GlobalScheduler {
                 t_alpha: t,
                 t_beta: t,
                 probes: 1,
+                cached: clamp_cached(match_of(0), req.prompt_len),
             };
         }
 
-        // Base drain time per instance; α on the emptier one.
+        // Base drain time per instance; α on the emptiest by credited
+        // score (drain minus cache credit — reuse pulls the pair toward
+        // instances already holding the request's prefix).
         self.probe_buf.clear();
         self.probe_buf
             .extend(loads.iter().map(|d| completion_time_digest(d, None, profile, pcfg)));
-        let (ai, bi) = router::pick_pair(&self.probe_buf, &mut self.rr);
+        self.score_buf.clear();
+        self.score_buf.extend(self.probe_buf.iter().enumerate().map(|(i, &t)| {
+            match match_of(i) {
+                0 => t,
+                m => t - self.cfg.cache_weight * profile.estimate(m, 0, 0),
+            }
+        }));
+        let (ai, bi) = router::pick_pair(&self.score_buf, &mut self.rr);
         let (alpha, beta) = (&loads[ai], &loads[bi]);
         let mut probes = loads.len();
 
@@ -163,6 +209,10 @@ impl GlobalScheduler {
         } else if l - s < self.cfg.min_span {
             s = l;
         }
+        // The head of the request (its prefill start) runs on α — or on β
+        // when the split snapped to 0 — so that instance's match is the
+        // one the submit path may skip.
+        let cached = clamp_cached(match_of(if s == 0 { bi } else { ai }), req.prompt_len);
         ScheduleOutcome {
             decision: SplitDecision {
                 ratio: s as f64 / l as f64,
@@ -173,6 +223,7 @@ impl GlobalScheduler {
             t_alpha: t1,
             t_beta: t2,
             probes,
+            cached,
         }
     }
 
@@ -206,6 +257,7 @@ impl GlobalScheduler {
                 t_alpha: t,
                 t_beta: t,
                 probes: 1,
+                cached: 0,
             };
         }
 
@@ -263,8 +315,16 @@ impl GlobalScheduler {
             t_alpha: t1,
             t_beta: t2,
             probes,
+            cached: 0,
         }
     }
+}
+
+/// Clamp a matched prefix for skipping: block-aligned and strictly inside
+/// the prompt, so the prefill tail that emits the first token — and at
+/// least one block of genuine work — always remains.
+fn clamp_cached(matched: usize, prompt_len: usize) -> usize {
+    (matched.min(prompt_len.saturating_sub(1)) / PREFIX_BLOCK) * PREFIX_BLOCK
 }
 
 fn split_point(phi: f64, l: usize) -> usize {
@@ -440,6 +500,57 @@ mod tests {
             o_tight.t_alpha,
             o_loose.t_alpha
         );
+    }
+
+    #[test]
+    fn zero_matches_reproduce_uncached_schedule() {
+        // schedule_cached with no matches must make the exact decision
+        // schedule makes (same rr evolution included) — the cache-off
+        // bit-identity guarantee at the scheduler level.
+        let p = profile();
+        let mut g1 = GlobalScheduler::new(GlobalConfig::default());
+        let mut g2 = GlobalScheduler::new(GlobalConfig::default());
+        let mut snaps = idle(3);
+        snaps[1].work = vec![WorkItem::pure_decode(512, 100)];
+        let loads = digests(&snaps);
+        for id in 0..4u64 {
+            let r = Request::new(id, 0.0, 700 + 64 * id as usize, 300);
+            let a = g1.schedule(&r, &loads, &p);
+            let b = g2.schedule_cached(&r, &loads, &[0, 0, 0], &p);
+            assert_eq!(a.decision, b.decision);
+            assert_eq!(b.cached, 0);
+        }
+    }
+
+    #[test]
+    fn cache_credit_steers_head_to_cached_instance() {
+        let p = profile();
+        let mut g = GlobalScheduler::new(GlobalConfig::default());
+        let loads = digests(&idle(2));
+        let mut r = req(1024, 1024);
+        r.prefix_group = Some(9);
+        r.shared_prefix = 512;
+        // instance 1 holds 512 matched tokens: the credit must pull the
+        // request's head there despite equal (idle) load
+        let out = g.schedule_cached(&r, &loads, &[0, 512], &p);
+        let head = if out.decision.split == 0 {
+            out.decision.beta_instance
+        } else {
+            out.decision.alpha_instance
+        };
+        assert_eq!(head, loads[1].id);
+        assert_eq!(out.cached, 512, "block-aligned match inside the prompt");
+    }
+
+    #[test]
+    fn cached_is_clamped_inside_the_prompt() {
+        let p = profile();
+        let mut g = GlobalScheduler::new(GlobalConfig::default());
+        let loads = digests(&idle(1));
+        // match covers the whole prompt: the prefill tail must survive
+        let out = g.schedule_cached(&req(256, 64), &loads, &[4096], &p);
+        assert!(out.cached < 256);
+        assert_eq!(out.cached % crate::kv::PREFIX_BLOCK, 0);
     }
 
     #[test]

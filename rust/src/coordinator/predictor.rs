@@ -27,6 +27,9 @@ pub struct InstanceSnapshot {
     pub kv_utilization: f64,
     /// Segments queued for KV admission (capacity backpressure depth).
     pub waiting: usize,
+    /// Reusable cached-prefix tokens resident on the instance
+    /// (`kv::prefix`; 0 while the cache is disabled).
+    pub cached_tokens: usize,
 }
 
 impl InstanceSnapshot {
@@ -71,6 +74,11 @@ pub struct LoadDigest {
     pub waiting: usize,
     /// KV pool utilization in [0,1].
     pub kv_utilization: f64,
+    /// Compact `cached_prefix` digest: reusable cached tokens resident on
+    /// the instance (`kv::prefix`). Published for diagnostics and
+    /// cache-pressure telemetry; placement scoring uses the per-request
+    /// matched-prefix probe, not this aggregate.
+    pub cached_tokens: usize,
 }
 
 impl LoadDigest {
@@ -85,6 +93,7 @@ impl LoadDigest {
             id: s.id,
             kv_utilization: s.kv_utilization,
             waiting: s.waiting,
+            cached_tokens: s.cached_tokens,
             ..Default::default()
         };
         for w in &s.work {
@@ -445,6 +454,7 @@ mod tests {
             ],
             kv_utilization: 0.25,
             waiting: 2,
+            cached_tokens: 0,
         };
         let d = LoadDigest::from_snapshot(&snap);
         assert_eq!(d.id, InstanceId(3));
@@ -480,7 +490,7 @@ mod tests {
         let cfg = PredictorConfig::default();
         let items: Vec<WorkItem> = (0..12).map(|_| WorkItem::pure_decode(800, 150)).collect();
         let exact = completion_time(&items, &p, &cfg);
-        let snap = InstanceSnapshot { id: InstanceId(0), work: items, kv_utilization: 0.0, waiting: 0 };
+        let snap = InstanceSnapshot { id: InstanceId(0), work: items, ..Default::default() };
         let approx =
             completion_time_digest(&LoadDigest::from_snapshot(&snap), None, &p, &cfg);
         assert!(
@@ -497,14 +507,12 @@ mod tests {
         let small = InstanceSnapshot {
             id: InstanceId(0),
             work: vec![WorkItem { prefill_remaining: 512, context: 0, decode_remaining: 32 }],
-            kv_utilization: 0.0,
-            waiting: 0,
+            ..Default::default()
         };
         let big = InstanceSnapshot {
             id: InstanceId(0),
             work: vec![WorkItem { prefill_remaining: 4096, context: 0, decode_remaining: 256 }],
-            kv_utilization: 0.0,
-            waiting: 0,
+            ..Default::default()
         };
         let ts = completion_time_digest(&LoadDigest::from_snapshot(&small), None, &p, &cfg);
         let tb = completion_time_digest(&LoadDigest::from_snapshot(&big), None, &p, &cfg);
@@ -528,7 +536,7 @@ mod tests {
                 decode_remaining: 200 + i,
             })
             .collect();
-        let snap = InstanceSnapshot { id: InstanceId(0), work, kv_utilization: 0.0, waiting: 0 };
+        let snap = InstanceSnapshot { id: InstanceId(0), work, ..Default::default() };
         let d = LoadDigest::from_snapshot(&snap);
         let t0 = std::time::Instant::now();
         let n = 1000;

@@ -73,6 +73,14 @@ pub struct Request {
     /// This request's own latency targets; None = the pool-wide default
     /// SLO configured on the metrics collector.
     pub slo: Option<SloTarget>,
+    /// KV-reuse lineage (conversation / shared-document id): requests with
+    /// the same group share the leading `shared_prefix` tokens of their
+    /// streams verbatim, so resident KV for those tokens is reusable
+    /// across them (`kv::prefix`). None = no cross-request sharing.
+    pub prefix_group: Option<u64>,
+    /// How many leading tokens of this request's token stream belong to
+    /// the group-shared prefix (0 when `prefix_group` is None).
+    pub shared_prefix: usize,
 }
 
 impl Request {
@@ -85,7 +93,17 @@ impl Request {
             predicted_decode: decode_len,
             class: 0,
             slo: None,
+            prefix_group: None,
+            shared_prefix: 0,
         }
+    }
+
+    /// Tag the request with a KV-reuse lineage (builder-style; used by the
+    /// scenario generator for multi-turn / shared-document classes).
+    pub fn with_prefix(mut self, group: u64, shared_prefix: usize) -> Self {
+        self.prefix_group = Some(group);
+        self.shared_prefix = shared_prefix;
+        self
     }
 
     /// Tag the request with a traffic class and that class's SLO targets

@@ -181,6 +181,19 @@ impl InstanceSpec {
         t
     }
 
+    /// Mean per-token prefill cost (GPU-seconds/token) over an `n`-token
+    /// prompt — the unit price `experiments cache` uses to convert the
+    /// aggregate prefill-tokens-saved of a prefix-cache run into
+    /// estimated GPU-seconds of compute saved (DESIGN.md §Prefix cache).
+    /// An estimate by construction: the skipped spans are the *heads* of
+    /// their prompts, so pricing them at the mean over a representative
+    /// prompt length slightly overstates the saving (early chunks attend
+    /// over less context and are cheaper).
+    pub fn prefill_cost_per_token(&self, n: usize) -> f64 {
+        let n = n.max(1);
+        self.prefill_time(n) / n as f64
+    }
+
     /// Time for one decode token at context `ctx` in a batch of `n` decodes.
     pub fn decode_step_time(&self, n: usize, ctx: usize) -> f64 {
         self.iteration_cost(&BatchShape {
@@ -213,6 +226,18 @@ mod tests {
         assert!(c.compute_time > c.memory_time, "{c:?}");
         // Qwen-14B 2048-token chunk on one A100: paper regime is ~200-350ms
         assert!(c.latency > 0.15 && c.latency < 0.45, "latency={}", c.latency);
+    }
+
+    #[test]
+    fn prefill_cost_per_token_prices_the_cache_saving() {
+        let inst = a100_14b();
+        let per_tok = inst.prefill_cost_per_token(2048);
+        assert!(per_tok > 0.0 && per_tok.is_finite());
+        assert!((per_tok - inst.prefill_time(2048) / 2048.0).abs() < 1e-15);
+        // longer prompts attend over more context: mean unit price rises
+        assert!(inst.prefill_cost_per_token(8192) > per_tok);
+        // degenerate input is defined (no division by zero)
+        assert!(inst.prefill_cost_per_token(0).is_finite());
     }
 
     #[test]

@@ -150,6 +150,16 @@ pub struct ExecConfig {
     /// segments from their last durable point; false sheds them — the
     /// ablation baseline of the `experiments faults` degradation curve.
     pub recovery: bool,
+    /// Cross-request prefix caching (DESIGN.md §Prefix cache): every
+    /// instance keeps a radix index over its resident KV; arrivals with a
+    /// shared-prefix lineage probe it, placement credits the matched
+    /// prefix ([`Policy::place_cached`]), and the submit plan skips the
+    /// matched tokens (prefill starts at the match boundary). Cached KV
+    /// lives strictly in capacity *headroom* — the admission meter never
+    /// sees it — so runs with the cache off are bit-identical to builds
+    /// without it. Default off. The exact-snapshot reference path stays
+    /// cache-oblivious (placement credit applies on the digest path).
+    pub cache: bool,
     /// Bounded retries with exponential backoff for failed α→β handoff
     /// transfers (shared with the live server; DESIGN.md §Fault
     /// tolerance). Ignored — one attempt only — when `recovery` is off.
@@ -178,6 +188,7 @@ impl ExecConfig {
                 max_instances: 64,
                 admission: false,
                 recovery: true,
+                cache: false,
                 retry: RetryPolicy::default(),
             },
         }
@@ -267,6 +278,13 @@ impl ExecConfigBuilder {
     /// Enable/disable crash recovery (see [`ExecConfig::recovery`]).
     pub fn recovery(mut self, on: bool) -> Self {
         self.cfg.recovery = on;
+        self
+    }
+
+    /// Enable/disable cross-request prefix caching (see
+    /// [`ExecConfig::cache`]).
+    pub fn cache(mut self, on: bool) -> Self {
+        self.cfg.cache = on;
         self
     }
 
@@ -415,9 +433,14 @@ impl VirtualExecutor {
             }
             lc.slo = cfg.slo.tbt;
             let (spec, prof) = (cfg.spec.clone(), profile.clone());
+            let cache = cfg.cache;
             // the bootstrap fleet is active at t = 0 (no warm-up)
             cluster.add_instance(0.0, 0.0, |id| {
-                InstanceRuntime::new(id, spec, LocalScheduler::new(lc, prof))
+                let mut rt = InstanceRuntime::new(id, spec, LocalScheduler::new(lc, prof));
+                if cache {
+                    rt.enable_prefix_cache();
+                }
+                rt
             });
         }
         let transport = ModeledTransport::new(
@@ -608,16 +631,19 @@ impl VirtualExecutor {
     }
 
     /// Per-instance residue: `(id, resident segments, KV-admission
-    /// waiting depth)` for every member still holding segments — the
-    /// drilled-down view [`crate::experiments::runners::warn_if_stuck`]
-    /// prints (a wedged drain shows up here as one draining member that
-    /// never empties).
-    pub fn stuck_by_instance(&self) -> Vec<(InstanceId, usize, usize)> {
+    /// waiting depth, cached prefix tokens)` for every member still
+    /// holding segments — the drilled-down view
+    /// [`crate::experiments::runners::warn_if_stuck`] prints (a wedged
+    /// drain shows up here as one draining member that never empties; a
+    /// stuck claim shows up as cached tokens pinned on the member).
+    pub fn stuck_by_instance(&self) -> Vec<(InstanceId, usize, usize, usize)> {
         self.cluster
             .members()
             .iter()
             .filter(|m| !m.runtime.is_empty())
-            .map(|m| (m.id, m.runtime.len(), m.runtime.digest().waiting))
+            .map(|m| {
+                (m.id, m.runtime.len(), m.runtime.digest().waiting, m.runtime.cached_tokens())
+            })
             .collect()
     }
 
@@ -638,8 +664,13 @@ impl VirtualExecutor {
         let mut lc = self.cfg.local;
         lc.slo = self.cfg.slo.tbt;
         let (spec, prof) = (self.cfg.spec.clone(), self.profile.clone());
+        let cache = self.cfg.cache;
         let id = self.cluster.add_instance(now, self.cfg.warmup, |id| {
-            InstanceRuntime::new(id, spec, LocalScheduler::new(lc, prof))
+            let mut rt = InstanceRuntime::new(id, spec, LocalScheduler::new(lc, prof));
+            if cache {
+                rt.enable_prefix_cache();
+            }
+            rt
         });
         Some(id)
     }
@@ -986,6 +1017,12 @@ impl VirtualExecutor {
     /// only the not-yet-emitted output work, so no token is ever emitted
     /// twice. An α keeps its handoff address; a β rebuilt this way no
     /// longer needs a transfer at all.
+    ///
+    /// With the prefix cache on, the re-placement consults the survivor's
+    /// prefix index first: a matched shared prefix is claimed there and
+    /// the re-prefill starts at the match boundary instead of token 0, so
+    /// only the genuinely lost tokens count toward
+    /// `recomputed_prefill_tokens`.
     fn replace_from_scratch(&mut self, seg: Segment, now: f64, touched: &mut Vec<InstanceId>) {
         let Some(target) = self.least_loaded_target(now) else {
             // unreachable while the cluster guards at-least-one-survivor,
@@ -993,11 +1030,24 @@ impl VirtualExecutor {
             self.shed(seg.request);
             return;
         };
+        let full = seg.work.context + seg.work.prefill_remaining;
+        // block-aligned and < full, so the fresh segment always keeps at
+        // least one prefill token (lookup floors to PREFIX_BLOCK multiples)
+        let matched = match (self.cfg.cache, seg.prefix_group) {
+            (true, Some(group)) => {
+                let want = seg.shared_prefix.min(full.saturating_sub(1));
+                self.cluster
+                    .runtime(target)
+                    .map(|r| r.prefix_lookup(group, want))
+                    .unwrap_or(0)
+            }
+            _ => 0,
+        };
         let mut fresh = Segment::from_parts(
             seg.request,
             seg.arrival,
-            0,
-            seg.work.context + seg.work.prefill_remaining,
+            matched,
+            full - matched,
             seg.work.decode_remaining,
             seg.emits_first_token && seg.work.prefill_remaining > 0,
             seg.last_segment,
@@ -1006,7 +1056,25 @@ impl VirtualExecutor {
         fresh.beta_dest = seg.beta_dest;
         fresh.track_kv_history = seg.track_kv_history;
         fresh.interactive = seg.interactive;
-        self.recovery.recomputed_prefill_tokens += seg.work.context as u64;
+        fresh.prefix_group = seg.prefix_group;
+        fresh.shared_prefix = seg.shared_prefix;
+        fresh.cached_prefix = matched;
+        if fresh.track_kv_history && matched > 0 {
+            // the claimed prefix is context a later handoff must still ship
+            fresh.kv_history.push(KvSpan { t0: now, t1: now, tokens: matched, decode_run: false });
+        }
+        if matched > 0 {
+            let group = seg.prefix_group.expect("matched > 0 implies a lineage group");
+            let granted = self
+                .cluster
+                .runtime_mut(target, now)
+                .expect("recovery target is live")
+                .claim_prefix(group, matched, now);
+            debug_assert_eq!(granted, matched, "recovery claim fell short of its probe");
+            self.recovery.resumed_from_cache += 1;
+        }
+        self.recovery.recomputed_prefill_tokens +=
+            seg.work.context.saturating_sub(matched) as u64;
         self.cluster
             .runtime_mut(target, now)
             .expect("recovery target is live")
@@ -1233,14 +1301,61 @@ impl VirtualExecutor {
                     m.id
                 );
             }
+            // Prefix-cache probe: matched cached-prefix tokens per
+            // candidate, aligned with `loads`. Empty — the pre-cache
+            // `place` call, bit-identical — when the cache is off or the
+            // request carries no shared-prefix lineage.
+            let matches: Vec<usize> = if self.cfg.cache {
+                match crate::kv::prefix::lineage(&req) {
+                    Some((group, _)) => {
+                        let want = crate::kv::prefix::matchable_prompt(&req);
+                        let (loads, cluster) = (&self.loads, &self.cluster);
+                        loads
+                            .iter()
+                            .map(|d| {
+                                cluster
+                                    .runtime(d.id)
+                                    .map(|r| r.prefix_lookup(group, want))
+                                    .unwrap_or(0)
+                            })
+                            .collect()
+                    }
+                    None => Vec::new(),
+                }
+            } else {
+                Vec::new()
+            };
             let t0 = Instant::now();
-            let p = self.policy.place(&req, &self.loads, &self.profile);
+            let p = if matches.is_empty() {
+                self.policy.place(&req, &self.loads, &self.profile)
+            } else {
+                self.policy.place_cached(&req, &self.loads, &matches, &self.profile)
+            };
             self.sched_overhead.push(t0.elapsed().as_secs_f64());
             p
         };
 
         // One clamping path for both executors (exec::submit).
         let plan = plan_submission(&placement, &req);
+        // Pin the matched prefix on the head instance for the segment's
+        // lifetime (released on evict). The probe and the claim sit in the
+        // same arrival event, so nothing can evict the match in between.
+        if plan.alpha.cached > 0 {
+            if let Some(group) = req.prefix_group {
+                let granted = self
+                    .cluster
+                    .runtime_mut(plan.alpha.instance, now)
+                    .expect("placement targets a live instance")
+                    .claim_prefix(group, plan.alpha.cached, now);
+                debug_assert_eq!(
+                    granted, plan.alpha.cached,
+                    "claimed prefix fell short of the placement-time match"
+                );
+            }
+        }
+        if self.cfg.cache && crate::kv::prefix::lineage(&req).is_some() {
+            self.collector.on_cache(&req, plan.alpha.cached);
+        }
         let a_inst = plan.alpha.instance;
         let a_key = self
             .cluster

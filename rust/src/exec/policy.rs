@@ -18,6 +18,10 @@ pub struct Placement {
     pub beta: Option<MicroRequest>,
     /// Probe count (telemetry; Table 3).
     pub probes: usize,
+    /// Matched cached-prefix tokens on the head segment's instance
+    /// (block-aligned, < P; 0 without the prefix cache). The submit path
+    /// clamps and skips them ([`crate::exec::submit::plan_submission`]).
+    pub cached: usize,
 }
 
 pub trait Policy: Send {
@@ -47,6 +51,22 @@ pub trait Policy: Send {
         let loads: Vec<LoadDigest> = snapshots.iter().map(LoadDigest::from_snapshot).collect();
         self.place(req, &loads, profile)
     }
+
+    /// Prefix-cache-aware placement: `matches[i]` is the matched cached
+    /// prefix (tokens) resident on `loads[i]` for this request. The
+    /// default ignores the matches — baselines stay cache-oblivious — and
+    /// policies that override it must reproduce `place` exactly when all
+    /// matches are zero (the cache-off bit-identity contract).
+    fn place_cached(
+        &mut self,
+        req: &Request,
+        loads: &[LoadDigest],
+        matches: &[usize],
+        profile: &ProfileTable,
+    ) -> Placement {
+        let _ = matches;
+        self.place(req, loads, profile)
+    }
 }
 
 /// DynaServe's Adaptive Request Partitioning and Scheduling (§3–§4):
@@ -65,13 +85,15 @@ impl DynaServePolicy {
 fn outcome_to_placement(out: ScheduleOutcome, req: &Request) -> Placement {
     let (alpha, beta) = out.decision.to_micro_requests(req);
     match (alpha, beta) {
-        (Some(a), b) => Placement { alpha: a, beta: b, probes: out.probes },
+        (Some(a), b) => Placement { alpha: a, beta: b, probes: out.probes, cached: out.cached },
         // split == 0: the whole request is "β" — normalize so callers
-        // always have an alpha segment.
+        // always have an alpha segment. (The scheduler already reported
+        // `cached` for the β instance in this case.)
         (None, Some(b)) => Placement {
             alpha: MicroRequest { role: Role::Alpha, ..b },
             beta: None,
             probes: out.probes,
+            cached: out.cached,
         },
         (None, None) => unreachable!("empty request"),
     }
@@ -98,6 +120,16 @@ impl Policy for DynaServePolicy {
         profile: &ProfileTable,
     ) -> Placement {
         outcome_to_placement(self.sched.schedule_exact(req, snapshots, profile), req)
+    }
+
+    fn place_cached(
+        &mut self,
+        req: &Request,
+        loads: &[LoadDigest],
+        matches: &[usize],
+        profile: &ProfileTable,
+    ) -> Placement {
+        outcome_to_placement(self.sched.schedule_cached(req, loads, matches, profile), req)
     }
 }
 

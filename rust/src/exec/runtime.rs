@@ -50,6 +50,7 @@ use crate::coordinator::{InstanceSnapshot, LoadDigest, LocalScheduler};
 use crate::core::{InstanceId, RequestId};
 use crate::costmodel::InstanceSpec;
 use crate::exec::transport::{Handoff, HandoffDisposition, Transport};
+use crate::kv::prefix::PrefixIndex;
 use crate::metrics::Collector;
 
 /// Packed arena key: `(generation << 32) | slot_index`.
@@ -133,6 +134,14 @@ pub struct Segment {
     /// strictly FCFS either way). Default false — legacy traces and
     /// priority-off runs are bit-identical to the pre-overload scheduler.
     pub interactive: bool,
+    /// KV-reuse lineage carried from the request (`kv::prefix`); None =
+    /// no cross-request sharing.
+    pub prefix_group: Option<u64>,
+    /// Leading tokens of the request's stream in the group-shared prefix.
+    pub shared_prefix: usize,
+    /// Already-resident prefix tokens this segment claimed and skips
+    /// re-prefilling (the matched trie path stays pinned until eviction).
+    pub cached_prefix: usize,
 }
 
 impl Segment {
@@ -169,6 +178,9 @@ impl Segment {
             track_kv_history: false,
             arrival,
             interactive: false,
+            prefix_group: None,
+            shared_prefix: 0,
+            cached_prefix: 0,
         }
     }
 
@@ -382,6 +394,15 @@ pub struct InstanceRuntime {
     perf_factor: f64,
     scratch_decodes: Vec<DecodeEntry>,
     scratch_prefills: Vec<PrefillEntry>,
+    /// Radix index over resident reusable KV (`kv::prefix`). Cache blocks
+    /// occupy *headroom* (capacity minus metered reservations), never the
+    /// admission meter itself, so enabling the cache cannot change any
+    /// admission decision; `press` evicts back into headroom after every
+    /// reservation or insertion.
+    prefix: PrefixIndex,
+    /// Off by default: disabled runs never touch the index and stay
+    /// bit-identical to the pre-cache runtime.
+    cache_enabled: bool,
 }
 
 impl InstanceRuntime {
@@ -402,6 +423,68 @@ impl InstanceRuntime {
             perf_factor: 1.0,
             scratch_decodes: Vec::new(),
             scratch_prefills: Vec::new(),
+            prefix: PrefixIndex::new(),
+            cache_enabled: false,
+        }
+    }
+
+    /// Turn on the cross-request prefix cache: completed segments leave
+    /// reusable KV behind in the radix index, and placements may claim it
+    /// via [`claim_prefix`](InstanceRuntime::claim_prefix).
+    pub fn enable_prefix_cache(&mut self) {
+        self.cache_enabled = true;
+    }
+
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.cache_enabled
+    }
+
+    /// Reusable cached tokens resident right now (0 while disabled).
+    pub fn cached_tokens(&self) -> usize {
+        self.prefix.cached_tokens()
+    }
+
+    /// Longest cached prefix of `group`'s shared stream, considering at
+    /// most `tokens` leading tokens — the placement-scoring probe.
+    pub fn prefix_lookup(&self, group: u64, tokens: usize) -> usize {
+        if self.cache_enabled {
+            self.prefix.lookup(group, tokens)
+        } else {
+            0
+        }
+    }
+
+    /// Pin up to `tokens` of `group`'s cached prefix for an incoming
+    /// segment; returns the tokens actually granted (≤ the current
+    /// match). The segment must carry the grant as `cached_prefix` so
+    /// [`evict`](InstanceRuntime::evict) drops the pins.
+    pub fn claim_prefix(&mut self, group: u64, tokens: usize, now: f64) -> usize {
+        if self.cache_enabled {
+            self.prefix.claim(group, tokens, now)
+        } else {
+            0
+        }
+    }
+
+    /// Leader-side snapshot of the prefix index (live path).
+    pub fn prefix_view(&self) -> crate::kv::PrefixView {
+        self.prefix.view()
+    }
+
+    /// Free tokens the cache may occupy: capacity minus metered
+    /// reservations (claimed cached prefixes are double-counted while in
+    /// flight — conservative by construction).
+    fn cache_headroom(&self) -> usize {
+        self.kv.capacity().saturating_sub(self.kv.resident_tokens())
+    }
+
+    /// Record a retiring segment's reusable KV in the index and press the
+    /// cache back inside the meter's free headroom.
+    fn cache_residual(&mut self, lineage: Option<(u64, usize)>, now: f64) {
+        if let Some((group, upto)) = lineage {
+            self.prefix.insert(group, upto, now);
+            let headroom = self.cache_headroom();
+            self.prefix.press(headroom);
         }
     }
 
@@ -460,6 +543,12 @@ impl InstanceRuntime {
         let tokens = seq.end_exec;
         self.kv.reserve(tokens);
         self.order.push_back(key);
+        if self.cache_enabled {
+            // the reservation shrank the cache's headroom: evict unpinned
+            // LRU blocks until the cache fits in what's left
+            let headroom = self.cache_headroom();
+            self.prefix.press(headroom);
+        }
     }
 
     /// Admit from the waiting queue while capacity allows (FCFS).
@@ -495,6 +584,11 @@ impl InstanceRuntime {
         }
         // no-op for finished segments (already removed at completion time)
         self.load.remove(&seq.work);
+        if self.cache_enabled && seq.cached_prefix > 0 {
+            if let Some(group) = seq.prefix_group {
+                self.prefix.release(group, seq.cached_prefix);
+            }
+        }
         self.drain_waiting();
         Some(seq)
     }
@@ -700,10 +794,18 @@ impl InstanceRuntime {
     ) -> SegmentDisposition {
         let seq = self.get(key).expect("completed segment resident");
         let (request, last_segment, beta_dest) = (seq.request, seq.last_segment, seq.beta_dest);
+        // A completed segment held KV for [0, end_exec); its group-shared
+        // leading blocks stay resident as reusable cache after eviction.
+        let lineage = if self.cache_enabled {
+            seq.prefix_group.map(|g| (g, seq.shared_prefix.min(seq.end_exec)))
+        } else {
+            None
+        };
 
         if last_segment {
             sink.on_done(request);
             self.evict(key);
+            self.cache_residual(lineage, now);
             return SegmentDisposition::Finished;
         }
 
@@ -716,11 +818,14 @@ impl InstanceRuntime {
                 .unwrap_or_default();
             match transport.handoff(now, Handoff { request, source: key, dest, history }) {
                 HandoffDisposition::Scheduled { ready_at } => {
-                    // α's KV pages stay pinned until the transfer drains.
+                    // α's KV pages stay pinned until the transfer drains;
+                    // its shared prefix is reusable from completion on.
+                    self.cache_residual(lineage, now);
                     SegmentDisposition::Handoff { dest, ready_at }
                 }
                 HandoffDisposition::Detached => {
                     self.evict(key);
+                    self.cache_residual(lineage, now);
                     SegmentDisposition::Finished
                 }
                 HandoffDisposition::Failed { handoff } => {
@@ -737,13 +842,19 @@ impl InstanceRuntime {
         } else {
             // α with no β (β was cancelled by early-termination clamping)
             self.evict(key);
+            self.cache_residual(lineage, now);
             SegmentDisposition::Finished
         }
     }
 
     /// O(1) load digest for the global scheduler's probes.
     pub fn digest(&self) -> LoadDigest {
-        LoadDigest { id: self.id, kv_utilization: self.kv.utilization(), ..self.load }
+        LoadDigest {
+            id: self.id,
+            kv_utilization: self.kv.utilization(),
+            cached_tokens: self.prefix.cached_tokens(),
+            ..self.load
+        }
     }
 
     /// Exact snapshot for the reference scheduling path and for the
@@ -755,7 +866,13 @@ impl InstanceRuntime {
         let work: Vec<crate::coordinator::WorkItem> =
             self.arena.iter().filter(|s| !s.finished()).map(|s| s.work).collect();
         let waiting = self.waiting.iter().filter(|&&k| self.arena.get(k).is_some()).count();
-        InstanceSnapshot { id: self.id, work, kv_utilization: self.kv.utilization(), waiting }
+        InstanceSnapshot {
+            id: self.id,
+            work,
+            kv_utilization: self.kv.utilization(),
+            waiting,
+            cached_tokens: self.prefix.cached_tokens(),
+        }
     }
 
     /// Record utilization for a completed iteration.

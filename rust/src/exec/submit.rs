@@ -16,7 +16,8 @@
 
 use crate::core::{InstanceId, Request};
 use crate::exec::policy::Placement;
-use crate::exec::runtime::Segment;
+use crate::exec::runtime::{KvSpan, Segment};
+use crate::kv::PREFIX_BLOCK;
 
 /// One clamped segment, ready to materialize on its instance.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -34,6 +35,11 @@ pub struct SegmentPlan {
     pub emits_first: bool,
     /// Completing this segment completes the request.
     pub last_segment: bool,
+    /// Cached-prefix tokens skipped by this segment: when > 0 the span's
+    /// `start` already sits at the match boundary (prefill begins there;
+    /// the KV for `[0, cached)` is claimed from the instance's prefix
+    /// index instead of recomputed).
+    pub cached: usize,
 }
 
 impl SegmentPlan {
@@ -70,6 +76,7 @@ fn span_plan(
         decode: end.saturating_sub(start.max(prompt_len)),
         emits_first: start < prompt_len && end >= prompt_len,
         last_segment,
+        cached: 0,
     }
 }
 
@@ -86,17 +93,24 @@ pub fn plan_submission(placement: &Placement, req: &Request) -> SubmitPlan {
         .filter(|b| b.start < l_proc)
         .map(|b| span_plan(b.instance, b.start, l_proc, req.prompt_len, true));
     let alpha_end = if beta.is_some() { s } else { l_proc };
-    SubmitPlan {
-        alpha: span_plan(
-            placement.alpha.instance,
-            0,
-            alpha_end,
-            req.prompt_len,
-            beta.is_none(),
-        ),
-        beta,
-        probes: placement.probes,
+    let mut alpha =
+        span_plan(placement.alpha.instance, 0, alpha_end, req.prompt_len, beta.is_none());
+    // Prefix-cache skip: start the head segment's prefill at the match
+    // boundary. Re-clamped here against *true* lengths (the scheduler
+    // clamped in predicted space): block-aligned, inside the prompt, and
+    // strictly inside the span so at least one token of work remains.
+    let skip = (placement
+        .cached
+        .min(req.prompt_len.saturating_sub(1))
+        .min(alpha_end.saturating_sub(1))
+        / PREFIX_BLOCK)
+        * PREFIX_BLOCK;
+    if skip > 0 {
+        alpha.start = skip;
+        alpha.prefill = alpha.end.min(req.prompt_len) - skip;
+        alpha.cached = skip;
     }
+    SubmitPlan { alpha, beta, probes: placement.probes }
 }
 
 /// Materialize a planned segment. `gated` marks a β that must wait for
@@ -116,6 +130,19 @@ pub fn make_segment(req: &Request, sp: &SegmentPlan, gated: bool, track_kv: bool
     );
     seg.track_kv_history = track_kv;
     seg.interactive = req.interactive();
+    seg.prefix_group = req.prefix_group;
+    seg.shared_prefix = req.shared_prefix;
+    seg.cached_prefix = sp.cached;
+    if track_kv && sp.cached > 0 {
+        // the claimed prefix is resident from submission on: the α→β
+        // transfer timeline must see those tokens as instantly available
+        seg.kv_history.push(KvSpan {
+            t0: req.arrival,
+            t1: req.arrival,
+            tokens: sp.cached,
+            decode_run: false,
+        });
+    }
     seg
 }
 
@@ -145,6 +172,7 @@ mod tests {
                 arrival: 0.0,
             }),
             probes: 3,
+            cached: 0,
         }
     }
 
@@ -161,8 +189,52 @@ mod tests {
             decode: 49,
             emits_first: true,
             last_segment: true,
+            cached: 0,
         });
         assert_eq!(plan.probes, 3);
+    }
+
+    #[test]
+    fn cached_prefix_shifts_the_alpha_prefill_start() {
+        use crate::kv::PREFIX_BLOCK;
+        let req = Request::new(1, 0.0, 10 * PREFIX_BLOCK, 50);
+        let mut pl = placement(10 * PREFIX_BLOCK + 50, None, 10 * PREFIX_BLOCK + 50, 10 * PREFIX_BLOCK);
+        pl.cached = 4 * PREFIX_BLOCK;
+        let plan = plan_submission(&pl, &req);
+        let a = plan.alpha;
+        assert_eq!(a.start, 4 * PREFIX_BLOCK);
+        assert_eq!(a.cached, 4 * PREFIX_BLOCK);
+        assert_eq!(a.prefill, 6 * PREFIX_BLOCK, "skipped tokens leave the prefill budget");
+        assert_eq!(a.decode, 49);
+        assert!(a.emits_first && a.last_segment);
+        assert_eq!(a.prompt_range(req.prompt_len), 4 * PREFIX_BLOCK..10 * PREFIX_BLOCK);
+        // the materialized segment carries the claim and resident context
+        let seg = make_segment(&req, &a, false, true);
+        assert_eq!(seg.cached_prefix, 4 * PREFIX_BLOCK);
+        assert_eq!(seg.work.context, 4 * PREFIX_BLOCK);
+        assert_eq!(seg.work.prefill_remaining, 6 * PREFIX_BLOCK);
+        assert_eq!(seg.end_exec, 10 * PREFIX_BLOCK + 49);
+        assert_eq!(seg.kv_history.len(), 1, "claimed prefix seeds the transfer timeline");
+        assert_eq!(seg.kv_history[0].tokens, 4 * PREFIX_BLOCK);
+    }
+
+    #[test]
+    fn cached_skip_is_clamped_by_true_lengths() {
+        use crate::kv::PREFIX_BLOCK;
+        // match claims the whole prompt: the prefill tail must survive
+        let req = Request::new(1, 0.0, 2 * PREFIX_BLOCK, 10);
+        let mut pl = placement(2 * PREFIX_BLOCK + 10, None, 2 * PREFIX_BLOCK + 10, 2 * PREFIX_BLOCK);
+        pl.cached = 2 * PREFIX_BLOCK;
+        let plan = plan_submission(&pl, &req);
+        assert_eq!(plan.alpha.start, PREFIX_BLOCK);
+        assert!(plan.alpha.prefill >= 1);
+        // tiny α span: skip must stay strictly inside it
+        let req = Request::new(2, 0.0, PREFIX_BLOCK, 10);
+        let mut pl = placement(PREFIX_BLOCK, Some(PREFIX_BLOCK), 2 * PREFIX_BLOCK, PREFIX_BLOCK);
+        pl.cached = PREFIX_BLOCK;
+        let plan = plan_submission(&pl, &req);
+        assert_eq!(plan.alpha.start, 0, "sub-block remainder cannot be skipped");
+        assert_eq!(plan.alpha.cached, 0);
     }
 
     #[test]

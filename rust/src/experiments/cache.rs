@@ -1,0 +1,336 @@
+//! Prefix-cache sweep: what cross-request KV reuse buys (DESIGN.md
+//! §Prefix cache).
+//!
+//! Every cell serves one reuse-heavy scenario — the suite's `multi-turn`
+//! mix and the `multiturn-heavy` stress scenario (long conversations plus
+//! doc-pool RAG) — through the DynaServe system with the prefix cache
+//! off or on at a swept [`GlobalConfig::cache_weight`]
+//! ([`build_executor_cache`]). Cache-off cells are the exact pre-cache
+//! behaviour (bit-identity is pinned by `rust/tests/cache.rs`); weight 0
+//! keeps placement purely load-based while still skipping matched
+//! prefixes, and larger weights pull requests toward the instances
+//! already holding their conversation's KV.
+//!
+//! The acceptance shape: with the cache on, multi-turn traffic shows a
+//! nonzero cache hit rate and prefill-tokens-saved, and interactive-class
+//! P99 TTFT is no worse than the cache-off cell at the same seed (skipped
+//! prefill shortens the critical path; emitted tokens are unchanged —
+//! the cache-contract tests pin that). Saved prefill is also priced in
+//! estimated GPU-seconds via the cost model's per-token prefill cost
+//! ([`InstanceSpec::prefill_cost_per_token`]). Request conservation holds
+//! in every cell: offered == completed + shed + rejected (+ stuck).
+//!
+//! Usage:
+//!   experiments cache [--smoke] [--seed N] [--seeds N] [--duration S]
+//!                     [--exact-metrics]
+//!
+//! [`GlobalConfig::cache_weight`]: crate::coordinator::GlobalConfig::cache_weight
+//! [`build_executor_cache`]: crate::experiments::runners::build_executor_cache
+//! [`InstanceSpec::prefill_cost_per_token`]: crate::costmodel::InstanceSpec::prefill_cost_per_token
+
+use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+use crate::experiments::runners::{
+    build_executor_cache, mc_seeds, run_cells, sweep_threads, tp_for, warn_if_stuck, ExecutorKind,
+    System,
+};
+use crate::experiments::{mc_json, write_results};
+use crate::metrics::{ClassSummary, SloConfig, Summary};
+use crate::util::cli::{pct, Args, Table};
+use crate::util::json::{obj, Json};
+use crate::workload::Scenario;
+
+/// A class is interactive when it carries a tight TTFT bound — the same
+/// ≤ 1 s rule [`crate::core::Request::interactive`] applies per request.
+fn is_interactive(c: &ClassSummary) -> bool {
+    c.ttft_slo.is_some_and(|t| t <= 1.0)
+}
+
+/// One sweep point: the cache switch plus the placement-credit weight
+/// (meaningless when off; kept at 0 there for stable cell keys).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Mode {
+    cache: bool,
+    weight: f64,
+}
+
+impl Mode {
+    fn label(&self) -> String {
+        if self.cache { format!("on w={:.1}", self.weight) } else { "off".into() }
+    }
+}
+
+struct CellResult {
+    scenario: &'static str,
+    mode: Mode,
+    offered: usize,
+    summary: Summary,
+    classes: Vec<ClassSummary>,
+    stuck: usize,
+}
+
+impl CellResult {
+    fn interactive_p99_ttft(&self) -> f64 {
+        self.classes
+            .iter()
+            .filter(|c| is_interactive(c))
+            .map(|c| c.p99_ttft)
+            .fold(f64::NAN, f64::max)
+    }
+}
+
+/// The cache-off baseline cell for a scenario — the twin every credited
+/// cell's TTFT deltas and the verdicts are measured against.
+fn off_cell<'a>(head: &[&'a CellResult], scenario: &str) -> &'a CellResult {
+    head.iter()
+        .copied()
+        .find(|r| r.scenario == scenario && !r.mode.cache)
+        .expect("every scenario has its cache-off baseline cell")
+}
+
+fn run_cell(sc: &Scenario, mode: Mode, seed: u64, exact: bool) -> CellResult {
+    let llm = LlmSpec::qwen25_14b();
+    let mut ex = build_executor_cache(
+        ExecutorKind::Sim,
+        System::DynaServe,
+        &llm,
+        SloConfig::default(),
+        exact,
+        mode.cache,
+        mode.weight,
+    );
+    let offered = sc.stream(seed).count();
+    let summary = ex.run_stream(sc.stream(seed));
+    let classes = ex.collector.class_summaries(summary.duration);
+    let stuck = warn_if_stuck(
+        &format!("cache/{} {} seed {seed}", sc.name, mode.label()),
+        &ex,
+    );
+    CellResult { scenario: sc.name, mode, offered, summary, classes, stuck }
+}
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let seed = args.u64_or("seed", 42);
+    let seeds_n = (args.u64_or("seeds", 1).max(1)) as usize;
+    let exact = args.bool("exact-metrics");
+    let smoke = args.bool("smoke");
+
+    let mut scenarios: Vec<Scenario> = ["multi-turn", "multiturn-heavy"]
+        .iter()
+        .map(|n| Scenario::by_name(n).expect("cache sweep scenario exists"))
+        .collect();
+    for sc in scenarios.iter_mut() {
+        if smoke {
+            *sc = sc.clone().smoke();
+        }
+        if let Some(d) = args.get("duration").and_then(|s| s.parse::<f64>().ok()) {
+            *sc = sc.clone().with_duration(d);
+        }
+    }
+
+    // off is always the baseline column; weight 0 isolates the skip from
+    // the placement credit, larger weights add cache-affinity routing
+    let weights: &[f64] = if smoke { &[1.0] } else { &[0.0, 1.0, 4.0] };
+    let mut modes = vec![Mode { cache: false, weight: 0.0 }];
+    modes.extend(weights.iter().map(|&w| Mode { cache: true, weight: w }));
+    println!(
+        "Prefix-cache sweep — {} scenario(s) × cache {{off, on × {weights:?}}}, DynaServe \
+         2-instance fleet (seed {seed}, {seeds_n} seed(s))\n",
+        scenarios.len()
+    );
+
+    let seeds = mc_seeds(seed, seeds_n);
+    let cells: Vec<(usize, Mode, u64)> = (0..scenarios.len())
+        .flat_map(|si| {
+            modes
+                .iter()
+                .flat_map(|&m| seeds.iter().map(move |&s| (si, m, s)))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let all_results: Vec<CellResult> = run_cells(&cells, sweep_threads(), |&(si, m, s)| {
+        run_cell(&scenarios[si], m, s, exact)
+    });
+    // seed-0 result per (scenario, mode) feeds the table and the verdicts
+    let head: Vec<&CellResult> =
+        (0..cells.len() / seeds_n).map(|i| &all_results[i * seeds_n]).collect();
+
+    // estimated GPU-seconds of prefill compute behind the saved tokens
+    let llm = LlmSpec::qwen25_14b();
+    let spec = InstanceSpec::new(GpuSpec::a100(), llm.clone(), tp_for(&llm));
+    let per_tok = spec.prefill_cost_per_token(2048);
+
+    let mut t = Table::new([
+        "scenario", "cache", "offered", "completed", "hit rate", "saved tok", "GPU-s saved",
+        "inter. p99 TTFT", "Δ vs off", "attain %", "stuck",
+    ]);
+    let mut cell_objs = Vec::new();
+    for (i, r) in head.iter().enumerate() {
+        let per_seed = &all_results[i * seeds_n..(i + 1) * seeds_n];
+        let s = &r.summary;
+        let off = off_cell(&head, r.scenario);
+        let ttft_delta = r.interactive_p99_ttft() - off.interactive_p99_ttft();
+        let gpu_saved = s.prefill_tokens_saved as f64 * per_tok;
+        t.row([
+            r.scenario.to_string(),
+            r.mode.label(),
+            r.offered.to_string(),
+            s.completed.to_string(),
+            pct(s.cache_hit_rate),
+            s.prefill_tokens_saved.to_string(),
+            format!("{gpu_saved:.2}"),
+            format!("{:.0} ms", r.interactive_p99_ttft() * 1e3),
+            if r.mode.cache { format!("{:+.0} ms", ttft_delta * 1e3) } else { "—".into() },
+            pct(s.attainment),
+            r.stuck.to_string(),
+        ]);
+        // conservation: rejected/shed work is accounted, never lost
+        let conserved = r.offered
+            == s.completed + s.shed_requests as usize + s.rejected_requests as usize + r.stuck;
+        cell_objs.push(obj([
+            ("scenario", Json::from(r.scenario)),
+            ("cache", Json::from(r.mode.cache)),
+            ("cache_weight", Json::from(r.mode.weight)),
+            ("offered", Json::from(r.offered)),
+            (
+                "summary",
+                obj([
+                    ("completed", Json::from(s.completed)),
+                    ("rejected_requests", Json::from(s.rejected_requests as usize)),
+                    ("shed_requests", Json::from(s.shed_requests as usize)),
+                    ("total_tokens", Json::from(s.total_tokens)),
+                    ("good_tokens", Json::from(s.good_tokens)),
+                    ("goodput_tok_s", Json::from(s.goodput_tok_s)),
+                    ("attainment", Json::from(s.attainment)),
+                    ("p99_ttft", Json::from(s.p99_ttft)),
+                    ("cache_hit_rate", Json::from(s.cache_hit_rate)),
+                    ("prefill_tokens_saved", Json::from(s.prefill_tokens_saved as usize)),
+                    ("duration", Json::from(s.duration)),
+                ]),
+            ),
+            ("gpu_seconds_saved_est", Json::from(gpu_saved)),
+            (
+                "classes",
+                Json::Arr(
+                    r.classes
+                        .iter()
+                        .map(|c| {
+                            // per-class TTFT delta vs the cache-off cell
+                            // at the same seed (the ClassSummary itself
+                            // is cell-local and cannot carry it)
+                            let off_p99 = off
+                                .classes
+                                .iter()
+                                .find(|o| o.class == c.class)
+                                .map(|o| o.p99_ttft)
+                                .unwrap_or(f64::NAN);
+                            let delta = c.p99_ttft - off_p99;
+                            obj([
+                                ("class", Json::from(c.class)),
+                                ("interactive", Json::from(is_interactive(c))),
+                                ("completed", Json::from(c.completed)),
+                                ("goodput_tok_s", Json::from(c.goodput_tok_s)),
+                                ("p99_ttft", Json::from(c.p99_ttft)),
+                                (
+                                    "p99_ttft_delta_vs_off",
+                                    if delta.is_finite() { Json::from(delta) } else { Json::Null },
+                                ),
+                                ("ttft_attainment", Json::from(c.ttft_attainment)),
+                                ("cache_hit_rate", Json::from(c.cache_hit_rate)),
+                                (
+                                    "prefill_tokens_saved",
+                                    Json::from(c.prefill_tokens_saved as usize),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("stuck_requests", Json::from(r.stuck)),
+            ("conserved", Json::from(conserved)),
+            (
+                "mc",
+                obj([
+                    (
+                        "cache_hit_rate",
+                        mc_json(
+                            &per_seed.iter().map(|r| r.summary.cache_hit_rate).collect::<Vec<_>>(),
+                        ),
+                    ),
+                    (
+                        "interactive_p99_ttft",
+                        mc_json(
+                            &per_seed.iter().map(|r| r.interactive_p99_ttft()).collect::<Vec<_>>(),
+                        ),
+                    ),
+                    (
+                        "goodput_tok_s",
+                        mc_json(
+                            &per_seed.iter().map(|r| r.summary.goodput_tok_s).collect::<Vec<_>>(),
+                        ),
+                    ),
+                ]),
+            ),
+        ]));
+    }
+    t.print();
+
+    // ── verdicts ────────────────────────────────────────────────────────
+    // Per scenario, judged on the canonical credited cell (the largest
+    // swept weight): the cache must actually hit, actually save prefill,
+    // and leave interactive tail TTFT no worse than the off cell.
+    let mut verdicts = Vec::new();
+    let mut cache_pays = true;
+    for sc in &scenarios {
+        let off = off_cell(&head, sc.name);
+        let on = head
+            .iter()
+            .copied()
+            .filter(|r| r.scenario == sc.name && r.mode.cache && r.mode.weight > 0.0)
+            .last()
+            .expect("a credited cache-on cell per scenario");
+        let hits = on.summary.cache_hit_rate > 0.0;
+        let saves = on.summary.prefill_tokens_saved > 0;
+        let ttft_ok = on.interactive_p99_ttft() <= off.interactive_p99_ttft() + 1e-9;
+        cache_pays &= hits && saves && ttft_ok;
+        println!(
+            "{}: hit rate {} / {} tokens saved (≈{:.2} GPU-s) — interactive p99 TTFT \
+             {:.0} ms vs {:.0} ms off ({})",
+            sc.name,
+            pct(on.summary.cache_hit_rate),
+            on.summary.prefill_tokens_saved,
+            on.summary.prefill_tokens_saved as f64 * per_tok,
+            on.interactive_p99_ttft() * 1e3,
+            off.interactive_p99_ttft() * 1e3,
+            if ttft_ok { "no worse" } else { "REGRESSED" },
+        );
+        verdicts.push(obj([
+            ("scenario", Json::from(sc.name)),
+            ("judged_weight", Json::from(on.mode.weight)),
+            ("cache_hit_rate_positive", Json::from(hits)),
+            ("prefill_tokens_saved_positive", Json::from(saves)),
+            ("interactive_p99_ttft_no_worse", Json::from(ttft_ok)),
+        ]));
+    }
+    println!(
+        "\n{}",
+        if cache_pays {
+            "prefix cache pays on reuse-heavy traffic: hits, saved prefill, no TTFT regression"
+        } else {
+            "WARNING: cache verdict did not hold — inspect results/cache.json"
+        }
+    );
+
+    let artifact = obj([
+        ("seed", Json::from(seed as usize)),
+        ("seeds", Json::from(seeds_n)),
+        ("exact_metrics", Json::from(exact)),
+        ("smoke", Json::from(smoke)),
+        ("cache_weights", Json::Arr(weights.iter().map(|&w| Json::from(w)).collect())),
+        ("prefill_cost_per_token_s", Json::from(per_tok)),
+        ("cells", Json::Arr(cell_objs)),
+        ("verdicts", Json::Arr(verdicts)),
+        ("cache_pays", Json::from(cache_pays)),
+    ]);
+    write_results("cache", &artifact);
+    Ok(())
+}

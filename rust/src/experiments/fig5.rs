@@ -53,7 +53,7 @@ impl Policy for FixedSplitPolicy {
             instance: InstanceId(1),
             arrival: req.arrival,
         });
-        Placement { alpha, beta, probes: 0 }
+        Placement { alpha, beta, probes: 0, cached: 0 }
     }
 }
 

@@ -7,6 +7,7 @@
 //! roughly what factor, where crossovers fall) are the reproduction target,
 //! not the authors' testbed-exact values.
 
+pub mod cache;
 pub mod elastic;
 pub mod faults;
 pub mod fig1;
@@ -65,6 +66,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
             "overload",
             "graceful-degradation sweep: load multiplier x system x admission on/off",
             overload::run,
+        ),
+        (
+            "cache",
+            "prefix-cache sweep: cache on/off x multiturn/long-RAG x cache_weight",
+            cache::run,
         ),
     ]
 }

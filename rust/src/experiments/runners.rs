@@ -107,17 +107,7 @@ fn sim_parts(
         .expect("static experiment config is valid");
 
     let policy: Box<dyn Policy> = match system {
-        System::DynaServe => {
-            let gcfg = GlobalConfig {
-                kv_bytes_per_token: llm.kv_bytes_per_token(),
-                predictor: crate::coordinator::predictor::PredictorConfig {
-                    slo: slo.tbt,
-                    ..Default::default()
-                },
-                ..Default::default()
-            };
-            Box::new(DynaServePolicy::new(gcfg))
-        }
+        System::DynaServe => Box::new(dynaserve_policy(llm, slo, GlobalConfig::default().cache_weight)),
         System::Coloc { chunk } => {
             cfg.local = LocalConfig { fixed_budget: Some(chunk), ..LocalConfig::default() };
             Box::new(ColocPolicy::new())
@@ -132,6 +122,21 @@ fn sim_parts(
         }
     };
     (cfg, policy)
+}
+
+/// The standard DynaServe policy for an experiment cell, with an explicit
+/// cache-affinity weight (`GlobalConfig::cache_weight`; the default value
+/// is used everywhere the cache sweep isn't varying it).
+fn dynaserve_policy(llm: &LlmSpec, slo: SloConfig, cache_weight: f64) -> DynaServePolicy {
+    DynaServePolicy::new(GlobalConfig {
+        kv_bytes_per_token: llm.kv_bytes_per_token(),
+        predictor: crate::coordinator::predictor::PredictorConfig {
+            slo: slo.tbt,
+            ..Default::default()
+        },
+        cache_weight,
+        ..Default::default()
+    })
 }
 
 /// Build a simulator for `system` over two instances of `llm`
@@ -207,6 +212,34 @@ pub fn build_executor_overload(
     }
 }
 
+/// [`build_executor_exact`] with the prefix-cache knobs: `cache` arms the
+/// host's per-instance radix index (probe + reuse-credited placement +
+/// prefill skip — DESIGN.md §Prefix cache) and `cache_weight` tunes how
+/// strongly the DynaServe policy's candidate scoring credits a matched
+/// prefix (ignored by the cache-oblivious baselines). The `experiments
+/// cache` harness and the cache test suites build every cell here so
+/// both facades get identical knob wiring; `cache == false` cells are
+/// bit-identical to [`build_executor_exact`].
+pub fn build_executor_cache(
+    kind: ExecutorKind,
+    system: System,
+    llm: &LlmSpec,
+    slo: SloConfig,
+    exact_metrics: bool,
+    cache: bool,
+    cache_weight: f64,
+) -> Simulator {
+    let (mut cfg, mut policy) = sim_parts(system, llm, slo, exact_metrics);
+    cfg.cache = cache;
+    if system == System::DynaServe {
+        policy = Box::new(dynaserve_policy(llm, slo, cache_weight));
+    }
+    match kind {
+        ExecutorKind::Sim => Simulator::new(cfg, policy),
+        ExecutorKind::LiveVirtual => crate::server::virtual_executor(cfg, policy),
+    }
+}
+
 /// Warn (to stderr) when a finished run left segments resident — a
 /// scheduling deadlock that would otherwise masquerade as low goodput
 /// (or, for a horizon-truncated run, an under-sized `ExecConfig::horizon`).
@@ -231,10 +264,10 @@ pub fn warn_if_stuck(context: &str, sim: &Simulator) -> usize {
                  deadlock; goodput/attainment figures for this cell are invalid"
             );
         }
-        for (id, resident, waiting) in sim.stuck_by_instance() {
+        for (id, resident, waiting, cached) in sim.stuck_by_instance() {
             eprintln!(
                 "warning: {context}:   instance {id}: {resident} resident segment(s), \
-                 {waiting} waiting on KV admission"
+                 {waiting} waiting on KV admission, {cached} cached prefix token(s) resident"
             );
         }
         let in_place = sim.drain_gated_in_place();

@@ -2,7 +2,9 @@
 //! chunk-based cross-instance KV transfer (§4.3).
 
 pub mod block;
+pub mod prefix;
 pub mod transfer;
 
 pub use block::BlockAllocator;
+pub use prefix::{PrefixIndex, PrefixView, PREFIX_BLOCK};
 pub use transfer::{chunked_timeline, monolithic_timeline, LinkSpec, TransferEngine, TransferJob};

@@ -1,0 +1,398 @@
+//! Per-instance radix/prefix index over resident KV (cross-request reuse).
+//!
+//! The scenario engine emits requests whose prompts repeat earlier context
+//! verbatim — multi-turn follow-ups carry the whole prior conversation,
+//! long-RAG requests share retrieved documents. The simulator models token
+//! *counts*, not token ids, so prefix identity is synthesized: a request
+//! carries a `prefix_group` (the conversation / document lineage) and a
+//! `shared_prefix` length (how many leading tokens of its stream are the
+//! group-shared prefix). Block `i` of a group's shared stream gets a
+//! deterministic u64 key [`block_key`]`(group, i)`; equal keys ⇔ same
+//! logical KV block. The index is a radix trie over those keys, one node
+//! per resident [`PREFIX_BLOCK`]-token block.
+//!
+//! Lifecycle (driven by `exec::runtime::InstanceRuntime`):
+//! - **insert** when a segment completes on an instance — its KV stays
+//!   resident as reusable cache occupying *headroom* (capacity minus
+//!   metered reservations), never the admission meter itself, so enabling
+//!   the cache cannot change any admission decision;
+//! - **claim** when placement routes a matching request here — the matched
+//!   path is pinned so eviction cannot invalidate an in-flight skip;
+//! - **release** when the claiming segment leaves the instance;
+//! - **press** after every reservation / insertion — deterministic
+//!   LRU-by-last-touch eviction of unpinned leaves until the cache fits
+//!   back inside the meter's free headroom.
+//!
+//! Matches are block-granular: a request reuses `claim(..)` tokens of
+//! already-computed prefill (floor of the overlap to whole blocks).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::core::Request;
+
+/// Tokens per cache block; prefix matches are block-granular.
+pub const PREFIX_BLOCK: usize = 64;
+
+/// splitmix64 finalizer — deterministic and platform-independent, so the
+/// same lineage produces the same block keys in every facade and run.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Key of block `i` of prefix-group `group`'s shared token stream.
+pub fn block_key(group: u64, i: usize) -> u64 {
+    mix(group ^ mix(i as u64))
+}
+
+/// The (group, shared-token-count) lineage of a request's KV stream, or
+/// `None` when the request shares no prefix with anyone.
+pub fn lineage(req: &Request) -> Option<(u64, usize)> {
+    match req.prefix_group {
+        Some(g) if req.shared_prefix >= PREFIX_BLOCK => Some((g, req.shared_prefix)),
+        _ => None,
+    }
+}
+
+/// How many leading tokens of `req`'s *prompt* can match cached KV: the
+/// group-shared region, clamped so at least the prefill tail (the token
+/// that emits the first output) is always recomputed.
+pub fn matchable_prompt(req: &Request) -> usize {
+    match lineage(req) {
+        Some((_, shared)) => shared.min(req.prompt_len.saturating_sub(1)),
+        None => 0,
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    key: u64,
+    parent: usize,
+    /// Children by block key (lookup only — never iterated for ordering).
+    children: HashMap<u64, usize>,
+    /// Last claim/insert touch time (LRU eviction clock).
+    last_touch: f64,
+    /// Monotone touch counter breaking `last_touch` ties deterministically.
+    tick: u64,
+    /// In-flight segments relying on this block; pinned nodes never evict.
+    pins: u32,
+}
+
+/// Per-instance radix index over resident (reusable) KV blocks.
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    /// Slot 0 is the root sentinel; freed slots are recycled via `free`.
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    live: usize,
+    tick: u64,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        PrefixIndex {
+            nodes: vec![Some(Node {
+                key: 0,
+                parent: usize::MAX,
+                children: HashMap::new(),
+                last_touch: f64::NEG_INFINITY,
+                tick: 0,
+                pins: 0,
+            })],
+            free: Vec::new(),
+            live: 0,
+            tick: 0,
+        }
+    }
+
+    fn node(&self, i: usize) -> &Node {
+        self.nodes[i].as_ref().expect("live node")
+    }
+
+    fn node_mut(&mut self, i: usize) -> &mut Node {
+        self.nodes[i].as_mut().expect("live node")
+    }
+
+    /// Reusable cached tokens resident on this instance (whole blocks).
+    pub fn cached_tokens(&self) -> usize {
+        self.live * PREFIX_BLOCK
+    }
+
+    /// Record the first `tokens` tokens of `group`'s shared stream as
+    /// resident, creating missing blocks and touching the whole path.
+    pub fn insert(&mut self, group: u64, tokens: usize, now: f64) {
+        let blocks = tokens / PREFIX_BLOCK;
+        let mut at = 0usize;
+        for i in 0..blocks {
+            let key = block_key(group, i);
+            self.tick += 1;
+            let tick = self.tick;
+            at = match self.node(at).children.get(&key) {
+                Some(&c) => c,
+                None => {
+                    let slot = self.free.pop().unwrap_or_else(|| {
+                        self.nodes.push(None);
+                        self.nodes.len() - 1
+                    });
+                    self.nodes[slot] = Some(Node {
+                        key,
+                        parent: at,
+                        children: HashMap::new(),
+                        last_touch: now,
+                        tick,
+                        pins: 0,
+                    });
+                    self.node_mut(at).children.insert(key, slot);
+                    self.live += 1;
+                    slot
+                }
+            };
+            let n = self.node_mut(at);
+            n.last_touch = now;
+            n.tick = tick;
+        }
+    }
+
+    /// Longest resident prefix of `group`'s shared stream, in tokens,
+    /// considering at most the first `tokens` tokens. Read-only probe for
+    /// placement scoring.
+    pub fn lookup(&self, group: u64, tokens: usize) -> usize {
+        let mut at = 0usize;
+        let mut matched = 0usize;
+        for i in 0..tokens / PREFIX_BLOCK {
+            match self.node(at).children.get(&block_key(group, i)) {
+                Some(&c) => {
+                    at = c;
+                    matched += 1;
+                }
+                None => break,
+            }
+        }
+        matched * PREFIX_BLOCK
+    }
+
+    /// Like [`lookup`], but pins and touches every matched block so the
+    /// claiming segment's skipped prefix cannot be evicted while in
+    /// flight. Returns the matched token count actually pinned — callers
+    /// must [`release`] exactly that many when the segment leaves.
+    pub fn claim(&mut self, group: u64, tokens: usize, now: f64) -> usize {
+        let mut at = 0usize;
+        let mut path = Vec::new();
+        for i in 0..tokens / PREFIX_BLOCK {
+            match self.node(at).children.get(&block_key(group, i)) {
+                Some(&c) => {
+                    at = c;
+                    path.push(c);
+                }
+                None => break,
+            }
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        for &idx in &path {
+            let n = self.node_mut(idx);
+            n.pins += 1;
+            n.last_touch = now;
+            n.tick = tick;
+        }
+        path.len() * PREFIX_BLOCK
+    }
+
+    /// Drop the pins a prior [`claim`] of `tokens` tokens took.
+    pub fn release(&mut self, group: u64, tokens: usize) {
+        let mut at = 0usize;
+        for i in 0..tokens / PREFIX_BLOCK {
+            match self.node(at).children.get(&block_key(group, i)) {
+                Some(&c) => at = c,
+                // Claimed path can only shrink via release-then-press, so a
+                // missing node means pins were already dropped.
+                None => break,
+            }
+        }
+        // Walk again (borrow rules) decrementing pins along the found path.
+        let mut at = 0usize;
+        for i in 0..tokens / PREFIX_BLOCK {
+            let next = match self.node(at).children.get(&block_key(group, i)) {
+                Some(&c) => c,
+                None => break,
+            };
+            let n = self.node_mut(next);
+            n.pins = n.pins.saturating_sub(1);
+            at = next;
+        }
+        let _ = at;
+    }
+
+    /// Evict unpinned LRU leaves until the cache fits in `max_tokens`.
+    /// Deterministic: victims are ordered by (last_touch, tick), both of
+    /// which are facade-independent simulation quantities.
+    pub fn press(&mut self, max_tokens: usize) {
+        while self.cached_tokens() > max_tokens {
+            let mut victim: Option<(f64, u64, usize)> = None;
+            for (i, slot) in self.nodes.iter().enumerate().skip(1) {
+                let Some(n) = slot else { continue };
+                if n.pins > 0 || !n.children.is_empty() {
+                    continue;
+                }
+                let cand = (n.last_touch, n.tick, i);
+                if victim.map_or(true, |v| (cand.0, cand.1) < (v.0, v.1)) {
+                    victim = Some(cand);
+                }
+            }
+            let Some((_, _, idx)) = victim else { break };
+            let (key, parent) = {
+                let n = self.node(idx);
+                (n.key, n.parent)
+            };
+            self.node_mut(parent).children.remove(&key);
+            self.nodes[idx] = None;
+            self.free.push(idx);
+            self.live -= 1;
+        }
+    }
+
+    /// Compact snapshot for the live leader's placement view: the set of
+    /// resident block keys (chain membership is implied by per-depth keys,
+    /// so a set supports the same longest-prefix walk as the trie).
+    pub fn view(&self) -> PrefixView {
+        let mut keys = HashSet::with_capacity(self.live);
+        for slot in self.nodes.iter().skip(1) {
+            if let Some(n) = slot {
+                keys.insert(n.key);
+            }
+        }
+        PrefixView { keys }
+    }
+}
+
+/// Leader-side snapshot of one instance's [`PrefixIndex`]. May lag the
+/// instance (threads publish asynchronously); consumers must treat the
+/// matched length as a *hint* and re-claim on the owning instance.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixView {
+    keys: HashSet<u64>,
+}
+
+impl PrefixView {
+    /// Longest resident prefix of `group`'s shared stream, in tokens.
+    pub fn lookup(&self, group: u64, tokens: usize) -> usize {
+        let mut matched = 0usize;
+        for i in 0..tokens / PREFIX_BLOCK {
+            if !self.keys.contains(&block_key(group, i)) {
+                break;
+            }
+            matched += 1;
+        }
+        matched * PREFIX_BLOCK
+    }
+
+    pub fn cached_tokens(&self) -> usize {
+        self.keys.len() * PREFIX_BLOCK
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const B: usize = PREFIX_BLOCK;
+
+    #[test]
+    fn insert_then_lookup_is_block_floored() {
+        let mut ix = PrefixIndex::new();
+        ix.insert(7, 3 * B + B / 2, 1.0);
+        assert_eq!(ix.cached_tokens(), 3 * B);
+        assert_eq!(ix.lookup(7, 10 * B), 3 * B);
+        assert_eq!(ix.lookup(7, 2 * B + 1), 2 * B);
+        assert_eq!(ix.lookup(8, 10 * B), 0, "other groups never match");
+    }
+
+    #[test]
+    fn conversation_chain_extends_previous_turn() {
+        // Turn k inserts [0, n); turn k+1's longer stream reuses it and
+        // extends the same chain — no duplicate nodes for the shared part.
+        let mut ix = PrefixIndex::new();
+        ix.insert(42, 4 * B, 1.0);
+        let before = ix.cached_tokens();
+        ix.insert(42, 9 * B, 2.0);
+        assert_eq!(ix.cached_tokens(), before + 5 * B);
+        assert_eq!(ix.lookup(42, 100 * B), 9 * B);
+    }
+
+    #[test]
+    fn claim_pins_against_press() {
+        let mut ix = PrefixIndex::new();
+        ix.insert(1, 4 * B, 1.0);
+        assert_eq!(ix.claim(1, 2 * B, 2.0), 2 * B);
+        ix.press(0);
+        // pinned prefix survives a press to zero; unpinned tail evicts
+        assert_eq!(ix.cached_tokens(), 2 * B);
+        assert_eq!(ix.lookup(1, 10 * B), 2 * B);
+        ix.release(1, 2 * B);
+        ix.press(0);
+        assert_eq!(ix.cached_tokens(), 0);
+    }
+
+    #[test]
+    fn press_evicts_lru_leaves_first() {
+        let mut ix = PrefixIndex::new();
+        ix.insert(1, 2 * B, 1.0); // older
+        ix.insert(2, 2 * B, 5.0); // newer
+        ix.press(3 * B);
+        // group 1's leaf (older touch) goes first
+        assert_eq!(ix.lookup(1, 10 * B), B);
+        assert_eq!(ix.lookup(2, 10 * B), 2 * B);
+        ix.press(2 * B);
+        assert_eq!(ix.lookup(1, 10 * B), 0);
+        assert_eq!(ix.lookup(2, 10 * B), 2 * B);
+    }
+
+    #[test]
+    fn press_cascades_up_a_chain_leaf_by_leaf() {
+        let mut ix = PrefixIndex::new();
+        ix.insert(9, 4 * B, 1.0);
+        ix.press(B);
+        // only leaves evict, so the chain shrinks from the tail
+        assert_eq!(ix.cached_tokens(), B);
+        assert_eq!(ix.lookup(9, 10 * B), B);
+    }
+
+    #[test]
+    fn eviction_order_is_deterministic_across_rebuilds() {
+        let build = || {
+            let mut ix = PrefixIndex::new();
+            ix.insert(3, 3 * B, 1.0);
+            ix.insert(4, 2 * B, 1.0); // same touch time: ticks break the tie
+            ix.insert(5, B, 2.0);
+            ix.press(3 * B);
+            (ix.lookup(3, 9 * B), ix.lookup(4, 9 * B), ix.lookup(5, 9 * B))
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn view_matches_trie_lookup() {
+        let mut ix = PrefixIndex::new();
+        ix.insert(11, 5 * B, 1.0);
+        ix.insert(12, 2 * B, 1.0);
+        let v = ix.view();
+        for (g, t) in [(11u64, 5 * B), (11, 3 * B), (12, 2 * B), (13, 4 * B)] {
+            assert_eq!(v.lookup(g, t + B), ix.lookup(g, t + B).min(t));
+        }
+        assert_eq!(v.cached_tokens(), ix.cached_tokens());
+    }
+
+    #[test]
+    fn matchable_prompt_keeps_the_prefill_tail() {
+        let mut r = Request::new(1, 0.0, 4 * B, 16);
+        assert_eq!(matchable_prompt(&r), 0, "no lineage, no match");
+        r.prefix_group = Some(77);
+        r.shared_prefix = 10 * B;
+        // whole prompt shared: still must recompute the emitting token
+        assert_eq!(matchable_prompt(&r), 4 * B - 1);
+        r.shared_prefix = 2 * B;
+        assert_eq!(matchable_prompt(&r), 2 * B);
+    }
+}

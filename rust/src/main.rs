@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
         Some("calibrate") => calibrate(&args),
         _ => {
             eprintln!("usage: dynaserve <serve|simulate|calibrate> [flags]");
-            eprintln!("  serve     --requests N --qps Q --artifacts DIR [--instances 2] [--workload NAME] [--autoscale] [--admission] [--calibration-deadline S] [--ready-deadline S]   (needs --features pjrt)");
+            eprintln!("  serve     --requests N --qps Q --artifacts DIR [--instances 2] [--workload NAME] [--autoscale] [--admission] [--cache] [--calibration-deadline S] [--ready-deadline S]   (needs --features pjrt)");
             eprintln!("  simulate  --system <dynaserve|coloc|disagg> --workload NAME --qps Q [--duration S] [--model 14b]");
             eprintln!("  calibrate --artifacts DIR   (needs --features pjrt)");
             Ok(())
@@ -64,6 +64,10 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         // --admission turns on the leader's SLO-aware gate: batch-class
         // arrivals bounce while the whole placeable fleet is saturated
         admission: args.bool("admission"),
+        // --cache turns on prefix-cache-aware routing: instance threads
+        // publish prefix-index views, the leader scores placements with
+        // reuse credit, and matched prefixes skip their prefill
+        cache: args.bool("cache"),
     };
     let report = dynaserve::server::serve(cfg)?;
     report.print();

@@ -129,6 +129,13 @@ struct ClassAgg {
     /// Requests of this class turned away by admission control before any
     /// token was produced ([`Collector::on_reject`]).
     rejected: usize,
+    /// Prefix-cache probes by requests of this class that carried a
+    /// shared-prefix lineage ([`Collector::on_cache`]).
+    cache_lookups: usize,
+    /// Probes that matched (and skipped) a non-empty cached prefix.
+    cache_hits: usize,
+    /// Prefill tokens this class never recomputed thanks to the cache.
+    cache_saved_tokens: u64,
 }
 
 impl ClassAgg {
@@ -187,6 +194,13 @@ pub struct Collector {
     /// Requests turned away by admission control ([`Self::on_reject`]) —
     /// a plain counter in both modes, disjoint from `active`/`completed`.
     rejected_n: usize,
+    /// Prefix-cache ledger ([`Self::on_cache`]): probes by lineage-carrying
+    /// requests, probes that matched, and prefill tokens skipped. Plain
+    /// counters in both modes; all zero while the cache is off (the
+    /// executor only calls `on_cache` with the cache enabled).
+    cache_lookups_n: usize,
+    cache_hits_n: usize,
+    cache_saved_tokens_n: u64,
     /// BTreeMap for deterministic class iteration order.
     classes: BTreeMap<ClassId, ClassAgg>,
 }
@@ -247,6 +261,25 @@ impl Collector {
     /// [`Self::on_reject`] counter) — read by the stuck-run diagnostics.
     pub fn rejected_requests(&self) -> u64 {
         self.rejected_n as u64
+    }
+
+    /// Record one prefix-cache placement probe for `req`: `cached` is the
+    /// matched (and skipped) prefix in tokens — 0 counts as a miss. Called
+    /// by the executors once per *placed* lineage-carrying request, only
+    /// while the cache is enabled, so cache-off summaries stay bit-identical
+    /// (every cache column zero).
+    pub fn on_cache(&mut self, req: &Request, cached: usize) {
+        let slo = req.slo.map(SloConfig::from).unwrap_or(self.slo);
+        let mode = self.mode;
+        let agg = self.classes.entry(req.class).or_insert_with(|| ClassAgg::new(mode, slo));
+        self.cache_lookups_n += 1;
+        agg.cache_lookups += 1;
+        if cached > 0 {
+            self.cache_hits_n += 1;
+            self.cache_saved_tokens_n += cached as u64;
+            agg.cache_hits += 1;
+            agg.cache_saved_tokens += cached as u64;
+        }
     }
 
     /// Record one emitted output token for `id` at time `t`.
@@ -405,6 +438,13 @@ impl Collector {
             // admission rejections are the collector's own ledger (unlike
             // the recovery counters below, which the executor annotates)
             rejected_requests: self.rejected_n as u64,
+            // prefix-cache ledger — zero across the board with the cache off
+            cache_hit_rate: if self.cache_lookups_n == 0 {
+                0.0
+            } else {
+                self.cache_hits_n as f64 / self.cache_lookups_n as f64
+            },
+            prefill_tokens_saved: self.cache_saved_tokens_n,
             // fleet accounting is the executor's, not the collector's:
             // the host overwrites these from its cluster registry
             gpu_seconds: 0.0,
@@ -440,6 +480,12 @@ impl Collector {
                 ttft_slo: agg.slo.ttft,
                 completed: agg.completed,
                 rejected: agg.rejected,
+                cache_hit_rate: if agg.cache_lookups == 0 {
+                    0.0
+                } else {
+                    agg.cache_hits as f64 / agg.cache_lookups as f64
+                },
+                prefill_tokens_saved: agg.cache_saved_tokens,
                 total_tokens: agg.total_tokens,
                 good_tokens: agg.good_tokens,
                 goodput_tok_s: agg.good_tokens as f64 / duration,
@@ -490,6 +536,14 @@ pub struct ClassSummary {
     /// Requests of this class turned away by admission control — counted
     /// here (and in [`Summary::rejected_requests`]), never silently lost.
     pub rejected: usize,
+    /// Fraction of this class's lineage-carrying placements that matched a
+    /// cached prefix (0.0 with the cache off, or when the class carries no
+    /// shared-prefix lineage). The per-class TTFT *delta* the cache buys is
+    /// computed across cells by `experiments cache` — it needs a cache-off
+    /// twin run, which a single summary cannot see.
+    pub cache_hit_rate: f64,
+    /// Prefill tokens this class skipped thanks to matched cached prefixes.
+    pub prefill_tokens_saved: u64,
     pub total_tokens: usize,
     /// Tokens that met this class's own SLO targets.
     pub good_tokens: usize,
@@ -554,6 +608,13 @@ pub struct Summary {
     /// after admission* to faults). Conservation: offered == completed +
     /// shed + rejected.
     pub rejected_requests: u64,
+    /// Fraction of lineage-carrying placements that matched (and skipped)
+    /// a cached prefix ([`Collector::on_cache`]); 0.0 with the cache off.
+    pub cache_hit_rate: f64,
+    /// Prefill tokens never recomputed thanks to prefix-cache hits —
+    /// GPU-seconds saved follow via the cost model's per-token prefill
+    /// cost ([`crate::costmodel`]); 0 with the cache off.
+    pub prefill_tokens_saved: u64,
     /// Prefill tokens recomputed because their KV died with an instance.
     pub recomputed_prefill_tokens: u64,
     /// KV bytes re-shipped for β segments whose in-flight transfer
@@ -580,6 +641,10 @@ pub struct RecoveryStats {
     pub recovery_latency_sum: f64,
     /// Re-placed requests that went on to complete.
     pub recovered: u64,
+    /// Re-placements that resumed from a survivor's cached prefix instead
+    /// of re-prefilling from token 0 (prefix cache on; the skipped tokens
+    /// are already credited out of `recomputed_prefill_tokens`).
+    pub resumed_from_cache: u64,
 }
 
 impl Summary {
@@ -895,6 +960,8 @@ mod tests {
             replaced_requests: 0,
             shed_requests: 0,
             rejected_requests: 0,
+            cache_hit_rate: 0.0,
+            prefill_tokens_saved: 0,
             recomputed_prefill_tokens: 0,
             retransferred_kv_bytes: 0.0,
             handoff_retries: 0,
@@ -927,6 +994,8 @@ mod tests {
             replaced_requests: 0,
             shed_requests: 0,
             rejected_requests: 0,
+            cache_hit_rate: 0.0,
+            prefill_tokens_saved: 0,
             recomputed_prefill_tokens: 0,
             retransferred_kv_bytes: 0.0,
             handoff_retries: 0,

@@ -53,7 +53,7 @@ use crate::exec::runtime::{EventSink, InstanceRuntime, Segment, SeqKey};
 use crate::exec::submit::{plan_submission, SegmentPlan};
 use crate::exec::transport::{Handoff, HandoffDisposition, Transport};
 use crate::exec::{ExecConfig, VirtualExecutor};
-use crate::kv::{LinkSpec, TransferEngine, TransferJob};
+use crate::kv::{LinkSpec, PrefixView, TransferEngine, TransferJob, PREFIX_BLOCK};
 use crate::metrics::{Collector, RecoveryStats, SloConfig, Summary};
 use crate::runtime::{Engine, KvState};
 use crate::util::rng::Rng;
@@ -88,6 +88,18 @@ pub struct ServeConfig {
     /// for their completions. Default off — legacy serve runs admit
     /// everything, DESIGN.md §Overload.
     pub admission: bool,
+    /// Prefix-cache-aware routing on the live path (DESIGN.md §Prefix
+    /// cache): instance threads maintain the same per-instance radix
+    /// index over resident KV the virtual executor drives, publish
+    /// compact [`PrefixView`]s into the shared fleet state, and retain
+    /// the real KV tensors of recently retired lineage-tagged segments
+    /// in a small engine-side pool. The leader scores placements with
+    /// `Policy::place_cached` against the views and ships the credited
+    /// skip as a *hint* on the segment spec — views may lag, so the
+    /// owning thread re-probes its own index (clamped by the pool),
+    /// claims locally, and prefills any un-granted remainder normally.
+    /// Default off: cache-off serves are unchanged from pre-cache builds.
+    pub cache: bool,
 }
 
 impl ServeConfig {
@@ -119,6 +131,15 @@ struct SegmentSpec {
     /// Interactive-class request (tight TTFT SLO) — priority batching
     /// input, derived leader-side from [`Request::interactive`].
     interactive: bool,
+    /// KV-reuse lineage, copied from the request (prefix-cache identity).
+    prefix_group: Option<u64>,
+    shared_prefix: usize,
+    /// Leader-credited cached-prefix skip (tokens), from the placement's
+    /// view-based match. A hint, not a contract: `prompt` still covers
+    /// the skipped region, and the owning thread re-probes its own index
+    /// at accept time — it may grant less (views lag; eviction raced) and
+    /// prefill the un-granted remainder normally.
+    cached: usize,
 }
 
 impl SegmentSpec {
@@ -132,11 +153,15 @@ impl SegmentSpec {
         beta_dest: Option<(InstanceId, u64)>,
         gated: bool,
     ) -> SegmentSpec {
+        // ship the skipped region too — the thread may grant a smaller
+        // skip than the leader's hint and must be able to prefill it
+        let mut range = sp.prompt_range(req.prompt_len);
+        range.start -= sp.cached;
         SegmentSpec {
             key,
             request: req.id,
             arrival,
-            prompt: prompt[sp.prompt_range(req.prompt_len)].to_vec(),
+            prompt: prompt[range].to_vec(),
             start: sp.start,
             decode_budget: sp.decode,
             emits_first: sp.emits_first,
@@ -144,6 +169,9 @@ impl SegmentSpec {
             beta_dest,
             gated,
             interactive: req.interactive(),
+            prefix_group: req.prefix_group,
+            shared_prefix: req.shared_prefix,
+            cached: sp.cached,
         }
     }
 
@@ -152,13 +180,16 @@ impl SegmentSpec {
     /// `SegmentPlan → SegmentSpec → Segment` must land on exactly the
     /// segment `exec::submit::make_segment` builds from the same plan
     /// (unit-tested below), so the leader channel cannot drift from the
-    /// virtual executor's submission path.
-    fn to_segment(&self) -> Segment {
+    /// virtual executor's submission path. `granted` is the cached-prefix
+    /// skip the thread actually claimed (`== self.cached` on a full
+    /// grant, the make_segment-equivalent case; less moves the shortfall
+    /// from skip back into prefill without touching the span's end).
+    fn to_segment(&self, granted: usize) -> Segment {
         let mut seg = Segment::from_parts(
             self.request,
             self.arrival,
-            self.start,
-            self.prompt.len(),
+            self.start - (self.cached - granted),
+            self.prompt.len() - granted,
             self.decode_budget,
             self.emits_first,
             self.last_segment,
@@ -166,6 +197,9 @@ impl SegmentSpec {
         );
         seg.beta_dest = self.beta_dest;
         seg.interactive = self.interactive;
+        seg.prefix_group = self.prefix_group;
+        seg.shared_prefix = self.shared_prefix;
+        seg.cached_prefix = granted;
         seg
     }
 }
@@ -223,6 +257,11 @@ struct FleetShared {
     removed: Mutex<HashMap<InstanceId, f64>>,
     /// Peer senders for α→β KV forwarding.
     peers: Mutex<HashMap<InstanceId, mpsc::Sender<InstMsg>>>,
+    /// Per-instance prefix-index views (cache-aware placement input),
+    /// published by the instance threads when [`ServeConfig::cache`] is
+    /// on. May lag the owning thread — the leader treats the matched
+    /// length as a hint and the thread re-claims at accept time.
+    prefix: Mutex<HashMap<InstanceId, PrefixView>>,
 }
 
 /// Everything needed to spawn one more instance thread mid-run.
@@ -236,6 +275,9 @@ struct SpawnCtx {
     transfer: Arc<TransferEngine>,
     up: mpsc::Sender<UpMsg>,
     shared: Arc<FleetShared>,
+    /// Mirror of [`ServeConfig::cache`]: threads enable their runtime's
+    /// prefix index and publish views only when the leader routes with it.
+    cache: bool,
 }
 
 /// Leader-side membership entry for one live instance.
@@ -289,6 +331,7 @@ impl LiveCluster {
                     c.shared.digests.lock().unwrap().remove(&id);
                     c.shared.ready.lock().unwrap().remove(&id);
                     c.shared.peers.lock().unwrap().remove(&id);
+                    c.shared.prefix.lock().unwrap().remove(&id);
                     c.shared.removed.lock().unwrap().insert(id, c.clock.now());
                     c.up.send(UpMsg::Crashed { instance: id }).ok();
                 }
@@ -560,6 +603,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         transfer: transfer.clone(),
         up: up_tx.clone(),
         shared: shared.clone(),
+        cache: cfg.cache,
     };
     let mut fleet = LiveCluster::new(shared.clone());
     for _ in 0..cfg.n_instances {
@@ -696,9 +740,39 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
             rejected += 1;
             continue;
         }
-        let placement = policy.place(req, &loads, &profile);
+        // Prefix-cache probe against the published per-instance views —
+        // the live analogue of the virtual executor's arrival-time index
+        // probe (`exec::host::on_arrival`): matched lengths feed the same
+        // reuse-credited scoring, zero matches fall back to `place`.
+        let matches: Vec<usize> = if cfg.cache {
+            match crate::kv::prefix::lineage(req) {
+                Some((group, _)) => {
+                    let want = crate::kv::prefix::matchable_prompt(req);
+                    let views = shared.prefix.lock().unwrap();
+                    loads
+                        .iter()
+                        .map(|d| views.get(&d.id).map(|v| v.lookup(group, want)).unwrap_or(0))
+                        .collect()
+                }
+                None => Vec::new(),
+            }
+        } else {
+            Vec::new()
+        };
+        let placement = if matches.is_empty() {
+            policy.place(req, &loads, &profile)
+        } else {
+            policy.place_cached(req, &loads, &matches, &profile)
+        };
         // …and the same span clamping / flag derivation (exec::submit)
         let plan = plan_submission(&placement, req);
+        // live hit accounting is placement-time: the thread may grant a
+        // smaller skip than the credited match if its index moved since
+        // the view was published (the virtual executor's same-event
+        // probe→claim has no such gap)
+        if cfg.cache && crate::kv::prefix::lineage(req).is_some() {
+            collector.on_cache(req, plan.alpha.cached);
+        }
         let prompt: Vec<i32> = (0..req.prompt_len)
             .map(|_| rng.range(1, llm.vocab as u64) as i32)
             .collect();
@@ -896,6 +970,16 @@ fn instance_loop(id: InstanceId, rx: mpsc::Receiver<InstMsg>, ctx: &SpawnCtx) ->
     // The shared lifecycle state machine — identical to the simulator's
     // per-instance core; this loop is just its PJRT executor.
     let mut runtime = InstanceRuntime::new(id, spec, local);
+    if ctx.cache {
+        runtime.enable_prefix_cache();
+    }
+    // Engine-side residency behind the runtime's prefix index (which
+    // models token *counts* only): real KV tensors of recently retired
+    // lineage-tagged segments, keyed by prefix group. Bounded FIFO — the
+    // index is pressed independently, so accept-time claims are clamped
+    // by what this pool actually still holds.
+    const PREFIX_POOL_CAP: usize = 8;
+    let mut prefix_pool: Vec<(u64, KvState)> = Vec::new();
     let mut live: HashMap<SeqKey, LiveState> = HashMap::new();
     let mut by_leader: HashMap<u64, SeqKey> = HashMap::new();
     let mut sink = ChannelSink { up: ctx.up.clone() };
@@ -910,6 +994,9 @@ fn instance_loop(id: InstanceId, rx: mpsc::Receiver<InstMsg>, ctx: &SpawnCtx) ->
     // engine is up: publish readiness + an initial digest — the live
     // warm-up gate the leader's placeable view checks
     ctx.shared.digests.lock().unwrap().insert(id, runtime.digest());
+    if ctx.cache {
+        ctx.shared.prefix.lock().unwrap().insert(id, runtime.prefix_view());
+    }
     ctx.shared.ready.lock().unwrap().insert(id);
 
     // removes this instance from the shared fleet view on any exit path;
@@ -919,6 +1006,7 @@ fn instance_loop(id: InstanceId, rx: mpsc::Receiver<InstMsg>, ctx: &SpawnCtx) ->
         ctx.shared.digests.lock().unwrap().remove(&id);
         ctx.shared.ready.lock().unwrap().remove(&id);
         ctx.shared.peers.lock().unwrap().remove(&id);
+        ctx.shared.prefix.lock().unwrap().remove(&id);
         if retired {
             ctx.shared.removed.lock().unwrap().insert(id, clock.now());
         }
@@ -930,21 +1018,57 @@ fn instance_loop(id: InstanceId, rx: mpsc::Receiver<InstMsg>, ctx: &SpawnCtx) ->
         loop {
             match rx.try_recv() {
                 Ok(InstMsg::Segment(spec)) => {
-                    let cap = if spec.start + spec.prompt.len() + spec.decode_budget + 1 <= 128 {
-                        128
-                    } else {
-                        256
+                    // total context = unskipped start + prompt + decode
+                    // (the prompt slice covers the leader-credited skip)
+                    let total =
+                        spec.start - spec.cached + spec.prompt.len() + spec.decode_budget + 1;
+                    let cap = if total <= 128 { 128 } else { 256 };
+                    // prefix-cache claim: re-probe the local index (the
+                    // leader's view may lag), clamp by what the engine-
+                    // side pool actually retains, then pin the grant
+                    let granted = match (ctx.cache && spec.cached > 0, spec.prefix_group) {
+                        (true, Some(group)) => {
+                            let pooled = prefix_pool
+                                .iter()
+                                .find(|(g, _)| *g == group)
+                                .map(|(_, kv)| kv.len / PREFIX_BLOCK * PREFIX_BLOCK)
+                                .unwrap_or(0);
+                            let want = spec
+                                .cached
+                                .min(runtime.prefix_lookup(group, spec.cached))
+                                .min(pooled);
+                            runtime.claim_prefix(group, want, clock.now())
+                        }
+                        _ => 0,
                     };
                     // reconstruct the shared lifecycle segment (pinned to
                     // the virtual submission path by the round-trip test)
-                    let key = runtime.accept(spec.to_segment());
+                    let key = runtime.accept(spec.to_segment(granted));
                     accepted = true;
                     by_leader.insert(spec.key, key);
+                    let mut kv = engine.new_kv(cap);
+                    if granted > 0 {
+                        // the claimed prefix reuses real KV from the pool
+                        // instead of recomputing it
+                        let m = &engine.manifest.model;
+                        let src = prefix_pool
+                            .iter()
+                            .find(|(g, _)| Some(*g) == spec.prefix_group)
+                            .map(|(_, kv)| kv)
+                            .expect("claim clamped by pool residency");
+                        copy_kv_prefix(
+                            &mut kv,
+                            src,
+                            (m.n_layers, m.n_kv_heads, m.head_dim),
+                            granted,
+                        );
+                        kv.len = granted;
+                    }
                     live.insert(
                         key,
                         LiveState {
-                            kv: engine.new_kv(cap),
-                            prompt: spec.prompt,
+                            kv,
+                            prompt: spec.prompt[granted..].to_vec(),
                             prefill_done: 0,
                             next_token: None,
                             received_tokens: 0,
@@ -1112,16 +1236,26 @@ fn instance_loop(id: InstanceId, rx: mpsc::Receiver<InstMsg>, ctx: &SpawnCtx) ->
         // completions through the shared lifecycle: final segments report
         // Done, α segments with a waiting β queue a live handoff
         for key in finished {
-            let hands_off = runtime
+            let (hands_off, group) = runtime
                 .get(key)
-                .map(|s| !s.last_segment && s.beta_dest.is_some())
-                .unwrap_or(false);
+                .map(|s| (!s.last_segment && s.beta_dest.is_some(), s.prefix_group))
+                .unwrap_or((false, None));
             runtime.complete_segment(key, clock.now(), &mut sink, &mut transport);
             if !hands_off {
                 // retired outright — drop the engine-side state too (the
                 // handoff case keeps it until the payload ships below)
                 if let Some(st) = live.remove(&key) {
                     by_leader.remove(&st.leader_key);
+                    if let Some(g) = group.filter(|_| ctx.cache) {
+                        // the lifecycle just inserted this segment's
+                        // residual into the prefix index — retain its
+                        // real KV as the matching engine-side residency
+                        prefix_pool.retain(|(pg, _)| *pg != g);
+                        prefix_pool.push((g, st.kv));
+                        if prefix_pool.len() > PREFIX_POOL_CAP {
+                            prefix_pool.remove(0);
+                        }
+                    }
                 }
             }
         }
@@ -1145,6 +1279,11 @@ fn instance_loop(id: InstanceId, rx: mpsc::Receiver<InstMsg>, ctx: &SpawnCtx) ->
 
         // publish the O(1) load digest for the global scheduler
         ctx.shared.digests.lock().unwrap().insert(id, runtime.digest());
+        if ctx.cache {
+            // completions may have extended the prefix index — refresh
+            // the leader's placement view alongside the digest
+            ctx.shared.prefix.lock().unwrap().insert(id, runtime.prefix_view());
+        }
     }
 }
 
@@ -1209,6 +1348,23 @@ fn extract_kv_range(kv: &KvState, (l, h, d): (usize, usize, usize), a: usize, b:
         }
     }
     out
+}
+
+/// Copy k||v rows for tokens [0, n) from a retained pool entry into a
+/// fresh sequence's KV (both layer-major, with their own capacities) —
+/// the engine-side half of a prefix-cache claim: the claimed tokens'
+/// KV is reused instead of recomputed.
+fn copy_kv_prefix(dst: &mut KvState, src: &KvState, (l, h, d): (usize, usize, usize), n: usize) {
+    let (dc, sc) = (dst.capacity, src.capacity);
+    for (dbuf, sbuf) in [(&mut dst.k, &src.k), (&mut dst.v, &src.v)] {
+        for li in 0..l {
+            for hi in 0..h {
+                let db = ((li * h) + hi) * dc * d;
+                let sb = ((li * h) + hi) * sc * d;
+                dbuf[db..db + n * d].copy_from_slice(&sbuf[sb..sb + n * d]);
+            }
+        }
+    }
 }
 
 /// Inject a received chunk into a β sequence's KV; activate on the final
@@ -1308,7 +1464,7 @@ mod tests {
             let mut want_alpha = make_segment(&req, &plan.alpha, false, false);
             want_alpha.beta_dest = beta_info;
             assert_eq!(
-                alpha_spec.to_segment(),
+                alpha_spec.to_segment(plan.alpha.cached),
                 want_alpha,
                 "req {}: α marshalling drifted from the virtual submission path",
                 req.id
@@ -1319,16 +1475,54 @@ mod tests {
                 let beta_spec = SegmentSpec::from_plan(2, &req, req.arrival, &prompt, bp, None, true);
                 let want_beta = make_segment(&req, bp, true, false);
                 assert_eq!(
-                    beta_spec.to_segment(),
+                    beta_spec.to_segment(0),
                     want_beta,
                     "req {}: β marshalling drifted from the virtual submission path",
                     req.id
                 );
                 assert_eq!(beta_spec.prompt.len(), bp.prefill, "req {}: β prompt slice", req.id);
                 // the reconstructed β is gated exactly like the sim's
-                assert!(!beta_spec.to_segment().ready);
+                assert!(!beta_spec.to_segment(0).ready);
             }
         }
+    }
+
+    /// Cache-credited specs extend the round-trip contract: a full grant
+    /// reconstructs exactly the segment `make_segment` builds from the
+    /// same cached plan, and a partial grant (the thread's index moved
+    /// since the leader's view was published) moves the shortfall from
+    /// skip back into prefill without touching the span's end.
+    #[test]
+    fn cached_segment_spec_round_trip_and_partial_grant() {
+        let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::qwen25_14b(), 1);
+        let profile = ProfileTable::seeded(&spec);
+        let mut policy = DynaServePolicy::new(GlobalConfig::default());
+        let loads: Vec<LoadDigest> = (0..2).map(|i| LoadDigest::idle(InstanceId(i))).collect();
+        let req = Request::new(5, 2.0, 4 * PREFIX_BLOCK, 40).with_prefix(7, 3 * PREFIX_BLOCK);
+        let matches = vec![3 * PREFIX_BLOCK, 0];
+        let placement = policy.place_cached(&req, &loads, &matches, &profile);
+        let plan = plan_submission(&placement, &req);
+        assert_eq!(plan.alpha.instance, InstanceId(0), "reuse credit routes α to the match");
+        assert_eq!(plan.alpha.cached, 3 * PREFIX_BLOCK);
+        let prompt: Vec<i32> = (0..req.prompt_len as i32).collect();
+        let alpha_spec =
+            SegmentSpec::from_plan(1, &req, req.arrival, &prompt, &plan.alpha, None, false);
+        assert_eq!(
+            alpha_spec.prompt.len(),
+            plan.alpha.prefill + plan.alpha.cached,
+            "spec ships the skipped region too (threads may grant less than the hint)"
+        );
+        let want = make_segment(&req, &plan.alpha, false, false);
+        assert_eq!(alpha_spec.to_segment(plan.alpha.cached), want, "full grant");
+        let partial = plan.alpha.cached - PREFIX_BLOCK;
+        let seg = alpha_spec.to_segment(partial);
+        assert_eq!(seg.cached_prefix, partial);
+        assert_eq!(seg.work.context, want.work.context - PREFIX_BLOCK);
+        assert_eq!(seg.work.prefill_remaining, want.work.prefill_remaining + PREFIX_BLOCK);
+        assert_eq!(seg.end_exec, want.end_exec, "the grant never moves the span's end");
+        let zero = alpha_spec.to_segment(0);
+        assert_eq!(zero.work.context, 0, "zero grant prefills from token 0");
+        assert_eq!(zero.work.prefill_remaining, alpha_spec.prompt.len());
     }
 
     /// The live drain guard mirrors the virtual cluster's: the directory

@@ -27,8 +27,8 @@ pub mod traces;
 
 pub use arrival::{ArrivalProcess, PoissonArrivals, ReplayArrivals};
 pub use scenario::{
-    ArrivalShape, LengthModel, MultiTurnConfig, ScaleAction, ScaleEvent, Scenario, ScenarioStream,
-    TrafficClass,
+    ArrivalShape, LengthModel, MultiTurnConfig, PrefixLineage, ScaleAction, ScaleEvent, Scenario,
+    ScenarioStream, TrafficClass,
 };
 pub use traces::{TraceKind, TraceSampler};
 

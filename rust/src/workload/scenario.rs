@@ -193,8 +193,27 @@ pub struct MultiTurnConfig {
     pub message_mean: f64,
 }
 
+/// Cross-request KV-reuse lineage a class's requests carry (DESIGN.md
+/// §Prefix cache). Lineage is *tagging only*: group ids derive from plain
+/// counters, never from the RNG streams, so attaching lineage to a class
+/// cannot perturb its sampled trace — and executors with the cache off
+/// ignore the tags entirely.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PrefixLineage {
+    /// No shared prefix: requests of this class never match the cache.
+    None,
+    /// Conversation lineage: every turn of one conversation shares a
+    /// group, and each turn's whole stream (prompt + reply) is shared
+    /// context — the next turn's carried prompt re-matches it.
+    Conversation,
+    /// Retrieval lineage: requests cycle round-robin over a pool of
+    /// `docs` retrieved contexts of `doc_tokens` tokens each; the first
+    /// `min(doc_tokens, prompt)` tokens are the shared document prefix.
+    DocPool { docs: usize, doc_tokens: usize },
+}
+
 /// One traffic class: its share of arrivals, its length model, its latency
-/// targets, and optional multi-turn chaining.
+/// targets, optional multi-turn chaining, and its KV-reuse lineage.
 #[derive(Debug, Clone)]
 pub struct TrafficClass {
     pub name: &'static str,
@@ -203,6 +222,23 @@ pub struct TrafficClass {
     pub lengths: LengthModel,
     pub slo: SloTarget,
     pub multi_turn: Option<MultiTurnConfig>,
+    pub lineage: PrefixLineage,
+}
+
+/// Deterministic lineage group id over (seed, class, counter) — a
+/// splitmix64-style finalizer over plain counters. No RNG stream is
+/// touched, so lineage tagging is invisible to the generated trace.
+fn lineage_group(seed: u64, class: usize, counter: u64) -> u64 {
+    let mut x = seed
+        ^ 0x9e37_79b9_7f4a_7c15u64
+        ^ (class as u64 + 1).wrapping_mul(0xbf58_476d_1ce4_e5b9)
+        ^ (counter + 1).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
 }
 
 /// Interactive chat: BurstGPT-ish shapes under a tight TTFT/TBT bound.
@@ -213,6 +249,7 @@ pub fn interactive_chat(weight: f64) -> TrafficClass {
         lengths: LengthModel::fit(1500.0, 2048.0, (32, 8192), 380.0, 512.0, (8, 4096)),
         slo: SloTarget { tbt: 0.100, ttft: Some(0.5) },
         multi_turn: None,
+        lineage: PrefixLineage::None,
     }
 }
 
@@ -225,11 +262,13 @@ pub fn batch_summarization(weight: f64) -> TrafficClass {
         lengths: LengthModel::fit(7200.0, 8000.0, (1024, 16384), 210.0, 256.0, (32, 1024)),
         slo: SloTarget { tbt: 0.250, ttft: Some(10.0) },
         multi_turn: None,
+        lineage: PrefixLineage::None,
     }
 }
 
 /// Long-context RAG: big retrieved prefixes, short grounded answers,
-/// moderate targets.
+/// moderate targets. Requests cycle over a shared document pool, so the
+/// retrieved prefix is cacheable across requests hitting the same doc.
 pub fn longcontext_rag(weight: f64) -> TrafficClass {
     TrafficClass {
         name: "long-rag",
@@ -237,6 +276,7 @@ pub fn longcontext_rag(weight: f64) -> TrafficClass {
         lengths: LengthModel::fit(7000.0, 8192.0, (512, 16384), 100.0, 140.0, (16, 512)),
         slo: SloTarget { tbt: 0.150, ttft: Some(2.0) },
         multi_turn: None,
+        lineage: PrefixLineage::DocPool { docs: 16, doc_tokens: 6144 },
     }
 }
 
@@ -256,6 +296,29 @@ pub fn multiturn_chat(weight: f64) -> TrafficClass {
             message_median: 80.0,
             message_mean: 120.0,
         }),
+        lineage: PrefixLineage::Conversation,
+    }
+}
+
+/// Heavy multi-turn chat: longer openings, near-certain continuation, up
+/// to ten follow-ups with short think times — conversations carry large
+/// contexts turn over turn, the prefix cache's best case (and, with the
+/// cache off, its worst-case recompute traffic).
+pub fn multiturn_heavy(weight: f64) -> TrafficClass {
+    TrafficClass {
+        name: "multi-turn-heavy",
+        weight,
+        lengths: LengthModel::fit(600.0, 800.0, (64, 4096), 400.0, 520.0, (32, 2048)),
+        slo: SloTarget { tbt: 0.100, ttft: Some(0.6) },
+        multi_turn: Some(MultiTurnConfig {
+            continue_prob: 0.85,
+            max_followups: 10,
+            think_median: 2.0,
+            think_mean: 3.0,
+            message_median: 120.0,
+            message_mean: 180.0,
+        }),
+        lineage: PrefixLineage::Conversation,
     }
 }
 
@@ -385,6 +448,7 @@ impl Scenario {
         v.push(Self::faulty_diurnal());
         v.push(Self::overload_steady());
         v.push(Self::flash_crowd());
+        v.push(Self::multiturn_heavy());
         v
     }
 
@@ -504,6 +568,23 @@ impl Scenario {
         }
     }
 
+    /// The prefix-cache stress scenario (`experiments cache`): mostly
+    /// heavy conversations whose follow-up turns carry large contexts, a
+    /// long chain per conversation, and a slice of long-RAG traffic over
+    /// a shared document pool — the traffic shapes where cross-request KV
+    /// reuse pays (and where recomputing it, cache off, hurts most).
+    pub fn multiturn_heavy() -> Scenario {
+        Scenario {
+            name: "multiturn-heavy",
+            description: "long conversations with heavy carried context + doc-pool RAG",
+            shape: ArrivalShape::Steady { qps: 1.0 },
+            classes: vec![multiturn_heavy(0.7), longcontext_rag(0.3)],
+            duration: 90.0,
+            scale_events: vec![],
+            faults: vec![],
+        }
+    }
+
     /// Multiply every rate knob in the arrival shape by `f`, leaving the
     /// time structure (burst window, period, horizon) alone — the
     /// offered-load axis of the overload sweep (`experiments overload
@@ -573,8 +654,13 @@ impl Scenario {
         let mut sample_rng = Rng::with_stream(seed, 0xc1a5);
         let weights: Vec<f64> = self.classes.iter().map(|c| c.weight).collect();
 
-        // (arrival, class, prompt, decode), unsorted while conversations append
-        let mut raw: Vec<(f64, usize, usize, usize)> = Vec::new();
+        // lineage counters: plain integers advanced in generation order —
+        // identical in `stream` — so group ids never touch the RNG streams
+        let mut conv_seq: u64 = 0;
+        let mut doc_seq: Vec<u64> = vec![0; self.classes.len()];
+        // (arrival, class, prompt, decode, lineage group, shared prefix),
+        // unsorted while conversations append
+        let mut raw: Vec<(f64, usize, usize, usize, Option<u64>, usize)> = Vec::new();
         let mut t = 0.0;
         loop {
             t = match arrivals.next_after(t, &mut arrival_rng) {
@@ -585,15 +671,34 @@ impl Scenario {
             let class = &self.classes[ci];
             match class.multi_turn {
                 Some(mt) => {
+                    let group = match class.lineage {
+                        PrefixLineage::Conversation => {
+                            let g = lineage_group(seed, ci, conv_seq);
+                            conv_seq += 1;
+                            Some(g)
+                        }
+                        _ => None,
+                    };
                     for (at, p, d) in
                         conversation_turns(t, class, &mt, self.duration, &mut sample_rng)
                     {
-                        raw.push((at, ci, p, d));
+                        // each turn's whole stream (prompt + reply) is
+                        // conversation-shared context for the next turn
+                        let shared = if group.is_some() { p + d } else { 0 };
+                        raw.push((at, ci, p, d, group, shared));
                     }
                 }
                 None => {
                     let (p, d) = class.lengths.sample(&mut sample_rng);
-                    raw.push((t, ci, p, d));
+                    let (group, shared) = match class.lineage {
+                        PrefixLineage::DocPool { docs, doc_tokens } => {
+                            let doc = doc_seq[ci] % docs.max(1) as u64;
+                            doc_seq[ci] += 1;
+                            (Some(lineage_group(seed, ci, doc)), doc_tokens.min(p))
+                        }
+                        _ => (None, 0),
+                    };
+                    raw.push((t, ci, p, d, group, shared));
                 }
             }
         }
@@ -601,8 +706,12 @@ impl Scenario {
         raw.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
         raw.iter()
             .enumerate()
-            .map(|(id, &(at, ci, p, d))| {
-                Request::new(id as u64, at, p, d).with_class(ci, self.classes[ci].slo)
+            .map(|(id, &(at, ci, p, d, group, shared))| {
+                let r = Request::new(id as u64, at, p, d).with_class(ci, self.classes[ci].slo);
+                match group {
+                    Some(g) => r.with_prefix(g, shared),
+                    None => r,
+                }
             })
             .collect()
     }
@@ -628,6 +737,9 @@ impl Scenario {
             exhausted: false,
             next_id: 0,
             gen_seq: 0,
+            seed,
+            conv_seq: 0,
+            doc_seq: vec![0; self.classes.len()],
         }
     }
 }
@@ -642,6 +754,9 @@ struct PendingTurn {
     class: usize,
     prompt: usize,
     decode: usize,
+    /// Lineage tag mirrored from `Scenario::generate` (group, shared).
+    group: Option<u64>,
+    shared: usize,
 }
 
 impl PartialEq for PendingTurn {
@@ -686,13 +801,26 @@ pub struct ScenarioStream {
     exhausted: bool,
     next_id: u64,
     gen_seq: u64,
+    /// Lineage-counter mirror of `Scenario::generate` (see there): group
+    /// ids derive from these plain counters, never from the RNG streams.
+    seed: u64,
+    conv_seq: u64,
+    doc_seq: Vec<u64>,
 }
 
 impl ScenarioStream {
-    fn push_pending(&mut self, arrival: f64, class: usize, prompt: usize, decode: usize) {
+    fn push_pending(
+        &mut self,
+        arrival: f64,
+        class: usize,
+        prompt: usize,
+        decode: usize,
+        group: Option<u64>,
+        shared: usize,
+    ) {
         let seq = self.gen_seq;
         self.gen_seq += 1;
-        self.pending.push(Reverse(PendingTurn { arrival, seq, class, prompt, decode }));
+        self.pending.push(Reverse(PendingTurn { arrival, seq, class, prompt, decode, group, shared }));
     }
 
     /// Turns currently buffered — the O(in-flight) figure the scale tests
@@ -712,10 +840,12 @@ impl Iterator for ScenarioStream {
                     let Reverse(p) = self.pending.pop().expect("peeked entry exists");
                     let id = self.next_id;
                     self.next_id += 1;
-                    return Some(
-                        Request::new(id, p.arrival, p.prompt, p.decode)
-                            .with_class(p.class, self.classes[p.class].slo),
-                    );
+                    let r = Request::new(id, p.arrival, p.prompt, p.decode)
+                        .with_class(p.class, self.classes[p.class].slo);
+                    return Some(match p.group {
+                        Some(g) => r.with_prefix(g, p.shared),
+                        None => r,
+                    });
                 }
             } else if self.exhausted {
                 return None;
@@ -727,6 +857,14 @@ impl Iterator for ScenarioStream {
                     let class = &self.classes[ci];
                     match class.multi_turn {
                         Some(mt) => {
+                            let group = match class.lineage {
+                                PrefixLineage::Conversation => {
+                                    let g = lineage_group(self.seed, ci, self.conv_seq);
+                                    self.conv_seq += 1;
+                                    Some(g)
+                                }
+                                _ => None,
+                            };
                             let turns = conversation_turns(
                                 self.t,
                                 class,
@@ -735,13 +873,22 @@ impl Iterator for ScenarioStream {
                                 &mut self.sample_rng,
                             );
                             for (at, p, d) in turns {
-                                self.push_pending(at, ci, p, d);
+                                let shared = if group.is_some() { p + d } else { 0 };
+                                self.push_pending(at, ci, p, d, group, shared);
                             }
                         }
                         None => {
                             let (p, d) = class.lengths.sample(&mut self.sample_rng);
+                            let (group, shared) = match class.lineage {
+                                PrefixLineage::DocPool { docs, doc_tokens } => {
+                                    let doc = self.doc_seq[ci] % docs.max(1) as u64;
+                                    self.doc_seq[ci] += 1;
+                                    (Some(lineage_group(self.seed, ci, doc)), doc_tokens.min(p))
+                                }
+                                _ => (None, 0),
+                            };
                             let t = self.t;
-                            self.push_pending(t, ci, p, d);
+                            self.push_pending(t, ci, p, d, group, shared);
                         }
                     }
                 }
@@ -932,6 +1079,61 @@ mod tests {
         // follow-up carried its conversation's context
         let grown = chat.iter().filter(|r| r.prompt_len > 2048).count();
         assert!(grown > 0, "no follow-up carried context past the first-turn clamp");
+    }
+
+    #[test]
+    fn multiturn_requests_carry_conversation_lineage() {
+        let sc = Scenario::by_name("multiturn-heavy").expect("cache scenario resolves");
+        let reqs = sc.generate(42);
+        let chat: Vec<_> = reqs.iter().filter(|r| r.class == 0).collect();
+        assert!(!chat.is_empty());
+        // every turn of the conversation class is tagged, shared = full stream
+        for r in &chat {
+            assert!(r.prefix_group.is_some(), "conversation turn missing its group");
+            assert_eq!(r.shared_prefix, r.prompt_len + r.decode_len);
+        }
+        // follow-ups exist: some group appears on more than one request
+        let mut groups: Vec<u64> = chat.iter().filter_map(|r| r.prefix_group).collect();
+        let total = groups.len();
+        groups.sort_unstable();
+        groups.dedup();
+        assert!(groups.len() < total, "no conversation produced a follow-up turn");
+    }
+
+    #[test]
+    fn rag_requests_cycle_a_bounded_doc_pool() {
+        let sc = Scenario::by_name("multiturn-heavy").unwrap();
+        let reqs = sc.generate(42);
+        let rag: Vec<_> = reqs.iter().filter(|r| r.class == 1).collect();
+        assert!(!rag.is_empty());
+        let (docs, doc_tokens) = match sc.classes[1].lineage {
+            PrefixLineage::DocPool { docs, doc_tokens } => (docs, doc_tokens),
+            other => panic!("long-rag lost its doc-pool lineage: {other:?}"),
+        };
+        let mut groups: Vec<u64> = rag.iter().filter_map(|r| r.prefix_group).collect();
+        assert_eq!(groups.len(), rag.len(), "every RAG request carries a doc group");
+        groups.sort_unstable();
+        groups.dedup();
+        assert!(groups.len() <= docs, "more doc groups than the pool holds");
+        for r in &rag {
+            assert_eq!(r.shared_prefix, doc_tokens.min(r.prompt_len));
+        }
+    }
+
+    #[test]
+    fn lineage_free_classes_stay_untagged() {
+        // the hybrid scenario's chat + summarization classes carry no
+        // lineage; only long-rag (class 2) is doc-pooled
+        let sc = Scenario::by_name("hybrid").unwrap();
+        for r in sc.generate(42) {
+            match r.class {
+                2 => assert!(r.prefix_group.is_some()),
+                _ => {
+                    assert_eq!(r.prefix_group, None);
+                    assert_eq!(r.shared_prefix, 0);
+                }
+            }
+        }
     }
 
     #[test]

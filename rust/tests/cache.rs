@@ -1,0 +1,213 @@
+//! Prefix-cache contract tests (DESIGN.md §Prefix cache): the cache is a
+//! pure latency/placement optimization, never a semantics change. With
+//! the cache off, runs are bit-identical to the default build (the
+//! pre-cache behaviour); with it on, emitted-token counts and the
+//! request-conservation ledger are untouched under randomized multiturn
+//! schedules, same-seed runs stay bit-identical (the index is
+//! deterministic — LRU by last touch, no RNG), reuse-heavy traffic
+//! actually hits (nonzero hit rate and saved prefill, partitioned
+//! exactly across classes), and crash recovery with the cache on keeps
+//! the no-lost-request invariant while recording survivor-cache resumes.
+
+use dynaserve::core::InstanceId;
+use dynaserve::costmodel::LlmSpec;
+use dynaserve::exec::{FaultEvent, FaultKind};
+use dynaserve::experiments::runners::{
+    build_executor_cache, build_executor_exact, ExecutorKind, System,
+};
+use dynaserve::metrics::SloConfig;
+use dynaserve::sim::Simulator;
+use dynaserve::util::proptest_lite::check;
+use dynaserve::workload::Scenario;
+
+/// The two reuse-heavy scenarios the cache sweep runs on — conversation
+/// lineage (multi-turn) plus the doc-pool RAG mix (multiturn-heavy).
+const SCENARIOS: [&str; 2] = ["multi-turn", "multiturn-heavy"];
+
+/// One DynaServe cell on the exact-metrics path (bit-stable percentiles)
+/// with the prefix cache switched and weighted explicitly.
+fn cache_cell(kind: ExecutorKind, cache: bool, weight: f64) -> Simulator {
+    let llm = LlmSpec::qwen25_14b();
+    build_executor_cache(kind, System::DynaServe, &llm, SloConfig::default(), true, cache, weight)
+}
+
+/// Dump everything the scoring layer produces for bit-identity checks.
+fn score(ex: &mut Simulator, summary: &dynaserve::metrics::Summary) -> (String, String) {
+    let classes = ex.collector.class_summaries(summary.duration);
+    (format!("{summary:?}"), format!("{classes:?}"))
+}
+
+/// The default-off contract: building with `cache: false` must be
+/// bit-identical to the pre-cache default build — Summary (cache columns
+/// zero) and per-class rows included — through BOTH executor facades,
+/// regardless of the (inert) cache_weight. This is the guarantee that
+/// lets the cache land without perturbing any existing figure.
+#[test]
+fn cache_off_is_bit_identical_to_the_default_build() {
+    let llm = LlmSpec::qwen25_14b();
+    for name in SCENARIOS {
+        let sc = Scenario::by_name(name).expect("cache scenario exists").smoke();
+        for kind in [ExecutorKind::Sim, ExecutorKind::LiveVirtual] {
+            let baseline = {
+                let mut ex = build_executor_exact(
+                    kind,
+                    System::DynaServe,
+                    &llm,
+                    SloConfig::default(),
+                    true,
+                );
+                let s = ex.run_stream(sc.stream(42));
+                score(&mut ex, &s)
+            };
+            let cache_off = {
+                let mut ex = cache_cell(kind, false, 4.0);
+                let s = ex.run_stream(sc.stream(42));
+                assert_eq!(s.cache_hit_rate, 0.0, "{name}: cache-off run recorded hits");
+                assert_eq!(s.prefill_tokens_saved, 0, "{name}: cache-off run saved tokens");
+                score(&mut ex, &s)
+            };
+            assert_eq!(
+                baseline.0,
+                cache_off.0,
+                "{name}/{}: cache-off summary diverged from the default build",
+                kind.name()
+            );
+            assert_eq!(
+                baseline.1,
+                cache_off.1,
+                "{name}/{}: cache-off class rows diverged from the default build",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// Same-seed cache-on runs are bit-identical, cache ledger included: the
+/// index is a deterministic function of the segment stream (LRU by last
+/// touch with tick tiebreak, counter-based lineage tags, no RNG).
+#[test]
+fn same_seed_cache_on_runs_bit_identical() {
+    for name in SCENARIOS {
+        let sc = Scenario::by_name(name).expect("cache scenario exists").smoke();
+        let run = || {
+            let mut ex = cache_cell(ExecutorKind::Sim, true, 1.0);
+            let s = ex.run_stream(sc.stream(42));
+            assert_eq!(ex.stuck_requests(), 0, "{name}: segments left resident");
+            let (sum, cls) = score(&mut ex, &s);
+            format!("{sum} {cls}")
+        };
+        assert_eq!(run(), run(), "{name}: same-seed cache-on runs must be bit-identical");
+    }
+}
+
+/// The cache's core safety property: reuse may only skip *recomputation*
+/// of KV an instance already holds — it never changes what is generated
+/// or loses a request. Under random scenarios, durations, weights, and
+/// seeds: offered == completed + shed + rejected on both sides, nothing
+/// stuck, and the cache-on run completes the same requests and emits
+/// exactly the same number of tokens as its cache-off twin.
+#[test]
+fn cache_never_changes_emitted_tokens_or_conservation() {
+    check("random multiturn schedules preserve emitted tokens", 8, |rng| {
+        let name = SCENARIOS[rng.range_usize(0, SCENARIOS.len())];
+        let sc = Scenario::by_name(name)
+            .expect("cache scenario exists")
+            .with_duration(8.0 + 8.0 * rng.f64());
+        let weight = 4.0 * rng.f64();
+        let seed = rng.next_u64();
+        let offered = sc.stream(seed).count();
+        assert!(offered > 0, "multiturn windows must offer work");
+
+        let run = |cache: bool| {
+            let mut ex = cache_cell(ExecutorKind::Sim, cache, weight);
+            let s = ex.run_stream(sc.stream(seed));
+            assert_eq!(ex.stuck_requests(), 0, "{name}: stuck segments (cache={cache})");
+            assert_eq!(
+                s.completed + s.shed_requests as usize + s.rejected_requests as usize,
+                offered,
+                "{name}: request(s) lost (cache={cache}, weight={weight:.2})"
+            );
+            s
+        };
+        let on = run(true);
+        let off = run(false);
+        assert_eq!(
+            on.completed, off.completed,
+            "{name}: cache changed the completion count (weight={weight:.2})"
+        );
+        assert_eq!(
+            on.total_tokens, off.total_tokens,
+            "{name}: cache changed the emitted token count (weight={weight:.2})"
+        );
+        assert_eq!(off.prefill_tokens_saved, 0, "cache-off twin saved tokens");
+    });
+}
+
+/// The payoff the sweep's verdict is built on, pinned as a test: on the
+/// multiturn-heavy scenario the cache actually hits — nonzero hit rate,
+/// nonzero saved prefill — and the per-class cache columns partition the
+/// global ledger exactly (every probe and saved token lands in exactly
+/// one class).
+#[test]
+fn multiturn_traffic_hits_the_cache_and_saves_prefill() {
+    let sc = Scenario::by_name("multiturn-heavy")
+        .expect("multiturn-heavy scenario exists")
+        .with_duration(30.0);
+    let mut ex = cache_cell(ExecutorKind::Sim, true, 1.0);
+    let s = ex.run_stream(sc.stream(42));
+    assert_eq!(ex.stuck_requests(), 0);
+    assert!(
+        s.cache_hit_rate > 0.0 && s.cache_hit_rate <= 1.0,
+        "30 s of conversation+RAG lineage must hit the cache (rate {})",
+        s.cache_hit_rate
+    );
+    assert!(s.prefill_tokens_saved > 0, "hits must skip a nonzero prefix");
+    let classes = ex.collector.class_summaries(s.duration);
+    let by_class: u64 = classes.iter().map(|c| c.prefill_tokens_saved).sum();
+    assert_eq!(
+        by_class, s.prefill_tokens_saved,
+        "per-class saved-token counts must partition the global ledger"
+    );
+    assert!(
+        classes.iter().any(|c| c.cache_hit_rate > 0.0),
+        "at least one lineage class must show hits"
+    );
+}
+
+/// Crash recovery with the cache on: a mid-run crash on reuse-heavy
+/// traffic still loses nothing (offered == completed + shed), the run
+/// drains, re-placements may resume from a survivor's cached prefix
+/// (`resumed_from_cache` ≤ `replaced_requests` — every resume is a
+/// re-placement), and the whole faulted cache-on run is bit-identical
+/// seed-for-seed, recovery ledger included.
+#[test]
+fn crash_recovery_with_cache_on_conserves_and_stays_deterministic() {
+    let sc = Scenario::by_name("multiturn-heavy")
+        .expect("multiturn-heavy scenario exists")
+        .with_duration(20.0);
+    let offered = sc.stream(42).count();
+    let run = || {
+        let mut ex = cache_cell(ExecutorKind::Sim, true, 1.0);
+        ex.push_fault_events(&[FaultEvent {
+            at: 10.0,
+            kind: FaultKind::Crash { id: InstanceId(1) },
+        }]);
+        let s = ex.run_stream(sc.stream(42));
+        assert_eq!(ex.stuck_requests(), 0, "faulted cache-on run left segments resident");
+        assert_eq!(
+            s.completed + s.shed_requests as usize + s.rejected_requests as usize,
+            offered,
+            "request(s) lost across the crash with the cache on"
+        );
+        let r = ex.recovery_stats();
+        assert!(
+            r.resumed_from_cache <= r.replaced_requests,
+            "every cache resume must be a re-placement ({} > {})",
+            r.resumed_from_cache,
+            r.replaced_requests
+        );
+        let (sum, cls) = score(&mut ex, &s);
+        format!("{sum} {cls} recovery={r:?}")
+    };
+    assert_eq!(run(), run(), "faulted cache-on runs must be bit-identical");
+}

@@ -22,7 +22,8 @@
 
 use dynaserve::costmodel::LlmSpec;
 use dynaserve::experiments::runners::{
-    build_executor, build_executor_exact, build_executor_overload, ExecutorKind, System,
+    build_executor, build_executor_cache, build_executor_exact, build_executor_overload,
+    ExecutorKind, System,
 };
 use dynaserve::metrics::SloConfig;
 use dynaserve::workload::{poisson_workload, Scenario, TraceKind};
@@ -205,6 +206,47 @@ fn overload_trace_is_bit_identical_across_executors() {
         assert_eq!(cls_sim, cls_live, "{}: per-class rows diverged", sys.name());
         assert_eq!(stuck_sim, 0, "{}: sim executor left stuck segments", sys.name());
         assert_eq!(stuck_live, 0, "{}: live executor left stuck segments", sys.name());
+    }
+}
+
+/// Cache parity: a reuse-heavy trace with the prefix cache enabled (and
+/// cache-weighted placement active) stays bit-identical through both
+/// facades — the cache ledger (`Summary::cache_hit_rate`,
+/// `prefill_tokens_saved`, per-class columns) included. The radix index
+/// lives in the shared `InstanceRuntime`, the credit scoring in the
+/// shared policy seam, and the prefix skip in the shared
+/// `plan_submission`, so neither facade may see a different match; a
+/// divergence here means one facade grew its own cache path.
+#[test]
+fn cache_trace_is_bit_identical_across_executors() {
+    let llm = LlmSpec::qwen25_14b();
+    for name in ["multi-turn", "multiturn-heavy"] {
+        let sc = Scenario::by_name(name).expect("cache scenario exists").smoke();
+        let requests = sc.generate(7);
+        assert!(!requests.is_empty());
+        let run = |kind: ExecutorKind| {
+            let mut ex = build_executor_cache(
+                kind,
+                System::DynaServe,
+                &llm,
+                SloConfig::default(),
+                true,
+                true,
+                1.0,
+            );
+            let summary = ex.run(requests.clone());
+            let classes = ex.collector.class_summaries(summary.duration);
+            (format!("{summary:?}"), format!("{classes:?}"), ex.stuck_requests())
+        };
+        let (sum_sim, cls_sim, stuck_sim) = run(ExecutorKind::Sim);
+        let (sum_live, cls_live, stuck_live) = run(ExecutorKind::LiveVirtual);
+        assert_eq!(
+            sum_sim, sum_live,
+            "{name}: cache-enabled summaries diverged between executors"
+        );
+        assert_eq!(cls_sim, cls_live, "{name}: per-class rows diverged");
+        assert_eq!(stuck_sim, 0, "{name}: sim executor left stuck segments");
+        assert_eq!(stuck_live, 0, "{name}: live executor left stuck segments");
     }
 }
 
