@@ -3,8 +3,11 @@
 
 ARTIFACTS ?= artifacts
 PYTHON    ?= python3
+# Where experiment harnesses drop their JSON artifacts (`--out-dir`).
+RESULTS   ?= results
 
-.PHONY: artifacts build test bench bench-1m experiments parity elastic faults overload cache clean
+.PHONY: artifacts build test bench bench-1m experiments parity elastic faults overload cache \
+	migrate clean
 
 # Lower the TinyQwen step function to HLO text + params + manifest, and
 # snapshot the simulator bench rows to BENCH_sim.json so every artifact
@@ -32,27 +35,35 @@ parity:
 # counts on the diurnal scenario, scored by goodput-per-GPU-second
 # (EXPERIMENTS.md §Elastic). Emits results/elastic.json.
 elastic:
-	cargo run --release --bin experiments -- elastic
+	cargo run --release --bin experiments -- elastic --out-dir $(RESULTS)
 
 # Fault-tolerance evaluation: seeded crash-rate sweep on the faulty
 # diurnal scenario, recovery on vs off, scored by goodput and the
 # recovery ledger (EXPERIMENTS.md §Faults). Emits results/faults.json.
 faults:
-	cargo run --release --bin experiments -- faults
+	cargo run --release --bin experiments -- faults --out-dir $(RESULTS)
 
 # Overload evaluation: offered-load multiplier sweep past fleet capacity,
 # overload defenses (SLO-aware admission + priority batching) on vs off,
 # scored by the graceful-degradation curve of interactive goodput
 # (EXPERIMENTS.md §Overload). Emits results/overload.json.
 overload:
-	cargo run --release --bin experiments -- overload
+	cargo run --release --bin experiments -- overload --out-dir $(RESULTS)
 
 # Prefix-cache evaluation: cache on/off × multiturn/long-RAG scenarios ×
 # cache_weight, scored by hit rate, prefill tokens saved (priced in
 # GPU-seconds via the cost model), and interactive P99 TTFT vs the
 # cache-off twin (EXPERIMENTS.md §Cache). Emits results/cache.json.
 cache:
-	cargo run --release --bin experiments -- cache
+	cargo run --release --bin experiments -- cache --out-dir $(RESULTS)
+
+# KV-migration evaluation: remote prefix fetch and decode-phase
+# preemption on/off × fast/slow modeled link × overload/multiturn
+# scenarios, scored by fetched tokens vs prefill saved, interactive P99
+# TTFT vs the off twin, and the conservation ledger (EXPERIMENTS.md
+# §Migrate). Emits $(RESULTS)/migrate.json.
+migrate:
+	cargo run --release --bin experiments -- migrate --out-dir $(RESULTS)
 
 bench:
 	cargo bench --bench bench_schedulers
@@ -70,8 +81,8 @@ bench-1m:
 		cargo bench --bench bench_1m
 
 experiments:
-	cargo run --release --bin experiments -- all
+	cargo run --release --bin experiments -- all --out-dir $(RESULTS)
 
 clean:
 	cargo clean
-	rm -rf $(ARTIFACTS) results
+	rm -rf $(ARTIFACTS) $(RESULTS)

@@ -49,6 +49,7 @@ impl Policy for ColocPolicy {
             beta: None,
             probes: 0,
             cached: 0,
+            fetch: 0,
         }
     }
 }

@@ -67,6 +67,7 @@ impl Policy for DisaggPolicy {
             }),
             probes: 0,
             cached: 0,
+            fetch: 0,
         }
     }
 }

@@ -2,7 +2,8 @@
 //! evaluation. `experiments all` runs the lot; see DESIGN.md §4.
 //!
 //! Usage:
-//!   cargo run --release --bin experiments -- <id> [--duration S] [--seed N] [--threads N] …
+//!   cargo run --release --bin experiments -- <id> [--duration S] [--seed N] [--threads N]
+//!                                                 [--out-dir DIR] …
 //!   cargo run --release --bin experiments -- all
 //!   cargo run --release --bin experiments -- list
 //!   cargo run --release --bin experiments -- scenarios --list

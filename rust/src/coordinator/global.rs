@@ -56,6 +56,19 @@ impl Default for GlobalConfig {
     }
 }
 
+/// A remote prefix match offered to an instance during placement
+/// ([`GlobalScheduler::schedule_fetch`]): `tokens` of the request's
+/// shared prefix are resident on *some other* instance and could be
+/// migrated in for `transfer_time` modeled seconds of link occupancy.
+/// The host only offers credits the migration planner already approved
+/// (transfer beats recomputing the span), so the scheduler's job is
+/// purely to weigh the discounted credit against local alternatives.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RemoteCredit {
+    pub tokens: usize,
+    pub transfer_time: f64,
+}
+
 /// Outcome of one scheduling decision, with probe telemetry.
 #[derive(Debug, Clone)]
 pub struct ScheduleOutcome {
@@ -67,6 +80,10 @@ pub struct ScheduleOutcome {
     /// Matched cached-prefix tokens on the instance that executes the
     /// request's head (block-aligned, < P); the submit path skips them.
     pub cached: usize,
+    /// Leading tokens of `cached` that must be *fetched* from another
+    /// instance (0 = the whole match is local to the head). Always ≤
+    /// `cached`; nonzero only when a [`RemoteCredit`] won the head.
+    pub fetched: usize,
 }
 
 #[derive(Debug)]
@@ -131,9 +148,58 @@ impl GlobalScheduler {
         matches: &[usize],
         profile: &ProfileTable,
     ) -> ScheduleOutcome {
+        // An empty remote slice makes every reuse choice local, so this
+        // is exactly the fetch-off decision (pinned by tests).
+        self.schedule_fetch(req, loads, matches, &[], profile)
+    }
+
+    /// The local reuse credit vs the discounted remote one: returns the
+    /// winning `(credit_seconds, matched_tokens, is_remote)` for one
+    /// instance. A remote span only competes when it is strictly longer
+    /// than the local match, and its credit is the profiled prefill time
+    /// of the span *minus* the modeled transfer time — fetching never
+    /// scores better than already having the tokens.
+    fn reuse_choice(
+        &self,
+        local_match: usize,
+        remote: RemoteCredit,
+        profile: &ProfileTable,
+    ) -> (f64, usize, bool) {
+        let local = if local_match > 0 {
+            self.cfg.cache_weight * profile.estimate(local_match, 0, 0)
+        } else {
+            0.0
+        };
+        if remote.tokens > local_match {
+            let credit = (self.cfg.cache_weight * profile.estimate(remote.tokens, 0, 0)
+                - remote.transfer_time)
+                .max(0.0);
+            if credit > local {
+                return (credit, remote.tokens, true);
+            }
+        }
+        (local, local_match, false)
+    }
+
+    /// Migration-aware [`schedule_cached`](GlobalScheduler::schedule_cached):
+    /// each instance's reuse credit is the better of its local match and
+    /// its transfer-cost-discounted [`RemoteCredit`] (a span resident
+    /// elsewhere that the migration engine could ship in). When the
+    /// remote span wins on the instance that executes the request's
+    /// head, the outcome's `fetched` reports how many of the skipped
+    /// `cached` tokens must be migrated before the head can start.
+    pub fn schedule_fetch(
+        &mut self,
+        req: &Request,
+        loads: &[LoadDigest],
+        matches: &[usize],
+        remote: &[RemoteCredit],
+        profile: &ProfileTable,
+    ) -> ScheduleOutcome {
         assert!(!loads.is_empty());
         let l = req.predicted_len().max(1);
         let match_of = |i: usize| matches.get(i).copied().unwrap_or(0);
+        let remote_of = |i: usize| remote.get(i).copied().unwrap_or_default();
         // Per-request SLO slack: a request carrying its own TBT target is
         // probed with that budget — a tighter target shrinks the virtual
         // per-pass prefill budget, lengthening predicted drain times under
@@ -145,6 +211,13 @@ impl GlobalScheduler {
         // Single instance: degenerate to colocation.
         if loads.len() == 1 {
             let t = completion_time_digest(&loads[0], span_item(req, 0, l), profile, pcfg);
+            let (_, tokens, is_remote) = self.reuse_choice(match_of(0), remote_of(0), profile);
+            let cached = clamp_cached(tokens, req.prompt_len);
+            let fetched = if is_remote {
+                cached.saturating_sub(clamp_cached(match_of(0), req.prompt_len))
+            } else {
+                0
+            };
             return ScheduleOutcome {
                 decision: SplitDecision {
                     ratio: 1.0,
@@ -155,21 +228,25 @@ impl GlobalScheduler {
                 t_alpha: t,
                 t_beta: t,
                 probes: 1,
-                cached: clamp_cached(match_of(0), req.prompt_len),
+                cached,
+                fetched,
             };
         }
 
         // Base drain time per instance; α on the emptiest by credited
         // score (drain minus cache credit — reuse pulls the pair toward
-        // instances already holding the request's prefix).
+        // instances already holding the request's prefix, or able to
+        // fetch it cheaply).
         self.probe_buf.clear();
         self.probe_buf
             .extend(loads.iter().map(|d| completion_time_digest(d, None, profile, pcfg)));
         self.score_buf.clear();
         self.score_buf.extend(self.probe_buf.iter().enumerate().map(|(i, &t)| {
-            match match_of(i) {
-                0 => t,
-                m => t - self.cfg.cache_weight * profile.estimate(m, 0, 0),
+            let (credit, _, _) = self.reuse_choice(match_of(i), remote_of(i), profile);
+            if credit == 0.0 {
+                t
+            } else {
+                t - credit
             }
         }));
         let (ai, bi) = router::pick_pair(&self.score_buf, &mut self.rr);
@@ -211,8 +288,16 @@ impl GlobalScheduler {
         }
         // The head of the request (its prefill start) runs on α — or on β
         // when the split snapped to 0 — so that instance's match is the
-        // one the submit path may skip.
-        let cached = clamp_cached(match_of(if s == 0 { bi } else { ai }), req.prompt_len);
+        // one the submit path may skip; a winning remote span marks the
+        // block-aligned tokens beyond the local match as fetched.
+        let head = if s == 0 { bi } else { ai };
+        let (_, tokens, is_remote) = self.reuse_choice(match_of(head), remote_of(head), profile);
+        let cached = clamp_cached(tokens, req.prompt_len);
+        let fetched = if is_remote {
+            cached.saturating_sub(clamp_cached(match_of(head), req.prompt_len))
+        } else {
+            0
+        };
         ScheduleOutcome {
             decision: SplitDecision {
                 ratio: s as f64 / l as f64,
@@ -224,6 +309,7 @@ impl GlobalScheduler {
             t_beta: t2,
             probes,
             cached,
+            fetched,
         }
     }
 
@@ -258,6 +344,7 @@ impl GlobalScheduler {
                 t_beta: t,
                 probes: 1,
                 cached: 0,
+                fetched: 0,
             };
         }
 
@@ -316,6 +403,7 @@ impl GlobalScheduler {
             t_beta: t2,
             probes,
             cached: 0,
+            fetched: 0,
         }
     }
 }
@@ -540,6 +628,74 @@ mod tests {
         };
         assert_eq!(head, loads[1].id);
         assert_eq!(out.cached, 512, "block-aligned match inside the prompt");
+    }
+
+    #[test]
+    fn empty_remote_slice_reproduces_cached_schedule() {
+        // schedule_fetch with no remote credits must make the exact
+        // decision schedule_cached makes — the fetch-off bit-identity
+        // guarantee at the scheduler level.
+        let p = profile();
+        let mut g1 = GlobalScheduler::new(GlobalConfig::default());
+        let mut g2 = GlobalScheduler::new(GlobalConfig::default());
+        let mut snaps = idle(3);
+        snaps[2].work = vec![WorkItem::pure_decode(512, 100)];
+        let loads = digests(&snaps);
+        for id in 0..4u64 {
+            let r = Request::new(id, 0.0, 700 + 64 * id as usize, 300);
+            let a = g1.schedule_cached(&r, &loads, &[128, 0, 64], &p);
+            let b = g2.schedule_fetch(&r, &loads, &[128, 0, 64], &[], &p);
+            assert_eq!(a.decision, b.decision);
+            assert_eq!(a.cached, b.cached);
+            assert_eq!(b.fetched, 0);
+        }
+    }
+
+    #[test]
+    fn cheap_remote_span_wins_the_head_and_reports_fetched() {
+        let p = profile();
+        let mut g = GlobalScheduler::new(GlobalConfig::default());
+        let loads = digests(&idle(2));
+        let mut r = req(1024, 1024);
+        r.prefix_group = Some(9);
+        r.shared_prefix = 512;
+        // instance 0 could fetch a 512-token span nearly for free while
+        // instance 1 holds only 64 locally: the discounted remote credit
+        // must win the head for instance 0, and with no local blocks
+        // there the whole matched span ships.
+        let remote = [RemoteCredit { tokens: 512, transfer_time: 1e-6 }, RemoteCredit::default()];
+        let out = g.schedule_fetch(&r, &loads, &[0, 64], &remote, &p);
+        let head = if out.decision.split == 0 {
+            out.decision.beta_instance
+        } else {
+            out.decision.alpha_instance
+        };
+        assert_eq!(head, loads[0].id);
+        assert_eq!(out.cached, 512);
+        assert_eq!(out.fetched, 512, "no local blocks: the whole match ships");
+        assert!(out.fetched <= out.cached);
+    }
+
+    #[test]
+    fn expensive_remote_span_never_beats_local_tokens() {
+        let p = profile();
+        let mut g = GlobalScheduler::new(GlobalConfig::default());
+        let loads = digests(&idle(2));
+        let mut r = req(1024, 1024);
+        r.prefix_group = Some(9);
+        r.shared_prefix = 512;
+        // the remote span's transfer time swamps its prefill credit: the
+        // choice must fall back to the local 512-token match on 1
+        let remote = [RemoteCredit { tokens: 512, transfer_time: 10.0 }, RemoteCredit::default()];
+        let out = g.schedule_fetch(&r, &loads, &[0, 512], &remote, &p);
+        let head = if out.decision.split == 0 {
+            out.decision.beta_instance
+        } else {
+            out.decision.alpha_instance
+        };
+        assert_eq!(head, loads[1].id);
+        assert_eq!(out.cached, 512);
+        assert_eq!(out.fetched, 0);
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub mod predictor;
 pub mod profile;
 pub mod router;
 
-pub use global::{GlobalConfig, GlobalScheduler, ScheduleOutcome};
+pub use global::{GlobalConfig, GlobalScheduler, RemoteCredit, ScheduleOutcome};
 pub use length_pred::LengthPredictor;
 pub use local::{BatchPlan, LocalConfig, LocalScheduler};
 pub use predictor::{completion_time, completion_time_digest, InstanceSnapshot, LoadDigest};

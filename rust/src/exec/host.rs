@@ -32,7 +32,7 @@ use std::collections::{BinaryHeap, HashMap};
 use std::time::Instant;
 
 use crate::coordinator::local::BatchPlan;
-use crate::coordinator::{LoadDigest, LocalConfig, LocalScheduler, ProfileTable};
+use crate::coordinator::{LoadDigest, LocalConfig, LocalScheduler, ProfileTable, RemoteCredit};
 use crate::core::{InstanceId, Request, RequestId};
 use crate::costmodel::InstanceSpec;
 use crate::exec::clock::{Clock, VirtualClock};
@@ -41,10 +41,13 @@ use crate::exec::cluster::{
     ScaleEvent, PREFILL_BACKLOG_BUDGET,
 };
 use crate::exec::fault::{FaultEvent, FaultKind, RetryPolicy};
+use crate::exec::migrate::{
+    EvacTicket, FetchTicket, MigrationPlanner, MigrationStats, MigrationTracker,
+};
 use crate::exec::policy::Policy;
 use crate::exec::runtime::{InstanceRuntime, KvSpan, Segment, SegmentDisposition, SeqKey};
-use crate::exec::submit::{make_segment, plan_submission};
-use crate::exec::transport::{Handoff, HandoffDisposition, ModeledTransport, Transport};
+use crate::exec::submit::{make_segment, plan_submission, SubmitPlan};
+use crate::exec::transport::{Handoff, HandoffDisposition, ModeledTransport, RemoteSeq, Transport};
 use crate::kv::LinkSpec;
 use crate::metrics::{Collector, MetricsMode, RecoveryStats, SloConfig, Summary};
 use crate::util::stats::Samples;
@@ -160,6 +163,28 @@ pub struct ExecConfig {
     /// without it. Default off. The exact-snapshot reference path stays
     /// cache-oblivious (placement credit applies on the digest path).
     pub cache: bool,
+    /// Cross-instance prefix *fetch* (DESIGN.md §KV migration): with the
+    /// prefix cache on, placement also weighs prefix spans resident on
+    /// *other* instances, discounted by their modeled transfer time —
+    /// offers are built only when the migration planner prices the
+    /// transfer below recomputing the span. A winning remote span is
+    /// migrated in over the link before the head starts (the α is gated
+    /// on its fetch exactly like a β on its handoff). Default off; off —
+    /// or on without `cache`, which leaves every index empty — the
+    /// remote-offer slice is empty and the run is bit-identical to the
+    /// cache-only path.
+    pub migrate_fetch: bool,
+    /// Decode-phase preemption (DESIGN.md §KV migration): when an
+    /// interactive arrival would queue behind KV backpressure on its head
+    /// instance, the oldest batch-class decode there is evicted with its
+    /// computed context snapshotted into the prefix index, then
+    /// resubmitted — locally, re-entering through the cache-skip path, or
+    /// evacuated to a less-loaded peer when the planner prices shipping
+    /// the snapshot below recomputing it. Enables the per-instance prefix
+    /// index even when `cache` is off (snapshots need somewhere to live;
+    /// arrivals still don't probe it, so summaries are unchanged).
+    /// Default off; off is bit-identical.
+    pub migrate_preempt: bool,
     /// Bounded retries with exponential backoff for failed α→β handoff
     /// transfers (shared with the live server; DESIGN.md §Fault
     /// tolerance). Ignored — one attempt only — when `recovery` is off.
@@ -189,6 +214,8 @@ impl ExecConfig {
                 admission: false,
                 recovery: true,
                 cache: false,
+                migrate_fetch: false,
+                migrate_preempt: false,
                 retry: RetryPolicy::default(),
             },
         }
@@ -285,6 +312,20 @@ impl ExecConfigBuilder {
     /// [`ExecConfig::cache`]).
     pub fn cache(mut self, on: bool) -> Self {
         self.cfg.cache = on;
+        self
+    }
+
+    /// Enable/disable cross-instance prefix fetch (see
+    /// [`ExecConfig::migrate_fetch`]).
+    pub fn migrate_fetch(mut self, on: bool) -> Self {
+        self.cfg.migrate_fetch = on;
+        self
+    }
+
+    /// Enable/disable decode-phase preemption (see
+    /// [`ExecConfig::migrate_preempt`]).
+    pub fn migrate_preempt(mut self, on: bool) -> Self {
+        self.cfg.migrate_preempt = on;
         self
     }
 
@@ -418,6 +459,15 @@ pub struct VirtualExecutor {
     loads: Vec<LoadDigest>,
     /// Reusable completed-segment buffer for iteration application.
     completed_buf: Vec<SeqKey>,
+    /// In-flight cross-instance migrations (prefix fetches gating α
+    /// heads, evacuations gating resumed decodes) and their lifetime
+    /// token/byte ledger.
+    pub migration: MigrationTracker,
+    /// Reusable remote-offer buffers for the fetch probe (aligned with
+    /// `loads`): the credit slice handed to the policy and the source
+    /// instance behind each offer.
+    remote: Vec<RemoteCredit>,
+    remote_src: Vec<InstanceId>,
 }
 
 impl VirtualExecutor {
@@ -433,7 +483,8 @@ impl VirtualExecutor {
             }
             lc.slo = cfg.slo.tbt;
             let (spec, prof) = (cfg.spec.clone(), profile.clone());
-            let cache = cfg.cache;
+            // preemption snapshots live in the prefix index too
+            let cache = cfg.cache || cfg.migrate_preempt;
             // the bootstrap fleet is active at t = 0 (no warm-up)
             cluster.add_instance(0.0, 0.0, |id| {
                 let mut rt = InstanceRuntime::new(id, spec, LocalScheduler::new(lc, prof));
@@ -472,7 +523,33 @@ impl VirtualExecutor {
             work_end: 0.0,
             loads: Vec::new(),
             completed_buf: Vec::new(),
+            migration: MigrationTracker::default(),
+            remote: Vec::new(),
+            remote_src: Vec::new(),
         }
+    }
+
+    /// The fetch-vs-recompute planner priced over this executor's link
+    /// (cheap to build: all fields are copies of config scalars).
+    fn migration_planner(&self) -> MigrationPlanner {
+        MigrationPlanner::new(
+            self.cfg.link,
+            self.cfg.transfer_chunk_tokens,
+            self.cfg.chunked_transfer,
+            self.cfg.spec.llm.kv_bytes_per_token(),
+        )
+    }
+
+    /// Lifetime migration ledger (fetches, evacuations, bytes moved).
+    pub fn migration_stats(&self) -> MigrationStats {
+        self.migration.stats
+    }
+
+    /// In-flight migrations per destination instance: `(id, pending
+    /// fetches, pending evacuations)` — the residue view
+    /// [`crate::experiments::runners::warn_if_stuck`] prints.
+    pub fn migration_in_flight(&self) -> Vec<(InstanceId, usize, usize)> {
+        self.migration.in_flight_by_instance()
     }
 
     fn push(&mut self, time: f64, kind: EventKind) {
@@ -590,6 +667,17 @@ impl VirtualExecutor {
                     self.on_iter_done(instance, plan, latency)
                 }
                 EventKind::SeqReady { instance, key } => {
+                    // A migration gating this address has landed: close
+                    // its ticket; a completed fetch also drops the pin
+                    // held on the source copy for the transfer's
+                    // lifetime. (A shed/evicted destination resolves the
+                    // same way — the event always fires.)
+                    if let Some(t) = self.migration.complete_fetch(RemoteSeq::new(instance, key)) {
+                        if let Some(rt) = self.cluster.runtime_mut(t.source, now) {
+                            rt.release_prefix(t.group, t.pinned);
+                        }
+                    }
+                    self.migration.complete_evac(RemoteSeq::new(instance, key));
                     // the arena holds the segment whether it is admitted or
                     // still in the KV-backpressure queue; stale keys (a β
                     // re-placed away by a drain) are tolerated
@@ -622,6 +710,7 @@ impl VirtualExecutor {
             .summarize(end.max(1e-9))
             .with_fleet(self.cluster.gpu_seconds(end))
             .with_recovery(self.recovery)
+            .with_migration(self.migration.stats.migrated_kv_bytes)
     }
 
     /// Segments that never completed (should be 0 — any residue indicates
@@ -664,7 +753,7 @@ impl VirtualExecutor {
         let mut lc = self.cfg.local;
         lc.slo = self.cfg.slo.tbt;
         let (spec, prof) = (self.cfg.spec.clone(), self.profile.clone());
-        let cache = self.cfg.cache;
+        let cache = self.cfg.cache || self.cfg.migrate_preempt;
         let id = self.cluster.add_instance(now, self.cfg.warmup, |id| {
             let mut rt = InstanceRuntime::new(id, spec, LocalScheduler::new(lc, prof));
             if cache {
@@ -718,12 +807,14 @@ impl VirtualExecutor {
                 .cluster
                 .members()
                 .iter()
-                .find_map(|m| m.runtime.find_handoff_source((id, old_key)).map(|k| (m.id, k)));
+                .find_map(|m| {
+                    m.runtime.find_handoff_source(RemoteSeq::new(id, old_key)).map(|k| (m.id, k))
+                });
             let retargeted = source.is_some_and(|(a_inst, a_key)| {
                 self.cluster
                     .runtime_mut(a_inst, now)
                     .and_then(|r| r.get_mut(a_key))
-                    .map(|a| a.beta_dest = Some((target, new_key)))
+                    .map(|a| a.beta_dest = Some(RemoteSeq::new(target, new_key)))
                     .is_some()
             });
             debug_assert!(retargeted, "re-placed β had no α handoff pointing at it");
@@ -863,29 +954,29 @@ impl VirtualExecutor {
         // in-flight) its payload was captured at dispatch — just release
         // the pinned pages. Only an α whose handoff failed and awaits a
         // retry leaves its β uncommitted.
-        let uncommitted = seg.beta_dest.and_then(|(bi, bk)| {
+        let uncommitted = seg.beta_dest.filter(|d| {
             self.cluster
-                .runtime(bi)
-                .and_then(|r| r.get(bk))
-                .filter(|b| !b.transfer_started)
-                .map(|_| (bi, bk))
+                .runtime(d.instance)
+                .and_then(|r| r.get(d.key))
+                .is_some_and(|b| !b.transfer_started)
         });
         if let Some(rt) = self.cluster.runtime_mut(dead, now) {
             rt.evict(key);
         }
-        let Some((bi, bk)) = uncommitted else { return };
+        let Some(d) = uncommitted else { return };
         // the α's KV was the β's only context source and it is gone
         if self.cfg.recovery {
-            if let Some(b) = self.cluster.runtime_mut(bi, now).and_then(|r| r.evict(bk)) {
-                touched.push(bi);
+            if let Some(b) = self.cluster.runtime_mut(d.instance, now).and_then(|r| r.evict(d.key))
+            {
+                touched.push(d.instance);
                 self.note_replaced(b.request, now, counted);
                 self.replace_from_scratch(b, now, touched);
             }
         } else {
-            if let Some(rt) = self.cluster.runtime_mut(bi, now) {
-                rt.evict(bk);
+            if let Some(rt) = self.cluster.runtime_mut(d.instance, now) {
+                rt.evict(d.key);
             }
-            touched.push(bi);
+            touched.push(d.instance);
             self.shed(seg.request);
         }
     }
@@ -902,11 +993,28 @@ impl VirtualExecutor {
     ) {
         // the α's home, wherever it lives (possibly this same dead
         // instance — its own orphan pass re-places it consistently)
-        let source = self
-            .cluster
-            .members()
-            .iter()
-            .find_map(|m| m.runtime.find_handoff_source((dead, key)).map(|k| (m.id, k)));
+        let source = self.cluster.members().iter().find_map(|m| {
+            m.runtime.find_handoff_source(RemoteSeq::new(dead, key)).map(|k| (m.id, k))
+        });
+        if source.is_none() && seg.cached_prefix > 0 {
+            // No α feeds this segment: it is gated on a *migration* (a
+            // fetched head or an evacuated resume) whose span was heading
+            // to a socket that just died. Rebuild from the durable prompt
+            // on a survivor — replace_from_scratch re-consults the
+            // survivor's cache. The migration's SeqReady still fires at
+            // the original deadline: it closes the ticket (releasing any
+            // source-side pin) and is otherwise stale, and tolerated.
+            if let Some(rt) = self.cluster.runtime_mut(dead, now) {
+                rt.evict(key);
+            }
+            if self.cfg.recovery {
+                self.note_replaced(seg.request, now, counted);
+                self.replace_from_scratch(seg, now, touched);
+            } else {
+                self.shed(seg.request);
+            }
+            return;
+        }
         if !self.cfg.recovery {
             if let Some(rt) = self.cluster.runtime_mut(dead, now) {
                 rt.evict(key);
@@ -943,7 +1051,7 @@ impl VirtualExecutor {
         touched.push(target);
         if let Some((ai, ak)) = source {
             if let Some(a) = self.cluster.runtime_mut(ai, now).and_then(|r| r.get_mut(ak)) {
-                a.beta_dest = Some((target, new_key));
+                a.beta_dest = Some(RemoteSeq::new(target, new_key));
             }
         }
         self.note_replaced(request, now, counted);
@@ -956,7 +1064,7 @@ impl VirtualExecutor {
             let h = Handoff {
                 request,
                 source: source.map(|(_, k)| k).unwrap_or(key),
-                dest: (target, new_key),
+                dest: RemoteSeq::new(target, new_key),
                 history: vec![KvSpan { t0: now, t1: now, tokens, decode_run: false }],
             };
             self.recovery.retransferred_kv_bytes +=
@@ -998,11 +1106,11 @@ impl VirtualExecutor {
             rt.evict(key);
         }
         if !self.cfg.recovery {
-            if let Some((bi, bk)) = seg.beta_dest {
-                if let Some(rt) = self.cluster.runtime_mut(bi, now) {
-                    rt.evict(bk);
+            if let Some(d) = seg.beta_dest {
+                if let Some(rt) = self.cluster.runtime_mut(d.instance, now) {
+                    rt.evict(d.key);
                 }
-                touched.push(bi);
+                touched.push(d.instance);
             }
             self.shed(seg.request);
             return;
@@ -1139,12 +1247,12 @@ impl VirtualExecutor {
         if let Some(rt) = self.cluster.runtime_mut(instance, now) {
             rt.evict(handoff.source);
         }
-        if let Some(rt) = self.cluster.runtime_mut(dest.0, now) {
-            rt.evict(dest.1);
+        if let Some(rt) = self.cluster.runtime_mut(dest.instance, now) {
+            rt.evict(dest.key);
         }
         self.shed(request);
         self.kick(instance);
-        self.kick(dest.0);
+        self.kick(dest.instance);
     }
 
     /// A scheduled handoff retry fires: re-dispatch against the α's
@@ -1164,7 +1272,8 @@ impl VirtualExecutor {
             .and_then(|r| r.get(handoff.source))
             .and_then(|s| s.beta_dest);
         let dest = current.unwrap_or(handoff.dest);
-        let beta_alive = self.cluster.runtime(dest.0).and_then(|r| r.get(dest.1)).is_some();
+        let beta_alive =
+            self.cluster.runtime(dest.instance).and_then(|r| r.get(dest.key)).is_some();
         if !beta_alive {
             // the β was re-placed from scratch or shed by a crash during
             // the backoff: the pinned α (if any) has no consumer left
@@ -1177,21 +1286,22 @@ impl VirtualExecutor {
         handoff.dest = dest;
         match self.transport.handoff(now, handoff.clone()) {
             HandoffDisposition::Scheduled { ready_at } => {
-                if let Some(b) = self.cluster.runtime_mut(dest.0, now).and_then(|r| r.get_mut(dest.1))
+                if let Some(b) =
+                    self.cluster.runtime_mut(dest.instance, now).and_then(|r| r.get_mut(dest.key))
                 {
                     b.transfer_started = true;
                 }
-                self.push(ready_at, EventKind::SeqReady { instance: dest.0, key: dest.1 });
+                self.push(ready_at, EventKind::SeqReady { instance: dest.instance, key: dest.key });
                 self.push(ready_at, EventKind::AlphaEvict { instance, key: handoff.source });
             }
             HandoffDisposition::Detached => {
                 if let Some(rt) = self.cluster.runtime_mut(instance, now) {
                     rt.evict(handoff.source);
                 }
-                if let Some(rt) = self.cluster.runtime_mut(dest.0, now) {
-                    rt.mark_ready(dest.1);
+                if let Some(rt) = self.cluster.runtime_mut(dest.instance, now) {
+                    rt.mark_ready(dest.key);
                 }
-                self.kick(dest.0);
+                self.kick(dest.instance);
             }
             HandoffDisposition::Failed { handoff } => {
                 self.on_handoff_failed(instance, handoff, failures + 1, first_at)
@@ -1325,8 +1435,49 @@ impl VirtualExecutor {
             } else {
                 Vec::new()
             };
+            // Remote-fetch offers (DESIGN.md §KV migration), aligned with
+            // `loads`: the best peer-resident prefix span per candidate,
+            // offered only when it exceeds the local match AND the
+            // planner prices shipping the missing tokens below
+            // recomputing them. All-zero offers fall through to the
+            // plain cached call, so migrate-off runs are bit-identical.
+            self.remote.clear();
+            self.remote_src.clear();
+            if self.cfg.migrate_fetch && !matches.is_empty() {
+                let (group, _) = crate::kv::prefix::lineage(&req)
+                    .expect("non-empty matches imply a lineage");
+                let want = crate::kv::prefix::matchable_prompt(&req);
+                let planner = self.migration_planner();
+                for (idx, d) in self.loads.iter().enumerate() {
+                    let mut best = (0usize, d.id);
+                    for m in self.cluster.members() {
+                        if m.id == d.id
+                            || matches!(m.state, MemberState::Retired | MemberState::Failed)
+                        {
+                            continue;
+                        }
+                        let got = m.runtime.prefix_lookup(group, want);
+                        if got > best.0 {
+                            best = (got, m.id);
+                        }
+                    }
+                    let extra = best.0.saturating_sub(matches[idx]);
+                    let transfer_time = planner.transfer_time(extra);
+                    let credit = if extra > 0
+                        && planner.fetch_beats_recompute(extra, self.cfg.spec.prefill_time(extra))
+                    {
+                        RemoteCredit { tokens: best.0, transfer_time }
+                    } else {
+                        RemoteCredit::default()
+                    };
+                    self.remote.push(credit);
+                    self.remote_src.push(best.1);
+                }
+            }
             let t0 = Instant::now();
-            let p = if matches.is_empty() {
+            let p = if self.remote.iter().any(|r| r.tokens > 0) {
+                self.policy.place_migrate(&req, &self.loads, &matches, &self.remote, &self.profile)
+            } else if matches.is_empty() {
                 self.policy.place(&req, &self.loads, &self.profile)
             } else {
                 self.policy.place_cached(&req, &self.loads, &matches, &self.profile)
@@ -1337,16 +1488,34 @@ impl VirtualExecutor {
 
         // One clamping path for both executors (exec::submit).
         let plan = plan_submission(&placement, &req);
+        let a_inst = plan.alpha.instance;
+        // The source behind a winning remote offer on the head instance
+        // (None = no fetch: the claim below is fully local).
+        let fetch_src = if plan.fetch_tokens > 0 {
+            self.loads
+                .iter()
+                .position(|d| d.id == a_inst)
+                .and_then(|i| self.remote_src.get(i).copied())
+        } else {
+            None
+        };
         // Pin the matched prefix on the head instance for the segment's
         // lifetime (released on evict). The probe and the claim sit in the
         // same arrival event, so nothing can evict the match in between.
+        // A fetched span lands by *import* instead — recorded and pinned
+        // on the head in one step, while the source copy stays pinned for
+        // the transfer's lifetime (released when the fetch completes).
         if plan.alpha.cached > 0 {
             if let Some(group) = req.prefix_group {
-                let granted = self
+                let rt = self
                     .cluster
-                    .runtime_mut(plan.alpha.instance, now)
-                    .expect("placement targets a live instance")
-                    .claim_prefix(group, plan.alpha.cached, now);
+                    .runtime_mut(a_inst, now)
+                    .expect("placement targets a live instance");
+                let granted = if fetch_src.is_some() {
+                    rt.import_prefix(group, plan.alpha.cached, now)
+                } else {
+                    rt.claim_prefix(group, plan.alpha.cached, now)
+                };
                 debug_assert_eq!(
                     granted, plan.alpha.cached,
                     "claimed prefix fell short of the placement-time match"
@@ -1356,12 +1525,36 @@ impl VirtualExecutor {
         if self.cfg.cache && crate::kv::prefix::lineage(&req).is_some() {
             self.collector.on_cache(&req, plan.alpha.cached);
         }
-        let a_inst = plan.alpha.instance;
+        // Decode-phase preemption (DESIGN.md §KV migration): clear KV
+        // backpressure on the head so this interactive arrival is
+        // admitted now. Victims are only collected here; they are
+        // resubmitted *after* the head is accepted, so FCFS re-queues
+        // them behind it.
+        let mut preempted: Vec<(Segment, u64, usize)> = Vec::new();
+        if self.cfg.migrate_preempt && req.interactive() {
+            // the α's admission reservation is its full execution span
+            let demand = plan.alpha.end;
+            const MAX_VICTIMS: usize = 4;
+            while preempted.len() < MAX_VICTIMS {
+                let Some(rt) = self.cluster.runtime(a_inst) else { break };
+                if !rt.would_queue(demand) {
+                    break;
+                }
+                let Some(key) = rt.preempt_candidate() else { break };
+                match self.cluster.runtime_mut(a_inst, now).and_then(|r| r.preempt(key, now)) {
+                    Some(v) => preempted.push(v),
+                    None => break,
+                }
+            }
+        }
         let a_key = self
             .cluster
             .runtime_mut(a_inst, now)
             .expect("placement targets a live instance")
-            .accept(make_segment(&req, &plan.alpha, false, plan.beta.is_some()));
+            .accept(make_segment(&req, &plan.alpha, fetch_src.is_some(), plan.beta.is_some()));
+        if let Some(src) = fetch_src {
+            self.dispatch_fetch(src, a_inst, a_key, &req, &plan, now);
+        }
         if let Some(bp) = &plan.beta {
             // β is gated on its KV transfer; α carries the handoff address
             let b_key = self
@@ -1370,11 +1563,126 @@ impl VirtualExecutor {
                 .expect("placement targets a live instance")
                 .accept(make_segment(&req, bp, true, false));
             if let Some(a) = self.cluster.runtime_mut(a_inst, now).and_then(|r| r.get_mut(a_key)) {
-                a.beta_dest = Some((bp.instance, b_key));
+                a.beta_dest = Some(RemoteSeq::new(bp.instance, b_key));
             }
+        }
+        for (seg, group, snapshot) in preempted {
+            self.resubmit_preempted(a_inst, seg, group, snapshot, now);
         }
         self.kick(a_inst);
         // no kick for β: not ready until the transfer completes
+    }
+
+    /// Dispatch the modeled migration behind a fetch-gated head: pin the
+    /// source copy, open the ticket, and schedule the `SeqReady` that
+    /// releases the gate (and the source pin) when the span lands.
+    fn dispatch_fetch(
+        &mut self,
+        src: InstanceId,
+        dest: InstanceId,
+        key: SeqKey,
+        req: &Request,
+        plan: &SubmitPlan,
+        now: f64,
+    ) {
+        let group = req.prefix_group.expect("a fetch requires a lineage group");
+        let tokens = plan.fetch_tokens;
+        let pinned = self
+            .cluster
+            .runtime_mut(src, now)
+            .map(|r| r.claim_prefix(group, tokens, now))
+            .unwrap_or(0);
+        let planner = self.migration_planner();
+        let ready_at = now + planner.transfer_time(tokens);
+        self.migration.begin_fetch(
+            RemoteSeq::new(dest, key),
+            FetchTicket { source: src, group, pinned, tokens },
+            planner.bytes(tokens),
+        );
+        // context en route: a drain must leave the head in place, and a
+        // crash on `dest` rebuilds it from the prompt (recover_gated_beta)
+        if let Some(s) = self.cluster.runtime_mut(dest, now).and_then(|r| r.get_mut(key)) {
+            s.transfer_started = true;
+        }
+        self.push(ready_at, EventKind::SeqReady { instance: dest, key });
+    }
+
+    /// Re-enter a preempted decode through the cache path: rebuild the
+    /// remainder as a fresh segment whose prefill starts at the snapshot
+    /// boundary. It resumes on `source` when its snapshot stays put;
+    /// when a strictly less-loaded peer exists and the planner prices
+    /// shipping the snapshot below recomputing it there, the span is
+    /// evacuated — imported into the peer's index, with the resumed
+    /// segment gated on the modeled transfer.
+    fn resubmit_preempted(
+        &mut self,
+        source: InstanceId,
+        seg: Segment,
+        group: u64,
+        snapshot: usize,
+        now: f64,
+    ) {
+        let computed = seg.end_exec - seg.work.decode_remaining;
+        let target = self.least_loaded_target(now).filter(|&t| {
+            t != source
+                && snapshot > 0
+                && self
+                    .migration_planner()
+                    .fetch_beats_recompute(snapshot, self.cfg.spec.prefill_time(snapshot))
+        });
+        let (dest, matched, gated) = match target {
+            Some(t) => {
+                let granted = self
+                    .cluster
+                    .runtime_mut(t, now)
+                    .expect("evacuation target is live")
+                    .import_prefix(group, snapshot, now);
+                (t, granted, granted > 0)
+            }
+            None => {
+                let granted = self
+                    .cluster
+                    .runtime_mut(source, now)
+                    .map(|r| r.claim_prefix(group, snapshot, now))
+                    .unwrap_or(0);
+                (source, granted, false)
+            }
+        };
+        let mut fresh = Segment::from_parts(
+            seg.request,
+            seg.arrival,
+            matched,
+            computed - matched,
+            seg.work.decode_remaining,
+            false, // the first token was emitted before preemption
+            seg.last_segment,
+            gated,
+        );
+        fresh.interactive = seg.interactive;
+        fresh.prefix_group = Some(group);
+        fresh.shared_prefix = computed;
+        fresh.cached_prefix = matched;
+        let key = self
+            .cluster
+            .runtime_mut(dest, now)
+            .expect("resubmit target is live")
+            .accept(fresh);
+        if gated {
+            let planner = self.migration_planner();
+            let ready_at = now + planner.transfer_time(matched);
+            self.migration.begin_evac(
+                RemoteSeq::new(dest, key),
+                EvacTicket { source, request: seg.request, tokens: matched },
+                planner.bytes(matched),
+            );
+            // snapshot en route: rides out drains in place, like a β
+            if let Some(s) = self.cluster.runtime_mut(dest, now).and_then(|r| r.get_mut(key)) {
+                s.transfer_started = true;
+            }
+            self.push(ready_at, EventKind::SeqReady { instance: dest, key });
+        }
+        self.collector.on_preempt(seg.request, matched);
+        self.kick(dest);
     }
 
     /// Start an iteration if the instance is idle and has ready work.
@@ -1489,12 +1797,17 @@ impl VirtualExecutor {
                     // β wakes when its context lands; α's KV stays pinned
                     // until the transfer drains. From here the β can no
                     // longer be re-placed by a drain.
-                    if let Some(b) =
-                        self.cluster.runtime_mut(dest.0, now).and_then(|r| r.get_mut(dest.1))
+                    if let Some(b) = self
+                        .cluster
+                        .runtime_mut(dest.instance, now)
+                        .and_then(|r| r.get_mut(dest.key))
                     {
                         b.transfer_started = true;
                     }
-                    self.push(ready_at, EventKind::SeqReady { instance: dest.0, key: dest.1 });
+                    self.push(
+                        ready_at,
+                        EventKind::SeqReady { instance: dest.instance, key: dest.key },
+                    );
                     self.push(ready_at, EventKind::AlphaEvict { instance: i, key });
                 }
             }

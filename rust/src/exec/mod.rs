@@ -21,6 +21,10 @@
 //!   [`ModeledTransport`] prices the chunked/monolithic timelines and
 //!   returns a virtual ready time; the live server's transport ships real
 //!   payloads through `forward_kv` and signals readiness out-of-band.
+//! * [`migrate`] — cross-instance KV migration on top of the transport
+//!   seam: remote prefix fetches and decode-phase evacuation, priced by
+//!   a fetch-vs-recompute planner over the same link timelines, with an
+//!   in-flight tracker feeding the residue diagnostics.
 //! * [`policy`] — the [`Policy`](policy::Policy) trait (how arrivals
 //!   become placed segments) and DynaServe's APS implementation.
 //! * [`cluster`] — the elastic control plane: the [`Cluster`] membership
@@ -48,6 +52,7 @@ pub mod clock;
 pub mod cluster;
 pub mod fault;
 pub mod host;
+pub mod migrate;
 pub mod policy;
 pub mod runtime;
 pub mod submit;
@@ -60,8 +65,11 @@ pub use cluster::{
 };
 pub use fault::{fault_schedule, FaultEvent, FaultKind, RetryPolicy};
 pub use host::{ConfigError, ExecConfig, ExecConfigBuilder, VirtualExecutor};
+pub use migrate::{
+    EvacTicket, FetchTicket, Migration, MigrationPlanner, MigrationStats, MigrationTracker,
+};
 pub use runtime::{EventSink, InstanceRuntime, Segment, SegmentDisposition, SeqKey, StepOutcome};
 pub use submit::{make_segment, plan_submission, SegmentPlan, SubmitPlan};
 pub use transport::{
-    Handoff, HandoffDisposition, ModeledTransport, Transport, TransferReport,
+    Handoff, HandoffDisposition, ModeledTransport, RemoteSeq, Transport, TransferReport,
 };

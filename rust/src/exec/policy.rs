@@ -7,7 +7,8 @@
 //! by exactly one code path.
 
 use crate::coordinator::{
-    GlobalConfig, GlobalScheduler, InstanceSnapshot, LoadDigest, ProfileTable, ScheduleOutcome,
+    GlobalConfig, GlobalScheduler, InstanceSnapshot, LoadDigest, ProfileTable, RemoteCredit,
+    ScheduleOutcome,
 };
 use crate::core::{MicroRequest, Request, Role};
 
@@ -22,6 +23,10 @@ pub struct Placement {
     /// (block-aligned, < P; 0 without the prefix cache). The submit path
     /// clamps and skips them ([`crate::exec::submit::plan_submission`]).
     pub cached: usize,
+    /// Leading tokens of `cached` that must be migrated in from another
+    /// instance before the head can start (0 = fully local match). The
+    /// host turns a nonzero value into a gating `Migration::Fetch`.
+    pub fetch: usize,
 }
 
 pub trait Policy: Send {
@@ -67,6 +72,24 @@ pub trait Policy: Send {
         let _ = matches;
         self.place(req, loads, profile)
     }
+
+    /// Migration-aware placement: on top of the local `matches`,
+    /// `remote[i]` is a planner-approved span resident elsewhere that
+    /// could be fetched to `loads[i]` for its discounted credit. The
+    /// default ignores the remote offers (baselines never fetch), and
+    /// overriding policies must reproduce `place_cached` exactly when
+    /// `remote` is empty — the migration-off bit-identity contract.
+    fn place_migrate(
+        &mut self,
+        req: &Request,
+        loads: &[LoadDigest],
+        matches: &[usize],
+        remote: &[RemoteCredit],
+        profile: &ProfileTable,
+    ) -> Placement {
+        let _ = remote;
+        self.place_cached(req, loads, matches, profile)
+    }
 }
 
 /// DynaServe's Adaptive Request Partitioning and Scheduling (§3–§4):
@@ -85,7 +108,13 @@ impl DynaServePolicy {
 fn outcome_to_placement(out: ScheduleOutcome, req: &Request) -> Placement {
     let (alpha, beta) = out.decision.to_micro_requests(req);
     match (alpha, beta) {
-        (Some(a), b) => Placement { alpha: a, beta: b, probes: out.probes, cached: out.cached },
+        (Some(a), b) => Placement {
+            alpha: a,
+            beta: b,
+            probes: out.probes,
+            cached: out.cached,
+            fetch: out.fetched,
+        },
         // split == 0: the whole request is "β" — normalize so callers
         // always have an alpha segment. (The scheduler already reported
         // `cached` for the β instance in this case.)
@@ -94,6 +123,7 @@ fn outcome_to_placement(out: ScheduleOutcome, req: &Request) -> Placement {
             beta: None,
             probes: out.probes,
             cached: out.cached,
+            fetch: out.fetched,
         },
         (None, None) => unreachable!("empty request"),
     }
@@ -130,6 +160,20 @@ impl Policy for DynaServePolicy {
         profile: &ProfileTable,
     ) -> Placement {
         outcome_to_placement(self.sched.schedule_cached(req, loads, matches, profile), req)
+    }
+
+    fn place_migrate(
+        &mut self,
+        req: &Request,
+        loads: &[LoadDigest],
+        matches: &[usize],
+        remote: &[RemoteCredit],
+        profile: &ProfileTable,
+    ) -> Placement {
+        outcome_to_placement(
+            self.sched.schedule_fetch(req, loads, matches, remote, profile),
+            req,
+        )
     }
 }
 

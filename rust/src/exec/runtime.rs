@@ -49,7 +49,7 @@ use crate::coordinator::local::{BatchPlan, DecodeEntry, PrefillEntry};
 use crate::coordinator::{InstanceSnapshot, LoadDigest, LocalScheduler};
 use crate::core::{InstanceId, RequestId};
 use crate::costmodel::InstanceSpec;
-use crate::exec::transport::{Handoff, HandoffDisposition, Transport};
+use crate::exec::transport::{Handoff, HandoffDisposition, RemoteSeq, Transport};
 use crate::kv::prefix::PrefixIndex;
 use crate::metrics::Collector;
 
@@ -115,10 +115,10 @@ pub struct Segment {
     pub last_segment: bool,
     /// True once KV capacity was reserved (admitted to the batch queue).
     pub admitted: bool,
-    /// α only: the waiting β's `(instance, key)` — keys are
-    /// executor-scoped (arena keys in virtual time, leader-assigned ids
-    /// on the live path). Drives the handoff at completion.
-    pub beta_dest: Option<(InstanceId, u64)>,
+    /// α only: the waiting β's instance-scoped address — arena keys in
+    /// virtual time, leader-assigned ids on the live path. Drives the
+    /// handoff at completion.
+    pub beta_dest: Option<RemoteSeq>,
     /// β only: set by the host once its α→β KV transfer is scheduled —
     /// from that point the segment can no longer be re-placed by a drain
     /// (the in-flight transfer targets this instance).
@@ -225,7 +225,7 @@ pub enum SegmentDisposition {
     Finished,
     /// α completed with a modeled transfer scheduled: the host must wake
     /// β (`dest`) at `ready_at` and evict the still-pinned α there.
-    Handoff { dest: (InstanceId, u64), ready_at: f64 },
+    Handoff { dest: RemoteSeq, ready_at: f64 },
     /// α completed but the transport failed the transfer at dispatch
     /// (injected link fault): α stays pinned with the handoff — KV
     /// history included — returned to the host, which owns the retry
@@ -471,6 +471,94 @@ impl InstanceRuntime {
         self.prefix.view()
     }
 
+    /// Drop `tokens` of pins held on `group`'s cached prefix without an
+    /// owning segment — the migration engine's source-side release once
+    /// a fetched span has landed at its destination.
+    pub fn release_prefix(&mut self, group: u64, tokens: usize) {
+        if self.cache_enabled && tokens > 0 {
+            self.prefix.release(group, tokens);
+        }
+    }
+
+    /// Record `tokens` of `group`'s prefix as resident (a migration is
+    /// shipping them here) AND pin them for the incoming segment, in one
+    /// step: insert → claim → press. The insert-before-claim order
+    /// matters — pressing first could evict the just-landed span before
+    /// the claim pins it. Returns the pinned grant, which the caller
+    /// carries as the segment's `cached_prefix`.
+    pub fn import_prefix(&mut self, group: u64, tokens: usize, now: f64) -> usize {
+        if !self.cache_enabled {
+            return 0;
+        }
+        self.prefix.insert(group, tokens, now);
+        let granted = self.prefix.claim(group, tokens, now);
+        let headroom = self.cache_headroom();
+        self.prefix.press(headroom);
+        granted
+    }
+
+    /// Would accepting a segment of `tokens` KV leave it queued instead
+    /// of admitted? True while earlier segments wait (FCFS) or the meter
+    /// can't fit it — the admission-pressure signal the preemption path
+    /// keys off.
+    pub fn would_queue(&self, tokens: usize) -> bool {
+        !self.waiting.is_empty() || !self.kv.can_fit(tokens)
+    }
+
+    /// The decode-phase preemption victim, if one exists: the *oldest*
+    /// admitted batch-class segment that is purely decoding, owns its
+    /// fate (final segment, no inbound transfer pending — `ready` means
+    /// any handoff or fetch already landed — and no outbound handoff),
+    /// and has KV worth reclaiming. Oldest-first keeps the choice
+    /// deterministic and bounds how often any one request is preempted.
+    pub fn preempt_candidate(&self) -> Option<SeqKey> {
+        for &key in &self.order {
+            let Some(s) = self.arena.get(key) else { continue };
+            if s.admitted
+                && s.ready
+                && !s.interactive
+                && !s.finished()
+                && s.last_segment
+                && s.beta_dest.is_none()
+                && s.work.prefill_remaining == 0
+                && s.work.decode_remaining > 0
+            {
+                return Some(key);
+            }
+        }
+        None
+    }
+
+    /// Evict a decode-phase victim, snapshotting its computed context
+    /// into the prefix index first so resume re-enters through the cache
+    /// path instead of a full re-prefill. Returns the evicted segment
+    /// and the snapshot span `(group, tokens)` — the caller rebuilds the
+    /// remainder via [`Segment::from_parts`] and re-submits it (here or,
+    /// evacuated, on another instance).
+    ///
+    /// The snapshot uses a synthetic per-request group
+    /// ([`crate::exec::migrate::preempt_group`]): the computed context
+    /// extends past the request's *shared* prefix, so inserting it under
+    /// the real lineage group would let siblings match private tokens.
+    pub fn preempt(&mut self, key: SeqKey, now: f64) -> Option<(Segment, u64, usize)> {
+        let seq = self.arena.get(key)?;
+        debug_assert!(seq.work.prefill_remaining == 0 && seq.work.decode_remaining > 0);
+        let computed = seq.end_exec - seq.work.decode_remaining;
+        let group = crate::exec::migrate::preempt_group(seq.request);
+        // evict first (releases the meter + the victim's own prefix
+        // pins), then snapshot into the freed headroom
+        let seq = self.evict(key)?;
+        let snapshot = if self.cache_enabled {
+            self.prefix.insert(group, computed, now);
+            let headroom = self.cache_headroom();
+            self.prefix.press(headroom);
+            self.prefix.lookup(group, computed)
+        } else {
+            0
+        };
+        Some((seq, group, snapshot))
+    }
+
     /// Free tokens the cache may occupy: capacity minus metered
     /// reservations (claimed cached prefixes are double-counted while in
     /// flight — conservative by construction).
@@ -648,7 +736,7 @@ impl InstanceRuntime {
 
     /// The resident α segment whose handoff targets `dest`, if any —
     /// lets a drain retarget the α's `beta_dest` after re-placing its β.
-    pub fn find_handoff_source(&self, dest: (InstanceId, u64)) -> Option<SeqKey> {
+    pub fn find_handoff_source(&self, dest: RemoteSeq) -> Option<SeqKey> {
         self.arena
             .iter_keys()
             .find(|(_, s)| s.beta_dest == Some(dest))
@@ -1122,14 +1210,14 @@ mod tests {
         // α with β, modeled transport → Handoff, α stays pinned
         let mut a = seq(8, 0, 100, 90);
         a.last_segment = false;
-        a.beta_dest = Some((InstanceId(1), 42));
+        a.beta_dest = Some(RemoteSeq::new(InstanceId(1), 42));
         a.track_kv_history = true;
         a.work = WorkItem { prefill_remaining: 0, context: 100, decode_remaining: 0 };
         a.kv_history = vec![KvSpan { t0: 0.5, t1: 0.5, tokens: 100, decode_run: false }];
         let k = i.accept(a);
         match i.complete_segment(k, 1.0, &mut sink, &mut modeled) {
             SegmentDisposition::Handoff { dest, ready_at } => {
-                assert_eq!(dest, (InstanceId(1), 42));
+                assert_eq!(dest, RemoteSeq::new(InstanceId(1), 42));
                 assert!(ready_at >= 1.0);
             }
             d => panic!("modeled handoff expected: {d:?}"),
@@ -1141,7 +1229,7 @@ mod tests {
         // α with β, detached transport → Finished, evicted immediately
         let mut a = seq(9, 0, 100, 90);
         a.last_segment = false;
-        a.beta_dest = Some((InstanceId(1), 43));
+        a.beta_dest = Some(RemoteSeq::new(InstanceId(1), 43));
         a.work = WorkItem { prefill_remaining: 0, context: 100, decode_remaining: 0 };
         let k = i.accept(a);
         match i.complete_segment(k, 1.0, &mut sink, &mut detached) {
@@ -1186,14 +1274,14 @@ mod tests {
         tr.inject_failures(1);
         let mut a = seq(5, 0, 100, 90);
         a.last_segment = false;
-        a.beta_dest = Some((InstanceId(1), 11));
+        a.beta_dest = Some(RemoteSeq::new(InstanceId(1), 11));
         a.track_kv_history = true;
         a.work = WorkItem { prefill_remaining: 0, context: 100, decode_remaining: 0 };
         a.kv_history = vec![KvSpan { t0: 0.5, t1: 0.5, tokens: 100, decode_run: false }];
         let k = i.accept(a);
         match i.complete_segment(k, 1.0, &mut NullSink, &mut tr) {
             SegmentDisposition::HandoffFailed { handoff } => {
-                assert_eq!(handoff.dest, (InstanceId(1), 11));
+                assert_eq!(handoff.dest, RemoteSeq::new(InstanceId(1), 11));
                 assert_eq!(handoff.history.len(), 1, "history travels with the retry");
             }
             d => panic!("expected HandoffFailed: {d:?}"),
@@ -1209,10 +1297,48 @@ mod tests {
         let d = tr.handoff(2.0, Handoff {
             request: 5,
             source: k,
-            dest: (InstanceId(1), 11),
+            dest: RemoteSeq::new(InstanceId(1), 11),
             history,
         });
         assert!(matches!(d, HandoffDisposition::Scheduled { .. }));
+    }
+
+    #[test]
+    fn preempt_snapshots_context_and_frees_kv() {
+        let mut i = inst();
+        i.enable_prefix_cache();
+        // a decode-phase batch segment: prompt 512 done, 100 decode left
+        let mut s = seq(21, 0, 800, 512);
+        s.work = WorkItem { prefill_remaining: 0, context: 700, decode_remaining: 100 };
+        let k = i.accept(s);
+        assert_eq!(i.preempt_candidate(), Some(k));
+        let before = i.kv.resident_tokens();
+        let (seg, group, snapshot) = i.preempt(k, 1.0).expect("victim preempted");
+        assert_eq!(seg.request, 21);
+        assert_eq!(i.kv.resident_tokens(), before - 800, "victim KV freed");
+        // computed context = 800 - 100 = 700, snapshotted block-aligned
+        assert_eq!(snapshot, 700 / 64 * 64);
+        assert_eq!(i.prefix_lookup(group, 700), snapshot);
+        // the synthetic group is private: the request's own id is not it
+        assert_ne!(group, 21);
+        // resume path: claim pins the snapshot for the rebuilt segment
+        assert_eq!(i.claim_prefix(group, snapshot, 1.0), snapshot);
+        // interactive / gated / non-decode segments are never candidates
+        let mut gated = seq(22, 0, 400, 300);
+        gated.work = WorkItem { prefill_remaining: 0, context: 350, decode_remaining: 50 };
+        gated.interactive = true;
+        i.accept(gated);
+        assert_eq!(i.preempt_candidate(), None);
+    }
+
+    #[test]
+    fn import_prefix_lands_and_pins_in_one_step() {
+        let mut i = inst();
+        assert_eq!(i.import_prefix(9, 512, 0.5), 0, "disabled cache imports nothing");
+        i.enable_prefix_cache();
+        let granted = i.import_prefix(9, 512, 1.0);
+        assert_eq!(granted, 512);
+        assert_eq!(i.prefix_lookup(9, 512), 512);
     }
 
     #[test]

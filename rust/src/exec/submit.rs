@@ -59,6 +59,11 @@ pub struct SubmitPlan {
     pub beta: Option<SegmentPlan>,
     /// Probe count (telemetry; Table 3).
     pub probes: usize,
+    /// Leading tokens of `alpha.cached` that live on a *remote* instance
+    /// and must be fetched in before the head can start (0 = fully local
+    /// claim). Clamped alongside the skip so it never exceeds the tokens
+    /// actually skipped.
+    pub fetch_tokens: usize,
 }
 
 fn span_plan(
@@ -110,7 +115,11 @@ pub fn plan_submission(placement: &Placement, req: &Request) -> SubmitPlan {
         alpha.prefill = alpha.end.min(req.prompt_len) - skip;
         alpha.cached = skip;
     }
-    SubmitPlan { alpha, beta, probes: placement.probes }
+    // A remote fetch only makes sense for tokens the head actually skips;
+    // if true-length clamping shrank (or cancelled) the skip, the fetch
+    // shrinks with it.
+    let fetch_tokens = if skip > 0 { placement.fetch.min(skip) } else { 0 };
+    SubmitPlan { alpha, beta, probes: placement.probes, fetch_tokens }
 }
 
 /// Materialize a planned segment. `gated` marks a β that must wait for
@@ -173,6 +182,7 @@ mod tests {
             }),
             probes: 3,
             cached: 0,
+            fetch: 0,
         }
     }
 
@@ -235,6 +245,26 @@ mod tests {
         let plan = plan_submission(&pl, &req);
         assert_eq!(plan.alpha.start, 0, "sub-block remainder cannot be skipped");
         assert_eq!(plan.alpha.cached, 0);
+    }
+
+    #[test]
+    fn fetch_tokens_clamp_with_the_skip() {
+        use crate::kv::PREFIX_BLOCK;
+        let req = Request::new(1, 0.0, 10 * PREFIX_BLOCK, 50);
+        let mut pl = placement(10 * PREFIX_BLOCK + 50, None, 10 * PREFIX_BLOCK + 50, 10 * PREFIX_BLOCK);
+        pl.cached = 4 * PREFIX_BLOCK;
+        pl.fetch = 4 * PREFIX_BLOCK;
+        let plan = plan_submission(&pl, &req);
+        assert_eq!(plan.alpha.cached, 4 * PREFIX_BLOCK);
+        assert_eq!(plan.fetch_tokens, 4 * PREFIX_BLOCK);
+        // skip cancelled by clamping ⇒ fetch cancelled with it
+        let req = Request::new(2, 0.0, PREFIX_BLOCK, 10);
+        let mut pl = placement(PREFIX_BLOCK, Some(PREFIX_BLOCK), 2 * PREFIX_BLOCK, PREFIX_BLOCK);
+        pl.cached = PREFIX_BLOCK;
+        pl.fetch = PREFIX_BLOCK;
+        let plan = plan_submission(&pl, &req);
+        assert_eq!(plan.alpha.cached, 0);
+        assert_eq!(plan.fetch_tokens, 0, "clamped-out skip cancels the fetch");
     }
 
     #[test]

@@ -22,6 +22,31 @@ use crate::core::{InstanceId, RequestId};
 use crate::exec::runtime::{KvSpan, SeqKey};
 use crate::kv::{chunked_timeline, monolithic_timeline, LinkSpec};
 
+/// An instance-scoped sequence address: `key` only means something on
+/// `instance`. Every cross-instance KV destination (α→β handoffs, prefix
+/// fetches, evacuations, live `SegmentSpec` marshalling) carries one of
+/// these instead of a bare `(InstanceId, u64)` tuple, so keys can't be
+/// silently applied to the wrong instance's arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RemoteSeq {
+    pub instance: InstanceId,
+    /// Executor-scoped key: an arena key in virtual time, a
+    /// leader-assigned id on the live path.
+    pub key: u64,
+}
+
+impl RemoteSeq {
+    pub fn new(instance: InstanceId, key: u64) -> Self {
+        RemoteSeq { instance, key }
+    }
+}
+
+impl std::fmt::Display for RemoteSeq {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}#{}", self.instance, self.key)
+    }
+}
+
 /// A completed α segment whose KV must reach its β segment.
 #[derive(Debug, Clone)]
 pub struct Handoff {
@@ -29,9 +54,8 @@ pub struct Handoff {
     /// The α segment's key on the *source* instance (live transports use
     /// it to locate the real KV payload).
     pub source: SeqKey,
-    /// Destination `(instance, key)` — keys are executor-scoped (arena
-    /// keys in virtual time, leader-assigned ids on the live path).
-    pub dest: (InstanceId, u64),
+    /// Destination sequence address.
+    pub dest: RemoteSeq,
     /// α-side KV production history (run-length coalesced); empty on the
     /// live path, where the real payload is shipped instead.
     pub history: Vec<KvSpan>,
@@ -128,7 +152,10 @@ impl Transport for ModeledTransport {
 /// run-length coalesced ([`KvSpan`]); chunk-ready times inside a decode
 /// run interpolate linearly over the run's step times. The output is
 /// pre-sized: exactly ⌈total/chunk⌉ entries, no re-push loops.
-fn group_chunks(history: &[KvSpan], chunk_tokens: usize, kv_bytes: f64) -> Vec<(f64, f64)> {
+///
+/// Shared with the migration planner (`exec::migrate`), which prices
+/// at-rest prefix fetches and evacuations over the same chunk timelines.
+pub(crate) fn group_chunks(history: &[KvSpan], chunk_tokens: usize, kv_bytes: f64) -> Vec<(f64, f64)> {
     let total: usize = history.iter().map(|h| h.tokens).sum();
     if total == 0 {
         return Vec::new();
@@ -196,7 +223,7 @@ mod tests {
         let h = Handoff {
             request: 1,
             source: 0,
-            dest: (InstanceId(1), 0),
+            dest: RemoteSeq::new(InstanceId(1), 0),
             history: vec![chunk(0.1, 512)],
         };
         // handoff observed long after the history was produced: the β
@@ -218,7 +245,7 @@ mod tests {
         let h = Handoff {
             request: 7,
             source: 3,
-            dest: (InstanceId(1), 9),
+            dest: RemoteSeq::new(InstanceId(1), 9),
             history: vec![chunk(0.1, 512)],
         };
         // the armed budget fails dispatches one by one, handing the full

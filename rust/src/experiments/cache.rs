@@ -33,7 +33,7 @@ use crate::experiments::runners::{
     build_executor_cache, mc_seeds, run_cells, sweep_threads, tp_for, warn_if_stuck, ExecutorKind,
     System,
 };
-use crate::experiments::{mc_json, write_results};
+use crate::experiments::{mc_json, write_results_to};
 use crate::metrics::{ClassSummary, SloConfig, Summary};
 use crate::util::cli::{pct, Args, Table};
 use crate::util::json::{obj, Json};
@@ -331,6 +331,6 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         ("verdicts", Json::Arr(verdicts)),
         ("cache_pays", Json::from(cache_pays)),
     ]);
-    write_results("cache", &artifact);
+    write_results_to(&args.get_or("out-dir", "results"), "cache", &artifact);
     Ok(())
 }

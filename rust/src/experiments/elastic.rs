@@ -38,7 +38,7 @@ use crate::exec::cluster::{BandAutoscaler, BandConfig};
 use crate::exec::policy::DynaServePolicy;
 use crate::exec::{ExecConfig, VirtualExecutor};
 use crate::experiments::runners::{mc_seeds, mean_ci95, run_cells, sweep_threads, warn_if_stuck};
-use crate::experiments::{mc_json, write_results};
+use crate::experiments::{mc_json, write_results_to};
 use crate::metrics::{SloConfig, Summary};
 use crate::util::cli::{pct, Args, Table};
 use crate::util::json::{obj, Json};
@@ -284,7 +284,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         ("max_fleet", Json::from(MAX_FLEET)),
         ("systems", Json::Arr(sys_objs)),
     ]);
-    write_results("elastic", &artifact);
+    write_results_to(&args.get_or("out-dir", "results"), "elastic", &artifact);
     Ok(())
 }
 

@@ -36,7 +36,7 @@ use crate::exec::fault::{fault_schedule, FaultKind};
 use crate::exec::policy::{DynaServePolicy, Policy};
 use crate::exec::{ExecConfig, VirtualExecutor};
 use crate::experiments::runners::{mc_seeds, run_cells, sweep_threads, warn_if_stuck};
-use crate::experiments::{mc_json, write_results};
+use crate::experiments::{mc_json, write_results_to};
 use crate::metrics::{SloConfig, Summary};
 use crate::util::cli::{pct, Args, Table};
 use crate::util::json::{obj, Json};
@@ -313,7 +313,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         ("dominance", Json::Arr(verdicts)),
         ("recovery_dominates_everywhere", Json::from(all_dominate)),
     ]);
-    write_results("faults", &artifact);
+    write_results_to(&args.get_or("out-dir", "results"), "faults", &artifact);
     Ok(())
 }
 

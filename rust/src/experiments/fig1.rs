@@ -5,7 +5,7 @@
 
 use crate::costmodel::LlmSpec;
 use crate::experiments::runners::{qps_sweep, System};
-use crate::experiments::write_results;
+use crate::experiments::write_results_to;
 use crate::metrics::SloConfig;
 use crate::util::cli::{Args, Table};
 use crate::util::json::{obj, Json};
@@ -56,6 +56,6 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         t2.row([sys.name().to_string(), format!("{best:.0}")]);
     }
     t2.print();
-    write_results("fig1", &Json::Arr(series));
+    write_results_to(&args.get_or("out-dir", "results"), "fig1", &Json::Arr(series));
     Ok(())
 }

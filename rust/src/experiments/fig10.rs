@@ -6,7 +6,7 @@
 
 use crate::costmodel::LlmSpec;
 use crate::experiments::runners::{build_sim_exact, System};
-use crate::experiments::write_results;
+use crate::experiments::write_results_to;
 use crate::metrics::SloConfig;
 use crate::util::cli::{Args, Table};
 use crate::util::json::{obj, Json};
@@ -91,6 +91,6 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         })
         .count();
     println!("\nDynaServe top-tier in {wins}/{windows} windows (paper: consistently highest)");
-    write_results("fig10", &Json::Arr(results));
+    write_results_to(&args.get_or("out-dir", "results"), "fig10", &Json::Arr(results));
     Ok(())
 }

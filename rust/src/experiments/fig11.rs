@@ -6,7 +6,7 @@
 use crate::coordinator::LocalConfig;
 use crate::costmodel::LlmSpec;
 use crate::experiments::runners::{build_sim_exact, System};
-use crate::experiments::write_results;
+use crate::experiments::write_results_to;
 use crate::metrics::SloConfig;
 use crate::util::cli::{Args, Table};
 use crate::util::json::{obj, Json};
@@ -71,6 +71,6 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         with * 100.0,
         without * 100.0
     );
-    write_results("fig11", &Json::Arr(results));
+    write_results_to(&args.get_or("out-dir", "results"), "fig11", &Json::Arr(results));
     Ok(())
 }

@@ -6,7 +6,7 @@
 //! BurstGPT should cross the curve repeatedly (§2.3).
 
 use crate::costmodel::{BatchShape, GpuSpec, InstanceSpec, LlmSpec};
-use crate::experiments::write_results;
+use crate::experiments::write_results_to;
 use crate::util::cli::{Args, Table};
 use crate::util::json::{obj, Json};
 use crate::workload::{poisson_workload, TraceKind};
@@ -78,6 +78,6 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             ("decode_heavy_minutes", Json::from(decode_heavy)),
         ]));
     }
-    write_results("fig3", &Json::Arr(out));
+    write_results_to(&args.get_or("out-dir", "results"), "fig3", &Json::Arr(out));
     Ok(())
 }

@@ -9,7 +9,7 @@ use crate::coordinator::{LoadDigest, ProfileTable};
 use crate::core::{InstanceId, MicroRequest, Request, Role};
 use crate::costmodel::LlmSpec;
 use crate::experiments::runners::build_sim;
-use crate::experiments::write_results;
+use crate::experiments::write_results_to;
 use crate::metrics::SloConfig;
 use crate::sim::policy::{Placement, Policy};
 use crate::sim::Simulator;
@@ -53,7 +53,7 @@ impl Policy for FixedSplitPolicy {
             instance: InstanceId(1),
             arrival: req.arrival,
         });
-        Placement { alpha, beta, probes: 0, cached: 0 }
+        Placement { alpha, beta, probes: 0, cached: 0, fetch: 0 }
     }
 }
 
@@ -100,6 +100,6 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
          optimum (~1358): GPU-1 absorbs part of the decode to balance the pipeline.",
         best.0, best.1
     );
-    write_results("fig5", &Json::Arr(series));
+    write_results_to(&args.get_or("out-dir", "results"), "fig5", &Json::Arr(series));
     Ok(())
 }

@@ -5,11 +5,11 @@
 //! curve crosses the SLO (30 ms short-context, 50 ms long-context).
 
 use crate::costmodel::{BatchShape, GpuSpec, InstanceSpec, LlmSpec};
-use crate::experiments::write_results;
+use crate::experiments::write_results_to;
 use crate::util::cli::{Args, Table};
 use crate::util::json::{obj, Json};
 
-pub fn run(_args: &Args) -> anyhow::Result<()> {
+pub fn run(args: &Args) -> anyhow::Result<()> {
     let spec = InstanceSpec::new(GpuSpec::a100(), LlmSpec::llama31_8b(), 1);
     let decode_counts: Vec<usize> = vec![1, 2, 4, 8, 16, 24, 29, 32, 48, 64];
     let prefill_sizes: Vec<usize> = vec![0, 512, 1024, 2048];
@@ -61,6 +61,6 @@ pub fn run(_args: &Args) -> anyhow::Result<()> {
          adding prefill raises utilization until the latency curve crosses the SLO;\n\
          larger chunks push throughput but hit the LCU earlier."
     );
-    write_results("fig6", &Json::Arr(out));
+    write_results_to(&args.get_or("out-dir", "results"), "fig6", &Json::Arr(out));
     Ok(())
 }

@@ -4,7 +4,7 @@
 
 use crate::costmodel::LlmSpec;
 use crate::experiments::runners::{coloc_chunk_for, run_cells, run_once, sweep_threads, System};
-use crate::experiments::write_results;
+use crate::experiments::write_results_to;
 use crate::metrics::SloConfig;
 use crate::util::cli::{Args, Table};
 use crate::util::json::{obj, Json};
@@ -84,6 +84,6 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             println!();
         }
     }
-    write_results("fig8", &Json::Arr(results));
+    write_results_to(&args.get_or("out-dir", "results"), "fig8", &Json::Arr(results));
     Ok(())
 }

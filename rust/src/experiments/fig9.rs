@@ -5,7 +5,7 @@
 
 use crate::costmodel::LlmSpec;
 use crate::experiments::runners::{coloc_chunk_for, run_cells, run_once, sweep_threads, System};
-use crate::experiments::write_results;
+use crate::experiments::write_results_to;
 use crate::metrics::{capacity_search, SloConfig};
 use crate::util::cli::{Args, Table};
 use crate::util::json::{obj, Json};
@@ -76,6 +76,6 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         rc.iter().sum::<f64>() / rc.len() as f64,
         rd.iter().sum::<f64>() / rd.len() as f64
     );
-    write_results("fig9", &Json::Arr(results));
+    write_results_to(&args.get_or("out-dir", "results"), "fig9", &Json::Arr(results));
     Ok(())
 }

@@ -4,7 +4,7 @@
 
 use crate::costmodel::LlmSpec;
 use crate::experiments::runners::{run_once, System};
-use crate::experiments::write_results;
+use crate::experiments::write_results_to;
 use crate::metrics::SloConfig;
 use crate::util::cli::{Args, Table};
 use crate::util::json::{obj, Json};
@@ -37,7 +37,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         reduction * 100.0,
         tr.bytes / 1e6
     );
-    write_results(
+    write_results_to(&args.get_or("out-dir", "results"),
         "kvxfer",
         &obj([
             ("transfers", Json::from(tr.transfers as usize)),

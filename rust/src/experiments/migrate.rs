@@ -1,0 +1,447 @@
+//! KV-migration sweep: what the cross-instance migration engine buys
+//! (DESIGN.md §KV migration).
+//!
+//! Every cell serves one scenario — the `overload-steady` stress mix
+//! (interactive traffic drowning in batch work) and the reuse-heavy
+//! `multiturn-heavy` mix — through the DynaServe system with the prefix
+//! cache and admission gate on, sweeping the two migration knobs
+//! ([`build_executor_migrate`]) over two modeled interconnects:
+//!
+//!   * `fetch`   — the leader may import a *remote* instance's matched
+//!     prefix KV over the link instead of recomputing it, whenever the
+//!     migration planner prices the transfer below the prefill
+//!     ([`MigrationPlanner::fetch_beats_recompute`]);
+//!   * `preempt` — an interactive arrival may evict a batch-class
+//!     resident decode, snapshotting its computed KV into the prefix
+//!     index for a cache-cheap resume.
+//!
+//! The `off` cells are the exact pre-migration behaviour (bit-identity
+//! is pinned by `rust/tests/migrate.rs`). The acceptance shape: on the
+//! fast link, multi-turn traffic fetches remote prefixes and saves more
+//! prefill than the cache alone (fewer tokens recomputed); on the slow
+//! link the planner prices fetching out and ships nothing; under
+//! overload, preemption leaves interactive-class P99 TTFT no worse than
+//! the off cell while every preempted request still completes. Request
+//! conservation holds in every cell:
+//! offered == completed + shed + rejected (+ stuck).
+//!
+//! Usage:
+//!   experiments migrate [--smoke] [--seed N] [--seeds N] [--duration S]
+//!                       [--exact-metrics] [--out-dir DIR]
+//!
+//! [`build_executor_migrate`]: crate::experiments::runners::build_executor_migrate
+//! [`MigrationPlanner::fetch_beats_recompute`]:
+//! crate::exec::migrate::MigrationPlanner::fetch_beats_recompute
+
+use crate::costmodel::LlmSpec;
+use crate::exec::migrate::MigrationStats;
+use crate::experiments::runners::{
+    build_executor_migrate, mc_seeds, run_cells, sweep_threads, warn_if_stuck, ExecutorKind, System,
+};
+use crate::experiments::{mc_json, write_results_to};
+use crate::kv::LinkSpec;
+use crate::metrics::{ClassSummary, SloConfig, Summary};
+use crate::util::cli::{Args, Table};
+use crate::util::json::{obj, Json};
+use crate::workload::Scenario;
+
+/// A class is interactive when it carries a tight TTFT bound — the same
+/// ≤ 1 s rule [`crate::core::Request::interactive`] applies per request.
+fn is_interactive(c: &ClassSummary) -> bool {
+    c.ttft_slo.is_some_and(|t| t <= 1.0)
+}
+
+/// One migration sweep point: the two knobs, independently switched.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Mode {
+    fetch: bool,
+    preempt: bool,
+}
+
+impl Mode {
+    fn label(&self) -> &'static str {
+        match (self.fetch, self.preempt) {
+            (false, false) => "off",
+            (true, false) => "fetch",
+            (false, true) => "preempt",
+            (true, true) => "both",
+        }
+    }
+}
+
+/// A named interconnect point. The fast link is the repo-wide default
+/// (one 200 Gb/s NIC); the slow one is priced so a per-token transfer
+/// costs *more* than recomputing that token's prefill on the A100 cost
+/// model — the planner must refuse to fetch over it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Link {
+    name: &'static str,
+    spec: LinkSpec,
+}
+
+fn links() -> [Link; 2] {
+    [
+        Link { name: "fast", spec: LinkSpec::default() },
+        Link { name: "slow", spec: LinkSpec { bandwidth: 1.5e9, latency: 1e-3 } },
+    ]
+}
+
+struct CellResult {
+    scenario: &'static str,
+    link: &'static str,
+    mode: Mode,
+    offered: usize,
+    summary: Summary,
+    classes: Vec<ClassSummary>,
+    migration: MigrationStats,
+    stuck: usize,
+}
+
+impl CellResult {
+    fn interactive_p99_ttft(&self) -> f64 {
+        self.classes
+            .iter()
+            .filter(|c| is_interactive(c))
+            .map(|c| c.p99_ttft)
+            .fold(f64::NAN, f64::max)
+    }
+
+    fn conserved(&self) -> bool {
+        let s = &self.summary;
+        self.offered
+            == s.completed + s.shed_requests as usize + s.rejected_requests as usize + self.stuck
+    }
+}
+
+/// The migration-off baseline cell for a (scenario, link) pair — the
+/// twin every knob's deltas and the verdicts are measured against.
+fn cell_at<'a>(head: &[&'a CellResult], scenario: &str, link: &str, mode: Mode) -> &'a CellResult {
+    head.iter()
+        .copied()
+        .find(|r| r.scenario == scenario && r.link == link && r.mode == mode)
+        .expect("the sweep grid covers every (scenario, link, mode) cell")
+}
+
+fn run_cell(sc: &Scenario, link: Link, mode: Mode, seed: u64, exact: bool) -> CellResult {
+    let llm = LlmSpec::qwen25_14b();
+    // cache (weight 1.0) and admission are on in every cell: fetch builds
+    // on the prefix index, preemption resumes through it, and overload
+    // cells need the gate so batch work can bounce instead of wedging
+    let mut ex = build_executor_migrate(
+        ExecutorKind::Sim,
+        System::DynaServe,
+        &llm,
+        SloConfig::default(),
+        exact,
+        true,
+        true,
+        1.0,
+        link.spec,
+        mode.fetch,
+        mode.preempt,
+    );
+    let offered = sc.stream(seed).count();
+    let summary = ex.run_stream(sc.stream(seed));
+    let classes = ex.collector.class_summaries(summary.duration);
+    let migration = ex.migration_stats();
+    let stuck = warn_if_stuck(
+        &format!("migrate/{} {} {} seed {seed}", sc.name, link.name, mode.label()),
+        &ex,
+    );
+    let (scenario, link) = (sc.name, link.name);
+    CellResult { scenario, link, mode, offered, summary, classes, migration, stuck }
+}
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let seed = args.u64_or("seed", 42);
+    let seeds_n = (args.u64_or("seeds", 1).max(1)) as usize;
+    let exact = args.bool("exact-metrics");
+    let smoke = args.bool("smoke");
+
+    let mut scenarios: Vec<Scenario> = ["overload-steady", "multiturn-heavy"]
+        .iter()
+        .map(|n| Scenario::by_name(n).expect("migrate sweep scenario exists"))
+        .collect();
+    for sc in scenarios.iter_mut() {
+        if smoke {
+            *sc = sc.clone().smoke();
+        }
+        if let Some(d) = args.get("duration").and_then(|s| s.parse::<f64>().ok()) {
+            *sc = sc.clone().with_duration(d);
+        }
+    }
+
+    let modes = [
+        Mode { fetch: false, preempt: false },
+        Mode { fetch: true, preempt: false },
+        Mode { fetch: false, preempt: true },
+        Mode { fetch: true, preempt: true },
+    ];
+    let links = links();
+    println!(
+        "KV-migration sweep — {} scenario(s) × {{fast, slow}} link × {{off, fetch, preempt, \
+         both}}, DynaServe 2-instance fleet, cache + admission on (seed {seed}, {seeds_n} \
+         seed(s))\n",
+        scenarios.len()
+    );
+
+    let seeds = mc_seeds(seed, seeds_n);
+    let cells: Vec<(usize, Link, Mode, u64)> = (0..scenarios.len())
+        .flat_map(|si| {
+            links
+                .iter()
+                .flat_map(|&l| {
+                    modes.iter().flat_map(move |&m| seeds.iter().map(move |&s| (si, l, m, s)))
+                })
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let all_results: Vec<CellResult> = run_cells(&cells, sweep_threads(), |&(si, l, m, s)| {
+        run_cell(&scenarios[si], l, m, s, exact)
+    });
+    // seed-0 result per (scenario, link, mode) feeds the table + verdicts
+    let head: Vec<&CellResult> =
+        (0..cells.len() / seeds_n).map(|i| &all_results[i * seeds_n]).collect();
+
+    let mut t = Table::new([
+        "scenario", "link", "mode", "offered", "completed", "fetches", "fetched tok", "migr MB",
+        "preempted", "resume tok", "saved tok", "inter. p99 TTFT", "Δ vs off", "stuck",
+    ]);
+    let mut cell_objs = Vec::new();
+    for (i, r) in head.iter().enumerate() {
+        let per_seed = &all_results[i * seeds_n..(i + 1) * seeds_n];
+        let s = &r.summary;
+        let m = &r.migration;
+        let off = cell_at(&head, r.scenario, r.link, Mode { fetch: false, preempt: false });
+        let ttft_delta = r.interactive_p99_ttft() - off.interactive_p99_ttft();
+        let is_off = r.mode == (Mode { fetch: false, preempt: false });
+        t.row([
+            r.scenario.to_string(),
+            r.link.to_string(),
+            r.mode.label().to_string(),
+            r.offered.to_string(),
+            s.completed.to_string(),
+            m.fetches.to_string(),
+            m.fetched_tokens.to_string(),
+            format!("{:.2}", m.migrated_kv_bytes / 1e6),
+            s.preempted.to_string(),
+            s.resume_from_cache_tokens.to_string(),
+            s.prefill_tokens_saved.to_string(),
+            format!("{:.0} ms", r.interactive_p99_ttft() * 1e3),
+            if is_off { "—".into() } else { format!("{:+.0} ms", ttft_delta * 1e3) },
+            r.stuck.to_string(),
+        ]);
+        cell_objs.push(obj([
+            ("scenario", Json::from(r.scenario)),
+            ("link", Json::from(r.link)),
+            ("fetch", Json::from(r.mode.fetch)),
+            ("preempt", Json::from(r.mode.preempt)),
+            ("offered", Json::from(r.offered)),
+            (
+                "summary",
+                obj([
+                    ("completed", Json::from(s.completed)),
+                    ("rejected_requests", Json::from(s.rejected_requests as usize)),
+                    ("shed_requests", Json::from(s.shed_requests as usize)),
+                    ("total_tokens", Json::from(s.total_tokens)),
+                    ("goodput_tok_s", Json::from(s.goodput_tok_s)),
+                    ("attainment", Json::from(s.attainment)),
+                    ("p99_ttft", Json::from(s.p99_ttft)),
+                    ("cache_hit_rate", Json::from(s.cache_hit_rate)),
+                    ("prefill_tokens_saved", Json::from(s.prefill_tokens_saved as usize)),
+                    ("preempted", Json::from(s.preempted as usize)),
+                    (
+                        "resume_from_cache_tokens",
+                        Json::from(s.resume_from_cache_tokens as usize),
+                    ),
+                    ("migrated_kv_bytes", Json::from(s.migrated_kv_bytes)),
+                    ("duration", Json::from(s.duration)),
+                ]),
+            ),
+            (
+                "migration",
+                obj([
+                    ("fetches", Json::from(m.fetches as usize)),
+                    ("fetched_tokens", Json::from(m.fetched_tokens as usize)),
+                    ("evacuations", Json::from(m.evacuations as usize)),
+                    ("evacuated_tokens", Json::from(m.evacuated_tokens as usize)),
+                    ("migrated_kv_bytes", Json::from(m.migrated_kv_bytes)),
+                ]),
+            ),
+            (
+                "classes",
+                Json::Arr(
+                    r.classes
+                        .iter()
+                        .map(|c| {
+                            obj([
+                                ("class", Json::from(c.class)),
+                                ("interactive", Json::from(is_interactive(c))),
+                                ("completed", Json::from(c.completed)),
+                                ("p99_ttft", Json::from(c.p99_ttft)),
+                                ("ttft_attainment", Json::from(c.ttft_attainment)),
+                                ("preempted", Json::from(c.preempted)),
+                                (
+                                    "resume_from_cache_tokens",
+                                    Json::from(c.resume_from_cache_tokens as usize),
+                                ),
+                                (
+                                    "prefill_tokens_saved",
+                                    Json::from(c.prefill_tokens_saved as usize),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("stuck_requests", Json::from(r.stuck)),
+            ("conserved", Json::from(r.conserved())),
+            (
+                "mc",
+                obj([
+                    (
+                        "interactive_p99_ttft",
+                        mc_json(
+                            &per_seed.iter().map(|r| r.interactive_p99_ttft()).collect::<Vec<_>>(),
+                        ),
+                    ),
+                    (
+                        "prefill_tokens_saved",
+                        mc_json(
+                            &per_seed
+                                .iter()
+                                .map(|r| r.summary.prefill_tokens_saved as f64)
+                                .collect::<Vec<_>>(),
+                        ),
+                    ),
+                    (
+                        "goodput_tok_s",
+                        mc_json(
+                            &per_seed.iter().map(|r| r.summary.goodput_tok_s).collect::<Vec<_>>(),
+                        ),
+                    ),
+                ]),
+            ),
+        ]));
+    }
+    t.print();
+
+    // ── verdicts ────────────────────────────────────────────────────────
+    let off = Mode { fetch: false, preempt: false };
+    let fetch_m = Mode { fetch: true, preempt: false };
+    let preempt_m = Mode { fetch: false, preempt: true };
+
+    // 1. Fetch beats recompute where the link is cheap: on the reuse-heavy
+    //    scenario over the fast link, remote prefixes actually ship and
+    //    the total skipped prefill grows past what the local cache alone
+    //    saved — i.e. fewer prompt tokens are recomputed.
+    let fast_fetch = cell_at(&head, "multiturn-heavy", "fast", fetch_m);
+    let fast_off = cell_at(&head, "multiturn-heavy", "fast", off);
+    let fetch_ships = fast_fetch.migration.fetched_tokens > 0;
+    let fetch_saves =
+        fast_fetch.summary.prefill_tokens_saved > fast_off.summary.prefill_tokens_saved;
+    // 2. ...and prices itself out where it is not: the slow link costs
+    //    more per token than the prefill it would replace, so the planner
+    //    must ship nothing there.
+    let slow_fetch = cell_at(&head, "multiturn-heavy", "slow", fetch_m);
+    let slow_priced_out = slow_fetch.migration.fetched_tokens == 0;
+    println!(
+        "multiturn-heavy: fetch shipped {} tokens over the fast link ({:.2} MB, {} fetches), \
+         saved prefill {} vs {} off; slow link shipped {} tokens ({})",
+        fast_fetch.migration.fetched_tokens,
+        fast_fetch.migration.migrated_kv_bytes / 1e6,
+        fast_fetch.migration.fetches,
+        fast_fetch.summary.prefill_tokens_saved,
+        fast_off.summary.prefill_tokens_saved,
+        slow_fetch.migration.fetched_tokens,
+        if slow_priced_out { "priced out, as it should be" } else { "NOT priced out" },
+    );
+
+    // 3. Preemption protects the interactive tail under overload: some
+    //    batch decode actually got evicted, and interactive P99 TTFT is
+    //    no worse than the off cell — while every preempted request still
+    //    completed (conservation + zero residue below covers that).
+    let ov_preempt = cell_at(&head, "overload-steady", "fast", preempt_m);
+    let ov_off = cell_at(&head, "overload-steady", "fast", off);
+    let preempts = ov_preempt.summary.preempted > 0;
+    let ttft_ok = ov_preempt.interactive_p99_ttft() <= ov_off.interactive_p99_ttft() + 1e-9;
+    println!(
+        "overload-steady: {} preemption(s), {} tokens resumed from cache — interactive p99 TTFT \
+         {:.0} ms vs {:.0} ms off ({})",
+        ov_preempt.summary.preempted,
+        ov_preempt.summary.resume_from_cache_tokens,
+        ov_preempt.interactive_p99_ttft() * 1e3,
+        ov_off.interactive_p99_ttft() * 1e3,
+        if ttft_ok { "no worse" } else { "REGRESSED" },
+    );
+
+    // 4. Bookkeeping never leaks: every cell conserves its offered
+    //    requests and drains with zero stuck residue.
+    let all_conserved = head.iter().all(|r| r.conserved());
+    let none_stuck = head.iter().all(|r| r.stuck == 0);
+
+    let migration_pays = fetch_ships && fetch_saves && slow_priced_out && preempts && ttft_ok
+        && all_conserved
+        && none_stuck;
+    println!(
+        "\n{}",
+        if migration_pays {
+            "KV migration pays: cheap links fetch instead of recompute, expensive ones don't, \
+             and preemption shields the interactive tail with nothing lost"
+        } else {
+            "WARNING: migration verdict did not hold — inspect results/migrate.json"
+        }
+    );
+
+    let verdicts = vec![
+        obj([
+            ("name", Json::from("fetch_beats_recompute_fast_link")),
+            ("scenario", Json::from("multiturn-heavy")),
+            ("fetched_tokens_positive", Json::from(fetch_ships)),
+            ("prefill_saved_exceeds_cache_only", Json::from(fetch_saves)),
+        ]),
+        obj([
+            ("name", Json::from("slow_link_priced_out")),
+            ("scenario", Json::from("multiturn-heavy")),
+            ("fetched_tokens_zero", Json::from(slow_priced_out)),
+        ]),
+        obj([
+            ("name", Json::from("preemption_protects_interactive")),
+            ("scenario", Json::from("overload-steady")),
+            ("preempted_positive", Json::from(preempts)),
+            ("interactive_p99_ttft_no_worse", Json::from(ttft_ok)),
+        ]),
+        obj([
+            ("name", Json::from("bookkeeping")),
+            ("all_conserved", Json::from(all_conserved)),
+            ("none_stuck", Json::from(none_stuck)),
+        ]),
+    ];
+
+    let artifact = obj([
+        ("seed", Json::from(seed as usize)),
+        ("seeds", Json::from(seeds_n)),
+        ("exact_metrics", Json::from(exact)),
+        ("smoke", Json::from(smoke)),
+        (
+            "links",
+            Json::Arr(
+                links
+                    .iter()
+                    .map(|l| {
+                        obj([
+                            ("name", Json::from(l.name)),
+                            ("bandwidth", Json::from(l.spec.bandwidth)),
+                            ("latency", Json::from(l.spec.latency)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("cells", Json::Arr(cell_objs)),
+        ("verdicts", Json::Arr(verdicts)),
+        ("migration_pays", Json::from(migration_pays)),
+    ]);
+    write_results_to(&args.get_or("out-dir", "results"), "migrate", &artifact);
+    Ok(())
+}

@@ -19,6 +19,7 @@ pub mod fig9;
 pub mod fig10;
 pub mod fig11;
 pub mod kvxfer;
+pub mod migrate;
 pub mod overload;
 pub mod runners;
 pub mod scenarios;
@@ -72,6 +73,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
             "prefix-cache sweep: cache on/off x multiturn/long-RAG x cache_weight",
             cache::run,
         ),
+        (
+            "migrate",
+            "KV-migration sweep: fetch/preempt on/off x fast/slow link x overload/multiturn",
+            migrate::run,
+        ),
     ]
 }
 
@@ -86,9 +92,18 @@ pub fn mc_json(values: &[f64]) -> crate::util::json::Json {
     obj([("mean", num(c.mean)), ("ci95", num(c.ci95)), ("n", Json::from(c.n))])
 }
 
-/// Write a results JSON artifact (best-effort; failures are warnings).
+/// Write a results JSON artifact into the default `results/` directory
+/// (best-effort; failures are warnings). Harnesses that honor the
+/// `--out-dir` flag route through [`write_results_to`] instead.
 pub fn write_results(name: &str, json: &crate::util::json::Json) {
-    let dir = std::path::Path::new("results");
+    write_results_to("results", name, json);
+}
+
+/// Write a results JSON artifact into `dir` — the target of the
+/// `experiments --out-dir <dir>` flag (default `results`), so sweeps
+/// never hardcode the artifact directory. Best-effort: failures warn.
+pub fn write_results_to(dir: &str, name: &str, json: &crate::util::json::Json) {
+    let dir = std::path::Path::new(dir);
     if std::fs::create_dir_all(dir).is_ok() {
         let path = dir.join(format!("{name}.json"));
         if let Err(e) = std::fs::write(&path, json.dump_pretty()) {

@@ -34,7 +34,7 @@ use crate::experiments::runners::{
     build_executor_overload, mc_seeds, run_cells, sweep_threads, warn_if_stuck, ExecutorKind,
     System,
 };
-use crate::experiments::{mc_json, write_results};
+use crate::experiments::{mc_json, write_results_to};
 use crate::metrics::{ClassSummary, SloConfig, Summary};
 use crate::util::cli::{pct, Args, Table};
 use crate::util::json::{obj, Json};
@@ -344,6 +344,6 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         ("verdicts", Json::Arr(verdicts)),
         ("dynaserve_survives", Json::from(dynaserve_survives)),
     ]);
-    write_results("overload", &artifact);
+    write_results_to(&args.get_or("out-dir", "results"), "overload", &artifact);
     Ok(())
 }

@@ -240,6 +240,46 @@ pub fn build_executor_cache(
     }
 }
 
+/// [`build_executor_cache`] with the KV-migration knobs on top of the
+/// cache and admission ones: `fetch` lets placement weigh remote
+/// `PrefixView` matches (planner-approved spans ship in over the modeled
+/// link and gate the α start) and `preempt` lets an interactive arrival
+/// evict batch-class resident decodes, snapshotting their computed KV
+/// into the prefix index for a cache-cheap resume (DESIGN.md §KV
+/// migration). `link` overrides the modeled interconnect so slow-link
+/// cells can show fetch pricing itself out. The `experiments migrate`
+/// harness and the migration test suites build every cell here so both
+/// facades get identical knob wiring; `fetch == preempt == false` cells
+/// are bit-identical to [`build_executor_cache`].
+#[allow(clippy::too_many_arguments)]
+pub fn build_executor_migrate(
+    kind: ExecutorKind,
+    system: System,
+    llm: &LlmSpec,
+    slo: SloConfig,
+    exact_metrics: bool,
+    admission: bool,
+    cache: bool,
+    cache_weight: f64,
+    link: LinkSpec,
+    fetch: bool,
+    preempt: bool,
+) -> Simulator {
+    let (mut cfg, mut policy) = sim_parts(system, llm, slo, exact_metrics);
+    cfg.admission = admission;
+    cfg.cache = cache;
+    cfg.link = link;
+    cfg.migrate_fetch = fetch;
+    cfg.migrate_preempt = preempt;
+    if system == System::DynaServe {
+        policy = Box::new(dynaserve_policy(llm, slo, cache_weight));
+    }
+    match kind {
+        ExecutorKind::Sim => Simulator::new(cfg, policy),
+        ExecutorKind::LiveVirtual => crate::server::virtual_executor(cfg, policy),
+    }
+}
+
 /// Warn (to stderr) when a finished run left segments resident — a
 /// scheduling deadlock that would otherwise masquerade as low goodput
 /// (or, for a horizon-truncated run, an under-sized `ExecConfig::horizon`).
@@ -268,6 +308,14 @@ pub fn warn_if_stuck(context: &str, sim: &Simulator) -> usize {
             eprintln!(
                 "warning: {context}:   instance {id}: {resident} resident segment(s), \
                  {waiting} waiting on KV admission, {cached} cached prefix token(s) resident"
+            );
+        }
+        // migration residue: a wedged transfer shows up as a destination
+        // with an in-flight ticket that never resolved
+        for (id, fetches, evacs) in sim.migration_in_flight() {
+            eprintln!(
+                "warning: {context}:   instance {id}: {fetches} prefix fetch(es) and \
+                 {evacs} evacuation(s) still in flight (inbound)"
             );
         }
         let in_place = sim.drain_gated_in_place();

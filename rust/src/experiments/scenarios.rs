@@ -40,7 +40,7 @@ use crate::costmodel::LlmSpec;
 use crate::experiments::runners::{
     build_executor_exact, mc_seeds, run_cells, sweep_threads, ExecutorKind, System,
 };
-use crate::experiments::{mc_json, write_results};
+use crate::experiments::{mc_json, write_results_to};
 use crate::metrics::{ClassSummary, SloConfig, Summary};
 use crate::util::cli::{ms, pct, Args, Table};
 use crate::util::json::{obj, Json};
@@ -84,7 +84,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             anyhow::ensure!(q > 0.0, "--qps-scale must be positive");
             sc = sc.with_qps_scale(q);
         }
-        run_scenario(&sc, seed, seeds_n, exact, executor)?;
+        run_scenario(&sc, seed, seeds_n, exact, executor, &args.get_or("out-dir", "results"))?;
     }
     Ok(())
 }
@@ -95,6 +95,7 @@ fn run_scenario(
     seeds_n: usize,
     exact: bool,
     executor: ExecutorKind,
+    out_dir: &str,
 ) -> anyhow::Result<()> {
     let llm = LlmSpec::qwen25_14b();
     let slo = SloConfig::default();
@@ -263,7 +264,7 @@ fn run_scenario(
         ("requests", Json::from(n_requests)),
         ("systems", Json::Arr(sys_objs)),
     ]);
-    write_results(&format!("scenario_{}", sc.name), &artifact);
+    write_results_to(out_dir, &format!("scenario_{}", sc.name), &artifact);
     Ok(())
 }
 

@@ -5,7 +5,7 @@
 
 use crate::costmodel::LlmSpec;
 use crate::experiments::runners::{run_once, System};
-use crate::experiments::write_results;
+use crate::experiments::write_results_to;
 use crate::metrics::SloConfig;
 use crate::util::cli::{Args, Table};
 use crate::util::json::{obj, Json};
@@ -84,6 +84,6 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
          skewed per-GPU MFU/HBM; coloc balances utilization but blows the tail\n\
          (P-8192 shape worst: chunked 2048-token prefills stall decodes)."
     );
-    write_results("table1", &Json::Arr(results));
+    write_results_to(&args.get_or("out-dir", "results"), "table1", &Json::Arr(results));
     Ok(())
 }

@@ -5,7 +5,7 @@
 
 use crate::costmodel::LlmSpec;
 use crate::experiments::runners::{run_once, System};
-use crate::experiments::write_results;
+use crate::experiments::write_results_to;
 use crate::metrics::{capacity_search, SloConfig};
 use crate::util::cli::{Args, Table};
 use crate::util::json::{obj, Json};
@@ -40,6 +40,6 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     }
     t.print();
     println!("\npaper reference: coloc 4.6 rps / 316 tok/s, disagg 5.9 / 399, DynaServe 7.4 / 474");
-    write_results("table2", &Json::Arr(results));
+    write_results_to(&args.get_or("out-dir", "results"), "table2", &Json::Arr(results));
     Ok(())
 }

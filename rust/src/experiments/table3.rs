@@ -6,7 +6,7 @@
 
 use crate::costmodel::LlmSpec;
 use crate::experiments::runners::{run_once, System};
-use crate::experiments::write_results;
+use crate::experiments::write_results_to;
 use crate::metrics::SloConfig;
 use crate::util::cli::{Args, Table};
 use crate::util::json::{obj, Json};
@@ -43,6 +43,6 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
          this implementation is in-process Rust — flat-in-QPS and negligible vs the\n\
          ~5000 ms end-to-end request latency is the property being reproduced."
     );
-    write_results("table3", &Json::Arr(results));
+    write_results_to(&args.get_or("out-dir", "results"), "table3", &Json::Arr(results));
     Ok(())
 }

@@ -7,7 +7,7 @@
 use crate::core::Request;
 use crate::costmodel::LlmSpec;
 use crate::experiments::runners::{build_sim, System};
-use crate::experiments::write_results;
+use crate::experiments::write_results_to;
 use crate::metrics::SloConfig;
 use crate::util::cli::{Args, Table};
 use crate::util::json::{obj, Json};
@@ -63,6 +63,6 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     }
     t.print();
     println!("\npaper reference: 3606.9 -> 3501.9 tok/s (-2.9%) from sigma=0 to sigma=100");
-    write_results("table4", &Json::Arr(results));
+    write_results_to(&args.get_or("out-dir", "results"), "table4", &Json::Arr(results));
     Ok(())
 }

@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
         Some("calibrate") => calibrate(&args),
         _ => {
             eprintln!("usage: dynaserve <serve|simulate|calibrate> [flags]");
-            eprintln!("  serve     --requests N --qps Q --artifacts DIR [--instances 2] [--workload NAME] [--autoscale] [--admission] [--cache] [--calibration-deadline S] [--ready-deadline S]   (needs --features pjrt)");
+            eprintln!("  serve     --requests N --qps Q --artifacts DIR [--instances 2] [--workload NAME] [--autoscale] [--admission] [--cache] [--migrate-fetch] [--calibration-deadline S] [--ready-deadline S]   (needs --features pjrt)");
             eprintln!("  simulate  --system <dynaserve|coloc|disagg> --workload NAME --qps Q [--duration S] [--model 14b]");
             eprintln!("  calibrate --artifacts DIR   (needs --features pjrt)");
             Ok(())
@@ -68,6 +68,13 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         // publish prefix-index views, the leader scores placements with
         // reuse credit, and matched prefixes skip their prefill
         cache: args.bool("cache"),
+        // --migrate-fetch additionally lets the leader fetch a remote
+        // instance's matched prefix KV over the wire when the planner
+        // prices the transfer below recomputing it (implies --cache to
+        // have any effect)
+        migrate_fetch: args.bool("migrate-fetch"),
+        // accepted for config parity; virtual-executor-only (serve warns)
+        migrate_preempt: args.bool("migrate-preempt"),
     };
     let report = dynaserve::server::serve(cfg)?;
     report.print();

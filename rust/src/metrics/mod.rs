@@ -136,6 +136,12 @@ struct ClassAgg {
     cache_hits: usize,
     /// Prefill tokens this class never recomputed thanks to the cache.
     cache_saved_tokens: u64,
+    /// Requests of this class whose decode was preempted by a
+    /// higher-priority arrival ([`Collector::on_preempt`]).
+    preempted: usize,
+    /// Computed-KV tokens those preemptions resumed from the prefix cache
+    /// instead of recomputing.
+    resume_tokens: u64,
 }
 
 impl ClassAgg {
@@ -201,6 +207,12 @@ pub struct Collector {
     cache_lookups_n: usize,
     cache_hits_n: usize,
     cache_saved_tokens_n: u64,
+    /// Decode-phase preemption ledger ([`Self::on_preempt`]): requests
+    /// displaced mid-decode by a higher-priority arrival, and the computed
+    /// tokens their resume segments recovered from the prefix cache rather
+    /// than re-prefilling. Zero while preemption is off.
+    preempted_n: u64,
+    resume_tokens_n: u64,
     /// BTreeMap for deterministic class iteration order.
     classes: BTreeMap<ClassId, ClassAgg>,
 }
@@ -280,6 +292,24 @@ impl Collector {
             agg.cache_hits += 1;
             agg.cache_saved_tokens += cached as u64;
         }
+    }
+
+    /// Record one decode-phase preemption of request `id`:
+    /// `resumed_tokens` is the computed-KV prefix its resume segment
+    /// recovered from the prefix cache (0 = full local recompute of the
+    /// evicted context). The request stays in `active` — its in-flight
+    /// latency state carries across the preemption, so the stall it
+    /// suffers lands in its own TBT samples. Called only with preemption
+    /// enabled, so preemption-off summaries stay bit-identical.
+    pub fn on_preempt(&mut self, id: RequestId, resumed_tokens: usize) {
+        let class = self.active.get(&id).map(|st| st.class).unwrap_or(0);
+        let mode = self.mode;
+        let slo = self.slo;
+        self.preempted_n += 1;
+        self.resume_tokens_n += resumed_tokens as u64;
+        let agg = self.classes.entry(class).or_insert_with(|| ClassAgg::new(mode, slo));
+        agg.preempted += 1;
+        agg.resume_tokens += resumed_tokens as u64;
     }
 
     /// Record one emitted output token for `id` at time `t`.
@@ -445,6 +475,12 @@ impl Collector {
                 self.cache_hits_n as f64 / self.cache_lookups_n as f64
             },
             prefill_tokens_saved: self.cache_saved_tokens_n,
+            // decode-preemption ledger — zero while preemption is off
+            preempted: self.preempted_n,
+            resume_from_cache_tokens: self.resume_tokens_n,
+            // KV bytes moved belong to the executor's migration tracker
+            // (Summary::with_migration), not the collector
+            migrated_kv_bytes: 0.0,
             // fleet accounting is the executor's, not the collector's:
             // the host overwrites these from its cluster registry
             gpu_seconds: 0.0,
@@ -486,6 +522,8 @@ impl Collector {
                     agg.cache_hits as f64 / agg.cache_lookups as f64
                 },
                 prefill_tokens_saved: agg.cache_saved_tokens,
+                preempted: agg.preempted,
+                resume_from_cache_tokens: agg.resume_tokens,
                 total_tokens: agg.total_tokens,
                 good_tokens: agg.good_tokens,
                 goodput_tok_s: agg.good_tokens as f64 / duration,
@@ -544,6 +582,14 @@ pub struct ClassSummary {
     pub cache_hit_rate: f64,
     /// Prefill tokens this class skipped thanks to matched cached prefixes.
     pub prefill_tokens_saved: u64,
+    /// Requests of this class preempted mid-decode by a higher-priority
+    /// arrival (0 with preemption off) — the cost side of the
+    /// decode-preemption ledger; the interactive class's TTFT is the
+    /// benefit side.
+    pub preempted: usize,
+    /// Computed-KV tokens this class's preemption resumes recovered from
+    /// the prefix cache instead of re-prefilling.
+    pub resume_from_cache_tokens: u64,
     pub total_tokens: usize,
     /// Tokens that met this class's own SLO targets.
     pub good_tokens: usize,
@@ -615,6 +661,19 @@ pub struct Summary {
     /// GPU-seconds saved follow via the cost model's per-token prefill
     /// cost ([`crate::costmodel`]); 0 with the cache off.
     pub prefill_tokens_saved: u64,
+    /// Requests preempted mid-decode to make room for a higher-priority
+    /// arrival ([`Collector::on_preempt`]); 0 with preemption off. A
+    /// preempted request still completes — preemption displaces, it never
+    /// loses — so conservation stays `offered == completed + shed +
+    /// rejected`.
+    pub preempted: u64,
+    /// Computed-KV tokens that preemption resumes recovered from the
+    /// prefix cache instead of re-prefilling (the "cache-cheap resume").
+    pub resume_from_cache_tokens: u64,
+    /// KV bytes moved across instances by the migration engine — remote
+    /// prefix fetches plus preemption evacuations (annotated via
+    /// [`Summary::with_migration`]; 0.0 with migration off).
+    pub migrated_kv_bytes: f64,
     /// Prefill tokens recomputed because their KV died with an instance.
     pub recomputed_prefill_tokens: u64,
     /// KV bytes re-shipped for β segments whose in-flight transfer
@@ -670,6 +729,14 @@ impl Summary {
         self.handoff_retries = r.handoff_retries;
         self.mean_recovery_s =
             if r.recovered > 0 { r.recovery_latency_sum / r.recovered as f64 } else { 0.0 };
+        self
+    }
+
+    /// Annotate with the migration engine's byte ledger — the single place
+    /// `migrated_kv_bytes` is filled, so both executors agree on what
+    /// counts as migrated (fetches + evacuations, not α→β handoffs).
+    pub fn with_migration(mut self, migrated_kv_bytes: f64) -> Summary {
+        self.migrated_kv_bytes = migrated_kv_bytes;
         self
     }
 
@@ -937,6 +1004,35 @@ mod tests {
     }
 
     #[test]
+    fn preemption_ledger_reconciles_with_classes() {
+        use crate::core::{Request, SloTarget};
+        let mut c = Collector::new(SloConfig::default());
+        let batch = SloTarget { tbt: 0.500, ttft: None };
+        c.on_request(&Request::new(1, 0.0, 100, 10).with_class(3, batch));
+        c.on_token(1, 0.0, 0.2);
+        // preempted twice mid-decode; second resume recovers 64 cached tokens
+        c.on_preempt(1, 0);
+        c.on_preempt(1, 64);
+        c.on_token(1, 0.0, 0.9);
+        c.on_complete(1);
+        let s = c.summarize(1.0).with_migration(12.5);
+        assert_eq!(s.preempted, 2);
+        assert_eq!(s.resume_from_cache_tokens, 64);
+        assert_eq!(s.migrated_kv_bytes, 12.5);
+        let classes = c.class_summaries(1.0);
+        assert_eq!(classes.len(), 1);
+        assert_eq!(classes[0].class, 3);
+        assert_eq!(classes[0].preempted, 2);
+        assert_eq!(classes[0].resume_from_cache_tokens, 64);
+        // fresh collector: ledger all zero, so preemption-off summaries
+        // cannot drift
+        let z = Collector::new(SloConfig::default()).summarize(1.0);
+        assert_eq!(z.preempted, 0);
+        assert_eq!(z.resume_from_cache_tokens, 0);
+        assert_eq!(z.migrated_kv_bytes, 0.0);
+    }
+
+    #[test]
     fn capacity_search_finds_threshold() {
         // synthetic: p99 tbt = 0.02 * qps  =>  capacity at 5.0 for slo 0.1
         let slo = SloConfig::default();
@@ -962,6 +1058,9 @@ mod tests {
             rejected_requests: 0,
             cache_hit_rate: 0.0,
             prefill_tokens_saved: 0,
+            preempted: 0,
+            resume_from_cache_tokens: 0,
+            migrated_kv_bytes: 0.0,
             recomputed_prefill_tokens: 0,
             retransferred_kv_bytes: 0.0,
             handoff_retries: 0,
@@ -996,6 +1095,9 @@ mod tests {
             rejected_requests: 0,
             cache_hit_rate: 0.0,
             prefill_tokens_saved: 0,
+            preempted: 0,
+            resume_from_cache_tokens: 0,
+            migrated_kv_bytes: 0.0,
             recomputed_prefill_tokens: 0,
             retransferred_kv_bytes: 0.0,
             handoff_retries: 0,

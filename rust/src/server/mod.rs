@@ -40,7 +40,9 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::coordinator::predictor::PredictorConfig;
-use crate::coordinator::{GlobalConfig, LoadDigest, LocalConfig, LocalScheduler, ProfileTable};
+use crate::coordinator::{
+    GlobalConfig, LoadDigest, LocalConfig, LocalScheduler, ProfileTable, RemoteCredit,
+};
 use crate::core::{InstanceId, Request, RequestId};
 use crate::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
 use crate::exec::clock::{Clock, WallClock};
@@ -51,7 +53,8 @@ use crate::exec::cluster::{
 use crate::exec::policy::{DynaServePolicy, Policy};
 use crate::exec::runtime::{EventSink, InstanceRuntime, Segment, SeqKey};
 use crate::exec::submit::{plan_submission, SegmentPlan};
-use crate::exec::transport::{Handoff, HandoffDisposition, Transport};
+use crate::exec::migrate::MigrationPlanner;
+use crate::exec::transport::{Handoff, HandoffDisposition, RemoteSeq, Transport};
 use crate::exec::{ExecConfig, VirtualExecutor};
 use crate::kv::{LinkSpec, PrefixView, TransferEngine, TransferJob, PREFIX_BLOCK};
 use crate::metrics::{Collector, RecoveryStats, SloConfig, Summary};
@@ -100,6 +103,24 @@ pub struct ServeConfig {
     /// claims locally, and prefills any un-granted remainder normally.
     /// Default off: cache-off serves are unchanged from pre-cache builds.
     pub cache: bool,
+    /// Cross-instance prefix fetch on the live path (DESIGN.md §KV
+    /// migration): the leader weighs *remote* [`PrefixView`] matches with
+    /// transfer-cost-discounted credit (`Policy::place_migrate`), and when
+    /// a remote span wins the head it ships the real KV rows from the
+    /// holder's engine-side pool to the α instance through the same paced
+    /// [`forward_kv`] path the α→β handoff uses — the α segment is gated
+    /// and activates on the final chunk, exactly like a β. Requires
+    /// [`ServeConfig::cache`] (without views there is nothing to fetch).
+    /// Default off: fetch-off serves place identically to cache-only ones.
+    pub migrate_fetch: bool,
+    /// Decode-phase preemption is a *virtual-executor* feature
+    /// (`ExecConfig::migrate_preempt`): it needs the atomic
+    /// evict-snapshot-resubmit the event loop provides, which the live
+    /// leader cannot replicate over fire-and-forget channels without a
+    /// cancellation protocol. Accepted here for config parity and
+    /// ignored by [`serve`] (with a warning) — see DESIGN.md §KV
+    /// migration for the live-path status.
+    pub migrate_preempt: bool,
 }
 
 impl ServeConfig {
@@ -124,9 +145,10 @@ struct SegmentSpec {
     decode_budget: usize,
     emits_first: bool,
     last_segment: bool,
-    /// Forward KV + generation state here when done (β instance id, β key).
-    beta_dest: Option<(InstanceId, u64)>,
-    /// β only: waits for KV; activated by the final chunk.
+    /// Forward KV + generation state here when done (β instance + key).
+    beta_dest: Option<RemoteSeq>,
+    /// Waits for KV before executing; activated by the final chunk
+    /// (β segments, and fetch-gated α segments when `fetch > 0`).
     gated: bool,
     /// Interactive-class request (tight TTFT SLO) — priority batching
     /// input, derived leader-side from [`Request::interactive`].
@@ -140,6 +162,11 @@ struct SegmentSpec {
     /// at accept time — it may grant less (views lag; eviction raced) and
     /// prefill the un-granted remainder normally.
     cached: usize,
+    /// Nonzero marks a *fetch-gated* α: the `cached` span's KV is resident
+    /// on another instance and arrives over the wire as [`InstMsg::Kv`]
+    /// chunks, so the thread imports (rather than locally claims) the skip
+    /// and the segment stays gated until the final chunk lands.
+    fetch: usize,
 }
 
 impl SegmentSpec {
@@ -150,8 +177,9 @@ impl SegmentSpec {
         arrival: f64,
         prompt: &[i32],
         sp: &SegmentPlan,
-        beta_dest: Option<(InstanceId, u64)>,
+        beta_dest: Option<RemoteSeq>,
         gated: bool,
+        fetch: usize,
     ) -> SegmentSpec {
         // ship the skipped region too — the thread may grant a smaller
         // skip than the leader's hint and must be able to prefill it
@@ -172,6 +200,7 @@ impl SegmentSpec {
             prefix_group: req.prefix_group,
             shared_prefix: req.shared_prefix,
             cached: sp.cached,
+            fetch,
         }
     }
 
@@ -206,8 +235,18 @@ impl SegmentSpec {
 
 enum InstMsg {
     Segment(SegmentSpec),
-    /// KV chunk for a gated β segment (payload = k||v for the token range).
+    /// KV chunk for a gated segment (payload = k||v for the token range):
+    /// a β awaiting its α handoff, or a fetch-gated α awaiting a remote
+    /// prefix.
     Kv { key: u64, job: TransferJob, next_token: Option<i32> },
+    /// Migration order from the leader: ship the first `tokens` KV rows
+    /// of prefix group `group` (from this thread's engine-side pool) to
+    /// the fetch-gated segment at `dest` — the live `Migration::Fetch`.
+    /// The rows are copied out synchronously before the paced shipping
+    /// thread detaches, so no source-side pin is needed; pool shortfalls
+    /// ship zero rows (the lifecycle still ungates on the final chunk —
+    /// a stub-engine approximation, see DESIGN.md §KV migration).
+    Fetch { request: RequestId, group: u64, tokens: usize, dest: RemoteSeq },
     /// Begin draining: finish every resident segment, take no new ones
     /// (the leader already stopped placing here), then retire.
     Drain,
@@ -238,8 +277,8 @@ enum UpMsg {
 struct Inflight {
     req: Request,
     prompt: Vec<i32>,
-    alpha: (InstanceId, u64),
-    beta: Option<(InstanceId, u64)>,
+    alpha: RemoteSeq,
+    beta: Option<RemoteSeq>,
 }
 
 /// State the instance threads publish and the leader (plus peer threads)
@@ -587,8 +626,15 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     // Threads publish O(1) digests straight from their runtime — the same
     // load representation the simulator's arrival path feeds the policy —
     // into the shared fleet view, keyed by stable instance id.
+    if cfg.migrate_preempt {
+        eprintln!(
+            "serve: decode-phase preemption is virtual-executor-only (ExecConfig::\
+             migrate_preempt); ignoring --migrate-preempt on the live path"
+        );
+    }
     let shared = Arc::new(FleetShared::default());
-    let transfer = Arc::new(TransferEngine::new(LinkSpec { bandwidth: 2e9, latency: 20e-6 }));
+    let live_link = LinkSpec { bandwidth: 2e9, latency: 20e-6 };
+    let transfer = Arc::new(TransferEngine::new(live_link));
     let (up_tx, up_rx) = mpsc::channel::<UpMsg>();
     let stop = Arc::new(AtomicBool::new(false));
     // calibration profile shared by leader + instances (built by the
@@ -643,6 +689,15 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         ..Default::default()
     });
     let mut autoscaler = cfg.autoscale.map(BandAutoscaler::new);
+    // Fetch pricing on the live path: the same planner the virtual host
+    // consults, over the live link and the live chunk size, with the CPU
+    // instance's modeled prefill time as the recompute price. Only
+    // planner-approved spans become remote offers — the scheduler then
+    // weighs the discounted credit against local matches.
+    let fetch_spec = InstanceSpec::new(GpuSpec::cpu_pjrt(), llm.clone(), 1);
+    let fetch_planner =
+        MigrationPlanner::new(live_link, 64, true, llm.kv_bytes_per_token());
+    let mut migrated_bytes = 0.0f64;
 
     let mut key_alloc = 0u64;
     let mut rng = Rng::with_stream(cfg.seed, 0x70cc);
@@ -759,7 +814,47 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         } else {
             Vec::new()
         };
-        let placement = if matches.is_empty() {
+        // Remote offers (live `Migration::Fetch` candidates): for each
+        // placeable instance, the best *other* member's published view
+        // match, offered only when the planner prices the transfer below
+        // recomputing the extra span — the live mirror of the virtual
+        // host's arrival-time offer loop. Deterministically iterates the
+        // loads (member order), never the unordered view map.
+        let mut remote: Vec<RemoteCredit> = Vec::new();
+        let mut remote_src: Vec<InstanceId> = Vec::new();
+        if cfg.migrate_fetch && !matches.is_empty() {
+            let (group, _) = crate::kv::prefix::lineage(req).expect("matches imply lineage");
+            let want = crate::kv::prefix::matchable_prompt(req);
+            let views = shared.prefix.lock().unwrap();
+            for (i, d) in loads.iter().enumerate() {
+                let mut best = (0usize, d.id);
+                for peer in &loads {
+                    if peer.id == d.id {
+                        continue;
+                    }
+                    let t = views.get(&peer.id).map(|v| v.lookup(group, want)).unwrap_or(0);
+                    if t > best.0 {
+                        best = (t, peer.id);
+                    }
+                }
+                let extra = best.0.saturating_sub(matches[i]);
+                let credit = if extra > 0
+                    && fetch_planner.fetch_beats_recompute(extra, fetch_spec.prefill_time(extra))
+                {
+                    RemoteCredit {
+                        tokens: best.0,
+                        transfer_time: fetch_planner.transfer_time(best.0),
+                    }
+                } else {
+                    RemoteCredit::default()
+                };
+                remote.push(credit);
+                remote_src.push(best.1);
+            }
+        }
+        let placement = if remote.iter().any(|r| r.tokens > 0) {
+            policy.place_migrate(req, &loads, &matches, &remote, &profile)
+        } else if matches.is_empty() {
             policy.place(req, &loads, &profile)
         } else {
             policy.place_cached(req, &loads, &matches, &profile)
@@ -780,24 +875,54 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         let alpha_key = key_alloc;
         let beta_info = plan.beta.as_ref().map(|bp| {
             key_alloc += 1;
-            (bp.instance, key_alloc)
+            RemoteSeq::new(bp.instance, key_alloc)
         });
+        // a nonzero fetch plan names the source: the offer row aligned
+        // with the instance that won the head (never the head itself)
+        let fetch_src = (plan.fetch_tokens > 0)
+            .then(|| loads.iter().position(|d| d.id == plan.alpha.instance))
+            .flatten()
+            .and_then(|i| remote_src.get(i).copied())
+            .filter(|src| *src != plan.alpha.instance);
         let arrival = clock.now();
         // register on the serving clock (token events use the same basis)
         collector.on_request(&Request { arrival, ..req.clone() });
-        let alpha_spec =
-            SegmentSpec::from_plan(alpha_key, req, arrival, &prompt, &plan.alpha, beta_info, false);
+        let alpha_spec = SegmentSpec::from_plan(
+            alpha_key,
+            req,
+            arrival,
+            &prompt,
+            &plan.alpha,
+            beta_info,
+            fetch_src.is_some(),
+            if fetch_src.is_some() { plan.alpha.cached } else { 0 },
+        );
         fleet.send(plan.alpha.instance, InstMsg::Segment(alpha_spec));
-        if let (Some(bp), Some((b_inst, b_key))) = (&plan.beta, beta_info) {
-            let beta_spec = SegmentSpec::from_plan(b_key, req, arrival, &prompt, bp, None, true);
-            fleet.send(b_inst, InstMsg::Segment(beta_spec));
+        if let Some(src) = fetch_src {
+            // ship the whole skipped span from the holder — it matched
+            // `cached` tokens, so its pool covers the local overlap too
+            fleet.send(
+                src,
+                InstMsg::Fetch {
+                    request: req.id,
+                    group: req.prefix_group.expect("fetch implies lineage"),
+                    tokens: plan.alpha.cached,
+                    dest: RemoteSeq::new(plan.alpha.instance, alpha_key),
+                },
+            );
+            migrated_bytes += fetch_planner.bytes(plan.alpha.cached);
+        }
+        if let (Some(bp), Some(b)) = (&plan.beta, beta_info) {
+            let beta_spec =
+                SegmentSpec::from_plan(b.key, req, arrival, &prompt, bp, None, true, 0);
+            fleet.send(b.instance, InstMsg::Segment(beta_spec));
         }
         inflight.insert(
             req.id,
             Inflight {
                 req: Request { arrival, ..req.clone() },
                 prompt,
-                alpha: (plan.alpha.instance, alpha_key),
+                alpha: RemoteSeq::new(plan.alpha.instance, alpha_key),
                 beta: beta_info,
             },
         );
@@ -841,7 +966,8 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
                 let victims: Vec<RequestId> = inflight
                     .iter()
                     .filter(|(_, r)| {
-                        r.alpha.0 == instance || r.beta.map_or(false, |(b, _)| b == instance)
+                        r.alpha.instance == instance
+                            || r.beta.map_or(false, |b| b.instance == instance)
                     })
                     .map(|(&id, _)| id)
                     .collect();
@@ -854,12 +980,12 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
                 }
                 for rid in victims {
                     let rec = inflight.get(&rid).cloned().expect("victim registered");
-                    if rec.alpha.0 != instance {
-                        fleet.send(rec.alpha.0, InstMsg::Cancel { key: rec.alpha.1 });
+                    if rec.alpha.instance != instance {
+                        fleet.send(rec.alpha.instance, InstMsg::Cancel { key: rec.alpha.key });
                     }
-                    if let Some((b_inst, b_key)) = rec.beta {
-                        if b_inst != instance {
-                            fleet.send(b_inst, InstMsg::Cancel { key: b_key });
+                    if let Some(b) = rec.beta {
+                        if b.instance != instance {
+                            fleet.send(b.instance, InstMsg::Cancel { key: b.key });
                         }
                     }
                     let loads = fleet.placeable_digests();
@@ -875,7 +1001,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
                     let alpha_key = key_alloc;
                     let beta_info = plan.beta.as_ref().map(|bp| {
                         key_alloc += 1;
-                        (bp.instance, key_alloc)
+                        RemoteSeq::new(bp.instance, key_alloc)
                     });
                     let alpha_spec = SegmentSpec::from_plan(
                         alpha_key,
@@ -885,23 +1011,25 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
                         &plan.alpha,
                         beta_info,
                         false,
+                        0,
                     );
                     fleet.send(plan.alpha.instance, InstMsg::Segment(alpha_spec));
-                    if let (Some(bp), Some((b_inst, b_key))) = (&plan.beta, beta_info) {
+                    if let (Some(bp), Some(b)) = (&plan.beta, beta_info) {
                         let beta_spec = SegmentSpec::from_plan(
-                            b_key,
+                            b.key,
                             &rec.req,
                             rec.req.arrival,
                             &rec.prompt,
                             bp,
                             None,
                             true,
+                            0,
                         );
-                        fleet.send(b_inst, InstMsg::Segment(beta_spec));
+                        fleet.send(b.instance, InstMsg::Segment(beta_spec));
                     }
                     replaced_requests += 1;
                     if let Some(r) = inflight.get_mut(&rid) {
-                        r.alpha = (plan.alpha.instance, alpha_key);
+                        r.alpha = RemoteSeq::new(plan.alpha.instance, alpha_key);
                         r.beta = beta_info;
                     }
                 }
@@ -918,9 +1046,11 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     let wall = end - serve_start;
     let stats = transfer.stats();
     Ok(ServeReport {
-        summary: collector.summarize(wall).with_fleet(gpu_seconds).with_recovery(
-            RecoveryStats { replaced_requests, ..Default::default() },
-        ),
+        summary: collector
+            .summarize(wall)
+            .with_fleet(gpu_seconds)
+            .with_recovery(RecoveryStats { replaced_requests, ..Default::default() })
+            .with_migration(migrated_bytes),
         iterations: iter_counts.into_iter().collect(),
         mean_iter_latency: if iter_lat_n == 0 { 0.0 } else { iter_lat_sum / iter_lat_n as f64 },
         transfer_chunks: stats.chunks.load(Ordering::Relaxed),
@@ -1025,8 +1155,20 @@ fn instance_loop(id: InstanceId, rx: mpsc::Receiver<InstMsg>, ctx: &SpawnCtx) ->
                     let cap = if total <= 128 { 128 } else { 256 };
                     // prefix-cache claim: re-probe the local index (the
                     // leader's view may lag), clamp by what the engine-
-                    // side pool actually retains, then pin the grant
+                    // side pool actually retains, then pin the grant.
+                    // Fetch-gated segments import instead: their KV is
+                    // not resident here — it arrives over the wire — so
+                    // the skip is registered in the local index and
+                    // pinned without an engine-side pool check.
                     let granted = match (ctx.cache && spec.cached > 0, spec.prefix_group) {
+                        (true, Some(group)) if spec.fetch > 0 => {
+                            let g = runtime.import_prefix(group, spec.cached, clock.now());
+                            debug_assert_eq!(
+                                g, spec.cached,
+                                "fetch import pressed out of headroom at accept"
+                            );
+                            g
+                        }
                         (true, Some(group)) => {
                             let pooled = prefix_pool
                                 .iter()
@@ -1047,7 +1189,10 @@ fn instance_loop(id: InstanceId, rx: mpsc::Receiver<InstMsg>, ctx: &SpawnCtx) ->
                     accepted = true;
                     by_leader.insert(spec.key, key);
                     let mut kv = engine.new_kv(cap);
-                    if granted > 0 {
+                    // fetch-gated grants hold no local KV: the rows arrive
+                    // as wire chunks and the final one activates the
+                    // segment, exactly like a β handoff
+                    if granted > 0 && spec.fetch == 0 {
                         // the claimed prefix reuses real KV from the pool
                         // instead of recomputing it
                         let m = &engine.manifest.model;
@@ -1080,6 +1225,40 @@ fn instance_loop(id: InstanceId, rx: mpsc::Receiver<InstMsg>, ctx: &SpawnCtx) ->
                     if let Some(&k) = by_leader.get(&key) {
                         inject_chunk(&engine, &mut runtime, &mut live, k, job, next_token);
                     }
+                }
+                Ok(InstMsg::Fetch { request, group, tokens, dest }) => {
+                    // live Migration::Fetch source side: copy the pooled
+                    // prefix rows out synchronously (no pin needed — the
+                    // pool entry may be evicted the moment we return),
+                    // then ship them through the same paced forward_kv
+                    // path the α→β handoff uses. A pool shortfall ships
+                    // zero rows for the missing tail: the stub engine
+                    // tolerates the approximation and the destination
+                    // still ungates on the final chunk.
+                    let m = &engine.manifest.model;
+                    let meta = (m.n_layers, m.n_kv_heads, m.head_dim);
+                    let cap = if tokens <= 128 { 128 } else { 256 };
+                    let mut out_kv = engine.new_kv(cap);
+                    if let Some((_, src_kv)) =
+                        prefix_pool.iter().find(|(g, _)| *g == group)
+                    {
+                        copy_kv_prefix(&mut out_kv, src_kv, meta, tokens.min(src_kv.len));
+                    }
+                    out_kv.len = tokens;
+                    let transfer = ctx.transfer.clone();
+                    let fwd_shared = ctx.shared.clone();
+                    thread::spawn(move || {
+                        forward_kv(
+                            meta,
+                            &transfer,
+                            &fwd_shared,
+                            &out_kv,
+                            None,
+                            request,
+                            dest.instance,
+                            dest.key,
+                        );
+                    });
                 }
                 Ok(InstMsg::Drain) => {
                     if !draining {
@@ -1271,9 +1450,18 @@ fn instance_loop(id: InstanceId, rx: mpsc::Receiver<InstMsg>, ctx: &SpawnCtx) ->
             );
             let transfer = ctx.transfer.clone();
             let shared = ctx.shared.clone();
-            let (b_inst, b_key) = h.dest;
+            let dest = h.dest;
             thread::spawn(move || {
-                forward_kv(meta, &transfer, &shared, &st.kv, st.next_token, h.request, b_inst, b_key);
+                forward_kv(
+                    meta,
+                    &transfer,
+                    &shared,
+                    &st.kv,
+                    st.next_token,
+                    h.request,
+                    dest.instance,
+                    dest.key,
+                );
             });
         }
 
@@ -1457,10 +1645,18 @@ mod tests {
             let placement = policy.place(&req, &loads, &profile);
             let plan = plan_submission(&placement, &req);
             let prompt: Vec<i32> = (0..req.prompt_len as i32).collect();
-            let beta_info = plan.beta.as_ref().map(|bp| (bp.instance, 2u64));
+            let beta_info = plan.beta.as_ref().map(|bp| RemoteSeq::new(bp.instance, 2u64));
 
-            let alpha_spec =
-                SegmentSpec::from_plan(1, &req, req.arrival, &prompt, &plan.alpha, beta_info, false);
+            let alpha_spec = SegmentSpec::from_plan(
+                1,
+                &req,
+                req.arrival,
+                &prompt,
+                &plan.alpha,
+                beta_info,
+                false,
+                0,
+            );
             let mut want_alpha = make_segment(&req, &plan.alpha, false, false);
             want_alpha.beta_dest = beta_info;
             assert_eq!(
@@ -1472,7 +1668,8 @@ mod tests {
             assert_eq!(alpha_spec.prompt.len(), plan.alpha.prefill, "req {}: α prompt slice", req.id);
 
             if let Some(bp) = &plan.beta {
-                let beta_spec = SegmentSpec::from_plan(2, &req, req.arrival, &prompt, bp, None, true);
+                let beta_spec =
+                    SegmentSpec::from_plan(2, &req, req.arrival, &prompt, bp, None, true, 0);
                 let want_beta = make_segment(&req, bp, true, false);
                 assert_eq!(
                     beta_spec.to_segment(0),
@@ -1506,7 +1703,7 @@ mod tests {
         assert_eq!(plan.alpha.cached, 3 * PREFIX_BLOCK);
         let prompt: Vec<i32> = (0..req.prompt_len as i32).collect();
         let alpha_spec =
-            SegmentSpec::from_plan(1, &req, req.arrival, &prompt, &plan.alpha, None, false);
+            SegmentSpec::from_plan(1, &req, req.arrival, &prompt, &plan.alpha, None, false, 0);
         assert_eq!(
             alpha_spec.prompt.len(),
             plan.alpha.prefill + plan.alpha.cached,
@@ -1523,6 +1720,23 @@ mod tests {
         let zero = alpha_spec.to_segment(0);
         assert_eq!(zero.work.context, 0, "zero grant prefills from token 0");
         assert_eq!(zero.work.prefill_remaining, alpha_spec.prompt.len());
+        // fetch-gated marshalling: the same plan shipped as a remote fetch
+        // reconstructs exactly the gated α the virtual executor builds —
+        // inactive until the final wire chunk marks it ready
+        let fetch_spec = SegmentSpec::from_plan(
+            9,
+            &req,
+            req.arrival,
+            &prompt,
+            &plan.alpha,
+            None,
+            true,
+            plan.alpha.cached,
+        );
+        let want_gated = make_segment(&req, &plan.alpha, true, false);
+        let got = fetch_spec.to_segment(plan.alpha.cached);
+        assert_eq!(got, want_gated, "fetch-gated α marshalling");
+        assert!(!got.ready, "fetch-gated α waits for the wire");
     }
 
     /// The live drain guard mirrors the virtual cluster's: the directory

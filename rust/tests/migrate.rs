@@ -1,0 +1,301 @@
+//! KV-migration contract tests (DESIGN.md §KV migration): migration is a
+//! pure latency/placement optimization layered on the prefix cache —
+//! never a semantics change. With both knobs off, runs are bit-identical
+//! to the cache build (the pre-migration behaviour) through BOTH executor
+//! facades; with them on, the request-conservation ledger holds under
+//! randomized fetch+preempt schedules with zero stuck residue, the
+//! planner fetches exactly when the modeled transfer beats recomputing
+//! the span (so a slow link ships nothing), preempted requests all
+//! complete, and same-seed runs stay bit-identical (the engine is
+//! deterministic — no RNG anywhere in the migration path).
+
+use dynaserve::costmodel::{GpuSpec, InstanceSpec, LlmSpec};
+use dynaserve::exec::migrate::MigrationPlanner;
+use dynaserve::experiments::runners::{
+    build_executor_cache, build_executor_exact, build_executor_migrate, ExecutorKind, System,
+};
+use dynaserve::kv::LinkSpec;
+use dynaserve::metrics::SloConfig;
+use dynaserve::sim::Simulator;
+use dynaserve::util::proptest_lite::check;
+use dynaserve::workload::Scenario;
+
+/// The two scenarios the migrate sweep runs on: overload pressure (the
+/// preemption trigger) and conversation/RAG reuse (the fetch trigger).
+const SCENARIOS: [&str; 2] = ["overload-steady", "multiturn-heavy"];
+
+/// The slow interconnect of the sweep: per-token transfer costs more
+/// than recomputing that token's prefill, so the planner must refuse it.
+fn slow_link() -> LinkSpec {
+    LinkSpec { bandwidth: 1.5e9, latency: 1e-3 }
+}
+
+/// One DynaServe cell on the exact-metrics path with the migration knobs
+/// switched explicitly (cache on at weight 1.0, the sweep's setting).
+fn migrate_cell(kind: ExecutorKind, link: LinkSpec, fetch: bool, preempt: bool) -> Simulator {
+    let llm = LlmSpec::qwen25_14b();
+    build_executor_migrate(
+        kind,
+        System::DynaServe,
+        &llm,
+        SloConfig::default(),
+        true,
+        false,
+        true,
+        1.0,
+        link,
+        fetch,
+        preempt,
+    )
+}
+
+/// Dump everything the scoring layer produces for bit-identity checks.
+fn score(ex: &mut Simulator, summary: &dynaserve::metrics::Summary) -> (String, String) {
+    let classes = ex.collector.class_summaries(summary.duration);
+    (format!("{summary:?}"), format!("{classes:?}"))
+}
+
+/// The default-off contract: building with both migration knobs off must
+/// be bit-identical to the cache build (and, with the cache also off in
+/// that twin, to the pre-cache default build) — Summary (migration
+/// columns zero) and per-class rows included — through BOTH executor
+/// facades. This is the guarantee that lets the migration engine land
+/// without perturbing any existing figure.
+#[test]
+fn migration_off_is_bit_identical_to_the_cache_build() {
+    let llm = LlmSpec::qwen25_14b();
+    for name in SCENARIOS {
+        let sc = Scenario::by_name(name).expect("migrate scenario exists").smoke();
+        for kind in [ExecutorKind::Sim, ExecutorKind::LiveVirtual] {
+            let baseline = {
+                let mut ex = build_executor_cache(
+                    kind,
+                    System::DynaServe,
+                    &llm,
+                    SloConfig::default(),
+                    true,
+                    true,
+                    1.0,
+                );
+                let s = ex.run_stream(sc.stream(42));
+                score(&mut ex, &s)
+            };
+            let migrate_off = {
+                let mut ex = migrate_cell(kind, LinkSpec::default(), false, false);
+                let s = ex.run_stream(sc.stream(42));
+                assert_eq!(s.preempted, 0, "{name}: migration-off run preempted");
+                assert_eq!(s.migrated_kv_bytes, 0.0, "{name}: migration-off run moved KV");
+                let m = ex.migration_stats();
+                assert_eq!(m.fetches + m.evacuations, 0, "{name}: migration-off run migrated");
+                score(&mut ex, &s)
+            };
+            assert_eq!(
+                baseline.0,
+                migrate_off.0,
+                "{name}/{}: migration-off summary diverged from the cache build",
+                kind.name()
+            );
+            assert_eq!(
+                baseline.1,
+                migrate_off.1,
+                "{name}/{}: migration-off class rows diverged from the cache build",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// With everything off (cache included), the migrate builder's off cell
+/// collapses all the way down to the pre-cache default build.
+#[test]
+fn everything_off_is_bit_identical_to_the_default_build() {
+    let llm = LlmSpec::qwen25_14b();
+    for name in SCENARIOS {
+        let sc = Scenario::by_name(name).expect("migrate scenario exists").smoke();
+        let baseline = {
+            let slo = SloConfig::default();
+            let mut ex = build_executor_exact(ExecutorKind::Sim, System::DynaServe, &llm, slo, true);
+            let s = ex.run_stream(sc.stream(42));
+            score(&mut ex, &s)
+        };
+        let off = {
+            let mut ex = build_executor_migrate(
+                ExecutorKind::Sim,
+                System::DynaServe,
+                &llm,
+                SloConfig::default(),
+                true,
+                false,
+                false,
+                0.0,
+                LinkSpec::default(),
+                false,
+                false,
+            );
+            let s = ex.run_stream(sc.stream(42));
+            score(&mut ex, &s)
+        };
+        assert_eq!(baseline, off, "{name}: all-off migrate build diverged from the default");
+    }
+}
+
+/// Same-seed runs with both knobs on are bit-identical, migration ledger
+/// included: fetch offers, planner pricing, preemption victim choice,
+/// and resume scheduling are all deterministic functions of the stream.
+#[test]
+fn same_seed_migrate_on_runs_bit_identical() {
+    for name in SCENARIOS {
+        let sc = Scenario::by_name(name).expect("migrate scenario exists").smoke();
+        let run = || {
+            let mut ex = migrate_cell(ExecutorKind::Sim, LinkSpec::default(), true, true);
+            let s = ex.run_stream(sc.stream(42));
+            assert_eq!(ex.stuck_requests(), 0, "{name}: segments left resident");
+            let m = ex.migration_stats();
+            let (sum, cls) = score(&mut ex, &s);
+            format!("{sum} {cls} migration={m:?}")
+        };
+        assert_eq!(run(), run(), "{name}: same-seed migrate-on runs must be bit-identical");
+    }
+}
+
+/// The engine's core safety property: migration may move or evict KV but
+/// never changes what is generated or loses a request. Under random
+/// scenarios, durations, links, and knob combinations: offered ==
+/// completed + shed + rejected, nothing stuck, and (admission off, so
+/// nothing bounces) fetch-only runs complete the same requests and emit
+/// exactly the same number of tokens as their migration-off twin.
+#[test]
+fn migration_never_loses_requests_under_random_schedules() {
+    check("random fetch+preempt schedules conserve requests", 8, |rng| {
+        let name = SCENARIOS[rng.range_usize(0, SCENARIOS.len())];
+        let sc = Scenario::by_name(name)
+            .expect("migrate scenario exists")
+            .with_duration(8.0 + 8.0 * rng.f64());
+        let link = if rng.f64() < 0.5 { LinkSpec::default() } else { slow_link() };
+        let fetch = rng.f64() < 0.5;
+        let preempt = rng.f64() < 0.5;
+        let seed = rng.next_u64();
+        let offered = sc.stream(seed).count();
+        assert!(offered > 0, "scenario windows must offer work");
+
+        let run = |fetch: bool, preempt: bool| {
+            let mut ex = migrate_cell(ExecutorKind::Sim, link, fetch, preempt);
+            let s = ex.run_stream(sc.stream(seed));
+            assert_eq!(
+                ex.stuck_requests(),
+                0,
+                "{name}: stuck segments (fetch={fetch}, preempt={preempt})"
+            );
+            let m = ex.migration_stats();
+            let in_flight = ex.migration_in_flight();
+            assert!(
+                in_flight.is_empty(),
+                "{name}: migrations left in flight (fetch={fetch}, preempt={preempt}): \
+                 {in_flight:?}"
+            );
+            assert_eq!(
+                s.completed + s.shed_requests as usize + s.rejected_requests as usize,
+                offered,
+                "{name}: request(s) lost (fetch={fetch}, preempt={preempt}, link={link:?})"
+            );
+            if !fetch {
+                assert_eq!(m.fetches, 0, "{name}: fetch-off run fetched");
+            }
+            if !preempt {
+                assert_eq!(s.preempted, 0, "{name}: preempt-off run preempted");
+            }
+            s
+        };
+        let on = run(fetch, preempt);
+        // the fetch knob alone is a pure latency optimization: same
+        // completions, same emitted tokens as the off twin (preemption
+        // changes *when* tokens emit, so its twin check is conservation)
+        if fetch && !preempt {
+            let off = run(false, false);
+            assert_eq!(
+                on.completed, off.completed,
+                "{name}: fetch changed the completion count"
+            );
+            assert_eq!(
+                on.total_tokens, off.total_tokens,
+                "{name}: fetch changed the emitted token count"
+            );
+        }
+    });
+}
+
+/// The planner's decision rule, pinned end to end: the modeled transfer
+/// wins exactly when it is faster than recomputing the span — so on the
+/// default link remote reuse actually ships KV, while the slow link
+/// (per-token transfer above per-token prefill) ships nothing at all.
+#[test]
+fn fetch_happens_only_when_transfer_beats_recompute() {
+    let llm = LlmSpec::qwen25_14b();
+    let spec = InstanceSpec::new(GpuSpec::a100(), llm.clone(), 1);
+    for link in [LinkSpec::default(), slow_link()] {
+        let planner = MigrationPlanner::new(link, 512, true, llm.kv_bytes_per_token());
+        assert!(!planner.fetch_beats_recompute(0, 1.0), "zero-token spans never ship");
+        for tokens in [64usize, 256, 1024, 4096] {
+            let recompute = spec.prefill_time(tokens);
+            assert_eq!(
+                planner.fetch_beats_recompute(tokens, recompute),
+                planner.transfer_time(tokens) < recompute,
+                "planner rule must be exactly transfer < recompute"
+            );
+        }
+    }
+
+    // end to end: reuse-heavy traffic over the default link fetches;
+    // the same trace over the slow link prices every span out
+    let sc = Scenario::by_name("multiturn-heavy")
+        .expect("multiturn-heavy scenario exists")
+        .with_duration(30.0);
+    let run = |link: LinkSpec| {
+        let mut ex = migrate_cell(ExecutorKind::Sim, link, true, false);
+        let s = ex.run_stream(sc.stream(42));
+        assert_eq!(ex.stuck_requests(), 0);
+        (ex.migration_stats(), s)
+    };
+    let (fast, fast_s) = run(LinkSpec::default());
+    let (slow, _) = run(slow_link());
+    assert!(fast.fetches > 0, "30 s of reuse lineage must trigger remote fetches");
+    assert!(fast.fetched_tokens > 0 && fast.migrated_kv_bytes > 0.0);
+    assert_eq!(
+        fast_s.migrated_kv_bytes, fast.migrated_kv_bytes,
+        "Summary and MigrationStats must agree on bytes moved"
+    );
+    assert_eq!(slow.fetched_tokens, 0, "the slow link must price every fetch out");
+    assert_eq!(slow.migrated_kv_bytes, 0.0);
+}
+
+/// Preemption under overload: interactive arrivals actually evict batch
+/// decodes, every preempted request still completes (conservation with
+/// admission off means literally all of them), the per-class preemption
+/// columns partition the global ledger, and nothing is left resident.
+#[test]
+fn preempted_requests_complete_with_zero_residue() {
+    let sc = Scenario::by_name("overload-steady")
+        .expect("overload scenario exists")
+        .with_duration(20.0);
+    let offered = sc.stream(42).count();
+    let mut ex = migrate_cell(ExecutorKind::Sim, LinkSpec::default(), false, true);
+    let s = ex.run_stream(sc.stream(42));
+    assert_eq!(ex.stuck_requests(), 0, "preemption left segments resident");
+    assert!(s.preempted > 0, "20 s of steady overload must trigger preemptions");
+    assert_eq!(
+        s.completed + s.shed_requests as usize + s.rejected_requests as usize,
+        offered,
+        "preempted request(s) lost"
+    );
+    let classes = ex.collector.class_summaries(s.duration);
+    let by_class: usize = classes.iter().map(|c| c.preempted).sum();
+    assert_eq!(
+        by_class as u64, s.preempted,
+        "per-class preemption counts must partition the global ledger"
+    );
+    let resume_by_class: u64 = classes.iter().map(|c| c.resume_from_cache_tokens).sum();
+    assert_eq!(
+        resume_by_class, s.resume_from_cache_tokens,
+        "per-class resume tokens must partition the global ledger"
+    );
+}

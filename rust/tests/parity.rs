@@ -22,9 +22,10 @@
 
 use dynaserve::costmodel::LlmSpec;
 use dynaserve::experiments::runners::{
-    build_executor, build_executor_cache, build_executor_exact, build_executor_overload,
-    ExecutorKind, System,
+    build_executor, build_executor_cache, build_executor_exact, build_executor_migrate,
+    build_executor_overload, ExecutorKind, System,
 };
+use dynaserve::kv::LinkSpec;
 use dynaserve::metrics::SloConfig;
 use dynaserve::workload::{poisson_workload, Scenario, TraceKind};
 
@@ -243,6 +244,54 @@ fn cache_trace_is_bit_identical_across_executors() {
         assert_eq!(
             sum_sim, sum_live,
             "{name}: cache-enabled summaries diverged between executors"
+        );
+        assert_eq!(cls_sim, cls_live, "{name}: per-class rows diverged");
+        assert_eq!(stuck_sim, 0, "{name}: sim executor left stuck segments");
+        assert_eq!(stuck_live, 0, "{name}: live executor left stuck segments");
+    }
+}
+
+/// Migration parity: a trace with BOTH migration knobs armed — remote
+/// prefix fetches gating α starts and decode-phase preemption with
+/// cache-cheap resume — stays bit-identical through both facades,
+/// migration ledger (`Summary::preempted`, `resume_from_cache_tokens`,
+/// `migrated_kv_bytes`) and `MigrationStats` included. The planner's
+/// fetch-vs-recompute pricing, the preemption victim choice, and the
+/// gated-resume scheduling all live in the shared host, so neither
+/// facade may see a different migration decision; a divergence here
+/// means one facade grew its own migration path. The reuse-heavy trace
+/// exercises fetch, the overload trace exercises preemption.
+#[test]
+fn migrate_trace_is_bit_identical_across_executors() {
+    let llm = LlmSpec::qwen25_14b();
+    for name in ["multiturn-heavy", "overload-steady"] {
+        let sc = Scenario::by_name(name).expect("migrate scenario exists").smoke();
+        let requests = sc.generate(7);
+        assert!(!requests.is_empty());
+        let run = |kind: ExecutorKind| {
+            let mut ex = build_executor_migrate(
+                kind,
+                System::DynaServe,
+                &llm,
+                SloConfig::default(),
+                true,
+                true,
+                true,
+                1.0,
+                LinkSpec::default(),
+                true,
+                true,
+            );
+            let summary = ex.run(requests.clone());
+            let classes = ex.collector.class_summaries(summary.duration);
+            let m = ex.migration_stats();
+            (format!("{summary:?} migration={m:?}"), format!("{classes:?}"), ex.stuck_requests())
+        };
+        let (sum_sim, cls_sim, stuck_sim) = run(ExecutorKind::Sim);
+        let (sum_live, cls_live, stuck_live) = run(ExecutorKind::LiveVirtual);
+        assert_eq!(
+            sum_sim, sum_live,
+            "{name}: migration-enabled summaries diverged between executors"
         );
         assert_eq!(cls_sim, cls_live, "{name}: per-class rows diverged");
         assert_eq!(stuck_sim, 0, "{name}: sim executor left stuck segments");
